@@ -1,0 +1,54 @@
+//! Regenerate Figure 3 (all three panels) from the CLI harness.
+//!
+//! Run: `cargo run --release --example fig3_stream`
+
+use sage::apps::stream;
+use sage::config::Testbed;
+use sage::metrics::Table;
+use sage::pgas::{StorageTarget, WindowKind};
+
+fn main() -> sage::Result<()> {
+    // (a) Blackdog: storage windows ~ memory windows
+    let tb = Testbed::blackdog();
+    let mut t = Table::new(
+        "Fig 3(a) STREAM on Blackdog (MB/s, triad)",
+        &["Melems", "memory", "storage(hdd)", "degradation"],
+    );
+    for m in [10, 50, 100, 500, 1000] {
+        let mem = stream::run(&tb, WindowKind::Memory, m, 3)?;
+        let sto = stream::run(&tb, WindowKind::Storage(StorageTarget::Hdd), m, 3)?;
+        t.row(vec![
+            m.to_string(),
+            format!("{:.0}", mem[3].bandwidth / 1e6),
+            format!("{:.0}", sto[3].bandwidth / 1e6),
+            format!("{:.1}%", (1.0 - sto[3].bandwidth / mem[3].bandwidth) * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(paper: ~10% degradation at 1000M elements)\n");
+
+    // (b) Lustre asymmetry
+    let tegner = Testbed::tegner();
+    let (r, w) = stream::rw_asymmetry(&tegner, StorageTarget::Pfs, 4 << 30)?;
+    println!("Fig 3(b) Lustre: read {:.0} MB/s vs write {:.0} MB/s", r / 1e6, w / 1e6);
+    println!("(paper: 12,308 MB/s read, 1,374 MB/s write)\n");
+
+    // (c) Tegner: Lustre-backed STREAM collapses
+    let mut t = Table::new(
+        "Fig 3(c) STREAM on Tegner (MB/s, triad)",
+        &["Melems", "memory", "storage(pfs)", "degradation"],
+    );
+    for m in [10, 100, 1000] {
+        let mem = stream::run(&tegner, WindowKind::Memory, m, 2)?;
+        let sto = stream::run(&tegner, WindowKind::Storage(StorageTarget::Pfs), m, 2)?;
+        t.row(vec![
+            m.to_string(),
+            format!("{:.0}", mem[3].bandwidth / 1e6),
+            format!("{:.0}", sto[3].bandwidth / 1e6),
+            format!("{:.1}%", (1.0 - sto[3].bandwidth / mem[3].bandwidth) * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(paper: ~90% degradation — write-bandwidth limited)");
+    Ok(())
+}

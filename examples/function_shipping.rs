@@ -1,0 +1,59 @@
+//! Function shipping (§3.2.1 "Minimize Data Movement"): run the ALF
+//! log-analytics histogram *in storage* via the AOT Pallas kernel and
+//! compare against moving the raw logs to the client.
+//!
+//! Run: `make artifacts && cargo run --release --example function_shipping`
+
+use sage::apps::alf;
+use sage::clovis::Client;
+use sage::config::Testbed;
+use sage::metrics::Table;
+
+fn main() -> sage::Result<()> {
+    let tb = Testbed::sage_prototype();
+    let mut client = match Client::new_with_runtime(tb) {
+        Ok(c) => {
+            println!("[runtime] PJRT executor attached (kernel offload active)");
+            c
+        }
+        Err(e) => {
+            println!("[runtime] artifacts unavailable ({e}); CPU fallback");
+            Client::new_sim(Testbed::sage_prototype())
+        }
+    };
+
+    let mut t = Table::new(
+        "ALF log analytics: shipped vs moved",
+        &["log size", "t shipped(s)", "t moved(s)", "speedup", "net saved"],
+    );
+    for n in [65_536usize, 262_144, 1_048_576] {
+        let values = alf::generate_log_values(n, n as u64);
+        let obj = alf::store_log(&mut client, &values)?;
+        let base = client.now;
+        let rep = alf::analyze(&mut client, obj, 0.0, 1024.0)?;
+        // correctness: every record counted (padding lands in bin 0)
+        let total: f32 = rep.counts.iter().sum();
+        assert!(total >= n as f32, "histogram lost records: {total} < {n}");
+        t.row(vec![
+            sage::util::bytes::fmt_size((n * 4) as u64),
+            format!("{:.4}", rep.t_shipped - base),
+            format!("{:.4}", rep.t_moved - base),
+            format!("{:.1}x", (rep.t_moved - base) / (rep.t_shipped - base)),
+            sage::util::bytes::fmt_size(rep.net_bytes_moved - rep.net_bytes_shipped),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // show the histogram itself for the largest log
+    let values = alf::generate_log_values(1_048_576, 99);
+    let obj = alf::store_log(&mut client, &values)?;
+    let rep = alf::analyze(&mut client, obj, 0.0, 256.0)?;
+    println!("\nrequest-size distribution (64 bins over 0..256 MB):");
+    let max = rep.counts.iter().cloned().fold(1.0f32, f32::max);
+    for (i, chunk) in rep.counts.chunks(8).enumerate() {
+        let s: f32 = chunk.iter().sum();
+        let bar = "#".repeat((s / max * 6.0) as usize + 1);
+        println!("  [{:3}-{:3}) {:>9.0} {bar}", i * 32, (i + 1) * 32, s);
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! End-to-end driver (Fig 6 + Fig 7): the full SAGE pipeline on a real
+//! workload.
+//!
+//! A genuine mini particle-in-cell simulation runs for 200 steps;
+//! high-energy particles are streamed (MPI-streams analog) to consumer
+//! ranks whose attached computation is the AOT-compiled Pallas
+//! `postprocess` kernel executed through PJRT (CPU fallback when
+//! artifacts are absent); consumers emit legacy-VTK snapshots a
+//! ParaView user could open. Afterwards the Fig 7 scaling comparison
+//! (streams vs collective I/O) runs on the Beskow model.
+//!
+//! This is the "end-to-end validation" example: all three layers
+//! compose — rust coordinator (L3) -> PJRT artifact (L2) -> Pallas
+//! kernel (L1). Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example ipic3d_streams`
+
+use sage::apps::ipic3d;
+use sage::config::Testbed;
+use sage::metrics::Table;
+use sage::runtime::Executor;
+
+fn main() -> sage::Result<()> {
+    let exec = match Executor::load_default() {
+        Ok(e) => {
+            println!("[runtime] artifacts loaded: {:?}", {
+                let mut v = e.variants();
+                v.sort();
+                v
+            });
+            Some(e)
+        }
+        Err(e) => {
+            println!("[runtime] no artifacts ({e}); CPU fallback");
+            None
+        }
+    };
+
+    // --- Fig 6: real pipeline with VTK output -------------------------
+    let tb = Testbed::beskow();
+    let vtk_dir = std::path::PathBuf::from("target/ipic3d_vtk");
+    std::fs::create_dir_all(&vtk_dir)?;
+    let t0 = std::time::Instant::now();
+    let (hot, files) = ipic3d::run_real_pipeline(
+        &tb,
+        exec.as_ref(),
+        20_000, // particles
+        200,    // steps
+        1.5,    // energy threshold
+        Some(&vtk_dir),
+    )?;
+    println!(
+        "[fig6] streamed {hot} high-energy particle records over 200 steps; \
+         {files} VTK snapshots in {} ({:.1}s wall)",
+        vtk_dir.display(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // sanity: the VTK files are real and well-formed
+    let sample = std::fs::read_to_string(vtk_dir.join("step_0199.vtk"))?;
+    assert!(sample.starts_with("# vtk DataFile"));
+    let points = sample
+        .lines()
+        .find(|l| l.starts_with("POINTS"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("0")
+        .to_string();
+    println!("[fig6] final snapshot holds {points} tracked particles");
+
+    // --- Fig 7: scaling comparison ------------------------------------
+    let mut t = Table::new(
+        "Fig 7: iPIC3D visualization I/O — collective vs streams (100 steps)",
+        &["procs", "collective(s)", "streams(s)", "improvement"],
+    );
+    let mut p = 64;
+    while p <= 8192 {
+        let pt = ipic3d::run_scaling(&tb, p, 100);
+        t.row(vec![
+            p.to_string(),
+            format!("{:.1}", pt.t_collective),
+            format!("{:.1}", pt.t_streams),
+            format!("{:.2}x", pt.improvement),
+        ]);
+        p *= 4;
+    }
+    print!("{}", t.render());
+    println!("(paper: comparable at small scale, 3.6x at 8192 procs)");
+    Ok(())
+}

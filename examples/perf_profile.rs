@@ -1,0 +1,63 @@
+//! Perf-pass driver: wall-clock measurement of the L3 hot paths.
+use sage::bench::Bencher;
+use sage::config::Testbed;
+use sage::mero::{sns, Layout, MeroStore};
+use sage::sim::device::DeviceKind;
+use sage::sim::rng::SimRng;
+use sage::sim::cache::PageCache;
+
+fn main() {
+    let mut rng = SimRng::new(1);
+    // 1. CPU parity (SNS fallback hot loop), 8 x 64KiB units
+    let units: Vec<Vec<u8>> = (0..8).map(|_| { let mut v = vec![0u8; 65536]; rng.fill_bytes(&mut v); v }).collect();
+    let m = Bencher::new("cpu_parity_8x64k").iters(5, 50).wall(|| sns::cpu_parity(&units));
+    println!("{}  ({})", m.summary(), m.throughput(8*65536));
+
+    // 2. SNS write path end-to-end (1 MiB object write, no kernel)
+    let mut data = vec![0u8; 1 << 20]; rng.fill_bytes(&mut data);
+    let m = Bencher::new("sns_write_1MiB_4+1").iters(3, 20).wall(|| {
+        let mut s = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        let id = s.create_object(4096, Layout::Raid{data:4,parity:1,unit:65536,tier:DeviceKind::Ssd}).unwrap();
+        s.write_object(id, 0, &data, 0.0, None).unwrap()
+    });
+    println!("{}  ({})", m.summary(), m.throughput(1<<20));
+
+    // 3. SNS read path
+    let mut s = MeroStore::new(Testbed::sage_prototype().build_cluster());
+    let id = s.create_object(4096, Layout::Raid{data:4,parity:1,unit:65536,tier:DeviceKind::Ssd}).unwrap();
+    s.write_object(id, 0, &data, 0.0, None).unwrap();
+    let m = Bencher::new("sns_read_1MiB").iters(3, 20).wall(|| {
+        s.read_object(id, 0, 1<<20, 1.0).unwrap().0
+    });
+    println!("{}  ({})", m.summary(), m.throughput(1<<20));
+
+    // 4. PageCache ops (the PGAS/STREAM inner loop)
+    let mut c = PageCache::new(1<<30, 4096);
+    let m = Bencher::new("cache_write_64B_hot").iters(3, 20).wall(|| {
+        let mut acc = 0u64;
+        for i in 0..100_000u64 { acc += c.write((i*64) % (1<<20), 64).hit; }
+        acc
+    });
+    println!("{} (100k writes/iter => {:.0} ns/op)", m.summary(), m.median * 1e9 / 1e5);
+
+    // 5. STREAM bench wall time (fig3 inner loop at 100M elems)
+    let tb = Testbed::blackdog();
+    let m = Bencher::new("fig3_stream_100M_storage").iters(1, 5).wall(|| {
+        sage::apps::stream::run(&tb, sage::pgas::WindowKind::Storage(sage::pgas::StorageTarget::Hdd), 100, 1).unwrap()
+    });
+    println!("{}", m.summary());
+
+    // 6. DHT run (fig4 inner loop)
+    let cfg = sage::apps::dht::DhtConfig { ranks: 8, local_volume: 50_000, ops_per_rank: 50_000, sync_interval: u64::MAX };
+    let m = Bencher::new("fig4_dht_8x50k").iters(1, 5).wall(|| {
+        sage::apps::dht::run(&tb, sage::pgas::WindowKind::Storage(sage::pgas::StorageTarget::Hdd), &cfg).unwrap()
+    });
+    println!("{}", m.summary());
+
+    // 7. streams push loop (fig7 inner)
+    let bes = Testbed::beskow();
+    let m = Bencher::new("fig7_scaling_2048x20").iters(1, 3).wall(|| {
+        sage::apps::ipic3d::run_scaling(&bes, 2048, 20)
+    });
+    println!("{}", m.summary());
+}

@@ -1,0 +1,78 @@
+"""AOT: lower every L2 export to HLO text + a manifest for the rust runtime.
+
+HLO *text* (NOT .serialize()) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` crate binds) rejects; the text parser reassigns
+ids, so text round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+Outputs: artifacts/<name>.hlo.txt per EXPORTS entry, artifacts/manifest.json.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unpacks a tuple literal)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_export(name: str):
+    """Lower one EXPORTS entry; returns (hlo_text, manifest_entry)."""
+    fn, args_builder = EXPORTS[name]
+    example_args = args_builder()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    entry = {
+        "name": name,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+        "num_outputs": len(jax.tree_util.tree_leaves(out_avals)),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of export names")
+    # legacy single-file mode used by the original scaffold Makefile
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    names = args.only or list(EXPORTS)
+    manifest = []
+    for name in names:
+        text, entry = lower_export(name)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(entry)
+        print(f"wrote {path} ({len(text)} chars, {entry['num_outputs']} outputs)")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')} ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

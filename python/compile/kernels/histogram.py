@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: uniform-bin histogram (ALF log analytics).
+
+The ALF use case (§2, challenge 5) "performs analytics on data
+consumption log files"; its shipped function is a histogram over log
+record values (sizes, latencies). Computed in-storage so raw logs never
+cross the network (§3.2.1 "Minimize Data Movement").
+
+Hardware adaptation: the one-hot/accumulate formulation turns the
+histogram into a (VAL_BLOCK, NUM_BINS) one-hot matrix summed over rows —
+dense VPU/MXU-friendly work instead of scatter (TPUs have no fast
+scatter). The grid walks value blocks; each grid step accumulates into
+the same output tile (revisited output => accumulation pattern).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VAL_BLOCK = 8192
+NUM_BINS = 64
+
+
+def _hist_kernel(vals_ref, range_ref, out_ref, *, num_bins: int):
+    """Accumulate one VAL_BLOCK tile's bin counts into out_ref."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lo = range_ref[0]
+    hi = range_ref[1]
+    width = (hi - lo) / num_bins
+    idx = jnp.floor((vals_ref[...] - lo) / width).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, num_bins - 1)
+    # one-hot accumulate: (B, num_bins) -> (num_bins,)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], num_bins), 1)
+    one_hot = (idx[:, None] == bins).astype(jnp.float32)
+    out_ref[...] += one_hot.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "interpret"))
+def histogram(values: jnp.ndarray, value_range: jnp.ndarray,
+              num_bins: int = NUM_BINS, interpret: bool = True) -> jnp.ndarray:
+    """Histogram of ``values`` (N,) f32 over [range[0], range[1]) with
+    ``num_bins`` uniform bins; out-of-range values clamp to edge bins.
+    ``value_range`` is a shape-(2,) f32 array (lo, hi)."""
+    n = values.shape[0]
+    if n % VAL_BLOCK == 0 and n >= VAL_BLOCK:
+        block = VAL_BLOCK
+        grid = (n // VAL_BLOCK,)
+    else:
+        block = n
+        grid = (1,)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, num_bins=num_bins),
+        out_shape=jax.ShapeDtypeStruct((num_bins,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((num_bins,), lambda i: (0,)),
+        interpret=interpret,
+    )(values, value_range)

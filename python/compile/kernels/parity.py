@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: SNS (Server Network Striping) XOR parity.
+
+The distributed-RAID write path of Mero computes, for every stripe of K
+data units, a parity unit P = D_0 ^ D_1 ^ ... ^ D_{K-1} (§3.2.1
+"Layouts" / "Server Network Striping"). This is the storage-side compute
+hot-spot: every full-stripe write runs it over unit_size bytes * K.
+
+Hardware adaptation (DESIGN.md §3): stripe units map to VMEM tiles.
+The BlockSpec grid walks the lane axis in LANE_BLOCK-sized tiles so a
+(K, LANE_BLOCK) window is resident in VMEM per grid step; the XOR
+reduction over K is VPU work. interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lanes (i32) per VMEM tile. 8 units * 2048 lanes * 4 B = 64 KiB per tile,
+# comfortably inside a TPU core's ~16 MiB VMEM with double buffering.
+LANE_BLOCK = 2048
+
+
+def _parity_kernel(stripe_ref, out_ref, *, k: int):
+    """XOR-reduce the K axis of one (K, LANE_BLOCK) tile."""
+    acc = stripe_ref[0, :]
+    # K is a compile-time constant: the loop fully unrolls into a
+    # vectorized XOR tree.
+    for i in range(1, k):
+        acc = jnp.bitwise_xor(acc, stripe_ref[i, :])
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def parity(stripe: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Compute the XOR parity unit of ``stripe`` (shape (K, U_lanes) i32).
+
+    U_lanes must be a multiple of LANE_BLOCK for the tiled fast path;
+    smaller/ragged inputs fall back to a single-tile call.
+    """
+    k, lanes = stripe.shape
+    if lanes % LANE_BLOCK == 0 and lanes >= LANE_BLOCK:
+        block = LANE_BLOCK
+        grid = (lanes // LANE_BLOCK,)
+    else:
+        block = lanes
+        grid = (1,)
+    return pl.pallas_call(
+        functools.partial(_parity_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((lanes,), stripe.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(stripe)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: particle energy filter (iPIC3D post-processing).
+
+This is the compute payload that SAGE function-ships to storage (§3.2.1
+"Function Shipping") and that the MPI-stream consumers run on incoming
+particle streams (§4.2, Fig 6/7): compute each particle's kinetic energy
+and a high-energy mask so only interesting particles are tracked /
+visualized.
+
+Stream element layout (§4.2): 8 f32 scalars per particle —
+(x, y, z, u, v, w, q, id).
+
+Hardware adaptation: particles are tiled along N in PART_BLOCK rows; an
+(PART_BLOCK, 8) tile is one VMEM window (PART_BLOCK*8*4 B = 128 KiB at
+4096). Energy + mask are elementwise VPU ops; no MXU needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PART_BLOCK = 4096  # particles per VMEM tile
+
+
+def _filter_kernel(parts_ref, thr_ref, energy_ref, mask_ref):
+    """Energy + threshold mask for one (PART_BLOCK, 8) particle tile."""
+    u = parts_ref[:, 3]
+    v = parts_ref[:, 4]
+    w = parts_ref[:, 5]
+    q = parts_ref[:, 6]
+    energy = 0.5 * jnp.abs(q) * (u * u + v * v + w * w)
+    energy_ref[...] = energy
+    mask_ref[...] = (energy > thr_ref[0]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def particle_filter(particles: jnp.ndarray, threshold: jnp.ndarray,
+                    interpret: bool = True):
+    """(energies, mask) for ``particles`` (N, 8) f32; mask=1.0 where
+    energy > threshold (threshold is a shape-(1,) f32 array)."""
+    n = particles.shape[0]
+    if n % PART_BLOCK == 0 and n >= PART_BLOCK:
+        block = PART_BLOCK
+        grid = (n // PART_BLOCK,)
+    else:
+        block = n
+        grid = (1,)
+    return pl.pallas_call(
+        _filter_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 8), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        interpret=interpret,
+    )(particles, threshold)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the SAGE L1 Pallas kernels.
+
+Each function here is the correctness reference for the identically-named
+Pallas kernel in this package. pytest (python/tests/) asserts allclose /
+exact equality between kernel and oracle across shape/dtype sweeps; the
+oracles are also what the L2 graphs are validated against before AOT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def parity_ref(stripe: jnp.ndarray) -> jnp.ndarray:
+    """XOR parity across the data units of a stripe.
+
+    ``stripe`` has shape (K, U_lanes) with an integer dtype: K data units,
+    each of U_lanes 32-bit lanes. Returns the (U_lanes,) parity unit —
+    the bitwise XOR of all K data units (RAID-5 / SNS single parity).
+    """
+    out = stripe[0]
+    for k in range(1, stripe.shape[0]):
+        out = jnp.bitwise_xor(out, stripe[k])
+    return out
+
+
+def particle_energy_ref(particles: jnp.ndarray) -> jnp.ndarray:
+    """Kinetic energy per particle.
+
+    ``particles`` has shape (N, 8) float32 with columns
+    (x, y, z, u, v, w, q, id) — the paper's stream element (§4.2).
+    Energy is 0.5*|q|*(u^2+v^2+w^2), using |q| as the mass proxy the
+    iPIC3D post-processing uses for charged macro-particles.
+    """
+    u, v, w, q = particles[:, 3], particles[:, 4], particles[:, 5], particles[:, 6]
+    return 0.5 * jnp.abs(q) * (u * u + v * v + w * w)
+
+
+def particle_filter_ref(particles: jnp.ndarray, threshold: jnp.ndarray):
+    """Energy filter: (energies, mask) where mask=1.0 iff energy > threshold."""
+    energy = particle_energy_ref(particles)
+    mask = (energy > threshold).astype(jnp.float32)
+    return energy, mask
+
+
+def histogram_ref(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                  num_bins: int) -> jnp.ndarray:
+    """Uniform-bin histogram over [lo, hi); out-of-range values are clamped
+    into the first/last bin (ALF log-analytics semantics: everything is
+    counted). Returns float32 counts of shape (num_bins,)."""
+    width = (hi - lo) / num_bins
+    idx = jnp.floor((values - lo) / width).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, num_bins - 1)
+    one_hot = jax.nn.one_hot(idx, num_bins, dtype=jnp.float32)
+    return one_hot.sum(axis=0)

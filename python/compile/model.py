@@ -1,0 +1,99 @@
+"""L2: the SAGE compute graphs that get function-shipped to storage.
+
+Each public function here is a complete jax computation that (a) calls
+the L1 Pallas kernels for its hot-spot and (b) adds the surrounding
+reductions/statistics in plain jnp so everything lowers into one HLO
+module. ``aot.py`` lowers every entry in ``EXPORTS`` to
+``artifacts/<name>.hlo.txt`` which the rust runtime loads via PJRT.
+
+All functions return a tuple (lowered with return_tuple=True) so the
+rust side can uniformly unpack a tuple literal.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.histogram import histogram
+from .kernels.parity import parity
+from .kernels.particle_filter import particle_filter
+
+
+def sns_parity(stripe):
+    """XOR parity for one SNS stripe: (K, U_lanes) i32 -> ((U_lanes,) i32,).
+
+    The Mero SNS write path ships full stripes here; the returned unit is
+    written to the parity device of the parity group.
+    """
+    return (parity(stripe),)
+
+
+def postprocess(particles, threshold):
+    """iPIC3D particle post-processing (Fig 6/7 payload).
+
+    particles: (N, 8) f32 rows (x,y,z,u,v,w,q,id); threshold: (1,) f32.
+    Returns (energies (N,), mask (N,), stats (4,)) where stats =
+    [selected_count, selected_energy_sum, max_energy, mean_energy].
+    The consumer uses `mask` to compact the high-energy particles into
+    the VTK output and `stats` for the runtime dashboard (ADDB).
+    """
+    energies, mask = particle_filter(particles, threshold)
+    count = mask.sum()
+    sel_sum = (energies * mask).sum()
+    stats = jnp.stack([count, sel_sum, energies.max(), energies.mean()])
+    return energies, mask, stats
+
+
+def alf_histogram(values, value_range):
+    """ALF log-file analytics: histogram + moments, computed in-storage.
+
+    values: (N,) f32; value_range: (2,) f32 (lo, hi).
+    Returns (counts (64,) f32, moments (3,) f32 = [sum, mean, var]).
+    """
+    counts = histogram(values, value_range)
+    mean = values.mean()
+    var = ((values - mean) ** 2).mean()
+    moments = jnp.stack([values.sum(), mean, var])
+    return counts, moments
+
+
+def integrity_digest(blocks):
+    """Advanced integrity checking (§3.2.3 "HSM and Data Integrity").
+
+    blocks: (B, L) i32 — B object blocks of L 32-bit lanes. Returns a
+    (B, 2) i32 digest per block: [wrapping lane sum, wrapping weighted
+    sum] (a Fletcher-style pair; the weighted sum catches reorderings
+    that a plain sum misses). Pure jnp — the hot-spot is the memory
+    walk, which XLA fuses into a single pass.
+    """
+    b, l = blocks.shape
+    weights = jnp.arange(1, l + 1, dtype=jnp.int32)
+    s1 = blocks.sum(axis=1)
+    s2 = (blocks * weights[None, :]).sum(axis=1)
+    return (jnp.stack([s1, s2], axis=1),)
+
+
+# --- AOT export table -----------------------------------------------------
+# name -> (function, example-input builder). Multiple shape variants
+# become separate compiled executables: the rust runtime picks the
+# variant matching the (padded) request size.
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+EXPORTS = {
+    # SNS parity: 4+1 and 8+1 parity groups, 64 KiB units (16384 i32 lanes)
+    "parity_k4": (sns_parity, lambda: (_i32(4, 16384),)),
+    "parity_k8": (sns_parity, lambda: (_i32(8, 16384),)),
+    # particle post-processing: 16K and 64K particle batches
+    "postprocess_16k": (postprocess, lambda: (_f32(16384, 8), _f32(1))),
+    "postprocess_64k": (postprocess, lambda: (_f32(65536, 8), _f32(1))),
+    # ALF histogram over 64K-value log segments
+    "alf_histogram_64k": (alf_histogram, lambda: (_f32(65536), _f32(2))),
+    # integrity digest over 16-block extents of 16 KiB blocks (4096 lanes)
+    "integrity_16x4k": (integrity_digest, lambda: (_i32(16, 4096),)),
+}

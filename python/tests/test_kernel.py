@@ -1,0 +1,172 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel (interpret=True) is checked against its pure-jnp
+oracle in kernels/ref.py — exact equality for integer kernels, allclose
+for float — across fixed shapes and hypothesis-driven shape/value sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.histogram import NUM_BINS, VAL_BLOCK, histogram
+from compile.kernels.parity import LANE_BLOCK, parity
+from compile.kernels.particle_filter import PART_BLOCK, particle_filter
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_i32(rng, shape):
+    return jnp.asarray(rng.integers(-(2**31), 2**31 - 1, size=shape, dtype=np.int64)
+                       .astype(np.int32))
+
+
+def rand_particles(rng, n):
+    p = rng.standard_normal((n, 8)).astype(np.float32)
+    p[:, 7] = np.arange(n, dtype=np.float32)  # ids
+    return jnp.asarray(p)
+
+
+# --------------------------------------------------------------- parity ---
+
+class TestParity:
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    @pytest.mark.parametrize("lanes", [LANE_BLOCK, 4 * LANE_BLOCK])
+    def test_matches_ref_tiled(self, k, lanes):
+        rng = np.random.default_rng(k * 1000 + lanes)
+        stripe = rand_i32(rng, (k, lanes))
+        out = parity(stripe)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(ref.parity_ref(stripe)))
+
+    def test_ragged_lanes_fallback(self):
+        rng = np.random.default_rng(7)
+        stripe = rand_i32(rng, (4, 1000))  # not a multiple of LANE_BLOCK
+        out = parity(stripe)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(ref.parity_ref(stripe)))
+
+    def test_parity_reconstructs_lost_unit(self):
+        """RAID property: XOR of parity + survivors == the lost unit."""
+        rng = np.random.default_rng(11)
+        stripe = rand_i32(rng, (4, LANE_BLOCK))
+        p = np.asarray(parity(stripe))
+        s = np.asarray(stripe)
+        lost = 2
+        recon = p.copy()
+        for k in range(4):
+            if k != lost:
+                recon ^= s[k]
+        np.testing.assert_array_equal(recon, s[lost])
+
+    def test_parity_of_identical_pair_is_zero(self):
+        rng = np.random.default_rng(13)
+        unit = rand_i32(rng, (1, 256))
+        stripe = jnp.concatenate([unit, unit], axis=0)
+        assert not np.asarray(parity(stripe)).any()
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(2, 8), lanes=st.sampled_from([64, 256, 1000]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, k, lanes, seed):
+        rng = np.random.default_rng(seed)
+        stripe = rand_i32(rng, (k, lanes))
+        np.testing.assert_array_equal(np.asarray(parity(stripe)),
+                                      np.asarray(ref.parity_ref(stripe)))
+
+
+# ------------------------------------------------------- particle filter ---
+
+class TestParticleFilter:
+    @pytest.mark.parametrize("n", [PART_BLOCK, 4 * PART_BLOCK, 1000])
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n)
+        parts = rand_particles(rng, n)
+        thr = jnp.asarray([0.5], dtype=jnp.float32)
+        energy, mask = particle_filter(parts, thr)
+        e_ref, m_ref = ref.particle_filter_ref(parts, thr)
+        np.testing.assert_allclose(np.asarray(energy), np.asarray(e_ref),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(m_ref))
+
+    def test_zero_threshold_selects_all_moving(self):
+        rng = np.random.default_rng(3)
+        parts = rand_particles(rng, 256)
+        thr = jnp.asarray([0.0], dtype=jnp.float32)
+        energy, mask = particle_filter(parts, thr)
+        assert (np.asarray(mask) == (np.asarray(energy) > 0)).all()
+
+    def test_huge_threshold_selects_none(self):
+        rng = np.random.default_rng(4)
+        parts = rand_particles(rng, 256)
+        thr = jnp.asarray([1e30], dtype=jnp.float32)
+        _, mask = particle_filter(parts, thr)
+        assert not np.asarray(mask).any()
+
+    def test_energy_nonnegative_and_mass_scaled(self):
+        """E = 0.5|q|v^2: doubling q doubles energy."""
+        rng = np.random.default_rng(5)
+        parts = np.asarray(rand_particles(rng, 128))
+        parts2 = parts.copy()
+        parts2[:, 6] *= 2.0
+        thr = jnp.asarray([0.0], dtype=jnp.float32)
+        e1, _ = particle_filter(jnp.asarray(parts), thr)
+        e2, _ = particle_filter(jnp.asarray(parts2), thr)
+        assert (np.asarray(e1) >= 0).all()
+        np.testing.assert_allclose(np.asarray(e2), 2 * np.asarray(e1), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([32, 500, 4096]), thr=st.floats(0.0, 5.0),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n, thr, seed):
+        rng = np.random.default_rng(seed)
+        parts = rand_particles(rng, n)
+        t = jnp.asarray([thr], dtype=jnp.float32)
+        energy, mask = particle_filter(parts, t)
+        e_ref, m_ref = ref.particle_filter_ref(parts, t)
+        np.testing.assert_allclose(np.asarray(energy), np.asarray(e_ref),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(m_ref))
+
+
+# -------------------------------------------------------------- histogram ---
+
+class TestHistogram:
+    @pytest.mark.parametrize("n", [VAL_BLOCK, 4 * VAL_BLOCK, 777])
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n)
+        vals = jnp.asarray(rng.uniform(-1, 11, n).astype(np.float32))
+        vrange = jnp.asarray([0.0, 10.0], dtype=jnp.float32)
+        out = histogram(vals, vrange)
+        expect = ref.histogram_ref(vals, vrange[0], vrange[1], NUM_BINS)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_total_count_preserved(self):
+        """Clamping semantics: every value lands in exactly one bin."""
+        rng = np.random.default_rng(9)
+        n = 2 * VAL_BLOCK
+        vals = jnp.asarray(rng.normal(5, 20, n).astype(np.float32))
+        out = histogram(vals, jnp.asarray([0.0, 10.0], dtype=jnp.float32))
+        assert float(np.asarray(out).sum()) == float(n)
+
+    def test_single_bin_concentration(self):
+        vals = jnp.full((VAL_BLOCK,), 3.14, dtype=jnp.float32)
+        out = np.asarray(histogram(vals, jnp.asarray([0.0, 6.4],
+                                                     dtype=jnp.float32)))
+        assert out.max() == VAL_BLOCK and (out > 0).sum() == 1
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([64, 1000, 8192]),
+           lo=st.floats(-5, 0), span=st.floats(1, 20),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n, lo, span, seed):
+        rng = np.random.default_rng(seed)
+        vals = jnp.asarray(rng.uniform(lo - 1, lo + span + 1, n)
+                           .astype(np.float32))
+        vrange = jnp.asarray([lo, lo + span], dtype=jnp.float32)
+        out = histogram(vals, vrange)
+        expect = ref.histogram_ref(vals, vrange[0], vrange[1], NUM_BINS)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))

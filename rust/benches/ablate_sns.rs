@@ -1,0 +1,124 @@
+//! Ablation (Tbl A): the SNS parity path — AOT Pallas kernel via PJRT
+//! vs the CPU XOR fallback, across stripe geometries; plus end-to-end
+//! write-path wall-clock (the L3 hot path the perf pass optimizes).
+//!
+//! Run: `make artifacts && cargo bench --bench ablate_sns`
+
+use sage::bench::{record, Bencher};
+use sage::config::Testbed;
+use sage::mero::{sns, Layout, MeroStore};
+use sage::metrics::Table;
+use sage::runtime::Executor;
+use sage::sim::device::DeviceKind;
+use sage::sim::rng::SimRng;
+
+fn main() {
+    let exec = Executor::load_default().ok();
+    if exec.is_none() {
+        println!("(artifacts missing: kernel rows will be skipped)");
+    }
+
+    // -------- parity kernel vs CPU fallback, by geometry ---------------
+    let mut t = Table::new(
+        "Tbl A: parity computation wall-clock (64 KiB units)",
+        &["k", "cpu xor", "pallas/pjrt", "kernel==cpu"],
+    );
+    let mut rng = SimRng::new(42);
+    for k in [4usize, 8] {
+        let units: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut v = vec![0u8; 65536];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect();
+        let m_cpu = Bencher::new(&format!("cpu_parity_k{k}"))
+            .iters(3, 30)
+            .wall(|| sns::cpu_parity(&units));
+        let (kernel_str, matches) = match &exec {
+            Some(e) => {
+                let m_k = Bencher::new(&format!("pjrt_parity_k{k}"))
+                    .iters(3, 30)
+                    .wall(|| e.parity(&units).unwrap());
+                let same = e.parity(&units).unwrap().unwrap()
+                    == sns::cpu_parity(&units);
+                record("ablate_sns", &[
+                    ("k", k as f64),
+                    ("cpu_s", m_cpu.median),
+                    ("pjrt_s", m_k.median),
+                ]);
+                (sage::metrics::fmt_secs(m_k.median), same.to_string())
+            }
+            None => ("n/a".into(), "n/a".into()),
+        };
+        t.row(vec![
+            k.to_string(),
+            sage::metrics::fmt_secs(m_cpu.median),
+            kernel_str,
+            matches,
+        ]);
+    }
+    print!("{}", t.render());
+
+    // -------- end-to-end SNS write path (wall-clock hot path) ----------
+    let mut t = Table::new(
+        "SNS write path wall-clock (1 MiB object writes)",
+        &["geometry", "time/write", "throughput"],
+    );
+    for (k, p) in [(4u32, 1u32), (8, 1), (4, 0)] {
+        let data = {
+            let mut v = vec![0u8; 1 << 20];
+            rng.fill_bytes(&mut v);
+            v
+        };
+        let m = Bencher::new(&format!("sns_write_{k}+{p}"))
+            .iters(2, 10)
+            .wall(|| {
+                let mut s =
+                    MeroStore::new(Testbed::sage_prototype().build_cluster());
+                let id = s
+                    .create_object(
+                        4096,
+                        Layout::Raid {
+                            data: k,
+                            parity: p,
+                            unit: 65536,
+                            tier: DeviceKind::Ssd,
+                        },
+                    )
+                    .unwrap();
+                s.write_object(id, 0, &data, 0.0, exec.as_ref()).unwrap()
+            });
+        t.row(vec![
+            format!("{k}+{p}"),
+            sage::metrics::fmt_secs(m.median),
+            format!("{}", m.throughput(1 << 20).split_whitespace().last().unwrap_or("")),
+        ]);
+        record("ablate_sns_write", &[
+            ("k", k as f64),
+            ("p", p as f64),
+            ("wall_s", m.median),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // -------- degraded-read / repair virtual-time costs -----------------
+    let mut t = Table::new(
+        "SNS resilience costs (virtual time)",
+        &["operation", "time"],
+    );
+    let mut s = MeroStore::new(Testbed::sage_prototype().build_cluster());
+    let id = s.create_object(4096, Layout::default()).unwrap();
+    let mut data = vec![0u8; 8 * 65536];
+    rng.fill_bytes(&mut data);
+    s.write_object(id, 0, &data, 0.0, None).unwrap();
+    let (_, t_healthy) = s.read_object(id, 0, data.len() as u64, 100.0).unwrap();
+    let dev = s.object(id).unwrap().placement(0, 1).unwrap().device;
+    s.cluster.fail_device(dev);
+    let (_, t_degraded) = s.read_object(id, 0, data.len() as u64, 200.0).unwrap();
+    let (_, t_repair) = sns::repair(&mut s, &[id], dev, 300.0).unwrap();
+    t.row(vec!["healthy read".into(), sage::metrics::fmt_secs(t_healthy - 100.0)]);
+    t.row(vec!["degraded read".into(), sage::metrics::fmt_secs(t_degraded - 200.0)]);
+    t.row(vec!["device repair".into(), sage::metrics::fmt_secs(t_repair - 300.0)]);
+    print!("{}", t.render());
+}

@@ -1,0 +1,92 @@
+//! Bench: Figure 3 — STREAM over MPI windows (all three panels) at the
+//! paper's full problem sizes. Prints the same series the paper plots
+//! and records rows to bench_results/fig3.json.
+//!
+//! Run: `cargo bench --bench fig3_stream`
+
+use sage::apps::stream;
+use sage::bench::record;
+use sage::config::Testbed;
+use sage::metrics::Table;
+use sage::pgas::{StorageTarget, WindowKind};
+
+fn main() {
+    // ---------------- (a) Blackdog: storage ~ memory ------------------
+    let tb = Testbed::blackdog();
+    let mut t = Table::new(
+        "Fig 3(a) STREAM Blackdog (MB/s, all kernels, 1000M elems)",
+        &["kernel", "memory", "storage(hdd)", "degradation"],
+    );
+    let mem = stream::run(&tb, WindowKind::Memory, 1000, 3).unwrap();
+    let sto = stream::run(&tb, WindowKind::Storage(StorageTarget::Hdd), 1000, 3).unwrap();
+    for (m, s) in mem.iter().zip(sto.iter()) {
+        let deg = (1.0 - s.bandwidth / m.bandwidth) * 100.0;
+        t.row(vec![
+            m.kernel.into(),
+            format!("{:.0}", m.bandwidth / 1e6),
+            format!("{:.0}", s.bandwidth / 1e6),
+            format!("{deg:.1}%"),
+        ]);
+        record("fig3a", &[
+            ("mem_mbs", m.bandwidth / 1e6),
+            ("sto_mbs", s.bandwidth / 1e6),
+            ("degradation_pct", deg),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("paper: ~10% degradation at the largest case\n");
+
+    // problem-size sweep (the x-axis of the paper's panel)
+    let mut t = Table::new(
+        "Fig 3(a) sweep: triad MB/s by problem size",
+        &["Melems", "memory", "storage(hdd)"],
+    );
+    for m_elems in [10u64, 50, 100, 500, 1000] {
+        let mem = stream::run(&tb, WindowKind::Memory, m_elems, 2).unwrap();
+        let sto =
+            stream::run(&tb, WindowKind::Storage(StorageTarget::Hdd), m_elems, 2)
+                .unwrap();
+        t.row(vec![
+            m_elems.to_string(),
+            format!("{:.0}", mem[3].bandwidth / 1e6),
+            format!("{:.0}", sto[3].bandwidth / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---------------- (b) Lustre asymmetry ----------------------------
+    let tegner = Testbed::tegner();
+    let (r, w) = stream::rw_asymmetry(&tegner, StorageTarget::Pfs, 8 << 30).unwrap();
+    println!(
+        "\nFig 3(b) Lustre asymmetry: read {:.0} MB/s, write {:.0} MB/s \
+         (paper: 12,308 / 1,374)",
+        r / 1e6,
+        w / 1e6
+    );
+    record("fig3b", &[("read_mbs", r / 1e6), ("write_mbs", w / 1e6)]);
+
+    // ---------------- (c) Tegner collapse -----------------------------
+    let mut t = Table::new(
+        "Fig 3(c) STREAM Tegner (MB/s, triad)",
+        &["Melems", "memory", "storage(pfs)", "degradation"],
+    );
+    for m_elems in [10u64, 100, 1000] {
+        let mem = stream::run(&tegner, WindowKind::Memory, m_elems, 2).unwrap();
+        let sto =
+            stream::run(&tegner, WindowKind::Storage(StorageTarget::Pfs), m_elems, 2)
+                .unwrap();
+        let deg = (1.0 - sto[3].bandwidth / mem[3].bandwidth) * 100.0;
+        t.row(vec![
+            m_elems.to_string(),
+            format!("{:.0}", mem[3].bandwidth / 1e6),
+            format!("{:.0}", sto[3].bandwidth / 1e6),
+            format!("{deg:.1}%"),
+        ]);
+        record("fig3c", &[
+            ("m_elems", m_elems as f64),
+            ("degradation_pct", deg),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("paper: ~90% degradation (write-bandwidth limited)");
+}

@@ -1,0 +1,74 @@
+//! Bench: Figure 5 — HACC-IO checkpoint/restart strong scaling,
+//! MPI-IO vs MPI storage windows, 100M particles, Blackdog and Tegner.
+//!
+//! Run: `cargo bench --bench fig5_hacc`
+
+use sage::apps::hacc::{self, HaccImpl};
+use sage::bench::record;
+use sage::config::Testbed;
+use sage::metrics::Table;
+use sage::pgas::StorageTarget;
+
+const PARTICLES: u64 = 100_000_000;
+
+fn main() {
+    // ---------------- Blackdog (workstation) --------------------------
+    let bd = Testbed::blackdog();
+    let mut t = Table::new(
+        "Fig 5 HACC-IO Blackdog: checkpoint+restart (s), 100M particles",
+        &["procs", "mpi-io", "windows(hdd)", "win/mpiio"],
+    );
+    for procs in [1usize, 2, 4, 8] {
+        let t_io = hacc::run(&bd, HaccImpl::MpiIo, procs, PARTICLES).unwrap();
+        let t_win = hacc::run(
+            &bd,
+            HaccImpl::StorageWindows(StorageTarget::Hdd),
+            procs,
+            PARTICLES,
+        )
+        .unwrap();
+        t.row(vec![
+            procs.to_string(),
+            format!("{t_io:.1}"),
+            format!("{t_win:.1}"),
+            format!("{:.2}", t_win / t_io),
+        ]);
+        record("fig5_blackdog", &[
+            ("procs", procs as f64),
+            ("mpiio_s", t_io),
+            ("windows_s", t_win),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("paper: similar on Blackdog, MPI-IO slightly ahead (~4%)\n");
+
+    // ---------------- Tegner (cluster + Lustre) ------------------------
+    let tegner = Testbed::tegner();
+    let mut t = Table::new(
+        "Fig 5 HACC-IO Tegner: checkpoint+restart (s), 100M particles",
+        &["procs", "mpi-io", "windows(pfs)", "improvement"],
+    );
+    for procs in [24usize, 48, 96, 144] {
+        let t_io = hacc::run(&tegner, HaccImpl::MpiIo, procs, PARTICLES).unwrap();
+        let t_win = hacc::run(
+            &tegner,
+            HaccImpl::StorageWindows(StorageTarget::Pfs),
+            procs,
+            PARTICLES,
+        )
+        .unwrap();
+        t.row(vec![
+            procs.to_string(),
+            format!("{t_io:.1}"),
+            format!("{t_win:.1}"),
+            format!("{:.0}%", (1.0 - t_win / t_io) * 100.0),
+        ]);
+        record("fig5_tegner", &[
+            ("procs", procs as f64),
+            ("mpiio_s", t_io),
+            ("windows_s", t_win),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("paper: ~32% average improvement at higher process counts");
+}

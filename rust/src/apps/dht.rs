@@ -1,0 +1,247 @@
+//! Distributed Hash Table over MPI windows (Fig 4).
+//!
+//! "DHT mimics SAGE data-analytics applications that have random access
+//! in distributed data structures. … each MPI process handles a part
+//! of the DHT, named Local Volume … The processes also maintain an
+//! overflow heap to store elements in case of collisions. … updates to
+//! the DHT are handled using MPI one-sided operations" (§4.1).
+//!
+//! Both window allocations (local volume + overflow heap) can live in
+//! memory or on storage; time comes from the PGAS simulation, and a
+//! real (small-scale) hash table validates the semantics in tests.
+
+use crate::config::Testbed;
+use crate::error::Result;
+use crate::pgas::{PgasSim, WindowKind};
+use crate::sim::clock::SimTime;
+use crate::sim::rng::SimRng;
+
+/// Element size: key + value + chain pointer (paper-scale records).
+pub const ELEM_BYTES: u64 = 64;
+/// Overflow heap factor (paper: "conflict overflow of 4 per element").
+pub const OVERFLOW: u64 = 4;
+/// Software cost of issuing one MPI one-sided operation (descriptor
+/// setup, progress engine) — paid on the origin regardless of target.
+const MPI_OP_COST: f64 = 1.5e-6;
+
+/// DHT run configuration.
+#[derive(Debug, Clone)]
+pub struct DhtConfig {
+    pub ranks: usize,
+    /// Local volume in elements per rank.
+    pub local_volume: u64,
+    /// Update operations issued per rank.
+    pub ops_per_rank: u64,
+    /// win_sync every this many ops (durability batches).
+    pub sync_interval: u64,
+}
+
+impl DhtConfig {
+    /// Paper-scale defaults (Fig 4): ops proportional to volume.
+    pub fn paper(ranks: usize, m_elems_per_volume: u64) -> Self {
+        DhtConfig {
+            ranks,
+            local_volume: m_elems_per_volume * 1_000_000,
+            ops_per_rank: (m_elems_per_volume * 1_000_000 / 10).max(1),
+            sync_interval: 100_000,
+        }
+    }
+}
+
+/// Run the DHT update workload; returns total execution time.
+pub fn run(tb: &Testbed, kind: WindowKind, cfg: &DhtConfig) -> Result<SimTime> {
+    let mut sim = PgasSim::new(tb.clone(), cfg.ranks);
+    let vol_bytes = cfg.local_volume * ELEM_BYTES;
+    let heap_bytes = cfg.local_volume * OVERFLOW * ELEM_BYTES / 8;
+    let vol = sim.alloc_window(kind, vol_bytes);
+    let heap = sim.alloc_window(kind, heap_bytes);
+    for r in 0..cfg.ranks {
+        sim.warm(vol, r);
+        sim.warm(heap, r);
+    }
+    let mut rng = SimRng::new(0xD117);
+
+    for op in 0..cfg.ops_per_rank {
+        for rank in 0..cfg.ranks {
+            // pick a random target volume and bucket (one-sided access)
+            let target = rng.gen_index(cfg.ranks);
+            let bucket = rng.gen_range(cfg.local_volume);
+            let off = bucket * ELEM_BYTES;
+            // read bucket, then write back (update); ~25% of updates
+            // collide and touch the overflow heap too
+            sim.compute(rank, 2.0 * MPI_OP_COST + 120e-9); // issue + hash
+            sim.get(vol, rank, target, off, ELEM_BYTES, true)?;
+            sim.put(vol, rank, target, off, ELEM_BYTES, true)?;
+            if rng.gen_f64() < 0.25 {
+                let hoff = rng.gen_range(heap_bytes / ELEM_BYTES) * ELEM_BYTES;
+                sim.compute(rank, MPI_OP_COST);
+                sim.put(heap, rank, target, hoff, ELEM_BYTES, true)?;
+            }
+        }
+        if (op + 1) % cfg.sync_interval == 0 {
+            // sync per window across ranks (collective fence pattern):
+            // interleaving windows per rank would convoy the devices
+            for rank in 0..cfg.ranks {
+                sim.win_sync(vol, rank)?;
+            }
+            for rank in 0..cfg.ranks {
+                sim.win_sync(heap, rank)?;
+            }
+        }
+    }
+    for rank in 0..cfg.ranks {
+        sim.win_sync(vol, rank)?;
+    }
+    for rank in 0..cfg.ranks {
+        sim.win_sync(heap, rank)?;
+    }
+    Ok(sim.elapsed())
+}
+
+// ---------------------------------------------------------------------
+// Real (functional) DHT used to validate semantics at test scale.
+// ---------------------------------------------------------------------
+
+/// A real distributed hash table over per-rank element arrays with an
+/// overflow chain — the data structure the windows hold.
+pub struct RealDht {
+    ranks: usize,
+    buckets_per_rank: u64,
+    /// volume[rank][bucket] = Some((key, value))
+    volume: Vec<Vec<Option<(u64, u64)>>>,
+    /// overflow heaps
+    heap: Vec<Vec<(u64, u64)>>,
+}
+
+impl RealDht {
+    /// Build with `buckets_per_rank` buckets on each of `ranks` ranks.
+    pub fn new(ranks: usize, buckets_per_rank: u64) -> Self {
+        RealDht {
+            ranks,
+            buckets_per_rank,
+            volume: (0..ranks)
+                .map(|_| vec![None; buckets_per_rank as usize])
+                .collect(),
+            heap: vec![Vec::new(); ranks],
+        }
+    }
+
+    fn home(&self, key: u64) -> (usize, usize) {
+        let h = key.wrapping_mul(0x9E3779B97F4A7C15);
+        let rank = (h >> 32) as usize % self.ranks;
+        let bucket = (h as u64 % self.buckets_per_rank) as usize;
+        (rank, bucket)
+    }
+
+    /// Insert (put): bucket if empty/match, else overflow chain.
+    pub fn put(&mut self, key: u64, value: u64) {
+        let (r, b) = self.home(key);
+        match &mut self.volume[r][b] {
+            slot @ None => *slot = Some((key, value)),
+            Some((k, v)) if *k == key => *v = value,
+            _ => {
+                // collision -> overflow heap (replace if present)
+                if let Some(e) =
+                    self.heap[r].iter_mut().find(|(k, _)| *k == key)
+                {
+                    e.1 = value;
+                } else {
+                    self.heap[r].push((key, value));
+                }
+            }
+        }
+    }
+
+    /// Lookup (get).
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let (r, b) = self.home(key);
+        match &self.volume[r][b] {
+            Some((k, v)) if *k == key => Some(*v),
+            _ => self.heap[r]
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, v)| *v),
+        }
+    }
+
+    /// Total stored elements.
+    pub fn len(&self) -> usize {
+        self.volume
+            .iter()
+            .map(|v| v.iter().flatten().count())
+            .sum::<usize>()
+            + self.heap.iter().map(|h| h.len()).sum::<usize>()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::StorageTarget;
+
+    #[test]
+    fn real_dht_put_get_with_collisions() {
+        let mut d = RealDht::new(4, 8); // tiny: force collisions
+        for k in 0..200u64 {
+            d.put(k, k * 10);
+        }
+        for k in 0..200u64 {
+            assert_eq!(d.get(k), Some(k * 10), "key {k}");
+        }
+        assert_eq!(d.len(), 200);
+        d.put(7, 42);
+        assert_eq!(d.get(7), Some(42), "overwrite");
+        assert_eq!(d.len(), 200);
+        assert_eq!(d.get(9999), None);
+    }
+
+    #[test]
+    fn fig4a_shape_storage_overhead_ordering() {
+        // Blackdog: HDD worse than SSD worse than memory, but same
+        // order of magnitude (paper: +34% HDD, +20% SSD)
+        let tb = Testbed::blackdog();
+        let cfg = DhtConfig {
+            ranks: 8,
+            local_volume: 20_000,
+            ops_per_rank: 60_000,
+            sync_interval: 30_000,
+        };
+        let t_mem = run(&tb, WindowKind::Memory, &cfg).unwrap();
+        let t_ssd =
+            run(&tb, WindowKind::Storage(StorageTarget::Ssd), &cfg).unwrap();
+        let t_hdd =
+            run(&tb, WindowKind::Storage(StorageTarget::Hdd), &cfg).unwrap();
+        assert!(t_mem < t_ssd && t_ssd < t_hdd, "{t_mem} {t_ssd} {t_hdd}");
+        assert!(
+            t_hdd < 3.0 * t_mem,
+            "storage overhead should be a penalty, not a collapse: \
+             mem {t_mem} hdd {t_hdd}"
+        );
+    }
+
+    #[test]
+    fn fig4b_shape_tegner_negligible_overhead() {
+        // Tegner: cross-node one-sided traffic dominates; storage
+        // windows barely matter (paper: ~2%)
+        let tb = Testbed::tegner();
+        let cfg = DhtConfig {
+            ranks: 96,
+            local_volume: 20_000,
+            ops_per_rank: 10_000,
+            sync_interval: u64::MAX, // durability sync at the end only
+        };
+        let t_mem = run(&tb, WindowKind::Memory, &cfg).unwrap();
+        let t_pfs =
+            run(&tb, WindowKind::Storage(StorageTarget::Pfs), &cfg).unwrap();
+        let overhead = t_pfs / t_mem - 1.0;
+        assert!(
+            overhead < 0.35,
+            "Tegner DHT overhead should be small (got {overhead:.2})"
+        );
+    }
+}

@@ -1,0 +1,312 @@
+//! Mini-iPIC3D: the particle-in-cell producer for the MPI-stream
+//! experiments (Fig 6, Fig 7).
+//!
+//! Two modes:
+//! * **real** ([`Simulation`]) — a small, genuine particle mover:
+//!   particles drift under a model E×B field, energies rise for a
+//!   resonant subset, and high-energy particles are streamed out every
+//!   step ("once a particle reaches high energies, it is continuously
+//!   tracked", §4.2). The consumer post-processes (PJRT kernel or CPU)
+//!   and emits a legacy-VTK file — the Fig 6 artifact.
+//! * **scale** ([`run_scaling`]) — the Fig 7 experiment: P simulation
+//!   ranks for 100 steps, snapshotting particles every step through
+//!   either MPI collective I/O or MPI streams (1 consumer per 15
+//!   producers), returning both makespans.
+
+use crate::config::Testbed;
+use crate::error::Result;
+use crate::runtime::Executor;
+use crate::sim::rng::SimRng;
+use crate::streams::collective::CollectiveIo;
+use crate::streams::{StreamConfig, StreamElement, StreamSim};
+
+// ---------------------------------------------------------------- real
+
+/// A real (small) particle-in-cell simulation.
+pub struct Simulation {
+    pub particles: Vec<StreamElement>,
+    dt: f32,
+    step: u64,
+    /// Indices already flagged as high-energy ("continuously tracked").
+    tracked: Vec<bool>,
+}
+
+impl Simulation {
+    /// `n` particles with thermal velocities; a `resonant_frac`
+    /// fraction sits on a resonance and gains energy over time.
+    pub fn new(n: usize, resonant_frac: f64, seed: u64) -> Self {
+        let mut rng = SimRng::new(seed);
+        let particles = (0..n)
+            .map(|i| {
+                let resonant = rng.gen_f64() < resonant_frac;
+                let scale = if resonant { 1.2 } else { 0.2 };
+                StreamElement {
+                    x: rng.gen_uniform(0.0, 1.0) as f32,
+                    y: rng.gen_uniform(0.0, 1.0) as f32,
+                    z: rng.gen_uniform(0.0, 1.0) as f32,
+                    u: (rng.gen_normal() * scale) as f32,
+                    v: (rng.gen_normal() * scale) as f32,
+                    w: (rng.gen_normal() * scale) as f32,
+                    q: if resonant { 1.5 } else { 1.0 },
+                    id: i as f32,
+                }
+            })
+            .collect();
+        Simulation { particles, dt: 0.05, step: 0, tracked: vec![false; n] }
+    }
+
+    /// One mover step (Boris-like kick + drift, model fields).
+    pub fn step(&mut self) {
+        self.step += 1;
+        for p in &mut self.particles {
+            // E field accelerates heavier-charge (resonant) particles
+            let kick = 0.02 * p.q * (p.q - 1.0).max(0.0);
+            p.u += kick * (1.0 + p.x.sin() * 0.1);
+            p.v += kick * 0.5 * (1.0 + p.y.cos() * 0.1);
+            // drift with periodic wrap
+            p.x = (p.x + p.u * self.dt).rem_euclid(1.0);
+            p.y = (p.y + p.v * self.dt).rem_euclid(1.0);
+            p.z = (p.z + p.w * self.dt).rem_euclid(1.0);
+        }
+    }
+
+    /// High-energy particles this step: energy above `threshold`, plus
+    /// everything already tracked (§4.2 tracking semantics).
+    pub fn hot_particles(&mut self, threshold: f32) -> Vec<StreamElement> {
+        let mut out = Vec::new();
+        for (i, p) in self.particles.iter().enumerate() {
+            if self.tracked[i] || p.energy() > threshold {
+                self.tracked[i] = true;
+                out.push(*p);
+            }
+        }
+        out
+    }
+
+    /// Flat (n, 8) f32 rows for the kernels.
+    pub fn rows(elems: &[StreamElement]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(elems.len() * 8);
+        for e in elems {
+            out.extend_from_slice(&e.to_row());
+        }
+        out
+    }
+}
+
+/// Write particles as a legacy-VTK polydata file (the Fig 6 artifact
+/// "prepared in file formats, such as VTK, that can be visualized
+/// on-the-fly by the ParaView application").
+pub fn write_vtk(path: &std::path::Path, elems: &[StreamElement]) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "# vtk DataFile Version 3.0")?;
+    writeln!(f, "SAGE mini-iPIC3D high-energy particles")?;
+    writeln!(f, "ASCII")?;
+    writeln!(f, "DATASET POLYDATA")?;
+    writeln!(f, "POINTS {} float", elems.len())?;
+    for e in elems {
+        writeln!(f, "{} {} {}", e.x, e.y, e.z)?;
+    }
+    writeln!(f, "POINT_DATA {}", elems.len())?;
+    writeln!(f, "SCALARS energy float 1")?;
+    writeln!(f, "LOOKUP_TABLE default")?;
+    for e in elems {
+        writeln!(f, "{}", e.energy())?;
+    }
+    Ok(())
+}
+
+/// Run the real pipeline: simulate, stream hot particles, post-process
+/// on the consumer (PJRT kernel when available), write VTK snapshots.
+/// Returns (total hot particles streamed, VTK files written).
+pub fn run_real_pipeline(
+    tb: &Testbed,
+    exec: Option<&Executor>,
+    n_particles: usize,
+    steps: u64,
+    threshold: f32,
+    vtk_dir: Option<&std::path::Path>,
+) -> Result<(u64, u64)> {
+    let mut sim = Simulation::new(n_particles, 0.05, 42);
+    let mut streams = StreamSim::new(tb, StreamConfig::paper_ratio(15));
+    let mut total_hot = 0u64;
+    let mut files = 0u64;
+    for step in 0..steps {
+        sim.step();
+        let hot = sim.hot_particles(threshold);
+        total_hot += hot.len() as u64;
+        if hot.is_empty() {
+            continue;
+        }
+        streams.push_real(0, &hot, hot.len() as u64 * StreamElement::BYTES)?;
+        // consumer side: attached computation
+        let delivered = streams.collect(0);
+        let rows = Simulation::rows(&delivered);
+        let energies: Vec<f32> = if let Some(e) = exec {
+            match e.postprocess(&rows, threshold)? {
+                Some(out) => out.energies,
+                None => delivered.iter().map(|p| p.energy()).collect(),
+            }
+        } else {
+            delivered.iter().map(|p| p.energy()).collect()
+        };
+        debug_assert_eq!(energies.len(), delivered.len());
+        if let Some(dir) = vtk_dir {
+            let path = dir.join(format!("step_{step:04}.vtk"));
+            write_vtk(&path, &delivered)?;
+            files += 1;
+        }
+    }
+    streams.drain();
+    Ok((total_hot, files))
+}
+
+// --------------------------------------------------------------- scale
+
+/// Fig 7 outcome for one process count.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub procs: usize,
+    pub t_collective: f64,
+    pub t_streams: f64,
+    /// Paper's "improvement": collective / streams.
+    pub improvement: f64,
+}
+
+/// Per-step compute seconds per rank (fixed work per rank at each
+/// scale, as in the paper's scaling runs).
+const STEP_COMPUTE: f64 = 0.05;
+/// Snapshot bytes per rank per step (particles of interest).
+const SNAPSHOT_BYTES: u64 = 2 << 20;
+
+/// Run the Fig 7 scaling experiment for one process count.
+pub fn run_scaling(tb: &Testbed, procs: usize, steps: u64) -> ScalingPoint {
+    // --- baseline: collective I/O every step ------------------------
+    let mut coll = CollectiveIo::new(tb, procs);
+    for _ in 0..steps {
+        coll.step(STEP_COMPUTE, SNAPSHOT_BYTES);
+    }
+    let t_collective = coll.elapsed();
+
+    // --- streaming: 1 consumer / 15 producers -----------------------
+    let cfg = StreamConfig::paper_ratio(procs);
+    let mut s = StreamSim::new(tb, cfg);
+    let elems = SNAPSHOT_BYTES / StreamElement::BYTES;
+    for _ in 0..steps {
+        for p in 0..procs {
+            s.produce_compute(p, STEP_COMPUTE);
+        }
+        for p in 0..procs {
+            // consumers flush the converted VTK data asynchronously
+            s.push(p, elems, SNAPSHOT_BYTES).unwrap();
+        }
+    }
+    let t_streams = s.drain();
+
+    ScalingPoint {
+        procs,
+        t_collective,
+        t_streams,
+        improvement: t_collective / t_streams,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mover_conserves_particle_count_and_bounds() {
+        let mut s = Simulation::new(1000, 0.1, 1);
+        for _ in 0..50 {
+            s.step();
+        }
+        assert_eq!(s.particles.len(), 1000);
+        for p in &s.particles {
+            assert!((0.0..=1.0).contains(&p.x));
+            assert!((0.0..=1.0).contains(&p.y));
+            assert!((0.0..=1.0).contains(&p.z));
+        }
+    }
+
+    #[test]
+    fn resonant_particles_gain_energy() {
+        let mut s = Simulation::new(2000, 0.1, 2);
+        let e0: f32 = s.particles.iter().map(|p| p.energy()).sum();
+        for _ in 0..100 {
+            s.step();
+        }
+        let e1: f32 = s.particles.iter().map(|p| p.energy()).sum();
+        assert!(e1 > 1.5 * e0, "heating: {e0} -> {e1}");
+    }
+
+    #[test]
+    fn tracking_is_sticky() {
+        let mut s = Simulation::new(500, 0.2, 3);
+        for _ in 0..60 {
+            s.step();
+        }
+        let hot1 = s.hot_particles(2.0).len();
+        // next step: tracked set can only grow
+        s.step();
+        let hot2 = s.hot_particles(2.0).len();
+        assert!(hot2 >= hot1, "{hot1} -> {hot2}");
+    }
+
+    #[test]
+    fn vtk_file_is_wellformed() {
+        let dir = std::env::temp_dir().join("sage_vtk_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let elems: Vec<StreamElement> = (0..5)
+            .map(|i| StreamElement {
+                x: 0.1,
+                y: 0.2,
+                z: 0.3,
+                u: 1.0,
+                v: 0.0,
+                w: 0.0,
+                q: 1.0,
+                id: i as f32,
+            })
+            .collect();
+        let path = dir.join("t.vtk");
+        write_vtk(&path, &elems).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# vtk DataFile"));
+        assert!(text.contains("POINTS 5 float"));
+        assert!(text.contains("SCALARS energy"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_pipeline_streams_hot_particles() {
+        let tb = Testbed::beskow();
+        let (hot, files) =
+            run_real_pipeline(&tb, None, 2000, 30, 1.5, None).unwrap();
+        assert!(hot > 0, "some particles must cross the threshold");
+        assert_eq!(files, 0);
+    }
+
+    #[test]
+    fn fig7_shape_improvement_grows_with_scale() {
+        let tb = Testbed::beskow();
+        let small = run_scaling(&tb, 64, 20);
+        let large = run_scaling(&tb, 2048, 20);
+        assert!(
+            large.improvement > small.improvement,
+            "streaming advantage grows with scale: {} -> {}",
+            small.improvement,
+            large.improvement
+        );
+        assert!(
+            small.improvement > 0.7,
+            "at small scale the approaches are comparable ({})",
+            small.improvement
+        );
+        assert!(
+            large.improvement > 1.5,
+            "at scale streaming must clearly win ({})",
+            large.improvement
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Application workloads from the paper's evaluation (§4) and use-case
+//! portfolio (§2): STREAM, the Distributed Hash Table, the HACC I/O
+//! kernel, a mini-iPIC3D particle code with streaming visualization,
+//! and ALF log analytics over function shipping.
+
+pub mod alf;
+pub mod dht;
+pub mod hacc;
+pub mod ipic3d;
+pub mod stream;

@@ -1,0 +1,203 @@
+//! STREAM benchmark over MPI windows (Fig 3).
+//!
+//! "As files are mapped into the MPI window, STREAM is a convenient
+//! benchmark to measure the access bandwidth to the MPI storage window
+//! and compare it with the bandwidth achieved when using MPI windows in
+//! memory" (§4.1). The four kernels (Copy/Scale/Add/Triad) become
+//! chunked GET+PUT sweeps over three window-backed arrays; the timed
+//! region follows the standard STREAM protocol (arrays initialized
+//! before timing; best-of-N reported).
+
+use crate::config::Testbed;
+use crate::error::Result;
+use crate::pgas::{PgasSim, WindowId, WindowKind};
+use crate::sim::clock::SimTime;
+
+/// Bytes per array element (STREAM uses f64).
+pub const ELEM: u64 = 8;
+/// Transfer chunk for window sweeps.
+const CHUNK: u64 = 8 << 20;
+
+/// Result for one kernel.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    pub kernel: &'static str,
+    /// Best-of-reps bandwidth, bytes/s (STREAM convention byte counts).
+    pub bandwidth: f64,
+}
+
+struct Arrays {
+    a: WindowId,
+    b: WindowId,
+    c: WindowId,
+    bytes: u64,
+}
+
+/// Run STREAM with `m_elems` million elements per array on 1 rank.
+/// Returns (copy, scale, add, triad) results.
+pub fn run(
+    tb: &Testbed,
+    kind: WindowKind,
+    m_elems: u64,
+    reps: u32,
+) -> Result<Vec<StreamResult>> {
+    let n = m_elems * 1_000_000;
+    let bytes = n * ELEM;
+    let mut sim = PgasSim::new(tb.clone(), 1);
+    let arr = Arrays {
+        a: sim.alloc_window(kind, bytes),
+        b: sim.alloc_window(kind, bytes),
+        c: sim.alloc_window(kind, bytes),
+        bytes,
+    };
+    // STREAM protocol: initialize (untimed), then run kernels
+    for w in [arr.a, arr.b, arr.c] {
+        sim.warm(w, 0);
+    }
+
+    let kernels: [(&'static str, u64); 4] = [
+        ("copy", 2 * bytes),  // c = a
+        ("scale", 2 * bytes), // b = q*c
+        ("add", 3 * bytes),   // c = a + b
+        ("triad", 3 * bytes), // a = b + q*c
+    ];
+    let mut out = Vec::new();
+    for (name, moved) in kernels {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            sim.reset_clocks();
+            let t = run_kernel(&mut sim, &arr, name)?;
+            best = best.min(t);
+        }
+        out.push(StreamResult { kernel: name, bandwidth: moved as f64 / best });
+    }
+    Ok(out)
+}
+
+fn run_kernel(sim: &mut PgasSim, arr: &Arrays, name: &str) -> Result<SimTime> {
+    let t0 = sim.elapsed();
+    let mut off = 0;
+    while off < arr.bytes {
+        let len = CHUNK.min(arr.bytes - off);
+        match name {
+            "copy" => {
+                sim.get(arr.a, 0, 0, off, len, false)?;
+                sim.put(arr.c, 0, 0, off, len, false)?;
+            }
+            "scale" => {
+                sim.get(arr.c, 0, 0, off, len, false)?;
+                sim.put(arr.b, 0, 0, off, len, false)?;
+            }
+            "add" => {
+                sim.get(arr.a, 0, 0, off, len, false)?;
+                sim.get(arr.b, 0, 0, off, len, false)?;
+                sim.put(arr.c, 0, 0, off, len, false)?;
+            }
+            _ => {
+                sim.get(arr.b, 0, 0, off, len, false)?;
+                sim.get(arr.c, 0, 0, off, len, false)?;
+                sim.put(arr.a, 0, 0, off, len, false)?;
+            }
+        }
+        off += len;
+    }
+    Ok(sim.elapsed() - t0)
+}
+
+/// Raw read/write bandwidth sweep against a storage target (Fig 3b:
+/// the asymmetric Lustre bandwidths). Returns (read_bw, write_bw).
+pub fn rw_asymmetry(
+    tb: &Testbed,
+    target: crate::pgas::StorageTarget,
+    bytes: u64,
+) -> Result<(f64, f64)> {
+    // deep readahead / writeback pipelines keep every OST busy on a
+    // pure-bandwidth sweep, so use wide transfers
+    const SWEEP: u64 = 64 << 20;
+    // reads: cold cache (force device reads)
+    let mut sim = PgasSim::new(tb.clone(), 1);
+    let w = sim.alloc_window(WindowKind::Storage(target), bytes);
+    let mut off = 0;
+    while off < bytes {
+        let len = SWEEP.min(bytes - off);
+        sim.get(w, 0, 0, off, len, false)?;
+        off += len;
+    }
+    let read_bw = bytes as f64 / sim.elapsed();
+
+    // writes: write everything then force it out (sync)
+    let mut sim = PgasSim::new(tb.clone(), 1);
+    let w = sim.alloc_window(WindowKind::Storage(target), bytes);
+    let mut off = 0;
+    while off < bytes {
+        let len = SWEEP.min(bytes - off);
+        sim.put(w, 0, 0, off, len, false)?;
+        off += len;
+    }
+    sim.win_sync(w, 0)?;
+    let write_bw = bytes as f64 / sim.elapsed();
+    Ok((read_bw, write_bw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::StorageTarget;
+
+    #[test]
+    fn memory_stream_hits_dram_class_bandwidth() {
+        let tb = Testbed::blackdog();
+        let res = run(&tb, WindowKind::Memory, 100, 2).unwrap();
+        let copy = &res[0];
+        assert_eq!(copy.kernel, "copy");
+        assert!(
+            copy.bandwidth > 0.5 * tb.dram_bw && copy.bandwidth < 2.0 * tb.dram_bw,
+            "copy bw {} vs dram {}",
+            copy.bandwidth,
+            tb.dram_bw
+        );
+    }
+
+    #[test]
+    fn fig3a_shape_blackdog_storage_close_to_memory() {
+        let tb = Testbed::blackdog();
+        let mem = run(&tb, WindowKind::Memory, 100, 2).unwrap();
+        let sto = run(
+            &tb,
+            WindowKind::Storage(StorageTarget::Hdd),
+            100,
+            2,
+        )
+        .unwrap();
+        for (m, s) in mem.iter().zip(sto.iter()) {
+            let degradation = 1.0 - s.bandwidth / m.bandwidth;
+            assert!(
+                degradation < 0.5,
+                "{}: storage window degraded {degradation:.2} — cached \
+                 windows must stay in DRAM class",
+                m.kernel
+            );
+        }
+    }
+
+    #[test]
+    fn fig3c_shape_tegner_storage_collapses() {
+        let tb = Testbed::tegner();
+        let mem = run(&tb, WindowKind::Memory, 100, 1).unwrap();
+        let sto =
+            run(&tb, WindowKind::Storage(StorageTarget::Pfs), 100, 1).unwrap();
+        let copy_deg = 1.0 - sto[0].bandwidth / mem[0].bandwidth;
+        assert!(
+            copy_deg > 0.6,
+            "Lustre-backed STREAM must degrade heavily (got {copy_deg:.2})"
+        );
+    }
+
+    #[test]
+    fn fig3b_shape_lustre_asymmetry() {
+        let tb = Testbed::tegner();
+        let (r, w) =
+            rw_asymmetry(&tb, StorageTarget::Pfs, 1 << 30).unwrap();
+        assert!(r > 3.0 * w, "read {r} should far exceed write {w}");
+    }
+}

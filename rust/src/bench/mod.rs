@@ -1,0 +1,153 @@
+//! Benchmark harness (criterion-style, in-tree because the offline
+//! build has no criterion).
+//!
+//! Two measurement modes:
+//! * [`Bencher::wall`] — wall-clock timing with warmup and repeated
+//!   iterations; reports median ± MAD. Used for the L3 hot-path perf
+//!   work (§Perf in EXPERIMENTS.md).
+//! * virtual-time experiments simply report the simulated makespan —
+//!   the paper-figure benches use those directly.
+//!
+//! Results are appended to `bench_results/<name>.json` so the perf pass
+//! can diff before/after.
+
+use std::time::Instant;
+
+use crate::metrics::Stats;
+
+/// One benchmark's configuration + results.
+pub struct Bencher {
+    pub name: String,
+    warmup_iters: u32,
+    measure_iters: u32,
+}
+
+/// Outcome of a wall-clock measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Median absolute deviation.
+    pub mad: f64,
+    pub iters: u32,
+}
+
+impl Measurement {
+    /// Human summary line (criterion-like).
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} time: [{} ± {}] ({} iters)",
+            self.name,
+            crate::metrics::fmt_secs(self.median),
+            crate::metrics::fmt_secs(self.mad),
+            self.iters
+        )
+    }
+
+    /// Throughput line given bytes processed per iteration.
+    pub fn throughput(&self, bytes: u64) -> String {
+        format!(
+            "{:<40} thrpt: {}",
+            self.name,
+            crate::util::bytes::fmt_bw(bytes as f64 / self.median.max(1e-12))
+        )
+    }
+}
+
+impl Bencher {
+    /// Default: 3 warmup + 10 measured iterations.
+    pub fn new(name: &str) -> Self {
+        Bencher { name: name.to_string(), warmup_iters: 3, measure_iters: 10 }
+    }
+
+    /// Tune iteration counts (long-running sims use fewer).
+    pub fn iters(mut self, warmup: u32, measure: u32) -> Self {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure.max(1);
+        self
+    }
+
+    /// Measure `f` by wall clock. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn wall<T, F: FnMut() -> T>(&self, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut s = Stats::new();
+        let mut abs = Vec::new();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let dt = t0.elapsed().as_secs_f64();
+            s.push(dt);
+            abs.push(dt);
+        }
+        let median = s.median();
+        let mut devs = Stats::new();
+        for v in abs {
+            devs.push((v - median).abs());
+        }
+        Measurement {
+            name: self.name.clone(),
+            median,
+            mad: devs.median(),
+            iters: self.measure_iters,
+        }
+    }
+}
+
+/// Append a result row to `bench_results/<bench>.json` (one JSON object
+/// per line; the perf pass diffs these files).
+pub fn record(bench: &str, fields: &[(&str, f64)]) {
+    use std::io::Write as _;
+    let dir = std::path::Path::new("bench_results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let mut obj = String::from("{");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        if i > 0 {
+            obj.push(',');
+        }
+        obj.push_str(&format!("\"{k}\":{v}"));
+    }
+    obj.push('}');
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join(format!("{bench}.json")))
+    {
+        let _ = writeln!(f, "{obj}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_measures_something() {
+        let m = Bencher::new("spin").iters(1, 5).wall(|| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.median > 0.0);
+        assert_eq!(m.iters, 5);
+        assert!(m.summary().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_formats() {
+        let m = Measurement {
+            name: "t".into(),
+            median: 0.5,
+            mad: 0.0,
+            iters: 1,
+        };
+        assert!(m.throughput(1 << 30).contains("GB/s"));
+    }
+}

@@ -1,0 +1,135 @@
+//! ADDB: Analysis and Diagnostics Data Base (§3.2.2).
+//!
+//! "Clovis contains a management interface that accesses telemetry
+//! records called ADDB records on system performance that can be fed
+//! into external system data analysis tools" (e.g. ARM Forge, §3.2.3).
+//!
+//! A bounded ring of `(time, subsystem, metric, value)` records plus
+//! aggregation for reports.
+
+use std::collections::BTreeMap;
+
+use crate::sim::clock::SimTime;
+
+/// One telemetry record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AddbRecord {
+    pub at: SimTime,
+    pub subsystem: String,
+    pub metric: String,
+    pub value: f64,
+}
+
+/// Bounded telemetry ring buffer with running aggregates.
+#[derive(Debug)]
+pub struct Addb {
+    capacity: usize,
+    ring: Vec<AddbRecord>,
+    head: usize,
+    /// subsystem.metric -> (count, sum) running aggregate (not bounded
+    /// by the ring: aggregates survive eviction).
+    totals: BTreeMap<String, (u64, f64)>,
+}
+
+impl Addb {
+    /// Ring of `capacity` records.
+    pub fn new(capacity: usize) -> Self {
+        Addb {
+            capacity: capacity.max(1),
+            ring: Vec::new(),
+            head: 0,
+            totals: BTreeMap::new(),
+        }
+    }
+
+    /// Record a telemetry sample.
+    pub fn record(&mut self, at: SimTime, subsystem: &str, metric: &str, value: f64) {
+        let rec = AddbRecord {
+            at,
+            subsystem: subsystem.to_string(),
+            metric: metric.to_string(),
+            value,
+        };
+        let key = format!("{subsystem}.{metric}");
+        let e = self.totals.entry(key).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += value;
+        if self.ring.len() < self.capacity {
+            self.ring.push(rec);
+        } else {
+            self.ring[self.head] = rec;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Most recent records (up to `n`, newest last).
+    pub fn recent(&self, n: usize) -> Vec<&AddbRecord> {
+        let len = self.ring.len();
+        let take = n.min(len);
+        let mut out = Vec::with_capacity(take);
+        for i in 0..take {
+            let idx = (self.head + len - take + i) % len;
+            out.push(&self.ring[idx]);
+        }
+        out
+    }
+
+    /// `(metric, (count, sum))` aggregates for reporting.
+    pub fn summary(&self) -> Vec<(String, (u64, f64))> {
+        self.totals.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Total of one metric.
+    pub fn total(&self, subsystem: &str, metric: &str) -> f64 {
+        self.totals
+            .get(&format!("{subsystem}.{metric}"))
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// Render the performance report fed to "ARM Forge" (§3.2.3) —
+    /// here, a plain aggregated table.
+    pub fn report(&self) -> String {
+        let mut t = crate::metrics::Table::new(
+            "ADDB performance report",
+            &["metric", "count", "total"],
+        );
+        for (k, (n, s)) in &self.totals {
+            t.row(vec![k.clone(), n.to_string(), format!("{s:.1}")]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_survive_ring_eviction() {
+        let mut a = Addb::new(4);
+        for i in 0..100 {
+            a.record(i as f64, "io", "bytes", 10.0);
+        }
+        assert_eq!(a.total("io", "bytes"), 1000.0);
+        assert_eq!(a.recent(10).len(), 4, "ring bounded");
+    }
+
+    #[test]
+    fn recent_returns_newest_last() {
+        let mut a = Addb::new(3);
+        for i in 0..5 {
+            a.record(i as f64, "s", "m", i as f64);
+        }
+        let r = a.recent(2);
+        assert_eq!(r[0].value, 3.0);
+        assert_eq!(r[1].value, 4.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut a = Addb::new(8);
+        a.record(0.0, "clovis", "op", 1.0);
+        assert!(a.report().contains("clovis.op"));
+    }
+}

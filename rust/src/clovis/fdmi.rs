@@ -1,0 +1,153 @@
+//! FDMI: the File Data Manipulation Interface — Clovis's extension
+//! interface (§3.2.2).
+//!
+//! "Additional data management plug-ins can easily be built on top of
+//! the core through FDMI. Hierarchical storage management and
+//! information lifecycle management, file system integrity checking,
+//! data indexing, data compression are some examples of third-party
+//! plug-ins utilizing the API."
+//!
+//! Storage events are published on the [`FdmiBus`]; plugins implement
+//! [`FdmiPlugin`] with a filter predicate and a handler. HSM (the
+//! in-tree consumer) subscribes to write/read events for heat tracking.
+
+use crate::mero::object::ObjectId;
+use crate::sim::clock::SimTime;
+
+/// Storage events visible to plugins.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FdmiRecord {
+    ObjectCreated { obj: ObjectId, at: SimTime },
+    ObjectWritten { obj: ObjectId, offset: u64, len: u64, at: SimTime },
+    ObjectRead { obj: ObjectId, offset: u64, len: u64, at: SimTime },
+    ObjectDeleted { obj: ObjectId, at: SimTime },
+    ObjectMigrated { obj: ObjectId, from_tier: u8, to_tier: u8, at: SimTime },
+}
+
+impl FdmiRecord {
+    /// The object the record concerns.
+    pub fn object(&self) -> ObjectId {
+        match self {
+            FdmiRecord::ObjectCreated { obj, .. }
+            | FdmiRecord::ObjectWritten { obj, .. }
+            | FdmiRecord::ObjectRead { obj, .. }
+            | FdmiRecord::ObjectDeleted { obj, .. }
+            | FdmiRecord::ObjectMigrated { obj, .. } => *obj,
+        }
+    }
+
+    /// Event timestamp.
+    pub fn at(&self) -> SimTime {
+        match self {
+            FdmiRecord::ObjectCreated { at, .. }
+            | FdmiRecord::ObjectWritten { at, .. }
+            | FdmiRecord::ObjectRead { at, .. }
+            | FdmiRecord::ObjectDeleted { at, .. }
+            | FdmiRecord::ObjectMigrated { at, .. } => *at,
+        }
+    }
+}
+
+/// A third-party plugin: filter + handler.
+pub trait FdmiPlugin: Send {
+    /// Plugin name (diagnostics).
+    fn name(&self) -> &str;
+    /// Return true for records this plugin wants delivered.
+    fn filter(&self, rec: &FdmiRecord) -> bool;
+    /// Handle a delivered record.
+    fn deliver(&mut self, rec: &FdmiRecord);
+}
+
+/// The event bus: emit on one side, plugins consume on the other.
+#[derive(Default)]
+pub struct FdmiBus {
+    plugins: Vec<Box<dyn FdmiPlugin>>,
+    /// Records kept for pull-style consumers (drained by HSM et al.).
+    pending: Vec<FdmiRecord>,
+    pub emitted: u64,
+}
+
+impl FdmiBus {
+    /// Empty bus.
+    pub fn new() -> Self {
+        FdmiBus::default()
+    }
+
+    /// Register a plugin.
+    pub fn register(&mut self, plugin: Box<dyn FdmiPlugin>) {
+        self.plugins.push(plugin);
+    }
+
+    /// Publish a record: pushes to matching plugins and to the pending
+    /// queue for pull-style consumers.
+    pub fn emit(&mut self, rec: FdmiRecord) {
+        self.emitted += 1;
+        for p in &mut self.plugins {
+            if p.filter(&rec) {
+                p.deliver(&rec);
+            }
+        }
+        self.pending.push(rec);
+    }
+
+    /// Drain pending records (pull-style consumption).
+    pub fn drain(&mut self) -> Vec<FdmiRecord> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Registered plugin names.
+    pub fn plugin_names(&self) -> Vec<&str> {
+        self.plugins.iter().map(|p| p.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountWrites {
+        seen: std::rc::Rc<std::cell::RefCell<u64>>,
+    }
+    // test-only: single-threaded use
+    unsafe impl Send for CountWrites {}
+
+    impl FdmiPlugin for CountWrites {
+        fn name(&self) -> &str {
+            "count-writes"
+        }
+        fn filter(&self, rec: &FdmiRecord) -> bool {
+            matches!(rec, FdmiRecord::ObjectWritten { .. })
+        }
+        fn deliver(&mut self, _rec: &FdmiRecord) {
+            *self.seen.borrow_mut() += 1;
+        }
+    }
+
+    #[test]
+    fn plugins_get_filtered_records() {
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(0));
+        let mut bus = FdmiBus::new();
+        bus.register(Box::new(CountWrites { seen: seen.clone() }));
+        bus.emit(FdmiRecord::ObjectCreated { obj: ObjectId(1), at: 0.0 });
+        bus.emit(FdmiRecord::ObjectWritten {
+            obj: ObjectId(1),
+            offset: 0,
+            len: 10,
+            at: 1.0,
+        });
+        assert_eq!(*seen.borrow(), 1, "only the write matched the filter");
+        assert_eq!(bus.emitted, 2);
+        assert_eq!(bus.plugin_names(), vec!["count-writes"]);
+    }
+
+    #[test]
+    fn drain_empties_pending() {
+        let mut bus = FdmiBus::new();
+        bus.emit(FdmiRecord::ObjectDeleted { obj: ObjectId(2), at: 3.0 });
+        let drained = bus.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].object(), ObjectId(2));
+        assert_eq!(drained[0].at(), 3.0);
+        assert!(bus.drain().is_empty());
+    }
+}

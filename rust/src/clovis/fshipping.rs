@@ -1,0 +1,329 @@
+//! Function shipping: in-storage compute (§3.2.1).
+//!
+//! "Instead of moving the data to the computation, the computation
+//! moves to the data. The function-shipping component will provide the
+//! ability to run data-centric, distributed computations directly on
+//! the storage nodes where the data resides. … Well defined functions
+//! are offloaded from the use cases to storage through the API and
+//! invoked through simple Remote Procedure Call (RPC) mechanisms."
+//!
+//! A [`FunctionKind`] descriptor is RPC'd to the node holding the
+//! object; the node reads the object *locally* (device I/O, no network
+//! transfer of the payload), runs the AOT-compiled kernel through the
+//! PJRT [`Executor`] (or the CPU fallback), and returns only the small
+//! result. [`ShipResult`] reports both the shipped cost and the
+//! counterfactual move-data-to-client cost so benches can show the
+//! paper's data-movement saving.
+
+use crate::clovis::Client;
+use crate::error::Result;
+use crate::mero::object::ObjectId;
+use crate::sim::clock::SimTime;
+use crate::sim::device::{Access, IoOp};
+
+/// The well-defined functions the SAGE use cases offload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FunctionKind {
+    /// iPIC3D particle post-processing: energy filter at `threshold`
+    /// (Fig 6/7 payload; `postprocess_*` artifacts).
+    ParticleFilter { threshold: f32 },
+    /// ALF log analytics: histogram over [lo, hi) (`alf_histogram_64k`).
+    Histogram { lo: f32, hi: f32 },
+    /// Integrity scrub of object blocks (`integrity_16x4k`).
+    IntegrityCheck,
+}
+
+/// Small result returned over RPC (the point: results are tiny, data
+/// stays in storage).
+#[derive(Debug, Clone)]
+pub enum FnOutput {
+    /// (selected count, [count, sel energy sum, max, mean]).
+    Particles { selected: usize, stats: [f32; 4] },
+    /// 64-bin counts.
+    Histogram(Vec<f32>),
+    /// Per-extent digests.
+    Digests(Vec<[i32; 2]>),
+    /// Phantom object: cost accounted, no payload to compute on.
+    Phantom,
+}
+
+/// Outcome of one shipped invocation.
+#[derive(Debug, Clone)]
+pub struct ShipResult {
+    pub output: FnOutput,
+    /// Completion time with function shipping.
+    pub t_done: SimTime,
+    /// Counterfactual completion time moving the data to the client.
+    pub t_move_data: SimTime,
+    /// Bytes that crossed the network (shipped path).
+    pub net_bytes: u64,
+    /// Bytes that would have crossed the network (move path).
+    pub net_bytes_moved: u64,
+}
+
+/// Result payload size over RPC (stats / histogram / digests), bytes.
+const RESULT_BYTES: u64 = 1024;
+/// RPC descriptor size, bytes.
+const RPC_BYTES: u64 = 256;
+
+/// Ship `func` to the storage node holding `obj`.
+pub fn ship_to_object(
+    client: &mut Client,
+    obj: ObjectId,
+    func: FunctionKind,
+) -> Result<ShipResult> {
+    let now = client.now;
+    let size = client.store.object(obj)?.size;
+    let is_real = client.store.object(obj)?.real_blocks() > 0;
+
+    // locate the primary device/node of the object
+    let dev = client
+        .store
+        .object(obj)?
+        .placed_units()
+        .next()
+        .map(|u| u.device);
+
+    // --- time model: shipped path ------------------------------------
+    // RPC there + local read of the object + in-enclosure compute +
+    // result back.
+    let net = client.store.cluster.net.clone();
+    let mut t = now + net.pt2pt(RPC_BYTES);
+    let (node, local_read) = match dev {
+        Some(d) => {
+            let node = client.store.cluster.node_of(d).unwrap_or(0);
+            let t_read = client
+                .store
+                .cluster
+                .io(d, t, size.max(1), IoOp::Read, Access::Seq);
+            (node, t_read)
+        }
+        None => (0, t),
+    };
+    t = local_read;
+    // compute cost at ~1 flop/byte for filters/histograms
+    t += client.store.cluster.compute_time(node, size as f64);
+    t += net.pt2pt(RESULT_BYTES);
+
+    // --- counterfactual: move data to client --------------------------
+    let mut t_move = now;
+    if let Some(d) = dev {
+        t_move = client
+            .store
+            .cluster
+            .io(d, now, size.max(1), IoOp::Read, Access::Seq);
+    }
+    t_move += net.pt2pt(size.max(1)); // bulk transfer
+    t_move += size as f64 / 10e9; // client-side compute at 10 GB/s
+
+    // --- actually run the function on real data -----------------------
+    let output = if is_real {
+        run_function(client, obj, &func)?
+    } else {
+        FnOutput::Phantom
+    };
+
+    client.addb.record(now, "fship", "invocations", 1.0);
+    client
+        .addb
+        .record(now, "fship", "bytes_saved", size as f64);
+
+    Ok(ShipResult {
+        output,
+        t_done: t,
+        t_move_data: t_move,
+        net_bytes: RPC_BYTES + RESULT_BYTES,
+        net_bytes_moved: size,
+    })
+}
+
+/// Execute the function payload over the object's real bytes, via PJRT
+/// when the artifact is loaded, else the CPU fallback.
+fn run_function(
+    client: &mut Client,
+    obj: ObjectId,
+    func: &FunctionKind,
+) -> Result<FnOutput> {
+    let size = client.store.object(obj)?.size;
+    let (data, _) = crate::mero::sns::read(&mut client.store, obj, 0, size, client.now)?;
+    match func {
+        FunctionKind::ParticleFilter { threshold } => {
+            // interpret bytes as (n, 8) f32 particles
+            let n_floats = data.len() / 4;
+            let n = n_floats / 8;
+            let mut floats = vec![0f32; n * 8];
+            for (i, f) in floats.iter_mut().enumerate() {
+                *f = f32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+            if let Some(e) = &client.exec {
+                if let Some(out) = e.postprocess(&floats, *threshold)? {
+                    return Ok(FnOutput::Particles {
+                        selected: out.selected,
+                        stats: out.stats,
+                    });
+                }
+            }
+            // CPU fallback — identical math
+            let mut selected = 0usize;
+            let mut sum = 0f32;
+            let mut maxe = 0f32;
+            let mut tote = 0f32;
+            for p in floats.chunks(8) {
+                let e = 0.5 * p[6].abs() * (p[3] * p[3] + p[4] * p[4] + p[5] * p[5]);
+                tote += e;
+                maxe = maxe.max(e);
+                if e > *threshold {
+                    selected += 1;
+                    sum += e;
+                }
+            }
+            Ok(FnOutput::Particles {
+                selected,
+                stats: [selected as f32, sum, maxe, tote / n.max(1) as f32],
+            })
+        }
+        FunctionKind::Histogram { lo, hi } => {
+            let n = data.len() / 4;
+            let mut vals = vec![0f32; n];
+            for (i, v) in vals.iter_mut().enumerate() {
+                *v = f32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+            if let Some(e) = &client.exec {
+                if let Some(counts) = e.histogram(&vals, *lo, *hi)? {
+                    return Ok(FnOutput::Histogram(counts));
+                }
+            }
+            let mut counts = vec![0f32; 64];
+            let width = (hi - lo) / 64.0;
+            for v in vals {
+                let idx = (((v - lo) / width).floor() as i64).clamp(0, 63) as usize;
+                counts[idx] += 1.0;
+            }
+            Ok(FnOutput::Histogram(counts))
+        }
+        FunctionKind::IntegrityCheck => {
+            let lanes: Vec<i32> = data
+                .chunks(4)
+                .map(|c| {
+                    let mut b = [0u8; 4];
+                    b[..c.len()].copy_from_slice(c);
+                    i32::from_le_bytes(b)
+                })
+                .collect();
+            if let Some(e) = &client.exec {
+                // pad/truncate to the artifact extent shape
+                if let Some(info) = e.info("integrity_16x4k") {
+                    let want = info.input_shapes[0][0] * info.input_shapes[0][1];
+                    let mut padded = lanes.clone();
+                    padded.resize(want, 0);
+                    if let Some(d) = e.integrity(&padded)? {
+                        return Ok(FnOutput::Digests(d));
+                    }
+                }
+            }
+            // CPU fallback: same Fletcher-style pair per 4096-lane block
+            let mut out = Vec::new();
+            for block in lanes.chunks(4096) {
+                let mut s1 = 0i32;
+                let mut s2 = 0i32;
+                for (i, &v) in block.iter().enumerate() {
+                    s1 = s1.wrapping_add(v);
+                    s2 = s2.wrapping_add(v.wrapping_mul(i as i32 + 1));
+                }
+                out.push([s1, s2]);
+            }
+            Ok(FnOutput::Digests(out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    fn client() -> Client {
+        Client::new_sim(Testbed::sage_prototype())
+    }
+
+    /// Particles with known energies, encoded as object bytes.
+    fn particle_bytes(n: usize, hot: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n * 32);
+        for i in 0..n {
+            let speed = if i < hot { 10.0f32 } else { 0.1 };
+            let row = [0.0f32, 0.0, 0.0, speed, 0.0, 0.0, 1.0, i as f32];
+            for v in row {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn shipped_filter_counts_hot_particles() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        // 1024 particles = 32 KiB; pad to one block multiple
+        let mut data = particle_bytes(1024, 37);
+        data.resize(64 * 1024 * 4, 0); // whole default stripe
+        c.write_object(&obj, 0, &data).unwrap();
+        let r = c
+            .ship_to_object(obj, FunctionKind::ParticleFilter { threshold: 1.0 })
+            .unwrap();
+        match r.output {
+            FnOutput::Particles { selected, .. } => assert_eq!(selected, 37),
+            other => panic!("unexpected output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shipping_beats_moving_for_large_objects() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        c.write_object(&obj, 0, &particle_bytes(8192, 5).repeat(1)[..8192 * 32].to_vec())
+            .unwrap();
+        let r = c
+            .ship_to_object(obj, FunctionKind::ParticleFilter { threshold: 1.0 })
+            .unwrap();
+        assert!(
+            r.net_bytes < r.net_bytes_moved / 10,
+            "shipping moves orders of magnitude fewer bytes"
+        );
+    }
+
+    #[test]
+    fn histogram_in_storage() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let mut bytes = Vec::new();
+        for i in 0..16384 {
+            bytes.extend_from_slice(&(((i % 64) as f32) + 0.5).to_le_bytes());
+        }
+        c.write_object(&obj, 0, &bytes).unwrap();
+        let r = c
+            .ship_to_object(obj, FunctionKind::Histogram { lo: 0.0, hi: 64.0 })
+            .unwrap();
+        match r.output {
+            FnOutput::Histogram(counts) => {
+                assert_eq!(counts.len(), 64);
+                assert_eq!(counts.iter().sum::<f32>(), 16384.0);
+                assert!(counts.iter().all(|&c| c == 256.0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn integrity_check_detects_no_false_positive() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![3u8; 64 * 1024];
+        c.write_object(&obj, 0, &data).unwrap();
+        let r1 = c.ship_to_object(obj, FunctionKind::IntegrityCheck).unwrap();
+        let r2 = c.ship_to_object(obj, FunctionKind::IntegrityCheck).unwrap();
+        match (&r1.output, &r2.output) {
+            (FnOutput::Digests(a), FnOutput::Digests(b)) => assert_eq!(a, b),
+            _ => panic!("expected digests"),
+        }
+    }
+}

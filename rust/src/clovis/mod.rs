@@ -1,0 +1,306 @@
+//! Clovis: the transactional storage API on top of Mero (§3.2.2).
+//!
+//! * access interface — objects, indices, containers, layouts,
+//!   transactions ([`Client`] methods; op lifecycle in [`ops`])
+//! * function shipping — [`fshipping`] (§3.2.1): run computations on
+//!   the storage nodes where the data lives
+//! * management interface — [`addb`] telemetry and the [`fdmi`]
+//!   extension/plugin interface
+//!
+//! [`Client`] is what applications and the high-level HPC interfaces
+//! (PGAS I/O, MPI streams, HDF5/pNFS gateways) link against.
+
+pub mod addb;
+pub mod fdmi;
+pub mod fshipping;
+pub mod ops;
+
+use crate::config::Testbed;
+use crate::error::Result;
+use crate::mero::dtm::TxId;
+use crate::mero::{ContainerId, IndexId, Layout, MeroStore, ObjectId};
+use crate::runtime::Executor;
+use crate::sim::clock::SimTime;
+use crate::sim::device::DeviceKind;
+
+pub use fshipping::{FnOutput, FunctionKind, ShipResult};
+
+/// A Clovis client handle: the entry point of the SAGE storage API.
+pub struct Client {
+    pub store: MeroStore,
+    /// PJRT executor for shipped functions and SNS parity; `None` runs
+    /// CPU fallbacks (identical results, no kernel offload).
+    pub exec: Option<Executor>,
+    pub addb: addb::Addb,
+    pub fdmi: fdmi::FdmiBus,
+    /// Client-local virtual clock (single-client convenience; rank-
+    /// parallel workloads keep their own `RankClocks` and use the
+    /// `*_at` variants).
+    pub now: SimTime,
+}
+
+impl Client {
+    /// Client over a simulated testbed, no kernel offload.
+    pub fn new_sim(testbed: Testbed) -> Client {
+        Client {
+            store: MeroStore::new(testbed.build_cluster()),
+            exec: None,
+            addb: addb::Addb::new(4096),
+            fdmi: fdmi::FdmiBus::new(),
+            now: 0.0,
+        }
+    }
+
+    /// Client with the PJRT executor attached (loads `artifacts/`).
+    pub fn new_with_runtime(testbed: Testbed) -> Result<Client> {
+        let mut c = Client::new_sim(testbed);
+        c.exec = Some(Executor::load_default()?);
+        Ok(c)
+    }
+
+    // ------------------------------------------------------------ objects
+
+    /// Create an object with the default layout.
+    pub fn create_object(&mut self, block_size: u64) -> Result<ObjectId> {
+        self.create_object_with(block_size, Layout::default())
+    }
+
+    /// Create an object with an explicit layout.
+    pub fn create_object_with(
+        &mut self,
+        block_size: u64,
+        layout: Layout,
+    ) -> Result<ObjectId> {
+        let id = self.store.create_object(block_size, layout)?;
+        self.addb.record(self.now, "clovis", "obj_create", 1.0);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectCreated { obj: id, at: self.now });
+        Ok(id)
+    }
+
+    /// Write (real bytes), advancing the client clock.
+    pub fn write_object(
+        &mut self,
+        obj: &ObjectId,
+        offset: u64,
+        data: &[u8],
+    ) -> Result<SimTime> {
+        let t = self
+            .store
+            .write_object(*obj, offset, data, self.now, self.exec.as_ref())?;
+        self.addb
+            .record(self.now, "clovis", "obj_write_bytes", data.len() as f64);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectWritten {
+            obj: *obj,
+            offset,
+            len: data.len() as u64,
+            at: self.now,
+        });
+        self.now = t;
+        Ok(t)
+    }
+
+    /// Read, advancing the client clock.
+    pub fn read_object(
+        &mut self,
+        obj: &ObjectId,
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>> {
+        let (data, t) = self.store.read_object(*obj, offset, len, self.now)?;
+        self.addb.record(self.now, "clovis", "obj_read_bytes", len as f64);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectRead {
+            obj: *obj,
+            offset,
+            len,
+            at: self.now,
+        });
+        self.now = t;
+        Ok(data)
+    }
+
+    /// Delete an object at end of life.
+    pub fn delete_object(&mut self, obj: ObjectId) -> Result<()> {
+        self.store.delete_object(obj)?;
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectDeleted { obj, at: self.now });
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ indices
+
+    /// Create a KV index.
+    pub fn create_index(&mut self) -> IndexId {
+        self.store.create_index()
+    }
+
+    /// Batched PUT on an index.
+    pub fn idx_put(
+        &mut self,
+        idx: IndexId,
+        records: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Result<()> {
+        let n = records.len() as f64;
+        self.store.index_mut(idx)?.put_batch(records);
+        self.addb.record(self.now, "clovis", "idx_put", n);
+        Ok(())
+    }
+
+    /// Batched GET on an index.
+    pub fn idx_get(
+        &mut self,
+        idx: IndexId,
+        keys: &[Vec<u8>],
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        Ok(self.store.index(idx)?.get_batch(keys))
+    }
+
+    /// Batched DEL on an index.
+    pub fn idx_del(&mut self, idx: IndexId, keys: &[Vec<u8>]) -> Result<Vec<bool>> {
+        Ok(self.store.index_mut(idx)?.del_batch(keys))
+    }
+
+    /// Batched NEXT on an index.
+    pub fn idx_next(
+        &mut self,
+        idx: IndexId,
+        keys: &[Vec<u8>],
+    ) -> Result<Vec<Option<(Vec<u8>, Vec<u8>)>>> {
+        Ok(self.store.index(idx)?.next_batch(keys))
+    }
+
+    // -------------------------------------------------------- containers
+
+    /// Create a container with a tier hint.
+    pub fn create_container(
+        &mut self,
+        label: &str,
+        tier: Option<DeviceKind>,
+    ) -> ContainerId {
+        self.store.create_container(label, tier)
+    }
+
+    /// Add an object to a container.
+    pub fn container_add(&mut self, c: ContainerId, obj: ObjectId) -> Result<()> {
+        self.store.container_mut(c)?.add(obj);
+        Ok(())
+    }
+
+    // ------------------------------------------------------ transactions
+
+    /// Begin a distributed transaction.
+    pub fn tx_begin(&mut self) -> TxId {
+        self.store.dtm.begin()
+    }
+
+    /// Transactional KV write (buffered until commit).
+    pub fn tx_put(&mut self, tx: TxId, key: Vec<u8>, val: Vec<u8>) -> Result<()> {
+        self.store.dtm.write(tx, key, val)
+    }
+
+    /// Transactional read (snapshot + read-your-writes).
+    pub fn tx_get(&mut self, tx: TxId, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.store.dtm.read(tx, key)
+    }
+
+    /// Commit; advances the clock by the (group-amortized) log force.
+    pub fn tx_commit(&mut self, tx: TxId) -> Result<SimTime> {
+        let t = self.store.dtm.commit(tx, self.now)?;
+        self.now = t;
+        self.addb.record(self.now, "dtm", "commit", 1.0);
+        Ok(t)
+    }
+
+    /// Abort a transaction.
+    pub fn tx_abort(&mut self, tx: TxId) -> Result<()> {
+        self.store.dtm.abort(tx)
+    }
+
+    // -------------------------------------------------- function shipping
+
+    /// Ship a function to the storage node holding `obj` (§3.2.1):
+    /// the computation runs where the data lives.
+    pub fn ship_to_object(
+        &mut self,
+        obj: ObjectId,
+        func: FunctionKind,
+    ) -> Result<ShipResult> {
+        let r = fshipping::ship_to_object(self, obj, func)?;
+        self.now = r.t_done;
+        Ok(r)
+    }
+
+    /// One-shot operation: ship a function to every object in a
+    /// container (§3.2.1 Containers).
+    pub fn ship_to_container(
+        &mut self,
+        container: ContainerId,
+        func: FunctionKind,
+    ) -> Result<Vec<ShipResult>> {
+        let objs = self.store.container_objects(container)?;
+        let mut out = Vec::with_capacity(objs.len());
+        for obj in objs {
+            out.push(self.ship_to_object(obj, func.clone())?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client() -> Client {
+        Client::new_sim(Testbed::sage_prototype())
+    }
+
+    #[test]
+    fn object_roundtrip_via_client() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![7u8; 4 * 65536]; // one full default stripe
+        let t = c.write_object(&obj, 0, &data).unwrap();
+        assert!(t > 0.0);
+        let back = c.read_object(&obj, 0, data.len() as u64).unwrap();
+        assert_eq!(back, data);
+        assert!(c.now >= t);
+    }
+
+    #[test]
+    fn index_api() {
+        let mut c = client();
+        let idx = c.create_index();
+        c.idx_put(idx, vec![(b"k1".to_vec(), b"v1".to_vec())]).unwrap();
+        let got = c.idx_get(idx, &[b"k1".to_vec(), b"nope".to_vec()]).unwrap();
+        assert_eq!(got[0], Some(b"v1".to_vec()));
+        assert_eq!(got[1], None);
+    }
+
+    #[test]
+    fn transactions_atomic_via_client() {
+        let mut c = client();
+        let tx = c.tx_begin();
+        c.tx_put(tx, b"a".to_vec(), b"1".to_vec()).unwrap();
+        assert_eq!(c.tx_get(tx, b"a").unwrap(), Some(b"1".to_vec()));
+        c.tx_commit(tx).unwrap();
+        assert_eq!(c.store.dtm.get(b"a"), Some(&b"1".to_vec()));
+    }
+
+    #[test]
+    fn container_grouping() {
+        let mut c = client();
+        let cont = c.create_container("hot", Some(DeviceKind::Nvram));
+        let o1 = c.create_object(4096).unwrap();
+        let o2 = c.create_object(4096).unwrap();
+        c.container_add(cont, o1).unwrap();
+        c.container_add(cont, o2).unwrap();
+        assert_eq!(c.store.container_objects(cont).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn addb_collects_telemetry() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        c.write_object(&obj, 0, &vec![1u8; 4 * 65536]).unwrap();
+        let report = c.addb.summary();
+        assert!(report.iter().any(|(k, _)| k.contains("obj_write_bytes")));
+    }
+}

@@ -1,0 +1,215 @@
+//! Clovis operation lifecycle (§3.2.2 access interface).
+//!
+//! The real Clovis API is asynchronous: every object/index call creates
+//! an *op* that moves through INIT → LAUNCHED → EXECUTED (or FAILED),
+//! and callers wait on ops or op groups. The simulation executes
+//! synchronously in virtual time, but the op state machine is preserved
+//! as the public API surface: launch times, completion times and
+//! failure states are observable exactly as an application would see
+//! them.
+
+use crate::error::{Result, SageError};
+use crate::sim::clock::SimTime;
+
+/// Op lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpState {
+    Init,
+    Launched,
+    Executed,
+    Failed,
+}
+
+/// What kind of operation an op represents (diagnostics + ADDB).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    ObjCreate,
+    ObjWrite,
+    ObjRead,
+    ObjDelete,
+    IdxPut,
+    IdxGet,
+    IdxDel,
+    IdxNext,
+    FnShip,
+    Tx,
+}
+
+/// One asynchronous operation.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: u64,
+    pub kind: OpKind,
+    pub state: OpState,
+    pub launched_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+    pub error: Option<String>,
+}
+
+impl Op {
+    /// New op in INIT.
+    pub fn new(id: u64, kind: OpKind) -> Self {
+        Op {
+            id,
+            kind,
+            state: OpState::Init,
+            launched_at: None,
+            finished_at: None,
+            error: None,
+        }
+    }
+
+    /// INIT → LAUNCHED.
+    pub fn launch(&mut self, at: SimTime) -> Result<()> {
+        if self.state != OpState::Init {
+            return Err(SageError::Invalid(format!(
+                "op {} launch from {:?}",
+                self.id, self.state
+            )));
+        }
+        self.state = OpState::Launched;
+        self.launched_at = Some(at);
+        Ok(())
+    }
+
+    /// LAUNCHED → EXECUTED.
+    pub fn complete(&mut self, at: SimTime) -> Result<()> {
+        if self.state != OpState::Launched {
+            return Err(SageError::Invalid(format!(
+                "op {} complete from {:?}",
+                self.id, self.state
+            )));
+        }
+        self.state = OpState::Executed;
+        self.finished_at = Some(at);
+        Ok(())
+    }
+
+    /// LAUNCHED → FAILED.
+    pub fn fail(&mut self, at: SimTime, err: &str) -> Result<()> {
+        if self.state != OpState::Launched {
+            return Err(SageError::Invalid(format!(
+                "op {} fail from {:?}",
+                self.id, self.state
+            )));
+        }
+        self.state = OpState::Failed;
+        self.finished_at = Some(at);
+        self.error = Some(err.to_string());
+        Ok(())
+    }
+
+    /// Wall time the op took (None until finished).
+    pub fn latency(&self) -> Option<SimTime> {
+        Some(self.finished_at? - self.launched_at?)
+    }
+}
+
+/// A group of ops awaited together (`m0_op_wait` analog).
+#[derive(Debug, Default)]
+pub struct OpGroup {
+    ops: Vec<Op>,
+    next_id: u64,
+}
+
+impl OpGroup {
+    /// Empty group.
+    pub fn new() -> Self {
+        OpGroup::default()
+    }
+
+    /// Add an op; returns its id.
+    pub fn add(&mut self, kind: OpKind) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ops.push(Op::new(id, kind));
+        id
+    }
+
+    /// Borrow an op by id.
+    pub fn op_mut(&mut self, id: u64) -> Result<&mut Op> {
+        self.ops
+            .iter_mut()
+            .find(|o| o.id == id)
+            .ok_or_else(|| SageError::NotFound(format!("op {id}")))
+    }
+
+    /// Wait for all ops: the completion time is the max finish time.
+    /// Errors if any op FAILED or is still pending.
+    pub fn wait_all(&self) -> Result<SimTime> {
+        let mut t = 0.0f64;
+        for op in &self.ops {
+            match op.state {
+                OpState::Executed => {
+                    t = t.max(op.finished_at.unwrap_or(0.0));
+                }
+                OpState::Failed => {
+                    return Err(SageError::Invalid(format!(
+                        "op {} failed: {}",
+                        op.id,
+                        op.error.clone().unwrap_or_default()
+                    )));
+                }
+                _ => {
+                    return Err(SageError::Invalid(format!(
+                        "op {} not finished ({:?})",
+                        op.id, op.state
+                    )));
+                }
+            }
+        }
+        Ok(t)
+    }
+
+    /// Count by state.
+    pub fn count(&self, state: OpState) -> usize {
+        self.ops.iter().filter(|o| o.state == state).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut op = Op::new(1, OpKind::ObjWrite);
+        op.launch(1.0).unwrap();
+        op.complete(3.5).unwrap();
+        assert_eq!(op.state, OpState::Executed);
+        assert_eq!(op.latency(), Some(2.5));
+    }
+
+    #[test]
+    fn invalid_transitions_rejected() {
+        let mut op = Op::new(1, OpKind::ObjRead);
+        assert!(op.complete(1.0).is_err(), "cannot complete before launch");
+        op.launch(0.0).unwrap();
+        assert!(op.launch(0.0).is_err(), "cannot double-launch");
+        op.fail(1.0, "io error").unwrap();
+        assert!(op.complete(2.0).is_err(), "cannot complete after fail");
+    }
+
+    #[test]
+    fn group_wait_semantics() {
+        let mut g = OpGroup::new();
+        let a = g.add(OpKind::ObjWrite);
+        let b = g.add(OpKind::ObjWrite);
+        g.op_mut(a).unwrap().launch(0.0).unwrap();
+        g.op_mut(b).unwrap().launch(0.0).unwrap();
+        g.op_mut(a).unwrap().complete(1.0).unwrap();
+        assert!(g.wait_all().is_err(), "b still pending");
+        g.op_mut(b).unwrap().complete(4.0).unwrap();
+        assert_eq!(g.wait_all().unwrap(), 4.0, "group completes at max");
+    }
+
+    #[test]
+    fn group_wait_propagates_failure() {
+        let mut g = OpGroup::new();
+        let a = g.add(OpKind::FnShip);
+        g.op_mut(a).unwrap().launch(0.0).unwrap();
+        g.op_mut(a).unwrap().fail(1.0, "node died").unwrap();
+        assert!(g.wait_all().is_err());
+        assert_eq!(g.count(OpState::Failed), 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Failure injection (§3.2.1 High Availability).
+//!
+//! "Several hardware failures per second at Exascale": failures are the
+//! norm. A [`FailureSchedule`] generates device/node failure events in
+//! virtual time — either scripted (tests) or sampled from an exponential
+//! inter-arrival model scaled by component count (the paper's
+//! observation that failure rate scales with the number of units).
+
+use crate::cluster::DeviceId;
+use crate::sim::clock::SimTime;
+use crate::sim::rng::SimRng;
+
+/// What failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A storage device died (data on it is lost; SNS repair rebuilds).
+    Device(DeviceId),
+    /// A transient glitch (I/O error; retry succeeds). The HA subsystem
+    /// must NOT trigger repair on isolated transients — it quantifies
+    /// event sets over recent history (§3.2.1).
+    Transient(DeviceId),
+}
+
+/// A failure at a point in virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct FailureEvent {
+    pub at: SimTime,
+    pub kind: FailureKind,
+}
+
+/// A time-ordered failure schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FailureSchedule {
+    events: Vec<FailureEvent>,
+    cursor: usize,
+}
+
+impl FailureSchedule {
+    /// Scripted schedule (events need not be pre-sorted).
+    pub fn scripted(mut events: Vec<FailureEvent>) -> Self {
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        FailureSchedule { events, cursor: 0 }
+    }
+
+    /// Sample a schedule: each of `devices` fails independently with
+    /// exponential inter-arrival of mean `mtbf` seconds over `horizon`
+    /// seconds of virtual time; a fraction `transient_ratio` of events
+    /// are transient glitches rather than hard failures.
+    pub fn sampled(
+        devices: &[DeviceId],
+        mtbf: f64,
+        horizon: SimTime,
+        transient_ratio: f64,
+        rng: &mut SimRng,
+    ) -> Self {
+        let mut events = Vec::new();
+        for &d in devices {
+            let mut t = rng.gen_exp(mtbf);
+            while t < horizon {
+                let kind = if rng.gen_f64() < transient_ratio {
+                    FailureKind::Transient(d)
+                } else {
+                    FailureKind::Device(d)
+                };
+                events.push(FailureEvent { at: t, kind });
+                if matches!(kind, FailureKind::Device(_)) {
+                    break; // hard-failed devices stay failed
+                }
+                t += rng.gen_exp(mtbf);
+            }
+        }
+        Self::scripted(events)
+    }
+
+    /// Pop all events with `at <= now`.
+    pub fn due(&mut self, now: SimTime) -> Vec<FailureEvent> {
+        let mut out = Vec::new();
+        while self.cursor < self.events.len()
+            && self.events[self.cursor].at <= now
+        {
+            out.push(self.events[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Remaining event count.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_ordering_and_due() {
+        let mut s = FailureSchedule::scripted(vec![
+            FailureEvent { at: 5.0, kind: FailureKind::Device(1) },
+            FailureEvent { at: 1.0, kind: FailureKind::Transient(0) },
+        ]);
+        assert_eq!(s.remaining(), 2);
+        let d = s.due(2.0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind, FailureKind::Transient(0));
+        assert_eq!(s.due(10.0).len(), 1);
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn sampled_respects_horizon_and_mtbf() {
+        let mut rng = SimRng::new(42);
+        let devs: Vec<DeviceId> = (0..100).collect();
+        let s = FailureSchedule::sampled(&devs, 1000.0, 100.0, 0.5, &mut rng);
+        // expected ~100 * 100/1000 = ~10 first-arrivals within horizon
+        assert!(s.remaining() > 2 && s.remaining() < 40, "{}", s.remaining());
+    }
+
+    #[test]
+    fn failure_rate_scales_with_devices() {
+        let mut rng = SimRng::new(7);
+        let few: Vec<DeviceId> = (0..10).collect();
+        let many: Vec<DeviceId> = (0..1000).collect();
+        let a = FailureSchedule::sampled(&few, 1000.0, 100.0, 0.0, &mut rng)
+            .remaining();
+        let b = FailureSchedule::sampled(&many, 1000.0, 100.0, 0.0, &mut rng)
+            .remaining();
+        assert!(b > 10 * a.max(1), "a={a} b={b}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Simulated cluster: storage nodes with in-enclosure compute, device
+//! inventory, and the interconnect (§3.1: enclosures with embedded x86
+//! compute joined by FDR InfiniBand; compute capability increases for
+//! faster tiers).
+
+pub mod failure;
+
+use crate::sim::clock::SimTime;
+use crate::sim::device::{Access, Device, DeviceProfile, IoOp};
+use crate::sim::network::NetworkModel;
+
+/// Index of a storage node.
+pub type NodeId = usize;
+/// Index of a device in the cluster inventory.
+pub type DeviceId = usize;
+
+/// In-enclosure compute capability (standard x86 embedded parts; used
+/// to cost function-shipped computations on storage nodes).
+#[derive(Debug, Clone)]
+pub struct EnclosureCompute {
+    pub cores: u32,
+    /// Aggregate throughput for shipped kernels, FLOP/s-equivalent.
+    pub flops: f64,
+}
+
+/// One storage enclosure/node.
+#[derive(Debug, Clone)]
+pub struct StorageNode {
+    pub id: NodeId,
+    pub devices: Vec<DeviceId>,
+    pub compute: EnclosureCompute,
+}
+
+/// The simulated SAGE cluster.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<StorageNode>,
+    pub devices: Vec<Device>,
+    pub net: NetworkModel,
+}
+
+impl Cluster {
+    /// Empty cluster over a given network.
+    pub fn new(net: NetworkModel) -> Self {
+        Cluster { nodes: Vec::new(), devices: Vec::new(), net }
+    }
+
+    /// Add a node with the given device profiles and compute capability;
+    /// returns its id. Per §3.1, faster tiers get more compute.
+    pub fn add_node(
+        &mut self,
+        profiles: Vec<DeviceProfile>,
+        compute: EnclosureCompute,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        let mut dev_ids = Vec::with_capacity(profiles.len());
+        for p in profiles {
+            dev_ids.push(self.add_device(p));
+        }
+        self.nodes.push(StorageNode { id, devices: dev_ids, compute });
+        id
+    }
+
+    /// Add a standalone device; returns its id.
+    pub fn add_device(&mut self, profile: DeviceProfile) -> DeviceId {
+        let id = self.devices.len();
+        self.devices.push(Device::new(profile));
+        id
+    }
+
+    /// Node owning `dev`, if any.
+    pub fn node_of(&self, dev: DeviceId) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .find(|n| n.devices.contains(&dev))
+            .map(|n| n.id)
+    }
+
+    /// Submit an I/O to `dev` at `now`; returns completion time.
+    pub fn io(
+        &mut self,
+        dev: DeviceId,
+        now: SimTime,
+        size: u64,
+        op: IoOp,
+        access: Access,
+    ) -> SimTime {
+        self.devices[dev].io(now, size, op, access)
+    }
+
+    /// All non-failed devices of a kind predicate.
+    pub fn devices_where<F: Fn(&Device) -> bool>(&self, f: F) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| !d.failed && f(d))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Mark a device failed (drives HA repair, §3.2.1).
+    pub fn fail_device(&mut self, dev: DeviceId) {
+        self.devices[dev].failed = true;
+    }
+
+    /// Restore a repaired/replaced device (empty).
+    pub fn replace_device(&mut self, dev: DeviceId) {
+        let d = &mut self.devices[dev];
+        d.failed = false;
+        d.used = 0;
+    }
+
+    /// Cost of running a shipped computation of `flops` on `node`.
+    pub fn compute_time(&self, node: NodeId, flops: f64) -> SimTime {
+        flops / self.nodes[node].compute.flops.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceKind;
+
+    fn mini() -> Cluster {
+        let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+        c.add_node(
+            vec![DeviceProfile::nvram(1 << 30), DeviceProfile::ssd(1 << 34)],
+            EnclosureCompute { cores: 16, flops: 5e10 },
+        );
+        c.add_node(
+            vec![DeviceProfile::hdd(1 << 40)],
+            EnclosureCompute { cores: 4, flops: 1e10 },
+        );
+        c
+    }
+
+    #[test]
+    fn topology() {
+        let c = mini();
+        assert_eq!(c.nodes.len(), 2);
+        assert_eq!(c.devices.len(), 3);
+        assert_eq!(c.node_of(0), Some(0));
+        assert_eq!(c.node_of(2), Some(1));
+    }
+
+    #[test]
+    fn failure_excludes_device() {
+        let mut c = mini();
+        let ssds = c.devices_where(|d| d.profile.kind == DeviceKind::Ssd);
+        assert_eq!(ssds.len(), 1);
+        c.fail_device(ssds[0]);
+        assert!(c
+            .devices_where(|d| d.profile.kind == DeviceKind::Ssd)
+            .is_empty());
+        c.replace_device(ssds[0]);
+        assert_eq!(
+            c.devices_where(|d| d.profile.kind == DeviceKind::Ssd).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn faster_node_computes_faster() {
+        let c = mini();
+        assert!(c.compute_time(0, 1e9) < c.compute_time(1, 1e9));
+    }
+}

@@ -1,0 +1,268 @@
+//! Config system: testbed presets matching the paper's evaluation
+//! platforms (§4.1), loadable/overridable from TOML files.
+//!
+//! * **blackdog** — eight-core Xeon workstation, 72 GB DRAM, 2×4 TB
+//!   HDD + 250 GB SSD (Fig 3a, 4a, 5-left).
+//! * **tegner** — KTH cluster: 24-core Haswell nodes, 512 GB DRAM,
+//!   Lustre PFS with the measured 12.3 GB/s read / 1.37 GB/s write
+//!   asymmetry (Fig 3b, 3c, 4b, 5-right).
+//! * **beskow** — Cray XC40, Aries dragonfly, 32-core nodes (Fig 7).
+//! * **sage_prototype** — the Jülich SAGE rack (§3.1): NVRAM + SSD +
+//!   SAS + SMR tiers in enclosures with in-storage compute.
+
+use std::path::Path;
+
+use crate::cluster::{Cluster, EnclosureCompute};
+use crate::error::Result;
+use crate::sim::device::{DeviceKind, DeviceProfile};
+use crate::sim::network::NetworkModel;
+use crate::util::toml::TomlDoc;
+
+/// A named testbed: DRAM + device inventory + network.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub name: String,
+    /// DRAM per node (page-cache capacity).
+    pub dram_per_node: u64,
+    /// DRAM bandwidth per node (STREAM-class), bytes/s.
+    pub dram_bw: f64,
+    /// Compute nodes available to applications.
+    pub compute_nodes: usize,
+    /// Cores per compute node.
+    pub cores_per_node: usize,
+    /// Storage device profiles (the storage side of the platform).
+    pub storage: Vec<DeviceProfile>,
+    /// Network between nodes / to storage.
+    pub net: NetworkModel,
+    /// In-storage compute per enclosure (SAGE prototype).
+    pub enclosure_flops: f64,
+}
+
+impl Testbed {
+    /// Blackdog workstation (§4.1).
+    pub fn blackdog() -> Testbed {
+        Testbed {
+            name: "blackdog".into(),
+            dram_per_node: 72 << 30,
+            dram_bw: 11.0e9, // measured-class STREAM triad for E5-2609v2
+            compute_nodes: 1,
+            cores_per_node: 8,
+            storage: vec![
+                DeviceProfile::hdd(4 << 40),
+                DeviceProfile::hdd(4 << 40),
+                DeviceProfile::ssd(250 << 30),
+            ],
+            net: NetworkModel::loopback(),
+            enclosure_flops: 2e10,
+        }
+    }
+
+    /// Tegner + Lustre (§4.1). 24 OSTs model the shared PFS.
+    pub fn tegner() -> Testbed {
+        let n_ost = 24;
+        Testbed {
+            name: "tegner".into(),
+            dram_per_node: 512 << 30,
+            dram_bw: 55.0e9, // dual-socket Haswell
+            compute_nodes: 6,
+            cores_per_node: 24,
+            storage: (0..n_ost)
+                .map(|_| DeviceProfile::lustre_ost(32 << 40, n_ost))
+                .collect(),
+            net: NetworkModel::tengig(),
+            enclosure_flops: 5e10,
+        }
+    }
+
+    /// Beskow Cray XC40 (§4.2): 1,676 nodes of 32 cores; Lustre-class
+    /// PFS sized for a Cray (more OSTs, higher aggregate).
+    pub fn beskow() -> Testbed {
+        let n_ost = 48;
+        Testbed {
+            name: "beskow".into(),
+            dram_per_node: 64 << 30,
+            dram_bw: 60.0e9,
+            compute_nodes: 1676,
+            cores_per_node: 32,
+            storage: (0..n_ost)
+                .map(|_| {
+                    // Beskow-class scratch: ~40 GB/s read, ~30 GB/s write
+                    DeviceProfile {
+                        kind: DeviceKind::LustreOst,
+                        read_bw: 40e9 / n_ost as f64,
+                        write_bw: 30e9 / n_ost as f64,
+                        latency: 0.4e-3,
+                        seek: 0.0,
+                        capacity: 64 << 40,
+                    }
+                })
+                .collect(),
+            net: NetworkModel::aries(),
+            enclosure_flops: 1e11,
+        }
+    }
+
+    /// The SAGE prototype rack at Jülich (§3.1): four storage tiers in
+    /// compute-capable enclosures on FDR InfiniBand.
+    pub fn sage_prototype() -> Testbed {
+        let mut storage = Vec::new();
+        // Tier-1: NVRAM pools (2 enclosures x 2 devices)
+        for _ in 0..4 {
+            storage.push(DeviceProfile::nvram(768 << 30));
+        }
+        // Tier-2: flash (8 SSDs)
+        for _ in 0..8 {
+            storage.push(DeviceProfile::ssd(2 << 40));
+        }
+        // Tier-3: SAS (8 HDDs)
+        for _ in 0..8 {
+            storage.push(DeviceProfile::hdd(8 << 40));
+        }
+        // Tier-4: SMR archive (4 drives)
+        for _ in 0..4 {
+            storage.push(DeviceProfile::smr(14 << 40));
+        }
+        Testbed {
+            name: "sage_prototype".into(),
+            dram_per_node: 128 << 30,
+            dram_bw: 40.0e9,
+            compute_nodes: 16,
+            cores_per_node: 16,
+            storage,
+            net: NetworkModel::fdr_infiniband(),
+            enclosure_flops: 5e10,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<Testbed> {
+        match name {
+            "blackdog" => Some(Self::blackdog()),
+            "tegner" => Some(Self::tegner()),
+            "beskow" => Some(Self::beskow()),
+            "sage_prototype" | "sage" => Some(Self::sage_prototype()),
+            _ => None,
+        }
+    }
+
+    /// Load a testbed from a TOML file: `base = "<preset>"` plus
+    /// overrides (`dram_per_node`, `compute_nodes`, tier sections).
+    pub fn from_toml(path: &Path) -> Result<Testbed> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = TomlDoc::parse(&text)?;
+        let base = doc.get_str("", "base", "sage_prototype");
+        let mut tb = Self::by_name(&base).ok_or_else(|| {
+            crate::error::SageError::Config(format!("unknown base testbed {base}"))
+        })?;
+        tb.name = doc.get_str("", "name", &tb.name);
+        tb.dram_per_node =
+            doc.get_bytes("", "dram_per_node", tb.dram_per_node);
+        tb.compute_nodes =
+            doc.get_i64("", "compute_nodes", tb.compute_nodes as i64) as usize;
+        tb.cores_per_node =
+            doc.get_i64("", "cores_per_node", tb.cores_per_node as i64) as usize;
+        // optional extra tier sections: [tier.<kind>] count=, capacity=
+        for kind in ["nvram", "ssd", "hdd", "smr"] {
+            let sec = format!("tier.{kind}");
+            let count = doc.get_i64(&sec, "count", 0);
+            if count > 0 {
+                let cap = doc.get_bytes(&sec, "capacity", 1 << 40);
+                for _ in 0..count {
+                    tb.storage.push(match kind {
+                        "nvram" => DeviceProfile::nvram(cap),
+                        "ssd" => DeviceProfile::ssd(cap),
+                        "hdd" => DeviceProfile::hdd(cap),
+                        _ => DeviceProfile::smr(cap),
+                    });
+                }
+            }
+        }
+        Ok(tb)
+    }
+
+    /// Materialize the cluster: one storage node per 4 devices
+    /// (enclosure granularity), each with in-storage compute.
+    pub fn build_cluster(&self) -> Cluster {
+        let mut c = Cluster::new(self.net.clone());
+        for chunk in self.storage.chunks(4) {
+            c.add_node(
+                chunk.to_vec(),
+                EnclosureCompute {
+                    cores: self.cores_per_node as u32,
+                    flops: self.enclosure_flops,
+                },
+            );
+        }
+        c
+    }
+
+    /// DRAM device profile (page-cache backing for PGAS windows).
+    pub fn dram(&self) -> DeviceProfile {
+        DeviceProfile::dram(self.dram_per_node, self.dram_bw)
+    }
+
+    /// Total ranks this testbed can host.
+    pub fn max_ranks(&self) -> usize {
+        self.compute_nodes * self.cores_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build() {
+        for name in ["blackdog", "tegner", "beskow", "sage_prototype"] {
+            let tb = Testbed::by_name(name).unwrap();
+            let c = tb.build_cluster();
+            assert!(!c.devices.is_empty(), "{name}");
+            assert!(!c.nodes.is_empty(), "{name}");
+        }
+        assert!(Testbed::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn prototype_has_all_tiers() {
+        let tb = Testbed::sage_prototype();
+        let c = tb.build_cluster();
+        for kind in [
+            DeviceKind::Nvram,
+            DeviceKind::Ssd,
+            DeviceKind::Hdd,
+            DeviceKind::Smr,
+        ] {
+            assert!(
+                c.devices.iter().any(|d| d.profile.kind == kind),
+                "{kind:?} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn beskow_scale() {
+        let tb = Testbed::beskow();
+        assert!(tb.max_ranks() >= 8192, "Fig 7 needs 8192 ranks");
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let tmp = std::env::temp_dir().join("sage_tb_test.toml");
+        std::fs::write(
+            &tmp,
+            "base = \"blackdog\"\nname = \"custom\"\ncompute_nodes = 2\n\n[tier.nvram]\ncount = 2\ncapacity = \"1GiB\"\n",
+        )
+        .unwrap();
+        let tb = Testbed::from_toml(&tmp).unwrap();
+        assert_eq!(tb.name, "custom");
+        assert_eq!(tb.compute_nodes, 2);
+        assert_eq!(
+            tb.storage
+                .iter()
+                .filter(|p| p.kind == DeviceKind::Nvram)
+                .count(),
+            2
+        );
+        std::fs::remove_file(&tmp).ok();
+    }
+}

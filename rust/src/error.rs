@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the SAGE stack.
+#[derive(Error, Debug)]
+pub enum SageError {
+    /// Object / index / container identifier not found.
+    #[error("no such entity: {0}")]
+    NotFound(String),
+
+    /// An operation violated API preconditions (bad offset, size, state).
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+
+    /// Storage pool exhausted or device over capacity.
+    #[error("out of space: {0}")]
+    NoSpace(String),
+
+    /// Too many failed devices in a parity group to reconstruct data.
+    #[error("data unavailable: {0}")]
+    Unavailable(String),
+
+    /// Transaction aborted (conflict, explicit abort, or failed node).
+    #[error("transaction aborted: {0}")]
+    TxAborted(String),
+
+    /// Error from the PJRT runtime (artifact load / compile / execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Config file / CLI parse errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// On-disk / in-flight data failed an integrity check.
+    #[error("integrity violation: {0}")]
+    Integrity(String),
+
+    /// Underlying I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Convenient result alias used across the crate.
+pub type Result<T> = std::result::Result<T, SageError>;
+
+impl From<xla::Error> for SageError {
+    fn from(e: xla::Error) -> Self {
+        SageError::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,345 @@
+//! HDF5-style hierarchical data layer (§3.2.4).
+//!
+//! "The HDF5 data format needs to be supported in SAGE, and is layered
+//! directly on top of Clovis. The HDF5 will use the Virtual Object
+//! Layer Infrastructure … to interface with Clovis."
+//!
+//! A faithful-in-spirit VOL mapping: groups form a hierarchy in the
+//! KVS; datasets are typed n-dimensional arrays whose raw data lives in
+//! a Mero object (row-major, element-wise little-endian); attributes
+//! are small KV records. Hyperslab reads/writes translate to
+//! block-aligned object I/O.
+
+use crate::clovis::Client;
+use crate::error::{Result, SageError};
+use crate::mero::{IndexId, Layout, ObjectId};
+
+/// Supported element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    I32,
+    I64,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub fn size(self) -> u64 {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F64 | Dtype::I64 => 8,
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F64 => 1,
+            Dtype::I32 => 2,
+            Dtype::I64 => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Option<Dtype> {
+        Some(match t {
+            0 => Dtype::F32,
+            1 => Dtype::F64,
+            2 => Dtype::I32,
+            3 => Dtype::I64,
+            _ => return None,
+        })
+    }
+}
+
+/// Dataset metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetInfo {
+    pub obj: ObjectId,
+    pub dtype: Dtype,
+    pub shape: Vec<u64>,
+}
+
+impl DatasetInfo {
+    /// Total elements.
+    pub fn len(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    /// True when any dimension is zero.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut v = vec![b'S', self.dtype.tag(), self.shape.len() as u8];
+        v.extend_from_slice(&self.obj.0.to_be_bytes());
+        for d in &self.shape {
+            v.extend_from_slice(&d.to_be_bytes());
+        }
+        v
+    }
+
+    fn decode(raw: &[u8]) -> Option<DatasetInfo> {
+        if raw.len() < 11 || raw[0] != b'S' {
+            return None;
+        }
+        let dtype = Dtype::from_tag(raw[1])?;
+        let ndim = raw[2] as usize;
+        let obj = ObjectId(u64::from_be_bytes(raw[3..11].try_into().ok()?));
+        let mut shape = Vec::with_capacity(ndim);
+        for i in 0..ndim {
+            let s = 11 + i * 8;
+            shape.push(u64::from_be_bytes(raw.get(s..s + 8)?.try_into().ok()?));
+        }
+        Some(DatasetInfo { obj, dtype, shape })
+    }
+}
+
+/// The HDF5-like file: one namespace index + dataset objects.
+pub struct H5File {
+    idx: IndexId,
+}
+
+impl H5File {
+    /// Create/open a fresh file.
+    pub fn create(client: &mut Client) -> H5File {
+        let idx = client.create_index();
+        let f = H5File { idx };
+        let _ = client
+            .store
+            .index_mut(idx)
+            .map(|i| i.put(b"/".to_vec(), b"G".to_vec()));
+        f
+    }
+
+    /// Create a group (parents must exist; "/" exists).
+    pub fn create_group(&self, client: &mut Client, path: &str) -> Result<()> {
+        let parent = parent_of(path);
+        if !self.is_group(client, &parent)? {
+            return Err(SageError::NotFound(format!("group {parent}")));
+        }
+        client
+            .store
+            .index_mut(self.idx)?
+            .put(path.as_bytes().to_vec(), b"G".to_vec());
+        Ok(())
+    }
+
+    fn is_group(&self, client: &Client, path: &str) -> Result<bool> {
+        Ok(client.store.index(self.idx)?.get(path.as_bytes()) == Some(b"G".as_ref()))
+    }
+
+    /// Create a dataset of `shape` × `dtype` under `path`.
+    pub fn create_dataset(
+        &self,
+        client: &mut Client,
+        path: &str,
+        dtype: Dtype,
+        shape: &[u64],
+    ) -> Result<DatasetInfo> {
+        let parent = parent_of(path);
+        if !self.is_group(client, &parent)? {
+            return Err(SageError::NotFound(format!("group {parent}")));
+        }
+        let obj = client.create_object_with(4096, Layout::default())?;
+        let info = DatasetInfo { obj, dtype, shape: shape.to_vec() };
+        client
+            .store
+            .index_mut(self.idx)?
+            .put(path.as_bytes().to_vec(), info.encode());
+        Ok(info)
+    }
+
+    /// Dataset metadata.
+    pub fn dataset(&self, client: &Client, path: &str) -> Result<DatasetInfo> {
+        client
+            .store
+            .index(self.idx)?
+            .get(path.as_bytes())
+            .and_then(DatasetInfo::decode)
+            .ok_or_else(|| SageError::NotFound(format!("dataset {path}")))
+    }
+
+    /// Write a contiguous element range `[start, start+n)` (row-major
+    /// flat index) of f32 data.
+    pub fn write_f32(
+        &self,
+        client: &mut Client,
+        path: &str,
+        start: u64,
+        data: &[f32],
+    ) -> Result<()> {
+        let info = self.dataset(client, path)?;
+        if info.dtype != Dtype::F32 {
+            return Err(SageError::Invalid("dtype mismatch".into()));
+        }
+        if start + data.len() as u64 > info.len() {
+            return Err(SageError::Invalid("write past dataset extent".into()));
+        }
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        write_bytes(client, info.obj, start * 4, &bytes)
+    }
+
+    /// Read `[start, start+n)` f32 elements.
+    pub fn read_f32(
+        &self,
+        client: &mut Client,
+        path: &str,
+        start: u64,
+        n: u64,
+    ) -> Result<Vec<f32>> {
+        let info = self.dataset(client, path)?;
+        if info.dtype != Dtype::F32 {
+            return Err(SageError::Invalid("dtype mismatch".into()));
+        }
+        if start + n > info.len() {
+            return Err(SageError::Invalid("read past dataset extent".into()));
+        }
+        let bytes = read_bytes(client, info.obj, start * 4, n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Set a string attribute on any path.
+    pub fn set_attr(
+        &self,
+        client: &mut Client,
+        path: &str,
+        name: &str,
+        value: &str,
+    ) -> Result<()> {
+        client.store.index_mut(self.idx)?.put(
+            format!("{path}\x01{name}").into_bytes(),
+            value.as_bytes().to_vec(),
+        );
+        Ok(())
+    }
+
+    /// Get a string attribute.
+    pub fn attr(&self, client: &Client, path: &str, name: &str) -> Result<String> {
+        client
+            .store
+            .index(self.idx)?
+            .get(format!("{path}\x01{name}").as_bytes())
+            .map(|v| String::from_utf8_lossy(v).to_string())
+            .ok_or_else(|| SageError::NotFound(format!("attr {path}@{name}")))
+    }
+
+    /// List direct children of a group (datasets and groups).
+    pub fn list(&self, client: &Client, group: &str) -> Result<Vec<String>> {
+        let prefix = if group == "/" { "/".to_string() } else { format!("{group}/") };
+        let mut out = Vec::new();
+        for (k, _) in client.store.index(self.idx)?.scan(prefix.as_bytes(), usize::MAX) {
+            let key = String::from_utf8_lossy(&k).to_string();
+            if !key.starts_with(&prefix) {
+                break;
+            }
+            if key.contains('\x01') {
+                continue; // attribute records
+            }
+            let rest = &key[prefix.len()..];
+            if !rest.is_empty() && !rest.contains('/') {
+                out.push(rest.to_string());
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn parent_of(path: &str) -> String {
+    match path.rfind('/') {
+        Some(0) | None => "/".to_string(),
+        Some(i) => path[..i].to_string(),
+    }
+}
+
+/// Byte-granular object write via aligned RMW (shared with POSIX view).
+fn write_bytes(client: &mut Client, obj: ObjectId, offset: u64, data: &[u8]) -> Result<()> {
+    const BS: u64 = 4096;
+    let start = offset / BS * BS;
+    let end = (offset + data.len() as u64).div_ceil(BS) * BS;
+    let mut buf = client.read_object(&obj, start, end - start)?;
+    let o = (offset - start) as usize;
+    buf[o..o + data.len()].copy_from_slice(data);
+    client.write_object(&obj, start, &buf)?;
+    Ok(())
+}
+
+fn read_bytes(client: &mut Client, obj: ObjectId, offset: u64, len: u64) -> Result<Vec<u8>> {
+    const BS: u64 = 4096;
+    let start = offset / BS * BS;
+    let end = (offset + len).div_ceil(BS) * BS;
+    let buf = client.read_object(&obj, start, end - start)?;
+    let o = (offset - start) as usize;
+    Ok(buf[o..o + len as usize].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    fn setup() -> (Client, H5File) {
+        let mut c = Client::new_sim(Testbed::sage_prototype());
+        let f = H5File::create(&mut c);
+        (c, f)
+    }
+
+    #[test]
+    fn dataset_roundtrip_2d() {
+        let (mut c, f) = setup();
+        f.create_group(&mut c, "/fields").unwrap();
+        let info = f
+            .create_dataset(&mut c, "/fields/Ex", Dtype::F32, &[64, 128])
+            .unwrap();
+        assert_eq!(info.len(), 8192);
+        let data: Vec<f32> = (0..8192).map(|i| i as f32 * 0.5).collect();
+        f.write_f32(&mut c, "/fields/Ex", 0, &data).unwrap();
+        let back = f.read_f32(&mut c, "/fields/Ex", 0, 8192).unwrap();
+        assert_eq!(back, data);
+        // hyperslab: one row
+        let row = f.read_f32(&mut c, "/fields/Ex", 128 * 3, 128).unwrap();
+        assert_eq!(row, &data[128 * 3..128 * 4]);
+    }
+
+    #[test]
+    fn attributes_and_listing() {
+        let (mut c, f) = setup();
+        f.create_group(&mut c, "/run").unwrap();
+        f.create_dataset(&mut c, "/run/particles", Dtype::F32, &[100, 8])
+            .unwrap();
+        f.set_attr(&mut c, "/run", "code", "mini-iPIC3D").unwrap();
+        f.set_attr(&mut c, "/run/particles", "units", "normalized").unwrap();
+        assert_eq!(f.attr(&c, "/run", "code").unwrap(), "mini-iPIC3D");
+        assert_eq!(f.list(&c, "/").unwrap(), vec!["run"]);
+        assert_eq!(f.list(&c, "/run").unwrap(), vec!["particles"]);
+    }
+
+    #[test]
+    fn bounds_and_dtype_enforced() {
+        let (mut c, f) = setup();
+        f.create_dataset(&mut c, "/d", Dtype::F32, &[10]).unwrap();
+        assert!(f.write_f32(&mut c, "/d", 8, &[1.0, 2.0, 3.0]).is_err());
+        assert!(f.read_f32(&mut c, "/d", 0, 11).is_err());
+        f.create_dataset(&mut c, "/i", Dtype::I64, &[10]).unwrap();
+        assert!(f.write_f32(&mut c, "/i", 0, &[1.0]).is_err());
+        assert!(f.create_dataset(&mut c, "/nogroup/x", Dtype::F32, &[1]).is_err());
+    }
+
+    #[test]
+    fn partial_writes_preserve_rest() {
+        let (mut c, f) = setup();
+        f.create_dataset(&mut c, "/d", Dtype::F32, &[4096]).unwrap();
+        let ones = vec![1.0f32; 4096];
+        f.write_f32(&mut c, "/d", 0, &ones).unwrap();
+        f.write_f32(&mut c, "/d", 1000, &[9.0, 9.0]).unwrap();
+        let back = f.read_f32(&mut c, "/d", 998, 6).unwrap();
+        assert_eq!(back, vec![1.0, 1.0, 9.0, 9.0, 1.0, 1.0]);
+    }
+}

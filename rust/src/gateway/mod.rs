@@ -1,0 +1,17 @@
+//! Gateway stacks over Clovis (§3.2.2 / §3.2.3): legacy and emerging
+//! interfaces layered on the same objects, "much as libRados is the
+//! interface upon which the CephFS (POSIX), RadosGW (S3) and RBD
+//! interfaces are built".
+//!
+//! * [`posix`] — the pNFS/POSIX gateway: a hierarchical namespace kept
+//!   in Mero's KVS, files backed by objects.
+//! * [`s3`] — an S3-style bucket/key *view* over the same objects
+//!   (Advanced Views, §3.2.1: different windows into the same raw
+//!   objects by metadata manipulation, no copies).
+//! * [`hdf5`] — an HDF5-style hierarchical dataset layer (groups,
+//!   typed n-dimensional datasets, attributes) — the Virtual Object
+//!   Layer mapping of §3.2.4.
+
+pub mod hdf5;
+pub mod posix;
+pub mod s3;

@@ -1,0 +1,295 @@
+//! pNFS/POSIX gateway (§3.2.3 "Parallel File System Access").
+//!
+//! "Many of the SAGE use cases will need the support of POSIX compliant
+//! storage access. This access is provided through the pNFS gateway
+//! built on top of Clovis. However, pNFS will need some POSIX semantics
+//! (to abstract namespaces on top of Mero objects) to be developed by
+//! leveraging Mero's KVS."
+//!
+//! Exactly that: a hierarchical namespace kept in one KV index
+//! (`path -> inode record`), files backed by Mero objects, directories
+//! as key prefixes. Byte-granular file I/O is translated to
+//! block-aligned object I/O here (POSIX's looser alignment is part of
+//! what the gateway provides).
+
+use crate::clovis::Client;
+use crate::error::{Result, SageError};
+use crate::mero::{IndexId, Layout, ObjectId};
+
+/// Inode record stored in the namespace index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inode {
+    File { obj: ObjectId, size: u64 },
+    Dir,
+}
+
+impl Inode {
+    fn encode(&self) -> Vec<u8> {
+        match self {
+            Inode::Dir => b"D".to_vec(),
+            Inode::File { obj, size } => {
+                let mut v = b"F".to_vec();
+                v.extend_from_slice(&obj.0.to_be_bytes());
+                v.extend_from_slice(&size.to_be_bytes());
+                v
+            }
+        }
+    }
+
+    fn decode(raw: &[u8]) -> Option<Inode> {
+        match raw.first()? {
+            b'D' => Some(Inode::Dir),
+            b'F' if raw.len() == 17 => Some(Inode::File {
+                obj: ObjectId(u64::from_be_bytes(raw[1..9].try_into().ok()?)),
+                size: u64::from_be_bytes(raw[9..17].try_into().ok()?),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// The POSIX namespace gateway.
+pub struct PosixGateway {
+    ns: IndexId,
+    block_size: u64,
+}
+
+impl PosixGateway {
+    /// Mount a fresh namespace on `client` (creates the root).
+    pub fn mount(client: &mut Client) -> Result<PosixGateway> {
+        let ns = client.create_index();
+        let gw = PosixGateway { ns, block_size: 4096 };
+        client
+            .store
+            .index_mut(ns)?
+            .put(b"/".to_vec(), Inode::Dir.encode());
+        Ok(gw)
+    }
+
+    fn norm(path: &str) -> Result<String> {
+        if !path.starts_with('/') || path.contains("//") {
+            return Err(SageError::Invalid(format!("bad path {path}")));
+        }
+        Ok(path.trim_end_matches('/').to_string())
+    }
+
+    fn parent(path: &str) -> String {
+        match path.rfind('/') {
+            Some(0) | None => "/".to_string(),
+            Some(i) => path[..i].to_string(),
+        }
+    }
+
+    /// Look up a path.
+    pub fn stat(&self, client: &Client, path: &str) -> Result<Inode> {
+        let p = Self::norm(path)?;
+        let key = if p.is_empty() { "/".to_string() } else { p };
+        client
+            .store
+            .index(self.ns)?
+            .get(key.as_bytes())
+            .and_then(Inode::decode)
+            .ok_or_else(|| SageError::NotFound(format!("path {path}")))
+    }
+
+    /// mkdir (parent must exist).
+    pub fn mkdir(&self, client: &mut Client, path: &str) -> Result<()> {
+        let p = Self::norm(path)?;
+        self.stat(client, &Self::parent(&p))?;
+        client
+            .store
+            .index_mut(self.ns)?
+            .put(p.into_bytes(), Inode::Dir.encode());
+        Ok(())
+    }
+
+    /// creat: a new empty file backed by a fresh object.
+    pub fn create(&self, client: &mut Client, path: &str) -> Result<ObjectId> {
+        let p = Self::norm(path)?;
+        match self.stat(client, &Self::parent(&p))? {
+            Inode::Dir => {}
+            _ => return Err(SageError::Invalid("parent is a file".into())),
+        }
+        let obj = client.create_object_with(self.block_size, Layout::default())?;
+        client
+            .store
+            .index_mut(self.ns)?
+            .put(p.into_bytes(), Inode::File { obj, size: 0 }.encode());
+        Ok(obj)
+    }
+
+    /// pwrite: byte-granular write, translated to block-aligned object
+    /// I/O (read-modify-write of the edge blocks).
+    pub fn write(
+        &self,
+        client: &mut Client,
+        path: &str,
+        offset: u64,
+        data: &[u8],
+    ) -> Result<()> {
+        let p = Self::norm(path)?;
+        let Inode::File { obj, size } = self.stat(client, &p)? else {
+            return Err(SageError::Invalid(format!("{path} is a directory")));
+        };
+        let bs = self.block_size;
+        let start = offset / bs * bs;
+        let end = (offset + data.len() as u64).div_ceil(bs) * bs;
+        // RMW the aligned envelope
+        let mut buf = client.read_object(&obj, start, end - start)?;
+        let off_in = (offset - start) as usize;
+        buf[off_in..off_in + data.len()].copy_from_slice(data);
+        client.write_object(&obj, start, &buf)?;
+        let new_size = size.max(offset + data.len() as u64);
+        client.store.index_mut(self.ns)?.put(
+            p.into_bytes(),
+            Inode::File { obj, size: new_size }.encode(),
+        );
+        Ok(())
+    }
+
+    /// pread: byte-granular read (short reads at EOF, like POSIX).
+    pub fn read(
+        &self,
+        client: &mut Client,
+        path: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>> {
+        let p = Self::norm(path)?;
+        let Inode::File { obj, size } = self.stat(client, &p)? else {
+            return Err(SageError::Invalid(format!("{path} is a directory")));
+        };
+        if offset >= size {
+            return Ok(Vec::new());
+        }
+        let len = len.min(size - offset);
+        let bs = self.block_size;
+        let start = offset / bs * bs;
+        let end = (offset + len).div_ceil(bs) * bs;
+        let buf = client.read_object(&obj, start, end - start)?;
+        let off_in = (offset - start) as usize;
+        Ok(buf[off_in..off_in + len as usize].to_vec())
+    }
+
+    /// readdir: immediate children of a directory.
+    pub fn readdir(&self, client: &Client, path: &str) -> Result<Vec<String>> {
+        let p = Self::norm(path)?;
+        match self.stat(client, if p.is_empty() { "/" } else { &p })? {
+            Inode::Dir => {}
+            _ => return Err(SageError::Invalid(format!("{path} not a dir"))),
+        }
+        let prefix = if p.is_empty() { "/".to_string() } else { format!("{p}/") };
+        let mut out = Vec::new();
+        for (k, _) in client
+            .store
+            .index(self.ns)?
+            .scan(prefix.as_bytes(), usize::MAX)
+        {
+            let key = String::from_utf8_lossy(&k).to_string();
+            if !key.starts_with(&prefix) {
+                break;
+            }
+            let rest = &key[prefix.len()..];
+            if !rest.is_empty() && !rest.contains('/') {
+                out.push(rest.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    /// unlink: remove a file and its backing object.
+    pub fn unlink(&self, client: &mut Client, path: &str) -> Result<()> {
+        let p = Self::norm(path)?;
+        let Inode::File { obj, .. } = self.stat(client, &p)? else {
+            return Err(SageError::Invalid(format!("{path} is a directory")));
+        };
+        client.delete_object(obj)?;
+        client.store.index_mut(self.ns)?.del(p.as_bytes());
+        Ok(())
+    }
+
+    /// File size (stat convenience).
+    pub fn size(&self, client: &Client, path: &str) -> Result<u64> {
+        match self.stat(client, path)? {
+            Inode::File { size, .. } => Ok(size),
+            Inode::Dir => Ok(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    fn setup() -> (Client, PosixGateway) {
+        let mut c = Client::new_sim(Testbed::sage_prototype());
+        let gw = PosixGateway::mount(&mut c).unwrap();
+        (c, gw)
+    }
+
+    #[test]
+    fn mkdir_create_write_read() {
+        let (mut c, gw) = setup();
+        gw.mkdir(&mut c, "/data").unwrap();
+        gw.create(&mut c, "/data/out.bin").unwrap();
+        // unaligned write/read (POSIX semantics the gateway provides)
+        gw.write(&mut c, "/data/out.bin", 100, b"hello sage").unwrap();
+        let back = gw.read(&mut c, "/data/out.bin", 100, 10).unwrap();
+        assert_eq!(back, b"hello sage");
+        assert_eq!(gw.size(&c, "/data/out.bin").unwrap(), 110);
+        // bytes before the write are zeros
+        let zeros = gw.read(&mut c, "/data/out.bin", 0, 4).unwrap();
+        assert_eq!(zeros, vec![0; 4]);
+    }
+
+    #[test]
+    fn cross_block_rmw() {
+        let (mut c, gw) = setup();
+        gw.create(&mut c, "/f").unwrap();
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        gw.write(&mut c, "/f", 3000, &payload).unwrap();
+        // overwrite a range crossing block boundaries
+        gw.write(&mut c, "/f", 4090, b"XYZXYZXYZ").unwrap();
+        let back = gw.read(&mut c, "/f", 4090, 9).unwrap();
+        assert_eq!(back, b"XYZXYZXYZ");
+        let before = gw.read(&mut c, "/f", 3000, 1090).unwrap();
+        assert_eq!(&before[..], &payload[..1090]);
+    }
+
+    #[test]
+    fn readdir_lists_immediate_children_only() {
+        let (mut c, gw) = setup();
+        gw.mkdir(&mut c, "/a").unwrap();
+        gw.mkdir(&mut c, "/a/b").unwrap();
+        gw.create(&mut c, "/a/x.txt").unwrap();
+        gw.create(&mut c, "/a/b/deep.txt").unwrap();
+        let mut ls = gw.readdir(&c, "/a").unwrap();
+        ls.sort();
+        assert_eq!(ls, vec!["b", "x.txt"]);
+        let root = gw.readdir(&c, "/").unwrap();
+        assert_eq!(root, vec!["a"]);
+    }
+
+    #[test]
+    fn short_read_at_eof_and_errors() {
+        let (mut c, gw) = setup();
+        gw.create(&mut c, "/short").unwrap();
+        gw.write(&mut c, "/short", 0, b"abc").unwrap();
+        assert_eq!(gw.read(&mut c, "/short", 1, 100).unwrap(), b"bc");
+        assert!(gw.read(&mut c, "/short", 10, 5).unwrap().is_empty());
+        assert!(gw.stat(&c, "/nope").is_err());
+        assert!(gw.mkdir(&mut c, "/no/parent").is_err());
+        assert!(gw.create(&mut c, "relative").is_err());
+    }
+
+    #[test]
+    fn unlink_frees_object() {
+        let (mut c, gw) = setup();
+        let obj = gw.create(&mut c, "/tmpfile").unwrap();
+        gw.write(&mut c, "/tmpfile", 0, &vec![1u8; 8192]).unwrap();
+        gw.unlink(&mut c, "/tmpfile").unwrap();
+        assert!(gw.stat(&c, "/tmpfile").is_err());
+        assert!(c.store.object(obj).is_err(), "backing object deleted");
+    }
+}

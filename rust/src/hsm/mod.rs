@@ -1,0 +1,404 @@
+//! HSM: Hierarchical Storage Management (§3.2.3).
+//!
+//! "HSM is used to control the movement of data in the SAGE hierarchies
+//! based on data usage." Implemented as an FDMI consumer: read/write
+//! events feed a per-object heat map; a [`TieringPolicy`] decides
+//! promotions (hot data up to NVRAM/flash) and demotions (cold data
+//! down to disk/archive); the [`MigrationEngine`] executes movements
+//! with real read+rewrite through the SNS layer.
+//!
+//! Policies (compared in the `ablate_hsm` bench):
+//! * [`TieringPolicy::HeatWeighted`] — exponential-decay heat score
+//!   (the SAGE approach: usage-driven)
+//! * [`TieringPolicy::Fifo`] — demote oldest first, promote on any use
+//! * [`TieringPolicy::Static`] — never move (placement-at-create only)
+
+use std::collections::HashMap;
+
+use crate::clovis::fdmi::FdmiRecord;
+use crate::error::Result;
+use crate::mero::layout::Layout;
+use crate::mero::object::ObjectId;
+use crate::mero::MeroStore;
+use crate::sim::clock::SimTime;
+use crate::sim::device::DeviceKind;
+
+/// Per-object usage heat with exponential decay.
+#[derive(Debug, Clone)]
+pub struct Heat {
+    pub score: f64,
+    pub last_touch: SimTime,
+    pub created: SimTime,
+    pub tier: DeviceKind,
+    pub size: u64,
+}
+
+/// Tiering policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieringPolicy {
+    HeatWeighted,
+    Fifo,
+    Static,
+}
+
+/// A planned data movement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Migration {
+    pub obj: ObjectId,
+    pub from: DeviceKind,
+    pub to: DeviceKind,
+}
+
+/// Heat tracking + policy + migration executor.
+pub struct Hsm {
+    pub policy: TieringPolicy,
+    /// Heat half-life, seconds of virtual time.
+    pub half_life: f64,
+    /// Promote when score exceeds this.
+    pub promote_threshold: f64,
+    /// Demote when score falls below this.
+    pub demote_threshold: f64,
+    heat: HashMap<ObjectId, Heat>,
+    pub migrations_run: u64,
+    pub bytes_moved: u64,
+}
+
+impl Hsm {
+    /// HSM with a policy and default thresholds.
+    pub fn new(policy: TieringPolicy) -> Self {
+        Hsm {
+            policy,
+            half_life: 60.0,
+            promote_threshold: 3.0,
+            demote_threshold: 0.2,
+            heat: HashMap::new(),
+            migrations_run: 0,
+            bytes_moved: 0,
+        }
+    }
+
+    /// Ingest FDMI records (drained from the Clovis bus) to update heat.
+    pub fn observe(&mut self, records: &[FdmiRecord], store: &MeroStore) {
+        for rec in records {
+            let obj = rec.object();
+            let at = rec.at();
+            match rec {
+                FdmiRecord::ObjectDeleted { .. } => {
+                    self.heat.remove(&obj);
+                }
+                FdmiRecord::ObjectCreated { .. } => {
+                    let (tier, size) = store
+                        .object(obj)
+                        .map(|o| (o.layout.tier(), o.size))
+                        .unwrap_or((DeviceKind::Ssd, 0));
+                    self.heat.insert(obj, Heat {
+                        score: 1.0,
+                        last_touch: at,
+                        created: at,
+                        tier,
+                        size,
+                    });
+                }
+                FdmiRecord::ObjectWritten { len, .. }
+                | FdmiRecord::ObjectRead { len, .. } => {
+                    let size = store.object(obj).map(|o| o.size).unwrap_or(0);
+                    let e = self.heat.entry(obj).or_insert(Heat {
+                        score: 0.0,
+                        last_touch: at,
+                        created: at,
+                        tier: store
+                            .object(obj)
+                            .map(|o| o.layout.tier())
+                            .unwrap_or(DeviceKind::Ssd),
+                        size,
+                    });
+                    // decay then bump (weight by touched fraction)
+                    let dt = (at - e.last_touch).max(0.0);
+                    e.score *= 0.5f64.powf(dt / self.half_life);
+                    e.score += 1.0 + (*len as f64 / (1 << 20) as f64).min(4.0);
+                    e.last_touch = at;
+                    e.size = size.max(e.size);
+                }
+                FdmiRecord::ObjectMigrated { .. } => {}
+            }
+        }
+    }
+
+    /// Current heat score of an object, decayed to `now`.
+    pub fn score(&self, obj: ObjectId, now: SimTime) -> f64 {
+        self.heat
+            .get(&obj)
+            .map(|h| h.score * 0.5f64.powf((now - h.last_touch).max(0.0) / self.half_life))
+            .unwrap_or(0.0)
+    }
+
+    /// Decide migrations under the configured policy.
+    pub fn plan(&self, now: SimTime) -> Vec<Migration> {
+        let mut plan = Vec::new();
+        match self.policy {
+            TieringPolicy::Static => {}
+            TieringPolicy::HeatWeighted => {
+                for (&obj, h) in &self.heat {
+                    let s = self.score(obj, now);
+                    if s >= self.promote_threshold {
+                        if let Some(up) = promote_target(h.tier) {
+                            plan.push(Migration { obj, from: h.tier, to: up });
+                        }
+                    } else if s <= self.demote_threshold {
+                        if let Some(down) = demote_target(h.tier) {
+                            plan.push(Migration { obj, from: h.tier, to: down });
+                        }
+                    }
+                }
+            }
+            TieringPolicy::Fifo => {
+                // demote the oldest resident of each fast tier; promote
+                // anything touched in the last half-life window
+                for (&obj, h) in &self.heat {
+                    if now - h.last_touch < self.half_life {
+                        if let Some(up) = promote_target(h.tier) {
+                            plan.push(Migration { obj, from: h.tier, to: up });
+                        }
+                    } else if now - h.created > 4.0 * self.half_life {
+                        if let Some(down) = demote_target(h.tier) {
+                            plan.push(Migration { obj, from: h.tier, to: down });
+                        }
+                    }
+                }
+            }
+        }
+        plan.sort_by_key(|m| m.obj);
+        plan
+    }
+
+    /// Execute migrations: read through SNS, rewrite with the target
+    /// tier's layout, release the old placement. Returns completion
+    /// time. Data integrity invariant: bytes before == bytes after
+    /// (tested in prop_invariants).
+    pub fn migrate(
+        &mut self,
+        store: &mut MeroStore,
+        plan: &[Migration],
+        now: SimTime,
+    ) -> Result<SimTime> {
+        let mut t = now;
+        for m in plan {
+            let size = store.object(m.obj)?.size;
+            if size == 0 {
+                continue;
+            }
+            let is_real = store.object(m.obj)?.real_blocks() > 0;
+            let (data, t_read) = if is_real {
+                let (d, tr) = crate::mero::sns::read(store, m.obj, 0, size, t)?;
+                (Some(d), tr)
+            } else {
+                (None, crate::mero::sns::read_phantom(store, m.obj, 0, size, t)?)
+            };
+            // release old placements
+            let old_units: Vec<_> =
+                store.object(m.obj)?.placed_units().copied().collect();
+            for u in &old_units {
+                store.pools.release(&mut store.cluster, u.device, u.size);
+            }
+            // retarget the layout and clear placements by re-creating
+            // the unit map through a fresh write
+            {
+                let obj = store.object_mut(m.obj)?;
+                obj.layout = retier(&obj.layout, m.to);
+                obj.clear_placements(); // next write re-places on `to`
+            }
+            let t_write = match data {
+                Some(d) => crate::mero::sns::write(
+                    store,
+                    m.obj,
+                    0,
+                    crate::mero::sns::Payload::Real(&d),
+                    t_read,
+                    None,
+                )?,
+                None => crate::mero::sns::write(
+                    store,
+                    m.obj,
+                    0,
+                    crate::mero::sns::Payload::Phantom(size),
+                    t_read,
+                    None,
+                )?,
+            };
+            t = t_write;
+            self.migrations_run += 1;
+            self.bytes_moved += size;
+            if let Some(h) = self.heat.get_mut(&m.obj) {
+                h.tier = m.to;
+            }
+        }
+        Ok(t)
+    }
+
+    /// Number of tracked objects.
+    pub fn tracked(&self) -> usize {
+        self.heat.len()
+    }
+}
+
+/// Next tier up (faster), if any.
+pub fn promote_target(t: DeviceKind) -> Option<DeviceKind> {
+    match t {
+        DeviceKind::Smr => Some(DeviceKind::Hdd),
+        DeviceKind::Hdd | DeviceKind::LustreOst => Some(DeviceKind::Ssd),
+        DeviceKind::Ssd => Some(DeviceKind::Nvram),
+        _ => None,
+    }
+}
+
+/// Next tier down (bigger/cheaper), if any.
+pub fn demote_target(t: DeviceKind) -> Option<DeviceKind> {
+    match t {
+        DeviceKind::Nvram => Some(DeviceKind::Ssd),
+        DeviceKind::Ssd => Some(DeviceKind::Hdd),
+        DeviceKind::Hdd | DeviceKind::LustreOst => Some(DeviceKind::Smr),
+        _ => None,
+    }
+}
+
+/// Clone a layout onto a different tier.
+fn retier(l: &Layout, to: DeviceKind) -> Layout {
+    match l {
+        Layout::Raid { data, parity, unit, .. } => Layout::Raid {
+            data: *data,
+            parity: *parity,
+            unit: *unit,
+            tier: to,
+        },
+        Layout::Mirror { copies, .. } => Layout::Mirror { copies: *copies, tier: to },
+        Layout::Compressed { inner } => Layout::Compressed {
+            inner: Box::new(retier(inner, to)),
+        },
+        Layout::Composite { extents } => Layout::Composite {
+            extents: extents
+                .iter()
+                .map(|(o, l2, inner)| (*o, *l2, retier(inner, to)))
+                .collect(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    #[test]
+    fn heat_decays() {
+        let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+        let store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        hsm.observe(
+            &[FdmiRecord::ObjectWritten {
+                obj: ObjectId(1),
+                offset: 0,
+                len: 1 << 20,
+                at: 0.0,
+            }],
+            &store,
+        );
+        let hot = hsm.score(ObjectId(1), 1.0);
+        let cooled = hsm.score(ObjectId(1), 600.0);
+        assert!(hot > 1.0);
+        assert!(cooled < 0.01 * hot);
+    }
+
+    #[test]
+    fn hot_objects_promote_cold_demote() {
+        let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+        let store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        // hot object: many touches
+        for i in 0..10 {
+            hsm.observe(
+                &[FdmiRecord::ObjectRead {
+                    obj: ObjectId(1),
+                    offset: 0,
+                    len: 4096,
+                    at: i as f64,
+                }],
+                &store,
+            );
+        }
+        // cold object: one old touch
+        hsm.observe(
+            &[FdmiRecord::ObjectRead {
+                obj: ObjectId(2),
+                offset: 0,
+                len: 4096,
+                at: 0.0,
+            }],
+            &store,
+        );
+        let plan = hsm.plan(500.0);
+        let promoted: Vec<_> =
+            plan.iter().filter(|m| m.to.tier() < m.from.tier()).collect();
+        let demoted: Vec<_> =
+            plan.iter().filter(|m| m.to.tier() > m.from.tier()).collect();
+        // at t=500 the hot object has cooled too; re-plan right after use
+        let plan_hot = hsm.plan(10.0);
+        assert!(
+            plan_hot.iter().any(|m| m.obj == ObjectId(1)
+                && m.to.tier() < m.from.tier()),
+            "hot object should promote: {plan_hot:?}"
+        );
+        assert!(
+            demoted.iter().any(|m| m.obj == ObjectId(2)),
+            "cold object should demote: {plan:?} {promoted:?}"
+        );
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let mut hsm = Hsm::new(TieringPolicy::Static);
+        let store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        for i in 0..20 {
+            hsm.observe(
+                &[FdmiRecord::ObjectRead {
+                    obj: ObjectId(1),
+                    offset: 0,
+                    len: 1 << 20,
+                    at: i as f64,
+                }],
+                &store,
+            );
+        }
+        assert!(hsm.plan(21.0).is_empty());
+    }
+
+    #[test]
+    fn migration_preserves_bytes_and_changes_tier() {
+        let mut store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        let obj = store
+            .create_object(4096, Layout::default())
+            .unwrap();
+        let data: Vec<u8> = (0..4 * 65536u32).map(|i| (i % 251) as u8).collect();
+        store.write_object(obj, 0, &data, 0.0, None).unwrap();
+        let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+        let plan = vec![Migration {
+            obj,
+            from: DeviceKind::Ssd,
+            to: DeviceKind::Nvram,
+        }];
+        let t = hsm.migrate(&mut store, &plan, 1.0).unwrap();
+        assert!(t > 1.0);
+        assert_eq!(store.object(obj).unwrap().layout.tier(), DeviceKind::Nvram);
+        let (back, _) = store.read_object(obj, 0, data.len() as u64, t).unwrap();
+        assert_eq!(back, data, "migration must not lose bytes");
+        assert_eq!(hsm.migrations_run, 1);
+    }
+
+    #[test]
+    fn tier_ladder_is_consistent() {
+        // promote then demote returns to the same tier (where defined)
+        for t in [DeviceKind::Ssd, DeviceKind::Hdd] {
+            let up = promote_target(t).unwrap();
+            assert_eq!(demote_target(up), Some(t));
+        }
+        assert_eq!(promote_target(DeviceKind::Nvram), None);
+        assert_eq!(demote_target(DeviceKind::Smr), None);
+    }
+}

@@ -1,0 +1,54 @@
+//! # SAGE: Percipient Storage for Exascale Data Centric Computing
+//!
+//! A full-stack reproduction of the SAGE system (Narasimhamurthy et al.,
+//! Parallel Computing 2018): a multi-tier object-storage platform with
+//! in-storage compute, evaluated with the paper's PGAS-I/O and MPI-stream
+//! experiments.
+//!
+//! ## Architecture (three layers, python never on the request path)
+//!
+//! * **L3 (this crate)** — the SAGE stack: [`mero`] (object-store core:
+//!   objects, KV indices, layouts, SNS distributed RAID, transactions,
+//!   HA), [`clovis`] (access + management API, function shipping, ADDB,
+//!   FDMI), [`hsm`] (tiering), [`pgas`] (MPI-storage-window analog),
+//!   [`streams`] (MPI-stream analog), all running over a simulated
+//!   cluster ([`sim`], [`cluster`]) with deterministic virtual time.
+//! * **L2/L1 (build time)** — JAX graphs + Pallas kernels under
+//!   `python/compile/`, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts once via the
+//!   PJRT CPU client (`xla` crate) and executes them from the storage
+//!   hot path (SNS parity, shipped functions).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sage::clovis::Client;
+//! use sage::config::Testbed;
+//!
+//! let mut client = Client::new_sim(Testbed::blackdog());
+//! let obj = client.create_object(4096).unwrap();
+//! client.write_object(&obj, 0, &vec![7u8; 16384]).unwrap();
+//! let back = client.read_object(&obj, 0, 16384).unwrap();
+//! assert_eq!(back, vec![7u8; 16384]);
+//! ```
+
+pub mod bench;
+pub mod cluster;
+pub mod clovis;
+pub mod config;
+pub mod error;
+pub mod gateway;
+pub mod hsm;
+pub mod mero;
+pub mod metrics;
+pub mod pgas;
+pub mod proptest;
+pub mod runtime;
+pub mod sim;
+pub mod streams;
+pub mod tools;
+pub mod util;
+
+pub mod apps;
+
+pub use error::{Result, SageError};

@@ -1,0 +1,315 @@
+//! `sage` — the SAGE stack CLI (leader entrypoint).
+//!
+//! Subcommands:
+//! * `info` — show the loaded artifacts + testbed inventory
+//! * `demo` — quick end-to-end smoke: object store round-trip, shipped
+//!   function, streamed pipeline
+//! * `fig3|fig4|fig5|fig7` — regenerate the paper's figures (same
+//!   harnesses the benches use; see EXPERIMENTS.md)
+//! * `addb` — run a workload and dump the ADDB performance report
+//!
+//! Examples:
+//! ```text
+//! sage fig3 --part a --testbed blackdog --elems 1000
+//! sage fig7 --steps 100 --max-procs 8192
+//! sage demo
+//! ```
+
+use sage::apps::{dht, hacc, ipic3d, stream};
+use sage::clovis::{Client, FunctionKind};
+use sage::config::Testbed;
+use sage::metrics::Table;
+use sage::pgas::{StorageTarget, WindowKind};
+use sage::util::cli::Args;
+use sage::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("sage: error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("info") => info(args),
+        Some("demo") => demo(args),
+        Some("fig3") => fig3(args),
+        Some("fig4") => fig4(args),
+        Some("fig5") => fig5(args),
+        Some("fig7") => fig7(args),
+        Some("addb") => addb(args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+sage — SAGE: Percipient Storage for Exascale Data Centric Computing
+
+USAGE: sage <command> [--options]
+
+COMMANDS:
+  info    loaded AOT artifacts + testbed inventory
+  demo    end-to-end smoke (object store, function shipping, streams)
+  fig3    STREAM over MPI windows        [--part a|b|c] [--elems N(M)]
+  fig4    DHT over MPI windows           [--testbed blackdog|tegner]
+  fig5    HACC-IO strong scaling         [--particles N]
+  fig7    iPIC3D streams vs collective   [--steps N] [--max-procs P]
+  addb    run a workload, print the ADDB report
+
+Common options: --testbed <name>, --csv (machine-readable output)
+";
+
+fn testbed(args: &Args, default: &str) -> Result<Testbed> {
+    let name = args.get_str("testbed", default);
+    Testbed::by_name(&name).ok_or_else(|| {
+        sage::SageError::Config(format!("unknown testbed {name}"))
+    })
+}
+
+fn print_table(args: &Args, t: &Table) {
+    if args.flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let tb = testbed(args, "sage_prototype")?;
+    println!("testbed: {} ({} nodes x {} cores, {} DRAM/node)",
+        tb.name, tb.compute_nodes, tb.cores_per_node,
+        sage::util::bytes::fmt_size(tb.dram_per_node));
+    let mut t = Table::new("storage inventory", &["kind", "capacity", "read", "write"]);
+    for p in &tb.storage {
+        t.row(vec![
+            format!("{:?}", p.kind),
+            sage::util::bytes::fmt_size(p.capacity),
+            sage::util::bytes::fmt_bw(p.read_bw),
+            sage::util::bytes::fmt_bw(p.write_bw),
+        ]);
+    }
+    print_table(args, &t);
+    match sage::runtime::Executor::load_default() {
+        Ok(e) => {
+            let mut v = e.variants();
+            v.sort();
+            println!("artifacts ({} PJRT devices): {}", e.device_count(), v.join(", "));
+        }
+        Err(e) => println!("artifacts: not loaded ({e})"),
+    }
+    Ok(())
+}
+
+fn demo(args: &Args) -> Result<()> {
+    let tb = testbed(args, "sage_prototype")?;
+    let mut client = match Client::new_with_runtime(tb.clone()) {
+        Ok(c) => {
+            println!("[demo] PJRT runtime loaded");
+            c
+        }
+        Err(_) => {
+            println!("[demo] no artifacts; CPU fallbacks");
+            Client::new_sim(tb.clone())
+        }
+    };
+    // 1. object store round-trip
+    let obj = client.create_object(4096)?;
+    let data: Vec<u8> = (0..4 * 65536u32).map(|i| (i % 251) as u8).collect();
+    client.write_object(&obj, 0, &data)?;
+    let back = client.read_object(&obj, 0, data.len() as u64)?;
+    assert_eq!(back, data);
+    println!("[demo] object round-trip: {} OK", sage::util::bytes::fmt_size(data.len() as u64));
+
+    // 2. shipped function
+    let vals = sage::apps::alf::generate_log_values(16384, 7);
+    let log_obj = sage::apps::alf::store_log(&mut client, &vals)?;
+    let r = client.ship_to_object(log_obj, FunctionKind::Histogram { lo: 0.0, hi: 1024.0 })?;
+    println!(
+        "[demo] shipped histogram: moved {} vs {} if data moved ({}x saving)",
+        sage::util::bytes::fmt_size(r.net_bytes),
+        sage::util::bytes::fmt_size(r.net_bytes_moved),
+        r.net_bytes_moved / r.net_bytes.max(1)
+    );
+
+    // 3. streamed pipeline
+    let exec = client.exec.as_ref();
+    let (hot, _) = ipic3d::run_real_pipeline(&tb, exec, 5000, 20, 1.5, None)?;
+    println!("[demo] streamed {hot} high-energy particles through the pipeline");
+    println!("[demo] all OK");
+    Ok(())
+}
+
+fn fig3(args: &Args) -> Result<()> {
+    let part = args.get_str("part", "a");
+    let reps = args.get::<u32>("reps", 3);
+    match part.as_str() {
+        "a" => {
+            let tb = testbed(args, "blackdog")?;
+            let mut t = Table::new(
+                "Fig 3(a) STREAM on Blackdog: MB/s by problem size",
+                &["Melems", "kernel", "memory", "storage(hdd)", "degradation"],
+            );
+            for m in [10, 100, 500, args.get::<u64>("elems", 1000)] {
+                let mem = stream::run(&tb, WindowKind::Memory, m, reps)?;
+                let sto = stream::run(&tb, WindowKind::Storage(StorageTarget::Hdd), m, reps)?;
+                for (a, b) in mem.iter().zip(sto.iter()) {
+                    t.row(vec![
+                        m.to_string(),
+                        a.kernel.into(),
+                        format!("{:.0}", a.bandwidth / 1e6),
+                        format!("{:.0}", b.bandwidth / 1e6),
+                        format!("{:.1}%", (1.0 - b.bandwidth / a.bandwidth) * 100.0),
+                    ]);
+                }
+            }
+            print_table(args, &t);
+        }
+        "b" => {
+            let tb = testbed(args, "tegner")?;
+            let mut t = Table::new(
+                "Fig 3(b) Lustre read/write asymmetry (copy kernel)",
+                &["direction", "MB/s"],
+            );
+            let (r, w) = stream::rw_asymmetry(&tb, StorageTarget::Pfs, 4 << 30)?;
+            t.row(vec!["read".into(), format!("{:.0}", r / 1e6)]);
+            t.row(vec!["write".into(), format!("{:.0}", w / 1e6)]);
+            print_table(args, &t);
+        }
+        _ => {
+            let tb = testbed(args, "tegner")?;
+            let mut t = Table::new(
+                "Fig 3(c) STREAM on Tegner (Lustre): MB/s",
+                &["Melems", "kernel", "memory", "storage(pfs)", "degradation"],
+            );
+            for m in [10, 100, args.get::<u64>("elems", 1000)] {
+                let mem = stream::run(&tb, WindowKind::Memory, m, reps)?;
+                let sto = stream::run(&tb, WindowKind::Storage(StorageTarget::Pfs), m, reps)?;
+                for (a, b) in mem.iter().zip(sto.iter()) {
+                    t.row(vec![
+                        m.to_string(),
+                        a.kernel.into(),
+                        format!("{:.0}", a.bandwidth / 1e6),
+                        format!("{:.0}", b.bandwidth / 1e6),
+                        format!("{:.1}%", (1.0 - b.bandwidth / a.bandwidth) * 100.0),
+                    ]);
+                }
+            }
+            print_table(args, &t);
+        }
+    }
+    Ok(())
+}
+
+fn fig4(args: &Args) -> Result<()> {
+    let which = args.get_str("testbed", "blackdog");
+    let mut t = Table::new(
+        &format!("Fig 4 DHT on {which}: execution time (s)"),
+        &["Melems/volume", "memory", "storage", "overhead"],
+    );
+    let tb = testbed(args, &which)?;
+    let (ranks, targets): (usize, Vec<(&str, WindowKind)>) =
+        if which == "tegner" {
+            (96, vec![("pfs", WindowKind::Storage(StorageTarget::Pfs))])
+        } else {
+            (
+                8,
+                vec![
+                    ("ssd", WindowKind::Storage(StorageTarget::Ssd)),
+                    ("hdd", WindowKind::Storage(StorageTarget::Hdd)),
+                ],
+            )
+        };
+    for m in [25, 50, 100] {
+        let volume = m * args.get::<u64>("scale", 10_000); // scaled-down default
+        let cfg = dht::DhtConfig {
+            ranks,
+            local_volume: volume,
+            ops_per_rank: volume / 2,
+            sync_interval: volume,
+        };
+        let t_mem = dht::run(&tb, WindowKind::Memory, &cfg)?;
+        for (label, kind) in &targets {
+            let t_sto = dht::run(&tb, *kind, &cfg)?;
+            t.row(vec![
+                format!("{m} ({label})"),
+                format!("{t_mem:.2}"),
+                format!("{t_sto:.2}"),
+                format!("{:+.1}%", (t_sto / t_mem - 1.0) * 100.0),
+            ]);
+        }
+    }
+    print_table(args, &t);
+    Ok(())
+}
+
+fn fig5(args: &Args) -> Result<()> {
+    let particles = args.get::<u64>("particles", 100_000_000);
+    for (name, target, ranks) in [
+        ("blackdog", StorageTarget::Hdd, vec![1usize, 2, 4, 8]),
+        ("tegner", StorageTarget::Pfs, vec![24, 48, 96, 144]),
+    ] {
+        let tb = Testbed::by_name(name).unwrap();
+        let mut t = Table::new(
+            &format!("Fig 5 HACC-IO on {name}: checkpoint+restart (s), {particles} particles"),
+            &["procs", "mpi-io", "storage windows", "win/mpiio"],
+        );
+        for r in ranks {
+            let t_mpiio = hacc::run(&tb, hacc::HaccImpl::MpiIo, r, particles)?;
+            let t_win = hacc::run(&tb, hacc::HaccImpl::StorageWindows(target), r, particles)?;
+            t.row(vec![
+                r.to_string(),
+                format!("{t_mpiio:.2}"),
+                format!("{t_win:.2}"),
+                format!("{:.2}", t_win / t_mpiio),
+            ]);
+        }
+        print_table(args, &t);
+    }
+    Ok(())
+}
+
+fn fig7(args: &Args) -> Result<()> {
+    let tb = testbed(args, "beskow")?;
+    let steps = args.get::<u64>("steps", 100);
+    let maxp = args.get::<usize>("max-procs", 8192);
+    let mut t = Table::new(
+        "Fig 7 iPIC3D: collective I/O vs MPI streams (100 steps)",
+        &["procs", "collective(s)", "streams(s)", "improvement"],
+    );
+    let mut p = 64;
+    while p <= maxp {
+        let pt = ipic3d::run_scaling(&tb, p, steps);
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}", pt.t_collective),
+            format!("{:.2}", pt.t_streams),
+            format!("{:.2}x", pt.improvement),
+        ]);
+        p *= 2;
+    }
+    print_table(args, &t);
+    Ok(())
+}
+
+fn addb(args: &Args) -> Result<()> {
+    let tb = testbed(args, "sage_prototype")?;
+    let mut client = Client::new_sim(tb);
+    for i in 0..8 {
+        let obj = client.create_object(4096)?;
+        let data = vec![i as u8; 4 * 65536];
+        client.write_object(&obj, 0, &data)?;
+        client.read_object(&obj, 0, data.len() as u64)?;
+        client.ship_to_object(obj, FunctionKind::IntegrityCheck)?;
+    }
+    println!("{}", client.addb.report());
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Containers: user-defined grouping of objects (§3.2.1).
+//!
+//! "Containers provide labelling of objects so as to provide a form of
+//! virtualisation of object name space … based on performance (high
+//! performance containers for objects to be stored in higher tiers) and
+//! data format descriptions (HDF5 containers, NetCDF containers) …
+//! also useful for performing one shot operations on objects such as
+//! shipping a function to a container."
+
+use crate::mero::object::ObjectId;
+use crate::sim::device::DeviceKind;
+
+/// Opaque container identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContainerId(pub u64);
+
+/// Data-format description attached to a container (advanced views are
+/// built on these labels, §3.2.1 "Advanced Views").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FormatLabel {
+    Raw,
+    Hdf5,
+    NetCdf,
+    Vtk,
+    Posix,
+    S3,
+    Custom(String),
+}
+
+/// A container: label + tier hint + member objects.
+#[derive(Debug)]
+pub struct Container {
+    pub id: ContainerId,
+    pub label: String,
+    /// Performance hint: preferred tier for member objects.
+    pub tier_hint: Option<DeviceKind>,
+    pub format: FormatLabel,
+    members: Vec<ObjectId>,
+}
+
+impl Container {
+    /// New container.
+    pub fn new(id: ContainerId, label: &str, tier_hint: Option<DeviceKind>) -> Self {
+        Container {
+            id,
+            label: label.to_string(),
+            tier_hint,
+            format: FormatLabel::Raw,
+            members: Vec::new(),
+        }
+    }
+
+    /// Set the data-format description.
+    pub fn with_format(mut self, format: FormatLabel) -> Self {
+        self.format = format;
+        self
+    }
+
+    /// Add an object to the group (idempotent).
+    pub fn add(&mut self, obj: ObjectId) {
+        if !self.members.contains(&obj) {
+            self.members.push(obj);
+        }
+    }
+
+    /// Remove an object; true if it was a member.
+    pub fn remove(&mut self, obj: ObjectId) -> bool {
+        let before = self.members.len();
+        self.members.retain(|&o| o != obj);
+        self.members.len() != before
+    }
+
+    /// Member objects, in insertion order (one-shot ops iterate these).
+    pub fn objects(&self) -> &[ObjectId] {
+        &self.members
+    }
+
+    /// Membership test.
+    pub fn contains(&self, obj: ObjectId) -> bool {
+        self.members.contains(&obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership() {
+        let mut c = Container::new(ContainerId(1), "hot-data", Some(DeviceKind::Nvram));
+        c.add(ObjectId(10));
+        c.add(ObjectId(11));
+        c.add(ObjectId(10)); // idempotent
+        assert_eq!(c.objects(), &[ObjectId(10), ObjectId(11)]);
+        assert!(c.contains(ObjectId(10)));
+        assert!(c.remove(ObjectId(10)));
+        assert!(!c.remove(ObjectId(10)));
+        assert_eq!(c.objects(), &[ObjectId(11)]);
+    }
+
+    #[test]
+    fn labels() {
+        let c = Container::new(ContainerId(2), "sim-output", None)
+            .with_format(FormatLabel::Hdf5);
+        assert_eq!(c.format, FormatLabel::Hdf5);
+        assert_eq!(c.label, "sim-output");
+        assert_eq!(c.tier_hint, None);
+    }
+}

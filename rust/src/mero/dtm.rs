@@ -1,0 +1,405 @@
+//! Distributed Transaction Management (§3.2.1).
+//!
+//! "Distributed transactions are groups of updates … guaranteed to be
+//! atomic with respect to failures. … traditional RDMS-style
+//! transactions are known not to scale. To address this problem, Mero
+//! separates transaction control proper from other issues usually
+//! linked with it, such as concurrency control and isolation."
+//!
+//! The implementation follows that split:
+//! * **Transaction control** — epoch-based group commit: transactions
+//!   buffer their updates; an epoch close makes a whole batch durable
+//!   with one log force. Atomicity w.r.t. failures comes from the redo
+//!   log; no locks are held during the buffering phase.
+//! * **Concurrency control (separate)** — optimistic validation at
+//!   commit: a transaction aborts if a key it *read* was overwritten by
+//!   a transaction that committed after its snapshot epoch.
+//!
+//! The ablation baseline [`TwoPhaseLocking`] models the RDBMS-style
+//! alternative the paper argues against: per-key lock RPCs held across
+//!   the transaction, with distributed deadlock avoidance (wound-wait).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::error::{Result, SageError};
+use crate::sim::clock::SimTime;
+
+/// Transaction identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TxId(pub u64);
+
+/// A buffered update (key-value granularity; object writes are recorded
+/// as (object-id, block) keys by the Clovis layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TxUpdate {
+    pub key: Vec<u8>,
+    pub value: Vec<u8>,
+}
+
+/// State of one transaction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TxState {
+    Open,
+    Committed,
+    Aborted,
+}
+
+#[derive(Debug)]
+struct Tx {
+    state: TxState,
+    snapshot_epoch: u64,
+    reads: HashSet<Vec<u8>>,
+    writes: Vec<TxUpdate>,
+}
+
+/// Per-I/O cost of a log force, seconds (NVRAM-class log device).
+const LOG_FORCE: f64 = 20e-6;
+/// Cost of one lock RPC round-trip (2PL baseline), seconds.
+const LOCK_RPC: f64 = 5e-6;
+
+/// Epoch-based distributed transaction manager.
+#[derive(Debug)]
+pub struct DtmManager {
+    epoch: u64,
+    txns: HashMap<TxId, Tx>,
+    next_tx: u64,
+    /// Committed key versions: key -> epoch of last commit.
+    versions: BTreeMap<Vec<u8>, u64>,
+    /// The durable store: applied key-value state.
+    store: BTreeMap<Vec<u8>, Vec<u8>>,
+    /// Redo log of committed-but-unapplied epochs (crash recovery).
+    redo: Vec<(u64, Vec<TxUpdate>)>,
+    /// Counters.
+    pub committed: u64,
+    pub aborted: u64,
+}
+
+impl Default for DtmManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DtmManager {
+    /// Fresh manager at epoch 1.
+    pub fn new() -> Self {
+        DtmManager {
+            epoch: 1,
+            txns: HashMap::new(),
+            next_tx: 1,
+            versions: BTreeMap::new(),
+            store: BTreeMap::new(),
+            redo: Vec::new(),
+            committed: 0,
+            aborted: 0,
+        }
+    }
+
+    /// Begin a transaction; its snapshot is the current epoch.
+    pub fn begin(&mut self) -> TxId {
+        let id = TxId(self.next_tx);
+        self.next_tx += 1;
+        self.txns.insert(
+            id,
+            Tx {
+                state: TxState::Open,
+                snapshot_epoch: self.epoch,
+                reads: HashSet::new(),
+                writes: Vec::new(),
+            },
+        );
+        id
+    }
+
+    /// Record a read (returns committed value; tracks the dependency).
+    pub fn read(&mut self, tx: TxId, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let t = self.tx_mut(tx)?;
+        t.reads.insert(key.to_vec());
+        // read-your-writes
+        if let Some(u) = t.writes.iter().rev().find(|u| u.key == key) {
+            return Ok(Some(u.value.clone()));
+        }
+        Ok(self.store.get(key).cloned())
+    }
+
+    /// Buffer a write (no locks taken — transaction control separated
+    /// from concurrency control).
+    pub fn write(&mut self, tx: TxId, key: Vec<u8>, value: Vec<u8>) -> Result<()> {
+        self.tx_mut(tx)?.writes.push(TxUpdate { key, value });
+        Ok(())
+    }
+
+    /// Commit: optimistic validation + epoch group commit. Returns the
+    /// completion time (one log force amortized over the epoch batch).
+    pub fn commit(&mut self, tx: TxId, now: SimTime) -> Result<SimTime> {
+        let t = self.tx_mut(tx)?;
+        if t.state != TxState::Open {
+            return Err(SageError::TxAborted(format!("{tx:?} not open")));
+        }
+        let snapshot = t.snapshot_epoch;
+        let reads: Vec<Vec<u8>> = t.reads.iter().cloned().collect();
+        // validation: no read key committed after our snapshot
+        for k in &reads {
+            if let Some(&v) = self.versions.get(k) {
+                if v > snapshot {
+                    self.tx_mut(tx)?.state = TxState::Aborted;
+                    self.aborted += 1;
+                    return Err(SageError::TxAborted(format!(
+                        "{tx:?}: read-write conflict on {:?}",
+                        String::from_utf8_lossy(k)
+                    )));
+                }
+            }
+        }
+        // group commit: bump epoch, log, apply
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let t = self.tx_mut(tx)?;
+        t.state = TxState::Committed;
+        let writes = std::mem::take(&mut t.writes);
+        self.redo.push((epoch, writes.clone()));
+        for u in &writes {
+            self.versions.insert(u.key.clone(), epoch);
+            self.store.insert(u.key.clone(), u.value.clone());
+        }
+        self.committed += 1;
+        Ok(now + LOG_FORCE)
+    }
+
+    /// Abort: drop buffered updates.
+    pub fn abort(&mut self, tx: TxId) -> Result<()> {
+        let t = self.tx_mut(tx)?;
+        t.state = TxState::Aborted;
+        t.writes.clear();
+        self.aborted += 1;
+        Ok(())
+    }
+
+    /// Committed value of `key` (outside any transaction).
+    pub fn get(&self, key: &[u8]) -> Option<&Vec<u8>> {
+        self.store.get(key)
+    }
+
+    /// Crash-recovery: rebuild store state from the redo log alone.
+    /// Returns the number of epochs replayed. Atomicity check: the
+    /// rebuilt state must equal the live state (tests assert this).
+    pub fn recover(&self) -> BTreeMap<Vec<u8>, Vec<u8>> {
+        let mut rebuilt = BTreeMap::new();
+        for (_, updates) in &self.redo {
+            for u in updates {
+                rebuilt.insert(u.key.clone(), u.value.clone());
+            }
+        }
+        rebuilt
+    }
+
+    /// Current epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn tx_mut(&mut self, tx: TxId) -> Result<&mut Tx> {
+        self.txns
+            .get_mut(&tx)
+            .ok_or_else(|| SageError::NotFound(format!("{tx:?}")))
+    }
+}
+
+// ------------------------------------------------------------------------
+// Ablation baseline: RDBMS-style two-phase locking
+// ------------------------------------------------------------------------
+
+/// 2PL baseline for the DTM ablation (DESIGN.md Tbl C): every key
+/// touched costs a lock RPC; locks are held to commit; wound-wait kills
+/// younger transactions on conflict. Time cost grows linearly with
+/// locks taken — the behaviour the paper's "known not to scale" refers
+/// to.
+#[derive(Debug, Default)]
+pub struct TwoPhaseLocking {
+    locks: HashMap<Vec<u8>, TxId>,
+    store: BTreeMap<Vec<u8>, Vec<u8>>,
+    next_tx: u64,
+    held: HashMap<TxId, Vec<Vec<u8>>>,
+    pub committed: u64,
+    pub aborted: u64,
+}
+
+impl TwoPhaseLocking {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn begin(&mut self) -> TxId {
+        self.next_tx += 1;
+        let id = TxId(self.next_tx);
+        self.held.insert(id, Vec::new());
+        id
+    }
+
+    /// Acquire a lock + write. Returns new time; errors on conflict
+    /// with an *older* transaction (wound-wait: younger aborts).
+    pub fn write(
+        &mut self,
+        tx: TxId,
+        key: Vec<u8>,
+        value: Vec<u8>,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        match self.locks.get(&key) {
+            Some(&holder) if holder != tx => {
+                if holder.0 < tx.0 {
+                    // younger dies
+                    self.abort(tx);
+                    return Err(SageError::TxAborted(format!(
+                        "{tx:?} wounded by {holder:?}"
+                    )));
+                }
+                // wound the younger holder
+                self.abort(holder);
+            }
+            _ => {}
+        }
+        self.locks.insert(key.clone(), tx);
+        self.held.get_mut(&tx).map(|v| v.push(key.clone()));
+        self.store.insert(key, value);
+        Ok(now + LOCK_RPC)
+    }
+
+    /// Commit: release locks, one log force per transaction (no group
+    /// commit in the baseline).
+    pub fn commit(&mut self, tx: TxId, now: SimTime) -> SimTime {
+        if let Some(keys) = self.held.remove(&tx) {
+            for k in keys {
+                if self.locks.get(&k) == Some(&tx) {
+                    self.locks.remove(&k);
+                }
+            }
+        }
+        self.committed += 1;
+        now + LOG_FORCE
+    }
+
+    fn abort(&mut self, tx: TxId) {
+        if let Some(keys) = self.held.remove(&tx) {
+            for k in keys {
+                if self.locks.get(&k) == Some(&tx) {
+                    self.locks.remove(&k);
+                }
+            }
+        }
+        self.aborted += 1;
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<&Vec<u8>> {
+        self.store.get(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_applies_atomically() {
+        let mut m = DtmManager::new();
+        let tx = m.begin();
+        m.write(tx, b"a".to_vec(), b"1".to_vec()).unwrap();
+        m.write(tx, b"b".to_vec(), b"2".to_vec()).unwrap();
+        assert_eq!(m.get(b"a"), None, "not visible before commit");
+        m.commit(tx, 0.0).unwrap();
+        assert_eq!(m.get(b"a"), Some(&b"1".to_vec()));
+        assert_eq!(m.get(b"b"), Some(&b"2".to_vec()));
+    }
+
+    #[test]
+    fn abort_discards() {
+        let mut m = DtmManager::new();
+        let tx = m.begin();
+        m.write(tx, b"a".to_vec(), b"1".to_vec()).unwrap();
+        m.abort(tx).unwrap();
+        assert_eq!(m.get(b"a"), None);
+        assert!(m.commit(tx, 0.0).is_err(), "aborted tx cannot commit");
+    }
+
+    #[test]
+    fn read_your_writes() {
+        let mut m = DtmManager::new();
+        let tx = m.begin();
+        m.write(tx, b"a".to_vec(), b"1".to_vec()).unwrap();
+        assert_eq!(m.read(tx, b"a").unwrap(), Some(b"1".to_vec()));
+    }
+
+    #[test]
+    fn conflicting_reader_aborts() {
+        let mut m = DtmManager::new();
+        let t1 = m.begin();
+        let t2 = m.begin();
+        // t1 reads a; t2 writes a and commits first
+        assert_eq!(m.read(t1, b"a").unwrap(), None);
+        m.write(t2, b"a".to_vec(), b"x".to_vec()).unwrap();
+        m.commit(t2, 0.0).unwrap();
+        // t1 writes something based on its stale read -> must abort
+        m.write(t1, b"b".to_vec(), b"y".to_vec()).unwrap();
+        assert!(matches!(m.commit(t1, 0.0), Err(SageError::TxAborted(_))));
+        assert_eq!(m.get(b"b"), None, "aborted writes invisible");
+    }
+
+    #[test]
+    fn blind_writes_do_not_conflict() {
+        let mut m = DtmManager::new();
+        let t1 = m.begin();
+        let t2 = m.begin();
+        m.write(t1, b"a".to_vec(), b"1".to_vec()).unwrap();
+        m.write(t2, b"a".to_vec(), b"2".to_vec()).unwrap();
+        m.commit(t2, 0.0).unwrap();
+        // t1 never read "a", so last-writer-wins is allowed
+        m.commit(t1, 0.0).unwrap();
+        assert_eq!(m.get(b"a"), Some(&b"1".to_vec()));
+    }
+
+    #[test]
+    fn recovery_matches_live_state() {
+        let mut m = DtmManager::new();
+        for i in 0..10u8 {
+            let tx = m.begin();
+            m.write(tx, vec![i], vec![i * 2]).unwrap();
+            if i % 3 == 0 {
+                m.abort(tx).unwrap();
+            } else {
+                m.commit(tx, 0.0).unwrap();
+            }
+        }
+        let rebuilt = m.recover();
+        for (k, v) in &rebuilt {
+            assert_eq!(m.get(k), Some(v));
+        }
+        assert_eq!(rebuilt.len(), 6, "only committed txns replay");
+    }
+
+    #[test]
+    fn twopl_wound_wait() {
+        let mut l = TwoPhaseLocking::new();
+        let old = l.begin();
+        let young = l.begin();
+        l.write(old, b"k".to_vec(), b"1".to_vec(), 0.0).unwrap();
+        // younger conflicts -> aborted
+        assert!(l.write(young, b"k".to_vec(), b"2".to_vec(), 0.0).is_err());
+        l.commit(old, 0.0);
+        assert_eq!(l.aborted, 1);
+        assert_eq!(l.committed, 1);
+    }
+
+    #[test]
+    fn twopl_old_wounds_young_holder() {
+        let mut l = TwoPhaseLocking::new();
+        let young = {
+            let _ = l.begin(); // id 1 (older, unused)
+            l.begin() // id 2
+        };
+        let old = TxId(1);
+        l.write(young, b"k".to_vec(), b"2".to_vec(), 0.0).unwrap();
+        // older tx takes the lock by wounding the younger
+        l.write(old, b"k".to_vec(), b"1".to_vec(), 0.0).unwrap();
+        assert_eq!(l.aborted, 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! High-Availability subsystem (§3.2.1).
+//!
+//! "The HA subsystem monitors failure events … Then, on the basis of
+//! the collected events, the HA system decides whether to take action.
+//! The HA subsystem does not consider events in isolation but
+//! quantifies, over the recent history of the cluster, a quasi-ordered
+//! set of events to determine which repair procedure to engage, if
+//! any."
+//!
+//! Concretely: events accumulate in a sliding history window. Decision
+//! rules over the *set* (not single events):
+//! * a hard device failure → immediate SNS repair of that device;
+//! * ≥ `transient_threshold` transients on one device within the window
+//!   → proactive repair (the device is dying);
+//! * correlated transients across many devices of one node within the
+//!   window → node-level alert (repair deferred to operator policy);
+//! * isolated transient → no action.
+
+use std::collections::HashMap;
+
+use crate::cluster::failure::{FailureEvent, FailureKind};
+use crate::cluster::DeviceId;
+use crate::sim::clock::SimTime;
+
+/// Repair procedures the HA subsystem can engage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RepairAction {
+    /// Rebuild all units of this device onto spares (SNS repair).
+    RebuildDevice(DeviceId),
+    /// Proactively drain a degrading device before it hard-fails.
+    ProactiveDrain(DeviceId),
+    /// Too many correlated events on one node: flag for operator.
+    NodeAlert { node: usize, events: usize },
+    /// No action (event set below thresholds).
+    None,
+}
+
+/// Sliding-window failure-event analyzer.
+#[derive(Debug)]
+pub struct HaSubsystem {
+    /// History window length, seconds of virtual time.
+    pub window: SimTime,
+    /// Transients on one device within the window that trigger a drain.
+    pub transient_threshold: usize,
+    /// Events on one *node* within the window that trigger an alert.
+    pub node_threshold: usize,
+    history: Vec<FailureEvent>,
+    /// Devices already being repaired (suppress duplicate actions).
+    in_repair: HashMap<DeviceId, SimTime>,
+    /// Counters for ADDB.
+    pub repairs_started: u64,
+    pub drains_started: u64,
+    pub alerts: u64,
+}
+
+impl Default for HaSubsystem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HaSubsystem {
+    /// Defaults: 1 h window, 3 transients → drain, 8 node events → alert.
+    pub fn new() -> Self {
+        HaSubsystem {
+            window: 3600.0,
+            transient_threshold: 3,
+            node_threshold: 8,
+            history: Vec::new(),
+            in_repair: HashMap::new(),
+            repairs_started: 0,
+            drains_started: 0,
+            alerts: 0,
+        }
+    }
+
+    /// Ingest one failure event; returns the repair decision.
+    /// `node_of` maps devices to nodes for correlation analysis.
+    pub fn observe<F: Fn(DeviceId) -> Option<usize>>(
+        &mut self,
+        ev: FailureEvent,
+        node_of: F,
+    ) -> RepairAction {
+        self.history.push(ev);
+        self.prune(ev.at);
+
+        match ev.kind {
+            FailureKind::Device(d) => {
+                if self.in_repair.contains_key(&d) {
+                    return RepairAction::None;
+                }
+                self.in_repair.insert(d, ev.at);
+                self.repairs_started += 1;
+                RepairAction::RebuildDevice(d)
+            }
+            FailureKind::Transient(d) => {
+                if self.in_repair.contains_key(&d) {
+                    return RepairAction::None;
+                }
+                // per-device transient count over the window
+                let dev_count = self
+                    .history
+                    .iter()
+                    .filter(|e| matches!(e.kind, FailureKind::Transient(x) if x == d))
+                    .count();
+                if dev_count >= self.transient_threshold {
+                    self.in_repair.insert(d, ev.at);
+                    self.drains_started += 1;
+                    return RepairAction::ProactiveDrain(d);
+                }
+                // node-correlated events
+                if let Some(node) = node_of(d) {
+                    let node_count = self
+                        .history
+                        .iter()
+                        .filter(|e| {
+                            let dd = match e.kind {
+                                FailureKind::Device(x)
+                                | FailureKind::Transient(x) => x,
+                            };
+                            node_of(dd) == Some(node)
+                        })
+                        .count();
+                    if node_count >= self.node_threshold {
+                        self.alerts += 1;
+                        return RepairAction::NodeAlert {
+                            node,
+                            events: node_count,
+                        };
+                    }
+                }
+                RepairAction::None
+            }
+        }
+    }
+
+    /// Mark a repair finished; the device may be observed again.
+    pub fn repair_done(&mut self, dev: DeviceId) {
+        self.in_repair.remove(&dev);
+    }
+
+    /// Devices currently under repair.
+    pub fn repairing(&self) -> Vec<DeviceId> {
+        self.in_repair.keys().copied().collect()
+    }
+
+    fn prune(&mut self, now: SimTime) {
+        let cutoff = now - self.window;
+        self.history.retain(|e| e.at >= cutoff);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: SimTime, kind: FailureKind) -> FailureEvent {
+        FailureEvent { at, kind }
+    }
+
+    #[test]
+    fn hard_failure_triggers_rebuild_once() {
+        let mut ha = HaSubsystem::new();
+        let a = ha.observe(ev(1.0, FailureKind::Device(3)), |_| Some(0));
+        assert_eq!(a, RepairAction::RebuildDevice(3));
+        // duplicate event while repairing: suppressed
+        let a2 = ha.observe(ev(2.0, FailureKind::Device(3)), |_| Some(0));
+        assert_eq!(a2, RepairAction::None);
+        ha.repair_done(3);
+        let a3 = ha.observe(ev(3.0, FailureKind::Device(3)), |_| Some(0));
+        assert_eq!(a3, RepairAction::RebuildDevice(3));
+    }
+
+    #[test]
+    fn isolated_transient_no_action() {
+        let mut ha = HaSubsystem::new();
+        let a = ha.observe(ev(1.0, FailureKind::Transient(5)), |_| Some(0));
+        assert_eq!(a, RepairAction::None);
+    }
+
+    #[test]
+    fn repeated_transients_trigger_drain() {
+        let mut ha = HaSubsystem::new();
+        ha.observe(ev(1.0, FailureKind::Transient(5)), |_| Some(0));
+        ha.observe(ev(2.0, FailureKind::Transient(5)), |_| Some(0));
+        let a = ha.observe(ev(3.0, FailureKind::Transient(5)), |_| Some(0));
+        assert_eq!(a, RepairAction::ProactiveDrain(5));
+        assert_eq!(ha.drains_started, 1);
+    }
+
+    #[test]
+    fn window_expiry_forgets_old_transients() {
+        let mut ha = HaSubsystem::new();
+        ha.window = 10.0;
+        ha.observe(ev(1.0, FailureKind::Transient(5)), |_| Some(0));
+        ha.observe(ev(2.0, FailureKind::Transient(5)), |_| Some(0));
+        // third transient arrives after the window slid past the others
+        let a = ha.observe(ev(50.0, FailureKind::Transient(5)), |_| Some(0));
+        assert_eq!(a, RepairAction::None);
+    }
+
+    #[test]
+    fn node_correlation_alerts() {
+        let mut ha = HaSubsystem::new();
+        ha.node_threshold = 4;
+        // transients on different devices of the same node
+        for (i, d) in [10, 11, 12].iter().enumerate() {
+            let a = ha.observe(
+                ev(i as f64, FailureKind::Transient(*d)),
+                |_| Some(7),
+            );
+            assert_eq!(a, RepairAction::None);
+        }
+        let a = ha.observe(ev(4.0, FailureKind::Transient(13)), |_| Some(7));
+        assert_eq!(a, RepairAction::NodeAlert { node: 7, events: 4 });
+    }
+}

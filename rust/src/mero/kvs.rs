@@ -1,0 +1,149 @@
+//! Mero key-value indices (§3.2.2 Clovis Access Interface).
+//!
+//! "A Clovis index is a key-value store. An index stores records in
+//! some order … keys are unique within an index. Clovis provides GET,
+//! PUT, DEL and NEXT operations on indices", each over a *set* of keys
+//! (batched, as in the real API).
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+/// Opaque index identifier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct IndexId(pub u64);
+
+/// An ordered key-value index.
+#[derive(Debug, Default)]
+pub struct KvIndex {
+    pub id: IndexId,
+    map: BTreeMap<Vec<u8>, Vec<u8>>,
+}
+
+impl KvIndex {
+    /// New empty index.
+    pub fn new(id: IndexId) -> Self {
+        KvIndex { id, map: BTreeMap::new() }
+    }
+
+    // --------------------------------------------------- single-record
+
+    /// Insert / overwrite one record.
+    pub fn put(&mut self, key: Vec<u8>, val: Vec<u8>) {
+        self.map.insert(key, val);
+    }
+
+    /// Lookup one key.
+    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
+        self.map.get(key).map(|v| v.as_slice())
+    }
+
+    /// Delete one key; true if it existed.
+    pub fn del(&mut self, key: &[u8]) -> bool {
+        self.map.remove(key).is_some()
+    }
+
+    // -------------------------------------------------------- batched
+
+    /// GET: matching records for a set of keys (None for misses).
+    pub fn get_batch(&self, keys: &[Vec<u8>]) -> Vec<Option<Vec<u8>>> {
+        keys.iter().map(|k| self.map.get(k).cloned()).collect()
+    }
+
+    /// PUT: write/rewrite a set of records.
+    pub fn put_batch(&mut self, records: Vec<(Vec<u8>, Vec<u8>)>) {
+        for (k, v) in records {
+            self.map.insert(k, v);
+        }
+    }
+
+    /// DEL: delete all matching records; returns per-key success.
+    pub fn del_batch(&mut self, keys: &[Vec<u8>]) -> Vec<bool> {
+        keys.iter().map(|k| self.map.remove(k).is_some()).collect()
+    }
+
+    /// NEXT: for each given key, the record with the smallest key
+    /// strictly greater than it (the paper's "set of next keys").
+    pub fn next_batch(&self, keys: &[Vec<u8>]) -> Vec<Option<(Vec<u8>, Vec<u8>)>> {
+        keys.iter()
+            .map(|k| {
+                self.map
+                    .range::<Vec<u8>, _>((Bound::Excluded(k.clone()), Bound::Unbounded))
+                    .next()
+                    .map(|(k, v)| (k.clone(), v.clone()))
+            })
+            .collect()
+    }
+
+    /// Range scan from `start` (inclusive), up to `limit` records —
+    /// used by gateway namespaces (pNFS) and FDMI plugins.
+    pub fn scan(&self, start: &[u8], limit: usize) -> Vec<(Vec<u8>, Vec<u8>)> {
+        self.map
+            .range::<Vec<u8>, _>((Bound::Included(start.to_vec()), Bound::Unbounded))
+            .take(limit)
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx() -> KvIndex {
+        let mut i = KvIndex::new(IndexId(1));
+        i.put_batch(vec![
+            (b"a".to_vec(), b"1".to_vec()),
+            (b"c".to_vec(), b"3".to_vec()),
+            (b"e".to_vec(), b"5".to_vec()),
+        ]);
+        i
+    }
+
+    #[test]
+    fn get_put_del() {
+        let mut i = idx();
+        assert_eq!(i.get(b"a"), Some(b"1".as_ref()));
+        assert_eq!(i.get(b"b"), None);
+        i.put(b"a".to_vec(), b"9".to_vec()); // rewrite
+        assert_eq!(i.get(b"a"), Some(b"9".as_ref()));
+        assert!(i.del(b"a"));
+        assert!(!i.del(b"a"));
+    }
+
+    #[test]
+    fn batched_ops() {
+        let mut i = idx();
+        let got = i.get_batch(&[b"a".to_vec(), b"x".to_vec()]);
+        assert_eq!(got, vec![Some(b"1".to_vec()), None]);
+        let deleted = i.del_batch(&[b"a".to_vec(), b"x".to_vec()]);
+        assert_eq!(deleted, vec![true, false]);
+    }
+
+    #[test]
+    fn next_is_strictly_greater() {
+        let i = idx();
+        let nx = i.next_batch(&[b"a".to_vec(), b"b".to_vec(), b"e".to_vec()]);
+        assert_eq!(nx[0].as_ref().unwrap().0, b"c".to_vec());
+        assert_eq!(nx[1].as_ref().unwrap().0, b"c".to_vec());
+        assert_eq!(nx[2], None);
+    }
+
+    #[test]
+    fn scan_ordered() {
+        let i = idx();
+        let all = i.scan(b"", 10);
+        let keys: Vec<_> = all.iter().map(|(k, _)| k.clone()).collect();
+        assert_eq!(keys, vec![b"a".to_vec(), b"c".to_vec(), b"e".to_vec()]);
+        assert_eq!(i.scan(b"c", 1).len(), 1);
+    }
+}

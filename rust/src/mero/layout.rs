@@ -1,0 +1,214 @@
+//! Layouts: how storage entities map to hardware and tiers (§3.2.1).
+//!
+//! "A layout determines how a storage entity … is mapped to the
+//! available storage hardware and tiers … RAID layouts with different
+//! combinations of data and parity, compressed layouts, mirrored
+//! layouts … Different portions of objects mapped to different tiers
+//! can have their own layout."
+
+use crate::error::{Result, SageError};
+use crate::sim::device::DeviceKind;
+
+/// Object layout descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layout {
+    /// N+K parity-declustered striping (SNS). `unit` bytes per stripe
+    /// unit; data+parity units rotate across the tier's devices.
+    Raid { data: u32, parity: u32, unit: u64, tier: DeviceKind },
+    /// N-way replication.
+    Mirror { copies: u32, tier: DeviceKind },
+    /// Transparent compression wrapped around an inner layout.
+    Compressed { inner: Box<Layout> },
+    /// Different byte ranges with their own layouts (deep-hierarchy
+    /// placement: e.g. first GiB on NVRAM, rest on disk).
+    Composite { extents: Vec<(u64, u64, Layout)> },
+}
+
+impl Default for Layout {
+    /// 4+1 SNS over the SSD tier with 64 KiB units — a sane default for
+    /// the SAGE prototype.
+    fn default() -> Self {
+        Layout::Raid { data: 4, parity: 1, unit: 64 * 1024, tier: DeviceKind::Ssd }
+    }
+}
+
+impl Layout {
+    /// Validate parameters (positive widths, pow-2 unit, sane extents).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Layout::Raid { data, parity, unit, .. } => {
+                if *data == 0 {
+                    return Err(SageError::Invalid("raid: data width 0".into()));
+                }
+                if *parity > 2 {
+                    return Err(SageError::Invalid(
+                        "raid: at most 2 parity units supported".into(),
+                    ));
+                }
+                if !crate::util::is_pow2(*unit) {
+                    return Err(SageError::Invalid(format!(
+                        "raid: unit {unit} not a power of two"
+                    )));
+                }
+                Ok(())
+            }
+            Layout::Mirror { copies, .. } => {
+                if *copies == 0 {
+                    return Err(SageError::Invalid("mirror: 0 copies".into()));
+                }
+                Ok(())
+            }
+            Layout::Compressed { inner } => inner.validate(),
+            Layout::Composite { extents } => {
+                if extents.is_empty() {
+                    return Err(SageError::Invalid("composite: empty".into()));
+                }
+                let mut end = 0u64;
+                for (off, len, inner) in extents {
+                    if *off != end {
+                        return Err(SageError::Invalid(format!(
+                            "composite: extent at {off} not contiguous (expected {end})"
+                        )));
+                    }
+                    if *len == 0 {
+                        return Err(SageError::Invalid("composite: empty extent".into()));
+                    }
+                    inner.validate()?;
+                    end = off + len;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The layout governing byte `offset` (descends composites and
+    /// compression wrappers — the physical mapping is the inner layout).
+    pub fn at_offset(&self, offset: u64) -> &Layout {
+        match self {
+            Layout::Composite { extents } => {
+                for (off, len, inner) in extents {
+                    if offset >= *off && offset < off + len {
+                        return inner.at_offset(offset - off);
+                    }
+                }
+                // past the last extent: the final extent's layout governs
+                extents.last().map(|(_, _, l)| l.at_offset(0)).unwrap_or(self)
+            }
+            Layout::Compressed { inner } => inner.at_offset(offset),
+            _ => self,
+        }
+    }
+
+    /// Tier this (sub)layout targets.
+    pub fn tier(&self) -> DeviceKind {
+        match self {
+            Layout::Raid { tier, .. } | Layout::Mirror { tier, .. } => *tier,
+            Layout::Compressed { inner } => inner.tier(),
+            Layout::Composite { extents } => {
+                extents.first().map(|(_, _, l)| l.tier()).unwrap_or(DeviceKind::Ssd)
+            }
+        }
+    }
+
+    /// Storage overhead factor (bytes stored per logical byte):
+    /// RAID (n+k)/n, mirror = copies, compression estimated by ratio 1
+    /// (real ratio known only per-payload).
+    pub fn overhead(&self) -> f64 {
+        match self {
+            Layout::Raid { data, parity, .. } => {
+                (*data + *parity) as f64 / *data as f64
+            }
+            Layout::Mirror { copies, .. } => *copies as f64,
+            Layout::Compressed { inner } => inner.overhead(),
+            Layout::Composite { extents } => {
+                // weighted mean over extents
+                let total: u64 = extents.iter().map(|(_, l, _)| l).sum();
+                extents
+                    .iter()
+                    .map(|(_, len, l)| l.overhead() * *len as f64)
+                    .sum::<f64>()
+                    / total.max(1) as f64
+            }
+        }
+    }
+
+    /// True if any layer applies compression.
+    pub fn compressed(&self) -> bool {
+        match self {
+            Layout::Compressed { .. } => true,
+            Layout::Composite { extents } => {
+                extents.iter().any(|(_, _, l)| l.compressed())
+            }
+            _ => false,
+        }
+    }
+
+    /// Stripe width in bytes (data portion) for RAID; None otherwise.
+    pub fn stripe_width(&self) -> Option<u64> {
+        match self {
+            Layout::Raid { data, unit, .. } => Some(*data as u64 * unit),
+            Layout::Compressed { inner } => inner.stripe_width(),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_valid() {
+        assert!(Layout::default().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(Layout::Raid { data: 0, parity: 1, unit: 4096, tier: DeviceKind::Ssd }
+            .validate()
+            .is_err());
+        assert!(Layout::Raid { data: 4, parity: 3, unit: 4096, tier: DeviceKind::Ssd }
+            .validate()
+            .is_err());
+        assert!(Layout::Raid { data: 4, parity: 1, unit: 5000, tier: DeviceKind::Ssd }
+            .validate()
+            .is_err());
+        assert!(Layout::Mirror { copies: 0, tier: DeviceKind::Hdd }.validate().is_err());
+    }
+
+    #[test]
+    fn composite_contiguity() {
+        let good = Layout::Composite {
+            extents: vec![
+                (0, 1 << 20, Layout::Raid { data: 2, parity: 1, unit: 4096, tier: DeviceKind::Nvram }),
+                (1 << 20, 1 << 30, Layout::default()),
+            ],
+        };
+        assert!(good.validate().is_ok());
+        let bad = Layout::Composite {
+            extents: vec![(4096, 4096, Layout::default())],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn at_offset_descends() {
+        let l = Layout::Composite {
+            extents: vec![
+                (0, 1 << 20, Layout::Mirror { copies: 2, tier: DeviceKind::Nvram }),
+                (1 << 20, 1 << 30, Layout::default()),
+            ],
+        };
+        assert_eq!(l.at_offset(0).tier(), DeviceKind::Nvram);
+        assert_eq!(l.at_offset(1 << 21).tier(), DeviceKind::Ssd);
+        // past-the-end falls into the last extent
+        assert_eq!(l.at_offset(1 << 40).tier(), DeviceKind::Ssd);
+    }
+
+    #[test]
+    fn overhead_factors() {
+        assert!((Layout::default().overhead() - 1.25).abs() < 1e-9);
+        let m = Layout::Mirror { copies: 3, tier: DeviceKind::Hdd };
+        assert_eq!(m.overhead(), 3.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Mero: the Exascale object-storage core at the base of the SAGE stack
+//! (§3.2.1).
+//!
+//! Feature inventory (each in its own module):
+//! * [`object`] — objects as arrays of power-of-2-sized blocks
+//! * [`kvs`] — key-value indices (GET/PUT/DEL/NEXT)
+//! * [`container`] — object grouping with performance/format labels
+//! * [`layout`] — RAID / mirrored / compressed / composite layouts
+//! * [`sns`] — Server Network Striping (distributed RAID + repair)
+//! * [`dtm`] — scalable distributed transactions (epoch-based)
+//! * [`ha`] — high-availability: event monitoring + repair decisions
+//! * [`pool`] — tiered device pools and allocation
+//!
+//! [`MeroStore`] composes them into the single store instance the
+//! Clovis layer talks to. All time-bearing calls take a `now` virtual
+//! timestamp and return the completion time, so any number of simulated
+//! ranks can drive one store.
+
+pub mod container;
+pub mod dtm;
+pub mod ha;
+pub mod kvs;
+pub mod layout;
+pub mod object;
+pub mod pool;
+pub mod sns;
+
+use std::collections::HashMap;
+
+use crate::cluster::Cluster;
+use crate::error::{Result, SageError};
+use crate::sim::clock::SimTime;
+use crate::sim::device::DeviceKind;
+
+pub use container::{Container, ContainerId};
+pub use kvs::{IndexId, KvIndex};
+pub use layout::Layout;
+pub use object::{Mobject, ObjectId};
+pub use pool::PoolSet;
+
+/// The Mero store: objects + indices + containers over a cluster.
+pub struct MeroStore {
+    pub cluster: Cluster,
+    pub pools: PoolSet,
+    pub dtm: dtm::DtmManager,
+    pub ha: ha::HaSubsystem,
+    objects: HashMap<ObjectId, Mobject>,
+    indices: HashMap<IndexId, KvIndex>,
+    containers: HashMap<ContainerId, Container>,
+    next_id: u64,
+}
+
+impl MeroStore {
+    /// A store over `cluster`, with pools built from the cluster's
+    /// device inventory (one pool per device kind).
+    pub fn new(cluster: Cluster) -> Self {
+        let pools = PoolSet::from_cluster(&cluster);
+        MeroStore {
+            cluster,
+            pools,
+            dtm: dtm::DtmManager::new(),
+            ha: ha::HaSubsystem::new(),
+            objects: HashMap::new(),
+            indices: HashMap::new(),
+            containers: HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    // ----------------------------------------------------------- objects
+
+    /// Create an object with the given block size (must be a power of
+    /// two, §3.2.2) and layout.
+    pub fn create_object(
+        &mut self,
+        block_size: u64,
+        layout: Layout,
+    ) -> Result<ObjectId> {
+        layout.validate()?;
+        if !crate::util::is_pow2(block_size) {
+            return Err(SageError::Invalid(format!(
+                "block size {block_size} is not a power of two"
+            )));
+        }
+        let id = ObjectId(self.fresh_id());
+        self.objects.insert(id, Mobject::new(id, block_size, layout));
+        Ok(id)
+    }
+
+    /// Borrow an object.
+    pub fn object(&self, id: ObjectId) -> Result<&Mobject> {
+        self.objects
+            .get(&id)
+            .ok_or_else(|| SageError::NotFound(format!("object {id:?}")))
+    }
+
+    /// Mutably borrow an object.
+    pub fn object_mut(&mut self, id: ObjectId) -> Result<&mut Mobject> {
+        self.objects
+            .get_mut(&id)
+            .ok_or_else(|| SageError::NotFound(format!("object {id:?}")))
+    }
+
+    /// Delete an object at end-of-life, releasing pool space.
+    pub fn delete_object(&mut self, id: ObjectId) -> Result<()> {
+        let obj = self
+            .objects
+            .remove(&id)
+            .ok_or_else(|| SageError::NotFound(format!("object {id:?}")))?;
+        for unit in obj.placed_units() {
+            self.pools.release(&mut self.cluster, unit.device, unit.size);
+        }
+        Ok(())
+    }
+
+    /// Write `data` at `offset` through the SNS engine; returns
+    /// completion time. Offset and length must be block-aligned.
+    pub fn write_object(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        data: &[u8],
+        now: SimTime,
+        exec: Option<&crate::runtime::Executor>,
+    ) -> Result<SimTime> {
+        sns::write(self, id, offset, sns::Payload::Real(data), now, exec)
+    }
+
+    /// Phantom write: account placement + time for `len` bytes without
+    /// materializing them (used by paper-scale benchmarks).
+    pub fn write_object_phantom(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        len: u64,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        sns::write(self, id, offset, sns::Payload::Phantom(len), now, None)
+    }
+
+    /// Read `len` bytes at `offset`; reconstructs through parity if
+    /// devices have failed. Returns (data, completion time).
+    pub fn read_object(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        len: u64,
+        now: SimTime,
+    ) -> Result<(Vec<u8>, SimTime)> {
+        sns::read(self, id, offset, len, now)
+    }
+
+    /// Phantom read: time accounting only.
+    pub fn read_object_phantom(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        len: u64,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        sns::read_phantom(self, id, offset, len, now)
+    }
+
+    // ----------------------------------------------------------- indices
+
+    /// Create a KV index.
+    pub fn create_index(&mut self) -> IndexId {
+        let id = IndexId(self.fresh_id());
+        self.indices.insert(id, KvIndex::new(id));
+        id
+    }
+
+    /// Borrow an index.
+    pub fn index(&self, id: IndexId) -> Result<&KvIndex> {
+        self.indices
+            .get(&id)
+            .ok_or_else(|| SageError::NotFound(format!("index {id:?}")))
+    }
+
+    /// Mutably borrow an index.
+    pub fn index_mut(&mut self, id: IndexId) -> Result<&mut KvIndex> {
+        self.indices
+            .get_mut(&id)
+            .ok_or_else(|| SageError::NotFound(format!("index {id:?}")))
+    }
+
+    /// Delete an index.
+    pub fn delete_index(&mut self, id: IndexId) -> Result<()> {
+        self.indices
+            .remove(&id)
+            .map(|_| ())
+            .ok_or_else(|| SageError::NotFound(format!("index {id:?}")))
+    }
+
+    // -------------------------------------------------------- containers
+
+    /// Create a container with a label and an optional tier hint.
+    pub fn create_container(
+        &mut self,
+        label: &str,
+        tier_hint: Option<DeviceKind>,
+    ) -> ContainerId {
+        let id = ContainerId(self.fresh_id());
+        self.containers.insert(id, Container::new(id, label, tier_hint));
+        id
+    }
+
+    /// Borrow a container.
+    pub fn container(&self, id: ContainerId) -> Result<&Container> {
+        self.containers
+            .get(&id)
+            .ok_or_else(|| SageError::NotFound(format!("container {id:?}")))
+    }
+
+    /// Mutably borrow a container.
+    pub fn container_mut(&mut self, id: ContainerId) -> Result<&mut Container> {
+        self.containers
+            .get_mut(&id)
+            .ok_or_else(|| SageError::NotFound(format!("container {id:?}")))
+    }
+
+    /// Objects grouped in `container`.
+    pub fn container_objects(&self, id: ContainerId) -> Result<Vec<ObjectId>> {
+        Ok(self.container(id)?.objects().to_vec())
+    }
+
+    /// Number of live objects (metadata).
+    pub fn object_count(&self) -> usize {
+        self.objects.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    fn store() -> MeroStore {
+        MeroStore::new(Testbed::blackdog().build_cluster())
+    }
+
+    #[test]
+    fn create_requires_pow2_blocks() {
+        let mut s = store();
+        assert!(s.create_object(4096, Layout::default()).is_ok());
+        assert!(s.create_object(1000, Layout::default()).is_err());
+    }
+
+    #[test]
+    fn object_lifecycle() {
+        let mut s = store();
+        let id = s.create_object(4096, Layout::default()).unwrap();
+        assert!(s.object(id).is_ok());
+        s.delete_object(id).unwrap();
+        assert!(s.object(id).is_err());
+        assert!(s.delete_object(id).is_err());
+    }
+
+    #[test]
+    fn index_lifecycle() {
+        let mut s = store();
+        let id = s.create_index();
+        s.index_mut(id).unwrap().put(b"k".to_vec(), b"v".to_vec());
+        assert_eq!(s.index(id).unwrap().get(b"k"), Some(b"v".as_ref()));
+        s.delete_index(id).unwrap();
+        assert!(s.index(id).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Mero objects: arrays of power-of-two-sized blocks (§3.2.2).
+//!
+//! "A Clovis object is an array of blocks. Blocks are of a power of two
+//! size bytes … objects can be read from and written to at block level
+//! granularity." Block payloads live in a sparse map so petabyte-scale
+//! *phantom* objects (benchmarks) carry no memory cost, while real
+//! objects round-trip bytes exactly.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::DeviceId;
+use crate::error::{Result, SageError};
+use crate::mero::layout::Layout;
+
+/// Opaque object identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub u64);
+
+/// A stripe unit placed on a device (SNS placement record).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacedUnit {
+    /// Stripe number within the object.
+    pub stripe: u64,
+    /// Unit index within the stripe (data 0..k, parity k..k+p).
+    pub unit: u32,
+    /// Where the unit lives.
+    pub device: DeviceId,
+    /// Unit size in bytes.
+    pub size: u64,
+    /// True for parity units.
+    pub is_parity: bool,
+}
+
+/// An object: metadata + sparse block payloads + SNS placement map.
+#[derive(Debug)]
+pub struct Mobject {
+    pub id: ObjectId,
+    pub block_size: u64,
+    pub layout: Layout,
+    /// Sparse data blocks (block index -> payload). Only blocks written
+    /// through the *real* path exist here.
+    blocks: BTreeMap<u64, Vec<u8>>,
+    /// SNS unit placements, keyed by (stripe, unit).
+    placements: BTreeMap<(u64, u32), PlacedUnit>,
+    /// Unit payloads for SNS (parity units included), keyed likewise.
+    /// Present only for real writes.
+    unit_data: BTreeMap<(u64, u32), Vec<u8>>,
+    /// Logical extent high-water mark in bytes.
+    pub size: u64,
+    /// CRC32 of each written block (integrity checking, §3.2.3).
+    checksums: BTreeMap<u64, u32>,
+}
+
+impl Mobject {
+    /// New empty object.
+    pub fn new(id: ObjectId, block_size: u64, layout: Layout) -> Self {
+        Mobject {
+            id,
+            block_size,
+            layout,
+            blocks: BTreeMap::new(),
+            placements: BTreeMap::new(),
+            unit_data: BTreeMap::new(),
+            size: 0,
+            checksums: BTreeMap::new(),
+        }
+    }
+
+    /// Validate that (offset, len) is block-aligned.
+    pub fn check_aligned(&self, offset: u64, len: u64) -> Result<()> {
+        if offset % self.block_size != 0 || len % self.block_size != 0 {
+            return Err(SageError::Invalid(format!(
+                "unaligned I/O: offset={offset} len={len} block={}",
+                self.block_size
+            )));
+        }
+        Ok(())
+    }
+
+    /// Store a real block payload (length must equal block_size).
+    pub fn put_block(&mut self, idx: u64, data: Vec<u8>) {
+        debug_assert_eq!(data.len() as u64, self.block_size);
+        self.checksums.insert(idx, crc32fast::hash(&data));
+        self.blocks.insert(idx, data);
+        self.size = self.size.max((idx + 1) * self.block_size);
+    }
+
+    /// Fetch a block; zero-filled if never written (sparse semantics).
+    pub fn get_block(&self, idx: u64) -> Vec<u8> {
+        self.blocks
+            .get(&idx)
+            .cloned()
+            .unwrap_or_else(|| vec![0; self.block_size as usize])
+    }
+
+    /// Borrow a block's payload without copying (None = sparse zeros).
+    pub fn block_ref(&self, idx: u64) -> Option<&[u8]> {
+        self.blocks.get(&idx).map(|v| v.as_slice())
+    }
+
+    /// Verify a block against its stored checksum. Blocks never written
+    /// (or phantom) trivially pass.
+    pub fn verify_block(&self, idx: u64) -> Result<()> {
+        if let (Some(data), Some(&sum)) =
+            (self.blocks.get(&idx), self.checksums.get(&idx))
+        {
+            if crc32fast::hash(data) != sum {
+                return Err(SageError::Integrity(format!(
+                    "object {:?} block {idx} checksum mismatch",
+                    self.id
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Corrupt a block in place (test hook for integrity checking).
+    #[doc(hidden)]
+    pub fn corrupt_block(&mut self, idx: u64, byte: usize) {
+        if let Some(b) = self.blocks.get_mut(&idx) {
+            b[byte] ^= 0xFF;
+        }
+    }
+
+    /// Record an SNS unit placement.
+    pub fn place_unit(&mut self, u: PlacedUnit) {
+        self.placements.insert((u.stripe, u.unit), u);
+    }
+
+    /// Placement of (stripe, unit) if recorded.
+    pub fn placement(&self, stripe: u64, unit: u32) -> Option<&PlacedUnit> {
+        self.placements.get(&(stripe, unit))
+    }
+
+    /// All placed units.
+    pub fn placed_units(&self) -> impl Iterator<Item = &PlacedUnit> {
+        self.placements.values()
+    }
+
+    /// Store an SNS unit payload (real path).
+    pub fn put_unit(&mut self, stripe: u64, unit: u32, data: Vec<u8>) {
+        self.unit_data.insert((stripe, unit), data);
+    }
+
+    /// Fetch an SNS unit payload.
+    pub fn get_unit(&self, stripe: u64, unit: u32) -> Option<&[u8]> {
+        self.unit_data.get(&(stripe, unit)).map(|v| v.as_slice())
+    }
+
+    /// Drop a unit payload (e.g. the device holding it failed).
+    pub fn drop_unit(&mut self, stripe: u64, unit: u32) {
+        self.unit_data.remove(&(stripe, unit));
+    }
+
+    /// Number of materialized (real) blocks.
+    pub fn real_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Drop all placements and unit payloads (HSM re-tiering: the next
+    /// write re-places every stripe on the new tier).
+    pub fn clear_placements(&mut self) {
+        self.placements.clear();
+        self.unit_data.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj() -> Mobject {
+        Mobject::new(ObjectId(1), 4096, Layout::default())
+    }
+
+    #[test]
+    fn sparse_blocks_zero_filled() {
+        let mut o = obj();
+        o.put_block(5, vec![9; 4096]);
+        assert_eq!(o.get_block(5), vec![9; 4096]);
+        assert_eq!(o.get_block(0), vec![0; 4096]);
+        assert_eq!(o.size, 6 * 4096);
+        assert_eq!(o.real_blocks(), 1);
+    }
+
+    #[test]
+    fn alignment_enforced() {
+        let o = obj();
+        assert!(o.check_aligned(4096, 8192).is_ok());
+        assert!(o.check_aligned(100, 4096).is_err());
+        assert!(o.check_aligned(0, 100).is_err());
+    }
+
+    #[test]
+    fn integrity_detects_corruption() {
+        let mut o = obj();
+        o.put_block(0, vec![7; 4096]);
+        assert!(o.verify_block(0).is_ok());
+        o.corrupt_block(0, 17);
+        assert!(matches!(
+            o.verify_block(0),
+            Err(crate::error::SageError::Integrity(_))
+        ));
+    }
+
+    #[test]
+    fn unit_placement_roundtrip() {
+        let mut o = obj();
+        let u = PlacedUnit {
+            stripe: 2,
+            unit: 1,
+            device: 3,
+            size: 65536,
+            is_parity: false,
+        };
+        o.place_unit(u);
+        assert_eq!(o.placement(2, 1), Some(&u));
+        assert_eq!(o.placement(0, 0), None);
+        o.put_unit(2, 1, vec![1, 2, 3]);
+        assert_eq!(o.get_unit(2, 1), Some(&[1u8, 2, 3][..]));
+        o.drop_unit(2, 1);
+        assert_eq!(o.get_unit(2, 1), None);
+    }
+}

@@ -1,0 +1,199 @@
+//! Tiered device pools and allocation (§3.1: "NVRAM pools that have
+//! higher performance but lower capacity … drain to lower tier
+//! devices").
+//!
+//! One pool per [`DeviceKind`]; allocation is least-utilized-first so
+//! striped units spread across devices (which is what gives SNS its
+//! bandwidth aggregation).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::error::{Result, SageError};
+use crate::sim::device::DeviceKind;
+
+/// Device pools keyed by tier/kind.
+#[derive(Debug, Default)]
+pub struct PoolSet {
+    pools: BTreeMap<u8, (DeviceKind, Vec<DeviceId>)>,
+}
+
+impl PoolSet {
+    /// Build pools from a cluster's device inventory.
+    pub fn from_cluster(cluster: &Cluster) -> Self {
+        let mut set = PoolSet::default();
+        for (id, d) in cluster.devices.iter().enumerate() {
+            if d.profile.kind == DeviceKind::Dram {
+                continue; // DRAM is not a storage pool
+            }
+            set.pools
+                .entry(d.profile.kind.tier())
+                .or_insert_with(|| (d.profile.kind, Vec::new()))
+                .1
+                .push(id);
+        }
+        set
+    }
+
+    /// Devices of a tier (by kind), failed ones filtered by the caller.
+    pub fn devices(&self, kind: DeviceKind) -> &[DeviceId] {
+        self.pools
+            .get(&kind.tier())
+            .map(|(_, v)| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Kinds present, fastest tier first.
+    pub fn tiers(&self) -> Vec<DeviceKind> {
+        self.pools.values().map(|(k, _)| *k).collect()
+    }
+
+    /// The fastest tier with at least `need` free bytes on some device.
+    pub fn fastest_with_space(
+        &self,
+        cluster: &Cluster,
+        need: u64,
+    ) -> Option<DeviceKind> {
+        for (kind, devs) in self.pools.values() {
+            if devs
+                .iter()
+                .any(|&d| !cluster.devices[d].failed && cluster.devices[d].free() >= need)
+            {
+                return Some(*kind);
+            }
+        }
+        None
+    }
+
+    /// Allocate `size` bytes on some live device of `kind`, avoiding
+    /// the devices in `exclude` (SNS: units of one stripe should land
+    /// on distinct devices). Least-utilized-first. When the pool is
+    /// narrower than the stripe (fewer devices than units), the
+    /// distinctness constraint is relaxed — the real Mero spills wide
+    /// stripes across devices the same way, trading fault independence
+    /// for availability.
+    pub fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        kind: DeviceKind,
+        size: u64,
+        exclude: &[DeviceId],
+    ) -> Result<DeviceId> {
+        let candidates = self.devices(kind);
+        let pick = |cluster: &Cluster, honor_exclude: bool| {
+            candidates
+                .iter()
+                .copied()
+                .filter(|d| {
+                    let dev = &cluster.devices[*d];
+                    !dev.failed
+                        && dev.free() >= size
+                        && (!honor_exclude || !exclude.contains(d))
+                })
+                .min_by(|a, b| {
+                    cluster.devices[*a]
+                        .utilization()
+                        .total_cmp(&cluster.devices[*b].utilization())
+                })
+        };
+        let best = pick(cluster, true)
+            .or_else(|| pick(cluster, false))
+            .ok_or_else(|| {
+                SageError::NoSpace(format!(
+                    "no {kind:?} device with {size} free"
+                ))
+            })?;
+        cluster.devices[best].used += size;
+        Ok(best)
+    }
+
+    /// Release `size` bytes on `dev`.
+    pub fn release(&self, cluster: &mut Cluster, dev: DeviceId, size: u64) {
+        let d = &mut cluster.devices[dev];
+        d.used = d.used.saturating_sub(size);
+    }
+
+    /// Pool-wide free bytes for a tier.
+    pub fn free_bytes(&self, cluster: &Cluster, kind: DeviceKind) -> u64 {
+        self.devices(kind)
+            .iter()
+            .filter(|&&d| !cluster.devices[d].failed)
+            .map(|&d| cluster.devices[d].free())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::EnclosureCompute;
+    use crate::sim::device::DeviceProfile;
+    use crate::sim::network::NetworkModel;
+
+    fn cluster() -> Cluster {
+        let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+        c.add_node(
+            vec![
+                DeviceProfile::nvram(1 << 20),
+                DeviceProfile::ssd(1 << 30),
+                DeviceProfile::ssd(1 << 30),
+                DeviceProfile::hdd(1 << 40),
+            ],
+            EnclosureCompute { cores: 8, flops: 1e10 },
+        );
+        c
+    }
+
+    #[test]
+    fn pools_by_tier() {
+        let c = cluster();
+        let p = PoolSet::from_cluster(&c);
+        assert_eq!(p.devices(DeviceKind::Ssd).len(), 2);
+        assert_eq!(p.devices(DeviceKind::Nvram).len(), 1);
+        assert_eq!(p.tiers(), vec![DeviceKind::Nvram, DeviceKind::Ssd, DeviceKind::Hdd]);
+    }
+
+    #[test]
+    fn allocate_spreads_and_excludes() {
+        let mut c = cluster();
+        let p = PoolSet::from_cluster(&c);
+        let d1 = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[]).unwrap();
+        let d2 = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[d1]).unwrap();
+        assert_ne!(d1, d2);
+        // least-utilized: a third unexcluded allocation balances
+        let d3 = p.allocate(&mut c, DeviceKind::Ssd, 1 << 19, &[]).unwrap();
+        assert!(d3 == d1 || d3 == d2);
+    }
+
+    #[test]
+    fn no_space_errors() {
+        let mut c = cluster();
+        let p = PoolSet::from_cluster(&c);
+        assert!(matches!(
+            p.allocate(&mut c, DeviceKind::Nvram, 1 << 30, &[]),
+            Err(SageError::NoSpace(_))
+        ));
+    }
+
+    #[test]
+    fn fastest_with_space_degrades() {
+        let mut c = cluster();
+        let p = PoolSet::from_cluster(&c);
+        assert_eq!(p.fastest_with_space(&c, 1 << 10), Some(DeviceKind::Nvram));
+        // fill NVRAM
+        let nv = p.devices(DeviceKind::Nvram)[0];
+        c.devices[nv].used = c.devices[nv].profile.capacity;
+        assert_eq!(p.fastest_with_space(&c, 1 << 10), Some(DeviceKind::Ssd));
+    }
+
+    #[test]
+    fn release_returns_space() {
+        let mut c = cluster();
+        let p = PoolSet::from_cluster(&c);
+        let before = p.free_bytes(&c, DeviceKind::Ssd);
+        let d = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[]).unwrap();
+        assert_eq!(p.free_bytes(&c, DeviceKind::Ssd), before - (1 << 20));
+        p.release(&mut c, d, 1 << 20);
+        assert_eq!(p.free_bytes(&c, DeviceKind::Ssd), before);
+    }
+}

@@ -1,0 +1,508 @@
+//! PGAS I/O: MPI storage windows (§3.2.4, evaluated in §4.1).
+//!
+//! "Files on storage devices appear to users as MPI windows and are
+//! seamlessly accessed through familiar PUT and GET operations. …
+//! the OS page cache and buffering of the parallel file system act as
+//! automatic caches for read and write operations on storage."
+//!
+//! [`PgasSim`] hosts N simulated ranks over a [`Testbed`]; windows are
+//! allocated in DRAM ([`WindowKind::Memory`]) or as memory-mapped files
+//! on a storage target ([`WindowKind::Storage`]). Storage-window
+//! accesses go through a per-node [`PageCache`]: hits run at DRAM
+//! speed, misses pay device reads, dirty pages are written back in the
+//! background (they occupy the device queue without blocking the rank)
+//! unless throttling kicks in, and `win_sync` forces a blocking flush.
+//! Two OS constants — per-page fault and dirty-tracking costs — model
+//! the mmap software overhead that separates storage windows from pure
+//! DRAM windows on cached workloads (the ~10% of Fig 3a).
+
+pub mod mpiio;
+
+use crate::config::Testbed;
+use crate::error::{Result, SageError};
+use crate::sim::cache::PageCache;
+use crate::sim::clock::{RankClocks, SimTime};
+use crate::sim::device::{Access, Device, DeviceKind, IoOp};
+use crate::sim::network::NetworkModel;
+
+/// Where a window lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowKind {
+    /// Classic MPI window in DRAM.
+    Memory,
+    /// MPI *storage* window: memory-mapped file on a device class.
+    Storage(StorageTarget),
+}
+
+/// Which storage backs a storage window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageTarget {
+    /// Node-local HDD (Blackdog default).
+    Hdd,
+    /// Node-local SSD.
+    Ssd,
+    /// The shared parallel file system (Tegner/Beskow Lustre).
+    Pfs,
+}
+
+/// Handle to an allocated window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowId(usize);
+
+/// Page-fault cost on first touch (mmap minor fault + zero-fill), s/page.
+const FAULT_COST: f64 = 0.06e-6;
+/// Dirty-tracking cost per dirtied page (page-table walk + radix-tree
+/// tagging on the write path of a file-backed mapping), s/page.
+const DIRTY_COST: f64 = 0.08e-6;
+/// Page size used for the OS-overhead accounting.
+const PAGE: f64 = 4096.0;
+
+struct Window {
+    kind: WindowKind,
+    size_per_rank: u64,
+    /// Per-rank page cache state (storage windows only). Indexed by
+    /// rank; models that rank's slice of the node page cache.
+    caches: Vec<Option<PageCache>>,
+}
+
+/// The PGAS world: ranks, clocks, devices, caches.
+pub struct PgasSim {
+    pub tb: Testbed,
+    pub clocks: RankClocks,
+    pub net: NetworkModel,
+    node_of_rank: Vec<usize>,
+    /// Storage devices by target class.
+    hdd: Vec<Device>,
+    ssd: Vec<Device>,
+    pfs: Vec<Device>,
+    windows: Vec<Window>,
+    dram_bw: f64,
+}
+
+impl PgasSim {
+    /// A world of `nranks` ranks over `tb`, round-robin across nodes.
+    pub fn new(tb: Testbed, nranks: usize) -> Self {
+        let nodes = tb.compute_nodes.max(1);
+        let per_node = tb.cores_per_node.max(1);
+        let node_of_rank =
+            (0..nranks).map(|r| (r / per_node) % nodes).collect();
+        let mut hdd = Vec::new();
+        let mut ssd = Vec::new();
+        let mut pfs = Vec::new();
+        for p in &tb.storage {
+            match p.kind {
+                DeviceKind::Hdd | DeviceKind::Smr => hdd.push(Device::new(p.clone())),
+                DeviceKind::Ssd | DeviceKind::Nvram => ssd.push(Device::new(p.clone())),
+                DeviceKind::LustreOst => pfs.push(Device::new(p.clone())),
+                DeviceKind::Dram => {}
+            }
+        }
+        PgasSim {
+            net: tb.net.clone(),
+            clocks: RankClocks::new(nranks),
+            node_of_rank,
+            hdd,
+            ssd,
+            pfs,
+            windows: Vec::new(),
+            dram_bw: tb.dram_bw,
+            tb,
+        }
+    }
+
+    /// Allocate a window of `size_per_rank` bytes on every rank
+    /// (`MPI_Win_allocate` analog; storage windows pass the target as
+    /// the MPI info key the paper proposes).
+    pub fn alloc_window(&mut self, kind: WindowKind, size_per_rank: u64) -> WindowId {
+        let n = self.clocks.len();
+        let caches = match kind {
+            WindowKind::Memory => (0..n).map(|_| None).collect(),
+            WindowKind::Storage(target) => {
+                let per_node_ranks = self
+                    .node_of_rank
+                    .iter()
+                    .filter(|&&nd| nd == self.node_of_rank[0])
+                    .count()
+                    .max(1);
+                // each rank gets its slice of the node's page cache
+                let slice = self.tb.dram_per_node / per_node_ranks as u64;
+                let dirty_ratio = match target {
+                    // Lustre's llite caps dirty pages per OSC aggressively
+                    StorageTarget::Pfs => 0.04,
+                    _ => 0.40,
+                };
+                // cache-page granularity: 4 KiB for small windows up to
+                // 2 MiB (THP-like) for huge ones — bounds map size
+                let page = (size_per_rank / 4096)
+                    .next_power_of_two()
+                    .clamp(4096, 2 << 20);
+                // PFS clients throttle at a fixed dirty budget
+                // (llite max_dirty_mb analog), not a DRAM fraction
+                let cap = match target {
+                    // llite per-client dirty budget (osc.max_dirty_mb)
+                    StorageTarget::Pfs => 32 << 20,
+                    _ => u64::MAX,
+                };
+                (0..n)
+                    .map(|_| {
+                        Some(
+                            PageCache::new(slice, page)
+                                .with_dirty_ratio(dirty_ratio)
+                                .with_dirty_cap(cap),
+                        )
+                    })
+                    .collect()
+            }
+        };
+        self.windows.push(Window { kind, size_per_rank, caches });
+        WindowId(self.windows.len() - 1)
+    }
+
+    /// Charge a device transfer. Local targets hit the rank-affine
+    /// device; the PFS stripes the transfer in 1 MiB units across OSTs
+    /// (Lustre striping), so large transfers see aggregate bandwidth.
+    fn device_io(
+        &mut self,
+        target: StorageTarget,
+        rank: usize,
+        offset: u64,
+        bytes: u64,
+        op: IoOp,
+        access: Access,
+        t: SimTime,
+    ) -> SimTime {
+        const STRIPE: u64 = 1 << 20;
+        let pool: &mut Vec<Device> = match target {
+            StorageTarget::Hdd => &mut self.hdd,
+            StorageTarget::Ssd => &mut self.ssd,
+            StorageTarget::Pfs => &mut self.pfs,
+        };
+        if pool.is_empty() {
+            return t;
+        }
+        match target {
+            StorageTarget::Pfs => {
+                let n = pool.len();
+                let mut done = t;
+                let mut off = offset;
+                let mut left = bytes;
+                while left > 0 {
+                    let len = STRIPE.min(left);
+                    let idx = ((off / STRIPE) as usize + rank) % n;
+                    let end = pool[idx].io(t, len, op, access);
+                    done = done.max(end);
+                    off += len;
+                    left -= len;
+                }
+                done
+            }
+            _ => {
+                let idx = rank % pool.len();
+                pool[idx].io(t, bytes, op, access)
+            }
+        }
+    }
+
+    /// One-sided PUT: `rank` writes `len` bytes at `offset` in
+    /// `target_rank`'s window segment. Returns the rank's new time.
+    pub fn put(
+        &mut self,
+        win: WindowId,
+        rank: usize,
+        target_rank: usize,
+        offset: u64,
+        len: u64,
+        random: bool,
+    ) -> Result<SimTime> {
+        self.access(win, rank, target_rank, offset, len, IoOp::Write, random)
+    }
+
+    /// One-sided GET.
+    pub fn get(
+        &mut self,
+        win: WindowId,
+        rank: usize,
+        target_rank: usize,
+        offset: u64,
+        len: u64,
+        random: bool,
+    ) -> Result<SimTime> {
+        self.access(win, rank, target_rank, offset, len, IoOp::Read, random)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn access(
+        &mut self,
+        win: WindowId,
+        rank: usize,
+        target_rank: usize,
+        offset: u64,
+        len: u64,
+        op: IoOp,
+        random: bool,
+    ) -> Result<SimTime> {
+        let w = self
+            .windows
+            .get(win.0)
+            .ok_or_else(|| SageError::NotFound(format!("window {win:?}")))?;
+        if offset + len > w.size_per_rank {
+            return Err(SageError::Invalid(format!(
+                "window access past end: {offset}+{len} > {}",
+                w.size_per_rank
+            )));
+        }
+        let kind = w.kind;
+        let now = self.clocks.now(rank);
+        let mut t = now;
+
+        // network hop for remote targets
+        let remote = self.node_of_rank[rank] != self.node_of_rank[target_rank];
+        if remote {
+            t += self.net.pt2pt(len);
+        } else if rank != target_rank {
+            t += self.net.latency; // same node, cross-process
+        }
+
+        match kind {
+            WindowKind::Memory => {
+                t += len as f64 / self.dram_bw;
+            }
+            WindowKind::Storage(target) => {
+                // page-cache interaction happens on the *target* rank's
+                // node; cache state is per-rank slice
+                let access =
+                    if random { Access::Random } else { Access::Seq };
+                let outcome = {
+                    let w = &mut self.windows[win.0];
+                    let cache = w.caches[target_rank]
+                        .as_mut()
+                        .expect("storage window has caches");
+                    match op {
+                        IoOp::Read => cache.read(offset, len),
+                        IoOp::Write => cache.write(offset, len),
+                    }
+                };
+                // DRAM time for the bytes that hit / were absorbed
+                t += outcome.hit as f64 / self.dram_bw;
+                // OS overheads: faults on misses, dirty tracking on writes
+                t += (outcome.miss as f64 / PAGE).ceil() * FAULT_COST;
+                if op == IoOp::Write {
+                    t += (len as f64 / PAGE).ceil() * DIRTY_COST;
+                }
+                // misses: blocking device reads
+                if outcome.miss > 0 {
+                    t = self.device_io(
+                        target, target_rank, offset, outcome.miss,
+                        IoOp::Read, access, t,
+                    );
+                }
+                // throttled/evicted writeback: blocking
+                if outcome.writeback > 0 {
+                    t = self.device_io(
+                        target, target_rank, offset, outcome.writeback,
+                        IoOp::Write, access, t,
+                    );
+                }
+            }
+        }
+        Ok(self.clocks.wait_until(rank, t))
+    }
+
+    /// `MPI_Win_sync` analog: blocking flush of the rank's dirty pages.
+    pub fn win_sync(&mut self, win: WindowId, rank: usize) -> Result<SimTime> {
+        let kind = self.windows[win.0].kind;
+        let now = self.clocks.now(rank);
+        let mut t = now;
+        if let WindowKind::Storage(target) = kind {
+            let dirty = {
+                let w = &mut self.windows[win.0];
+                w.caches[rank].as_mut().map(|c| c.sync()).unwrap_or(0)
+            };
+            if dirty > 0 {
+                t = self.device_io(
+                    target, rank, 0, dirty, IoOp::Write, Access::Seq, t,
+                );
+            }
+        }
+        Ok(self.clocks.wait_until(rank, t))
+    }
+
+    /// `MPI_Win_fence` analog: sync every rank then barrier.
+    pub fn fence(&mut self, win: WindowId) -> Result<SimTime> {
+        for r in 0..self.clocks.len() {
+            self.win_sync(win, r)?;
+        }
+        Ok(self.clocks.barrier(self.net.barrier(self.clocks.len())))
+    }
+
+    /// Pre-touch a window segment (STREAM-style init before the timed
+    /// region): populates the cache without charging the rank clock.
+    pub fn warm(&mut self, win: WindowId, rank: usize) {
+        let (kind, size) = {
+            let w = &self.windows[win.0];
+            (w.kind, w.size_per_rank)
+        };
+        if let WindowKind::Storage(_) = kind {
+            let w = &mut self.windows[win.0];
+            if let Some(c) = w.caches[rank].as_mut() {
+                c.read(0, size);
+            }
+        }
+    }
+
+    /// Charge pure local compute to a rank.
+    pub fn compute(&mut self, rank: usize, seconds: f64) -> SimTime {
+        self.clocks.advance(rank, seconds)
+    }
+
+    /// Makespan across ranks.
+    pub fn elapsed(&self) -> SimTime {
+        self.clocks.max()
+    }
+
+    /// Number of ranks.
+    pub fn nranks(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// Total bytes written to each device class: (hdd, ssd, pfs) —
+    /// diagnostics for benches and tests.
+    pub fn bytes_written(&self) -> (u64, u64, u64) {
+        let sum = |v: &Vec<Device>| v.iter().map(|d| d.bytes_written).sum();
+        (sum(&self.hdd), sum(&self.ssd), sum(&self.pfs))
+    }
+
+    /// Reset clocks (new measurement) but keep cache/device state.
+    pub fn reset_clocks(&mut self) {
+        self.clocks.reset();
+        for d in self
+            .hdd
+            .iter_mut()
+            .chain(self.ssd.iter_mut())
+            .chain(self.pfs.iter_mut())
+        {
+            d.busy_until = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(n: usize) -> PgasSim {
+        PgasSim::new(Testbed::blackdog(), n)
+    }
+
+    #[test]
+    fn memory_window_is_dram_speed() {
+        let mut s = sim(1);
+        let w = s.alloc_window(WindowKind::Memory, 1 << 30);
+        s.put(w, 0, 0, 0, 1 << 30, false).unwrap();
+        let t = s.elapsed();
+        let expect = (1u64 << 30) as f64 / s.tb.dram_bw;
+        assert!((t - expect).abs() / expect < 0.05, "t={t} expect={expect}");
+    }
+
+    #[test]
+    fn storage_window_close_to_memory_when_cached() {
+        let mut s = sim(1);
+        let size = 1u64 << 28; // 256 MiB << 72 GiB DRAM
+        let wm = s.alloc_window(WindowKind::Memory, size);
+        let ws = s.alloc_window(WindowKind::Storage(StorageTarget::Hdd), size);
+        s.warm(ws, 0);
+        s.put(wm, 0, 0, 0, size, false).unwrap();
+        let t_mem = s.elapsed();
+        s.reset_clocks();
+        s.put(ws, 0, 0, 0, size, false).unwrap();
+        let t_sto = s.elapsed();
+        let overhead = t_sto / t_mem - 1.0;
+        assert!(
+            overhead > 0.02 && overhead < 0.6,
+            "cached storage window should be within tens of % of DRAM \
+             (got {overhead:+.2})"
+        );
+    }
+
+    #[test]
+    fn win_sync_pays_device_writes() {
+        let mut s = sim(1);
+        let size = 1u64 << 24; // 16 MiB dirty
+        let ws = s.alloc_window(WindowKind::Storage(StorageTarget::Hdd), size);
+        s.put(ws, 0, 0, 0, size, false).unwrap();
+        let before = s.elapsed();
+        s.win_sync(ws, 0).unwrap();
+        let after = s.elapsed();
+        // 16 MiB at ~140 MB/s HDD write: >= 0.1 s
+        assert!(after - before > 0.05, "sync cost {}", after - before);
+    }
+
+    #[test]
+    fn pfs_windows_throttle_writes() {
+        let mut t = PgasSim::new(Testbed::tegner(), 1);
+        let size = 1u64 << 30;
+        let ws = t.alloc_window(WindowKind::Storage(StorageTarget::Pfs), size);
+        t.warm(ws, 0);
+        t.put(ws, 0, 0, 0, size, false).unwrap();
+        let t_sto = t.elapsed();
+        t.reset_clocks();
+        let wm = t.alloc_window(WindowKind::Memory, size);
+        t.put(wm, 0, 0, 0, size, false).unwrap();
+        let t_mem = t.elapsed();
+        assert!(
+            t_sto > 5.0 * t_mem,
+            "Lustre writes should collapse vs DRAM: {t_sto} vs {t_mem}"
+        );
+    }
+
+    #[test]
+    fn remote_put_pays_network() {
+        let mut s = PgasSim::new(Testbed::tegner(), 48);
+        let w = s.alloc_window(WindowKind::Memory, 1 << 20);
+        // rank 0 (node 0) -> rank 47 (node 1)
+        s.put(w, 0, 47, 0, 1 << 20, false).unwrap();
+        let t_remote = s.clocks.now(0);
+        s.reset_clocks();
+        s.put(w, 0, 0, 0, 1 << 20, false).unwrap();
+        let t_local = s.clocks.now(0);
+        assert!(t_remote > t_local);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut s = sim(1);
+        let w = s.alloc_window(WindowKind::Memory, 1024);
+        assert!(s.put(w, 0, 0, 1000, 100, false).is_err());
+    }
+
+    #[test]
+    fn fence_synchronizes_clocks() {
+        let mut s = sim(4);
+        let w = s.alloc_window(WindowKind::Memory, 1 << 20);
+        s.put(w, 2, 2, 0, 1 << 20, false).unwrap();
+        s.fence(w).unwrap();
+        let t = s.clocks.now(0);
+        for r in 0..4 {
+            assert_eq!(s.clocks.now(r), t);
+        }
+    }
+}
+
+impl PgasSim {
+    /// Per-PFS-device (bytes_written, busy_until) — debug diagnostics.
+    #[doc(hidden)]
+    pub fn pfs_debug(&self) -> Vec<(u64, f64)> {
+        self.pfs.iter().map(|d| (d.bytes_written, d.busy_until)).collect()
+    }
+}
+
+impl PgasSim {
+    /// Dirty bytes in a rank's window cache — debug diagnostics.
+    #[doc(hidden)]
+    pub fn window_dirty(&self, win: WindowId, rank: usize) -> u64 {
+        self.windows[win.0].caches[rank]
+            .as_ref()
+            .map(|c| c.dirty())
+            .unwrap_or(0)
+    }
+}

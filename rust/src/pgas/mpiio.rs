@@ -1,0 +1,196 @@
+//! MPI I/O baseline (the comparator in Fig 5).
+//!
+//! Models ROMIO-style *collective* I/O over the shared file system:
+//! two-phase collective buffering (exchange to aggregators, then
+//! aggregated writes to the PFS/disk), plus per-call collective-open
+//! and synchronization latency that grows with the process count —
+//! the scalability cost that makes MPI storage windows win at scale
+//! (§4.1: "MPI storage windows provide better scalability compared to
+//! MPI I/O on a larger number of processes").
+
+use crate::config::Testbed;
+use crate::sim::clock::{RankClocks, SimTime};
+use crate::sim::device::{Access, Device, DeviceKind, IoOp};
+use crate::sim::network::NetworkModel;
+
+/// Shared-file write-contention coefficient: effective amplification is
+/// `1 + ALPHA * nclients` (calibrated so 8192 clients see ~3.5x, which
+/// reproduces Fig 7's 3.6x streaming advantage at that scale).
+const SHARED_FILE_ALPHA: f64 = 3.5e-4;
+
+/// Collective MPI-IO world over a testbed.
+pub struct MpiIo {
+    pub clocks: RankClocks,
+    net: NetworkModel,
+    /// PFS OSTs (or local disks on a workstation).
+    targets: Vec<Device>,
+    /// Aggregators per OST (ROMIO cb_nodes heuristic).
+    aggregators: usize,
+    /// Workstation (single OS page cache): read-after-write is served
+    /// from DRAM when the file fits. On a PFS, collective reads
+    /// revalidate against the OSTs (DLM locking), so no such benefit.
+    local_cache: Option<(u64, f64)>, // (dram bytes, dram bw)
+    /// Bytes written so far (cache-residency estimate).
+    written: u64,
+}
+
+impl MpiIo {
+    /// New world with `nranks` ranks.
+    pub fn new(tb: &Testbed, nranks: usize) -> Self {
+        let mut targets: Vec<Device> = tb
+            .storage
+            .iter()
+            .filter(|p| p.kind == DeviceKind::LustreOst)
+            .map(|p| Device::new(p.clone()))
+            .collect();
+        let mut local_cache = None;
+        if targets.is_empty() {
+            // workstation: the shared file lives on the HDD array (same
+            // device class the storage-window comparison uses), behind
+            // the node's page cache
+            targets = tb
+                .storage
+                .iter()
+                .filter(|p| p.kind == DeviceKind::Hdd)
+                .map(|p| Device::new(p.clone()))
+                .collect();
+            if targets.is_empty() {
+                targets = tb
+                    .storage
+                    .iter()
+                    .filter(|p| p.kind == DeviceKind::Ssd)
+                    .map(|p| Device::new(p.clone()))
+                    .collect();
+            }
+            local_cache = Some((tb.dram_per_node, tb.dram_bw));
+        }
+        let aggregators = targets.len().max(1);
+        MpiIo {
+            clocks: RankClocks::new(nranks),
+            net: tb.net.clone(),
+            targets,
+            aggregators,
+            local_cache,
+            written: 0,
+        }
+    }
+
+    /// Collective write of `bytes_per_rank` from every rank
+    /// (`MPI_File_write_all`). Returns completion time.
+    pub fn write_all(&mut self, bytes_per_rank: u64) -> SimTime {
+        self.written += bytes_per_rank * self.clocks.len() as u64;
+        self.collective(bytes_per_rank, IoOp::Write)
+    }
+
+    /// Collective read (`MPI_File_read_all`). On a workstation,
+    /// read-after-write is a page-cache hit when the file fits in DRAM.
+    pub fn read_all(&mut self, bytes_per_rank: u64) -> SimTime {
+        let p = self.clocks.len();
+        let total = bytes_per_rank * p as u64;
+        if let Some((dram, bw)) = self.local_cache {
+            if self.written >= total && total <= dram / 2 {
+                let t = self.clocks.max()
+                    + total as f64 / bw
+                    + self.net.barrier(p);
+                for r in 0..p {
+                    self.clocks.wait_until(r, t);
+                }
+                return t;
+            }
+        }
+        self.collective(bytes_per_rank, IoOp::Read)
+    }
+
+    fn collective(&mut self, bytes_per_rank: u64, op: IoOp) -> SimTime {
+        let p = self.clocks.len();
+        let start = self.clocks.max();
+        // Phase 0: collective open/sync — latency grows with log P but
+        // the implicit allreduce of offsets costs per-rank messages.
+        let t_sync = self.net.barrier(p) + self.net.allreduce(64, p);
+        // Phase 1: data exchange to aggregators (all-to-few fan-in).
+        let t_exchange =
+            self.net.fan_in(bytes_per_rank, p, self.aggregators);
+        // Phase 2: aggregated device I/O, striped across targets.
+        // Shared-file collective I/O suffers lock contention / extent
+        // ping-pong that grows with the client count (the well-known
+        // Lustre shared-file scaling wall); reads are less affected.
+        let contention = match op {
+            IoOp::Write => 1.0 + SHARED_FILE_ALPHA * p as f64,
+            IoOp::Read => 1.0 + 0.1 * SHARED_FILE_ALPHA * p as f64,
+        };
+        let total =
+            (bytes_per_rank as f64 * p as f64 * contention) as u64;
+        let per_target = total / self.targets.len().max(1) as u64;
+        let mut t_io: f64 = 0.0;
+        let t0 = start + t_sync + t_exchange;
+        for dev in &mut self.targets {
+            let t = dev.io(t0, per_target, op, Access::Seq);
+            t_io = t_io.max(t);
+        }
+        // everyone leaves the collective together
+        for r in 0..p {
+            self.clocks.wait_until(r, t_io);
+        }
+        self.clocks.barrier(self.net.barrier(p))
+    }
+
+    /// Makespan.
+    pub fn elapsed(&self) -> SimTime {
+        self.clocks.max()
+    }
+
+    /// Reset clocks and device queues.
+    pub fn reset(&mut self) {
+        self.clocks.reset();
+        for d in &mut self.targets {
+            d.busy_until = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collective_write_scales_with_volume() {
+        let tb = Testbed::tegner();
+        let mut io = MpiIo::new(&tb, 24);
+        let t1 = io.write_all(1 << 20);
+        io.reset();
+        let t2 = io.write_all(1 << 24);
+        assert!(t2 > 4.0 * t1, "16x volume must cost clearly more: {t1} {t2}");
+    }
+
+    #[test]
+    fn collective_overhead_grows_with_ranks() {
+        let tb = Testbed::beskow();
+        let bytes = 1u64 << 16; // small I/O: sync-dominated
+        let mut small = MpiIo::new(&tb, 64);
+        let t_small = small.write_all(bytes);
+        let mut big = MpiIo::new(&tb, 8192);
+        let t_big = big.write_all(bytes);
+        assert!(
+            t_big > t_small,
+            "same per-rank bytes, more ranks => more collective cost"
+        );
+    }
+
+    #[test]
+    fn reads_faster_than_writes_on_lustre() {
+        let tb = Testbed::tegner();
+        let mut io = MpiIo::new(&tb, 24);
+        let tw = io.write_all(1 << 24);
+        io.reset();
+        let tr = io.read_all(1 << 24);
+        assert!(tw > 2.0 * tr, "Fig 3(b) asymmetry: write {tw} read {tr}");
+    }
+
+    #[test]
+    fn workstation_fallback_uses_local_disks() {
+        let tb = Testbed::blackdog();
+        let mut io = MpiIo::new(&tb, 8);
+        let t = io.write_all(1 << 20);
+        assert!(t > 0.0);
+    }
+}

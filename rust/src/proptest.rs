@@ -1,0 +1,138 @@
+//! Property-test harness (offline substitute for the proptest crate).
+//!
+//! [`prop_check`] runs a property over N deterministically-generated
+//! random cases; on failure it performs greedy shrinking via the
+//! case's [`Shrink`] implementation and reports the minimal failing
+//! case. Coordinator invariants (layout round-trip, DTM atomicity, KV
+//! NEXT ordering, stripe reconstruction, HSM no-loss) are checked with
+//! this in `rust/tests/prop_invariants.rs`.
+
+use crate::sim::rng::SimRng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, largest reduction first. Empty = atomic.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halve
+        out.push(self[..self.len() / 2].to_vec());
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        // shrink first element
+        if let Some(first_shrunk) = self[0].shrink().into_iter().next() {
+            let mut v = self.clone();
+            v[0] = first_shrunk;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` over `cases` random inputs from `gen`. Panics with the
+/// (shrunken) minimal counterexample on failure.
+pub fn prop_check<T, G, P>(name: &str, cases: u32, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut SimRng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = SimRng::new(0x5EED_u64 ^ name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!(
+                "property '{name}' failed (case {case}); minimal \
+                 counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> bool>(mut failing: T, prop: &P) -> T {
+    'outer: loop {
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        return failing;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("add-commutes", 100, |r| (r.gen_range(100), r.gen_range(100)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "all-below-50")]
+    fn failing_property_shrinks() {
+        prop_check(
+            "all-below-50",
+            200,
+            |r| r.gen_range(100),
+            |&x| x < 50,
+        );
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // property: all vecs have length < 3. counterexample should
+        // shrink towards length exactly 3.
+        let failing = vec![9u64, 9, 9, 9, 9, 9, 9, 9];
+        let minimal = shrink_loop(failing, &|v: &Vec<u64>| v.len() < 3);
+        assert_eq!(minimal.len(), 3);
+    }
+}

@@ -1,0 +1,267 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them on the request
+//! path. Python never runs here.
+//!
+//! One compiled executable per model variant (e.g. `parity_k4`,
+//! `parity_k8`, `postprocess_16k`, `postprocess_64k`); callers such as
+//! the SNS write path and the function-shipping engine pick the variant
+//! matching their (padded) request size via the typed helpers below.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Result, SageError};
+use crate::util::json::Json;
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// Input shapes (row-major dims per input).
+    pub input_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+/// The PJRT executor: a CPU client + one loaded executable per variant.
+pub struct Executor {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    infos: HashMap<String, ArtifactInfo>,
+}
+
+impl Executor {
+    /// Load every artifact listed in `<dir>/manifest.json`, compiling
+    /// each HLO text module on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Executor> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            SageError::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Json::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        let mut infos = HashMap::new();
+        for entry in manifest.items() {
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| SageError::Runtime("manifest: no name".into()))?
+                .to_string();
+            let input_shapes = entry
+                .get("inputs")
+                .map(|ins| {
+                    ins.items()
+                        .iter()
+                        .map(|i| {
+                            i.get("shape")
+                                .map(|s| {
+                                    s.items()
+                                        .iter()
+                                        .filter_map(|d| d.as_u64())
+                                        .map(|d| d as usize)
+                                        .collect()
+                                })
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let num_outputs = entry
+                .get("num_outputs")
+                .and_then(|n| n.as_u64())
+                .unwrap_or(1) as usize;
+            let hlo_path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().unwrap(),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(name.clone(), exe);
+            infos.insert(name.clone(), ArtifactInfo { name, input_shapes, num_outputs });
+        }
+        Ok(Executor { client, exes, infos })
+    }
+
+    /// Load from the conventional `artifacts/` directory (honors the
+    /// `SAGE_ARTIFACTS` env override).
+    pub fn load_default() -> Result<Executor> {
+        let dir = std::env::var("SAGE_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Names of loaded artifacts.
+    pub fn variants(&self) -> Vec<&str> {
+        self.infos.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Whether a named variant is loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Artifact metadata.
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.infos.get(name)
+    }
+
+    /// Raw execution: run `name` with the given literals, unpack the
+    /// result tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| SageError::Runtime(format!("no artifact {name}")))?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    // ------------------------------------------------------------ parity
+
+    /// SNS parity via the Pallas kernel. Picks `parity_k{K}` by the
+    /// number of units; returns `Ok(None)` when no variant matches (the
+    /// caller falls back to CPU XOR).
+    pub fn parity(&self, units: &[Vec<u8>]) -> Result<Option<Vec<u8>>> {
+        let k = units.len();
+        let name = format!("parity_k{k}");
+        let Some(info) = self.infos.get(&name) else {
+            return Ok(None);
+        };
+        let lanes = info.input_shapes[0][1];
+        let unit_bytes = lanes * 4;
+        if units.iter().any(|u| u.len() != units[0].len())
+            || units[0].is_empty()
+            || units[0].len() > unit_bytes
+        {
+            return Ok(None);
+        }
+        let ulen = units[0].len();
+        // pack into i32 lanes, zero-padded to the artifact shape
+        let mut lanes_i32 = vec![0i32; k * lanes];
+        for (ui, u) in units.iter().enumerate() {
+            for (li, chunk) in u.chunks(4).enumerate() {
+                let mut b = [0u8; 4];
+                b[..chunk.len()].copy_from_slice(chunk);
+                lanes_i32[ui * lanes + li] = i32::from_le_bytes(b);
+            }
+        }
+        let lit = xla::Literal::vec1(&lanes_i32)
+            .reshape(&[k as i64, lanes as i64])?;
+        let out = self.execute(&name, &[lit])?;
+        let parity: Vec<i32> = out[0].to_vec()?;
+        let mut bytes = Vec::with_capacity(ulen);
+        for v in parity {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.truncate(ulen);
+        Ok(Some(bytes))
+    }
+
+    // ------------------------------------------------- particle filter
+
+    /// iPIC3D post-processing (`postprocess_{16k,64k}`): energies, mask
+    /// and stats for up to 65536 particles (padded). `particles` is
+    /// row-major (n, 8) with columns (x,y,z,u,v,w,q,id).
+    pub fn postprocess(
+        &self,
+        particles: &[f32],
+        threshold: f32,
+    ) -> Result<Option<PostprocessOut>> {
+        if particles.len() % 8 != 0 {
+            return Err(SageError::Invalid(
+                "particles must be (n, 8) row-major".into(),
+            ));
+        }
+        let n = particles.len() / 8;
+        let name = if n <= 16384 && self.has("postprocess_16k") {
+            "postprocess_16k"
+        } else if n <= 65536 && self.has("postprocess_64k") {
+            "postprocess_64k"
+        } else {
+            return Ok(None);
+        };
+        let cap = self.infos[name].input_shapes[0][0];
+        let mut padded = vec![0f32; cap * 8];
+        padded[..particles.len()].copy_from_slice(particles);
+        let parts = xla::Literal::vec1(&padded).reshape(&[cap as i64, 8])?;
+        let thr = xla::Literal::vec1(&[threshold]);
+        let out = self.execute(name, &[parts, thr])?;
+        let energies: Vec<f32> = out[0].to_vec()?;
+        let mask: Vec<f32> = out[1].to_vec()?;
+        let stats: Vec<f32> = out[2].to_vec()?;
+        Ok(Some(PostprocessOut {
+            energies: energies[..n].to_vec(),
+            mask: mask[..n].to_vec(),
+            selected: mask[..n].iter().sum::<f32>() as usize,
+            stats: [stats[0], stats[1], stats[2], stats[3]],
+        }))
+    }
+
+    // ------------------------------------------------------- histogram
+
+    /// ALF log histogram (`alf_histogram_64k`): 64 uniform bins over
+    /// `[lo, hi)`. Longer inputs are processed in artifact-capacity
+    /// chunks and summed (the kernel is linear in its input blocks).
+    pub fn histogram(&self, values: &[f32], lo: f32, hi: f32) -> Result<Option<Vec<f32>>> {
+        let name = "alf_histogram_64k";
+        let Some(info) = self.infos.get(name) else {
+            return Ok(None);
+        };
+        let cap = info.input_shapes[0][0];
+        let mut counts = vec![0f32; 64];
+        for chunk in values.chunks(cap) {
+            // pad with `lo` (lands in bin 0), subtract the padding after
+            let mut padded = vec![lo; cap];
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let vals = xla::Literal::vec1(&padded);
+            let range = xla::Literal::vec1(&[lo, hi]);
+            let out = self.execute(name, &[vals, range])?;
+            let c: Vec<f32> = out[0].to_vec()?;
+            for (acc, v) in counts.iter_mut().zip(c.iter()) {
+                *acc += v;
+            }
+            counts[0] -= (cap - chunk.len()) as f32;
+        }
+        Ok(Some(counts))
+    }
+
+    // ------------------------------------------------------- integrity
+
+    /// Fletcher-style block digests (`integrity_16x4k`): 16 blocks of
+    /// 4096 i32 lanes; returns [sum, weighted-sum] per block.
+    pub fn integrity(&self, blocks: &[i32]) -> Result<Option<Vec<[i32; 2]>>> {
+        let name = "integrity_16x4k";
+        let Some(info) = self.infos.get(name) else {
+            return Ok(None);
+        };
+        let (b, l) = (info.input_shapes[0][0], info.input_shapes[0][1]);
+        if blocks.len() != b * l {
+            return Ok(None);
+        }
+        let lit = xla::Literal::vec1(blocks).reshape(&[b as i64, l as i64])?;
+        let out = self.execute(name, &[lit])?;
+        let flat: Vec<i32> = out[0].to_vec()?;
+        Ok(Some(flat.chunks(2).map(|c| [c[0], c[1]]).collect()))
+    }
+
+    /// Device count of the PJRT client (diagnostics).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+/// Output of [`Executor::postprocess`].
+#[derive(Debug, Clone)]
+pub struct PostprocessOut {
+    pub energies: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// Number of selected (high-energy) particles.
+    pub selected: usize,
+    /// [count, selected energy sum, max energy, mean energy] over the
+    /// padded batch; use `selected` for the exact count.
+    pub stats: [f32; 4],
+}

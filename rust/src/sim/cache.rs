@@ -1,0 +1,282 @@
+//! OS page-cache model.
+//!
+//! The paper's key observation for MPI storage windows (§4.1) is that
+//! "the OS page cache and buffering of the parallel file system act as
+//! automatic caches": memory-mapped storage performs close to DRAM as
+//! long as the working set fits and writeback keeps up. This model
+//! captures exactly that: an LRU of super-pages with dirty tracking,
+//! a dirty-ratio writeback threshold, and explicit `sync` flushes.
+//!
+//! Time accounting is done by the caller: `read`/`write` return how many
+//! bytes hit DRAM vs how many must touch the backing device.
+
+use std::collections::HashMap;
+
+/// Result of a cache access: how many bytes were served where.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheOutcome {
+    /// Bytes served from / absorbed by DRAM.
+    pub hit: u64,
+    /// Bytes that must be read from the backing device.
+    pub miss: u64,
+    /// Dirty bytes that eviction / throttling forces to the device now.
+    pub writeback: u64,
+}
+
+/// Page-granular LRU cache with dirty tracking.
+#[derive(Debug)]
+pub struct PageCache {
+    /// Bytes per cached page (super-pages keep the map small).
+    page_size: u64,
+    /// Capacity in bytes.
+    capacity: u64,
+    /// Start writeback beyond this fraction of dirty bytes
+    /// (vm.dirty_ratio analog).
+    dirty_ratio: f64,
+    /// Absolute dirty cap in bytes (llite osc.max_dirty_mb analog);
+    /// effective limit is min(ratio * capacity, cap).
+    dirty_cap: u64,
+    /// page id -> (lru tick, dirty)
+    pages: HashMap<u64, (u64, bool)>,
+    tick: u64,
+    dirty_bytes: u64,
+}
+
+impl PageCache {
+    /// A cache of `capacity` bytes with `page_size`-byte pages.
+    pub fn new(capacity: u64, page_size: u64) -> Self {
+        PageCache {
+            page_size: page_size.max(1),
+            capacity,
+            dirty_ratio: 0.4,
+            dirty_cap: u64::MAX,
+            pages: HashMap::new(),
+            tick: 0,
+            dirty_bytes: 0,
+        }
+    }
+
+    /// Configure the dirty-writeback threshold (0..1).
+    pub fn with_dirty_ratio(mut self, r: f64) -> Self {
+        self.dirty_ratio = r.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Configure an absolute dirty cap (PFS client caches throttle at a
+    /// fixed per-client budget regardless of DRAM size).
+    pub fn with_dirty_cap(mut self, cap: u64) -> Self {
+        self.dirty_cap = cap.max(self.page_size);
+        self
+    }
+
+    fn page_range(&self, offset: u64, len: u64) -> (u64, u64) {
+        let first = offset / self.page_size;
+        let last = (offset + len.max(1) - 1) / self.page_size;
+        (first, last)
+    }
+
+    fn max_pages(&self) -> usize {
+        (self.capacity / self.page_size).max(1) as usize
+    }
+
+    /// Evict LRU pages until under capacity; returns dirty bytes that
+    /// must be written back.
+    fn evict(&mut self) -> u64 {
+        let mut writeback = 0;
+        while self.pages.len() > self.max_pages() {
+            // find LRU page (linear scan is fine: eviction is rare and
+            // the map is bounded by capacity / page_size)
+            let (&victim, &(_, dirty)) = self
+                .pages
+                .iter()
+                .min_by_key(|(_, (tick, _))| *tick)
+                .unwrap();
+            self.pages.remove(&victim);
+            if dirty {
+                writeback += self.page_size;
+                self.dirty_bytes = self.dirty_bytes.saturating_sub(self.page_size);
+            }
+        }
+        writeback
+    }
+
+    /// Read `len` bytes at `offset`: returns hit/miss/writeback split.
+    pub fn read(&mut self, offset: u64, len: u64) -> CacheOutcome {
+        let (first, last) = self.page_range(offset, len);
+        let mut out = CacheOutcome::default();
+        for p in first..=last {
+            self.tick += 1;
+            let span = self.page_span_bytes(p, offset, len);
+            if let Some(e) = self.pages.get_mut(&p) {
+                e.0 = self.tick;
+                out.hit += span;
+            } else {
+                self.pages.insert(p, (self.tick, false));
+                out.miss += span;
+            }
+        }
+        out.writeback = self.evict();
+        out
+    }
+
+    /// Write `len` bytes at `offset` (write-back: absorbed by DRAM,
+    /// marked dirty). Throttles via `writeback` when the dirty ratio is
+    /// exceeded — the caller charges device time for those bytes.
+    pub fn write(&mut self, offset: u64, len: u64) -> CacheOutcome {
+        let (first, last) = self.page_range(offset, len);
+        let mut out = CacheOutcome::default();
+        for p in first..=last {
+            self.tick += 1;
+            let span = self.page_span_bytes(p, offset, len);
+            match self.pages.get_mut(&p) {
+                Some(e) => {
+                    e.0 = self.tick;
+                    if !e.1 {
+                        e.1 = true;
+                        self.dirty_bytes += self.page_size;
+                    }
+                }
+                None => {
+                    self.pages.insert(p, (self.tick, true));
+                    self.dirty_bytes += self.page_size;
+                }
+            }
+            out.hit += span;
+        }
+        out.writeback = self.evict();
+        // dirty throttling: flush down to the threshold
+        let limit =
+            ((self.capacity as f64 * self.dirty_ratio) as u64).min(self.dirty_cap);
+        if self.dirty_bytes > limit {
+            let excess = self.dirty_bytes - limit;
+            out.writeback += excess;
+            self.clean_pages(excess);
+        }
+        out
+    }
+
+    /// `msync` / `win_sync`: flush all dirty pages; returns bytes to
+    /// write to the device.
+    pub fn sync(&mut self) -> u64 {
+        let dirty = self.dirty_bytes;
+        for e in self.pages.values_mut() {
+            e.1 = false;
+        }
+        self.dirty_bytes = 0;
+        dirty
+    }
+
+    /// Drop everything (e.g. after free).
+    pub fn clear(&mut self) {
+        self.pages.clear();
+        self.dirty_bytes = 0;
+    }
+
+    /// Current dirty byte count.
+    pub fn dirty(&self) -> u64 {
+        self.dirty_bytes
+    }
+
+    /// Resident bytes.
+    pub fn resident(&self) -> u64 {
+        self.pages.len() as u64 * self.page_size
+    }
+
+    fn clean_pages(&mut self, mut bytes: u64) {
+        // mark oldest dirty pages clean until `bytes` are flushed
+        let mut dirty: Vec<(u64, u64)> = self
+            .pages
+            .iter()
+            .filter(|(_, (_, d))| *d)
+            .map(|(&p, &(t, _))| (t, p))
+            .collect();
+        dirty.sort_unstable();
+        for (_, p) in dirty {
+            if bytes == 0 {
+                break;
+            }
+            if let Some(e) = self.pages.get_mut(&p) {
+                e.1 = false;
+                self.dirty_bytes = self.dirty_bytes.saturating_sub(self.page_size);
+                bytes = bytes.saturating_sub(self.page_size);
+            }
+        }
+    }
+
+    fn page_span_bytes(&self, page: u64, offset: u64, len: u64) -> u64 {
+        let pstart = page * self.page_size;
+        let pend = pstart + self.page_size;
+        let start = offset.max(pstart);
+        let end = (offset + len).min(pend);
+        end.saturating_sub(start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_read_misses_then_hits() {
+        let mut c = PageCache::new(1 << 20, 4096);
+        let o1 = c.read(0, 8192);
+        assert_eq!(o1.miss, 8192);
+        assert_eq!(o1.hit, 0);
+        let o2 = c.read(0, 8192);
+        assert_eq!(o2.hit, 8192);
+        assert_eq!(o2.miss, 0);
+    }
+
+    #[test]
+    fn writes_absorbed_until_sync() {
+        let mut c = PageCache::new(1 << 20, 4096);
+        let o = c.write(0, 65536);
+        assert_eq!(o.hit, 65536);
+        assert_eq!(o.writeback, 0);
+        assert_eq!(c.dirty(), 65536);
+        assert_eq!(c.sync(), 65536);
+        assert_eq!(c.dirty(), 0);
+    }
+
+    #[test]
+    fn dirty_ratio_throttles() {
+        let mut c = PageCache::new(100 * 4096, 4096).with_dirty_ratio(0.1);
+        let mut wb = 0;
+        for i in 0..50 {
+            wb += c.write(i * 4096, 4096).writeback;
+        }
+        assert!(wb > 0, "expected throttling writeback");
+        assert!(c.dirty() <= 11 * 4096);
+    }
+
+    #[test]
+    fn eviction_bounded_and_flushes_dirty() {
+        let mut c = PageCache::new(10 * 4096, 4096);
+        let mut wb = 0;
+        for i in 0..100 {
+            wb += c.write(i * 4096, 4096).writeback;
+        }
+        assert!(c.resident() <= 10 * 4096);
+        assert!(wb >= 80 * 4096, "evictions must write back dirty pages");
+    }
+
+    #[test]
+    fn working_set_larger_than_cache_keeps_missing() {
+        let mut c = PageCache::new(10 * 4096, 4096);
+        // stream over 100 pages twice: second pass still misses (LRU)
+        for _ in 0..2 {
+            for i in 0..100 {
+                c.read(i * 4096, 4096);
+            }
+        }
+        let o = c.read(0, 4096);
+        assert_eq!(o.miss, 4096);
+    }
+
+    #[test]
+    fn partial_page_spans() {
+        let mut c = PageCache::new(1 << 20, 4096);
+        let o = c.read(100, 50);
+        assert_eq!(o.miss, 50);
+    }
+}

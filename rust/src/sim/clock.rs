@@ -1,0 +1,141 @@
+//! Virtual time: per-rank logical clocks.
+//!
+//! SAGE benchmarks simulate up to 8192 MPI ranks in one process. Each
+//! rank owns a logical clock (seconds, f64); local work advances it,
+//! synchronization points (barriers, collectives, stream handshakes)
+//! merge clocks. This is conservative parallel-discrete-event
+//! simulation specialized to the bulk-synchronous structure of the
+//! paper's workloads.
+
+/// Seconds of virtual time.
+pub type SimTime = f64;
+
+/// Clocks for a set of simulated ranks.
+#[derive(Debug, Clone)]
+pub struct RankClocks {
+    t: Vec<SimTime>,
+}
+
+impl RankClocks {
+    /// `n` ranks, all starting at t=0.
+    pub fn new(n: usize) -> Self {
+        RankClocks { t: vec![0.0; n] }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// True if there are no ranks (degenerate).
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Current time of `rank`.
+    pub fn now(&self, rank: usize) -> SimTime {
+        self.t[rank]
+    }
+
+    /// Advance `rank` by `dt` seconds of local work; returns new time.
+    pub fn advance(&mut self, rank: usize, dt: SimTime) -> SimTime {
+        debug_assert!(dt >= 0.0, "negative dt {dt}");
+        self.t[rank] += dt;
+        self.t[rank]
+    }
+
+    /// Set `rank`'s clock to at least `t` (e.g. after waiting on a
+    /// device or a message that completes at absolute time `t`).
+    pub fn wait_until(&mut self, rank: usize, t: SimTime) -> SimTime {
+        if t > self.t[rank] {
+            self.t[rank] = t;
+        }
+        self.t[rank]
+    }
+
+    /// Barrier across all ranks: everyone advances to the max clock
+    /// (plus `overhead` for the barrier itself). Returns the new time.
+    pub fn barrier(&mut self, overhead: SimTime) -> SimTime {
+        let max = self.max() + overhead;
+        for t in &mut self.t {
+            *t = max;
+        }
+        max
+    }
+
+    /// Barrier over a subset of ranks.
+    pub fn barrier_subset(&mut self, ranks: &[usize], overhead: SimTime) -> SimTime {
+        let max = ranks
+            .iter()
+            .map(|&r| self.t[r])
+            .fold(0.0f64, f64::max)
+            + overhead;
+        for &r in ranks {
+            self.t[r] = max;
+        }
+        max
+    }
+
+    /// Maximum (makespan) across ranks — the reported execution time.
+    pub fn max(&self) -> SimTime {
+        self.t.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Minimum across ranks.
+    pub fn min(&self) -> SimTime {
+        self.t.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Mean across ranks.
+    pub fn mean(&self) -> SimTime {
+        if self.t.is_empty() {
+            0.0
+        } else {
+            self.t.iter().sum::<f64>() / self.t.len() as f64
+        }
+    }
+
+    /// Reset all clocks to zero (new measurement phase).
+    pub fn reset(&mut self) {
+        for t in &mut self.t {
+            *t = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_and_barrier() {
+        let mut c = RankClocks::new(4);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        assert_eq!(c.max(), 3.0);
+        let t = c.barrier(0.5);
+        assert_eq!(t, 3.5);
+        for r in 0..4 {
+            assert_eq!(c.now(r), 3.5);
+        }
+    }
+
+    #[test]
+    fn wait_until_monotone() {
+        let mut c = RankClocks::new(1);
+        c.advance(0, 2.0);
+        c.wait_until(0, 1.0); // no-op: already past
+        assert_eq!(c.now(0), 2.0);
+        c.wait_until(0, 5.0);
+        assert_eq!(c.now(0), 5.0);
+    }
+
+    #[test]
+    fn subset_barrier_leaves_others() {
+        let mut c = RankClocks::new(3);
+        c.advance(2, 9.0);
+        c.barrier_subset(&[0, 1], 0.0);
+        assert_eq!(c.now(0), 0.0);
+        assert_eq!(c.now(2), 9.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Simulation substrate: deterministic virtual time, storage-device
+//! models, an OS page-cache model and a network model.
+//!
+//! The SAGE reproduction separates **real data operations** (the object
+//! store really stores bytes, parity is really computed, the DHT really
+//! hashes) from **time accounting**, which is carried in virtual time by
+//! these models. Benchmarks report virtual time, so results have the
+//! *shape* of the paper's testbeds (Blackdog, Tegner/Lustre, Beskow)
+//! without the hardware. See DESIGN.md §6 Substitutions.
+
+pub mod cache;
+pub mod clock;
+pub mod device;
+pub mod network;
+pub mod rng;
+
+pub use cache::PageCache;
+pub use clock::{RankClocks, SimTime};
+pub use device::{Device, DeviceKind, DeviceProfile};
+pub use network::NetworkModel;
+pub use rng::SimRng;

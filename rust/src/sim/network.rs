@@ -1,0 +1,117 @@
+//! Interconnect model: point-to-point and collective costs.
+//!
+//! LogGP-flavoured: a message of `s` bytes costs `latency + s/bw`;
+//! collectives add the usual `ceil(log2 p)` latency terms; aggregate
+//! injection at a shared endpoint (e.g. all ranks writing to the PFS or
+//! streaming to one consumer) is modelled by the endpoint's device queue
+//! plus this model's per-link bandwidth.
+
+use super::clock::SimTime;
+
+/// Interconnect description.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Per-message latency, seconds (half RTT).
+    pub latency: f64,
+    /// Per-link bandwidth, bytes/s.
+    pub link_bw: f64,
+    /// Per-node injection bandwidth, bytes/s (caps fan-in/out).
+    pub injection_bw: f64,
+}
+
+impl NetworkModel {
+    /// FDR InfiniBand (SAGE prototype enclosure network, §3.1):
+    /// ~56 Gb/s links, ~1 µs latency.
+    pub fn fdr_infiniband() -> Self {
+        NetworkModel { latency: 1e-6, link_bw: 6.8e9, injection_bw: 6.8e9 }
+    }
+
+    /// Cray Aries / Dragonfly (Beskow, §4.2).
+    pub fn aries() -> Self {
+        NetworkModel { latency: 1.3e-6, link_bw: 10e9, injection_bw: 10e9 }
+    }
+
+    /// Commodity 10GbE-ish (Tegner cluster fabric towards Lustre).
+    pub fn tengig() -> Self {
+        NetworkModel { latency: 20e-6, link_bw: 1.25e9, injection_bw: 1.25e9 }
+    }
+
+    /// Loopback (single workstation, Blackdog): effectively memcpy.
+    pub fn loopback() -> Self {
+        NetworkModel { latency: 0.2e-6, link_bw: 8e9, injection_bw: 8e9 }
+    }
+
+    /// Point-to-point message cost.
+    pub fn pt2pt(&self, size: u64) -> SimTime {
+        self.latency + size as f64 / self.link_bw
+    }
+
+    /// Barrier over `p` ranks (dissemination: log2(p) rounds).
+    pub fn barrier(&self, p: usize) -> SimTime {
+        self.latency * (p.max(1) as f64).log2().ceil().max(1.0)
+    }
+
+    /// Allreduce of `size` bytes over `p` ranks (Rabenseifner-style:
+    /// 2·(p-1)/p · size transferred in log rounds).
+    pub fn allreduce(&self, size: u64, p: usize) -> SimTime {
+        if p <= 1 {
+            return 0.0;
+        }
+        let rounds = (p as f64).log2().ceil();
+        rounds * self.latency
+            + 2.0 * size as f64 * (p as f64 - 1.0) / (p as f64) / self.link_bw
+    }
+
+    /// Gather of `size` bytes from each of `p` ranks to one root —
+    /// fan-in is capped by the root's injection bandwidth.
+    pub fn gather(&self, size: u64, p: usize) -> SimTime {
+        let rounds = (p as f64).log2().ceil().max(1.0);
+        rounds * self.latency
+            + (size as f64 * (p as f64 - 1.0)) / self.injection_bw
+    }
+
+    /// Many-to-few fan-in: `producers` ranks each sending `size` bytes
+    /// to one of `consumers` endpoints (the MPI-streams pattern). The
+    /// consumer side is injection-limited; the producer side overlaps.
+    pub fn fan_in(&self, size: u64, producers: usize, consumers: usize) -> SimTime {
+        let per_consumer = producers.div_ceil(consumers.max(1));
+        self.latency + size as f64 * per_consumer as f64 / self.injection_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pt2pt_latency_floor() {
+        let n = NetworkModel::fdr_infiniband();
+        assert!(n.pt2pt(0) >= 1e-6);
+        assert!(n.pt2pt(1 << 30) > 0.1);
+    }
+
+    #[test]
+    fn allreduce_grows_logarithmically() {
+        let n = NetworkModel::aries();
+        let t64 = n.allreduce(8, 64);
+        let t4096 = n.allreduce(8, 4096);
+        // small payload: latency-dominated, 2x rounds = 2x time
+        assert!(t4096 / t64 < 2.5);
+        assert!(t4096 > t64);
+    }
+
+    #[test]
+    fn fan_in_scales_with_ratio() {
+        let n = NetworkModel::aries();
+        // 15:1 producer:consumer ratio (paper's streaming config)
+        let t = n.fan_in(1 << 20, 150, 10);
+        let t2 = n.fan_in(1 << 20, 300, 10);
+        assert!(t2 > 1.9 * t && t2 < 2.1 * t);
+    }
+
+    #[test]
+    fn single_rank_collectives_free() {
+        let n = NetworkModel::loopback();
+        assert_eq!(n.allreduce(1 << 20, 1), 0.0);
+    }
+}

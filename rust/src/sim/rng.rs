@@ -1,0 +1,157 @@
+//! Deterministic pseudo-random numbers (offline substitute for `rand`).
+//!
+//! xoshiro256** seeded via SplitMix64 — fast, high quality, and fully
+//! reproducible across runs, which the benchmark harness and the
+//! property-test harness both rely on.
+
+/// Deterministic RNG (xoshiro256**).
+#[derive(Debug, Clone)]
+pub struct SimRng {
+    s: [u64; 4],
+}
+
+impl SimRng {
+    /// Seed deterministically (SplitMix64 expansion of `seed`).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        SimRng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform u64 in `[0, bound)` (Lemire reduction; bound > 0).
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    pub fn gen_index(&mut self, bound: usize) -> usize {
+        self.gen_range(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn gen_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.gen_f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(1e-300);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Exponential with mean `mean`.
+    pub fn gen_exp(&mut self, mean: f64) -> f64 {
+        -mean * self.gen_f64().max(1e-300).ln()
+    }
+
+    /// Zipf-like rank sample over `n` items with skew `theta` in (0,1);
+    /// used by HSM heat traces and the DHT key distribution. Low ranks
+    /// are hot: the CDF of rank k approximates (k/n)^(1-theta), so the
+    /// inverse transform is k = n * u^(1/(1-theta)).
+    pub fn gen_zipf(&mut self, n: u64, theta: f64) -> u64 {
+        let u = self.gen_f64();
+        let k = n as f64 * u.powf(1.0 / (1.0 - theta).max(1e-6));
+        (k as u64).min(n.saturating_sub(1))
+    }
+
+    /// Fill `buf` with pseudo-random bytes.
+    pub fn fill_bytes(&mut self, buf: &mut [u8]) {
+        for chunk in buf.chunks_mut(8) {
+            let v = self.next_u64().to_le_bytes();
+            chunk.copy_from_slice(&v[..chunk.len()]);
+        }
+    }
+
+    /// Fork a child RNG (independent stream) for a labelled subsystem.
+    pub fn fork(&mut self, label: u64) -> SimRng {
+        SimRng::new(self.next_u64() ^ label.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SimRng::new(7);
+        let mut b = SimRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(SimRng::new(1).next_u64(), SimRng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = SimRng::new(3);
+        for _ in 0..1000 {
+            let v = r.gen_range(17);
+            assert!(v < 17);
+            let f = r.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SimRng::new(11);
+        let n = 20_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gen_normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = SimRng::new(5);
+        let mut low = 0;
+        for _ in 0..1000 {
+            if r.gen_zipf(1000, 0.9) < 100 {
+                low += 1;
+            }
+        }
+        // with theta=0.9 the low ranks dominate
+        assert!(low > 500, "low-rank hits {low}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Collective-I/O baseline for Fig 7: "the current production version
+//! of the iPIC3D code uses MPI collective I/O for saving snapshots"
+//! (§4.2). Every rank participates in a blocking `MPI_File_write_all`
+//! each snapshot step — simulation stalls while I/O completes, which is
+//! what the streaming model eliminates.
+
+use crate::config::Testbed;
+use crate::pgas::mpiio::MpiIo;
+use crate::sim::clock::SimTime;
+
+/// Baseline world: all ranks simulate AND do collective I/O.
+pub struct CollectiveIo {
+    io: MpiIo,
+    nranks: usize,
+}
+
+impl CollectiveIo {
+    /// `nranks` simulation ranks.
+    pub fn new(tb: &Testbed, nranks: usize) -> Self {
+        CollectiveIo { io: MpiIo::new(tb, nranks), nranks }
+    }
+
+    /// One simulation step: compute then blocking collective snapshot.
+    pub fn step(&mut self, compute_s: f64, snapshot_bytes_per_rank: u64) -> SimTime {
+        for r in 0..self.nranks {
+            self.io.clocks.advance(r, compute_s);
+        }
+        if snapshot_bytes_per_rank > 0 {
+            self.io.write_all(snapshot_bytes_per_rank)
+        } else {
+            self.io.clocks.max()
+        }
+    }
+
+    /// Makespan.
+    pub fn elapsed(&self) -> SimTime {
+        self.io.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_blocks_every_rank() {
+        let tb = Testbed::beskow();
+        let mut c = CollectiveIo::new(&tb, 64);
+        let t1 = c.step(0.01, 0);
+        let t2 = c.step(0.01, 1 << 20);
+        assert!(t2 - t1 > 0.01, "I/O step must cost more than compute");
+    }
+
+    #[test]
+    fn cost_grows_with_scale_at_fixed_per_rank_bytes() {
+        let tb = Testbed::beskow();
+        let mut small = CollectiveIo::new(&tb, 256);
+        let mut big = CollectiveIo::new(&tb, 8192);
+        let ts = small.step(0.01, 1 << 18);
+        let tb2 = big.step(0.01, 1 << 18);
+        assert!(tb2 > 2.0 * ts, "collective I/O serializes at scale: {ts} {tb2}");
+    }
+}

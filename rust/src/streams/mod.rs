@@ -1,0 +1,358 @@
+//! MPI streams: decoupling simulation from I/O and post-processing
+//! (§3.2.4, §4.2, Fig 7).
+//!
+//! "Streams are a continuous sequence of fine-grained data structures
+//! that move from a set of processes, called data producers, to another
+//! set of processes, called data consumers. … Stream elements are
+//! processed online such that they are discarded as soon as they are
+//! consumed by the attached computation."
+//!
+//! [`StreamSim`] hosts P producers and C consumers (the paper's config
+//! is one consumer per 15 producers). Producers push bursts of elements
+//! and continue computing — the send is asynchronous and cheap;
+//! consumers overlap the attached computation (post-processing + file
+//! I/O) with the producers' next steps. Backpressure: a bounded queue
+//! of in-flight bursts per consumer; a producer blocks only when its
+//! consumer's queue is full. This overlap is exactly why the streaming
+//! model wins at scale over collective I/O ([`collective`] baseline).
+
+pub mod collective;
+
+use std::collections::VecDeque;
+
+use crate::config::Testbed;
+use crate::error::{Result, SageError};
+use crate::sim::clock::{RankClocks, SimTime};
+use crate::sim::device::{Access, Device, DeviceKind, IoOp};
+use crate::sim::network::NetworkModel;
+
+/// One stream element: the paper's iPIC3D particle record — "eight
+/// scalar values: position (x,y,z), velocity (u,v,w), charge q and an
+/// identifier ID" (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamElement {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub u: f32,
+    pub v: f32,
+    pub w: f32,
+    pub q: f32,
+    pub id: f32,
+}
+
+impl StreamElement {
+    /// Serialized size (8 f32 scalars).
+    pub const BYTES: u64 = 32;
+
+    /// Flatten to the (n, 8) f32 row layout the kernels consume.
+    pub fn to_row(&self) -> [f32; 8] {
+        [self.x, self.y, self.z, self.u, self.v, self.w, self.q, self.id]
+    }
+
+    /// Kinetic energy (same formula as the L1 kernel / ref oracle).
+    pub fn energy(&self) -> f32 {
+        0.5 * self.q.abs() * (self.u * self.u + self.v * self.v + self.w * self.w)
+    }
+}
+
+/// Stream topology + behaviour knobs.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub producers: usize,
+    pub consumers: usize,
+    /// In-flight bursts tolerated per consumer before producers block.
+    pub queue_depth: usize,
+    /// Consumer-side processing throughput for attached computations,
+    /// bytes/s (post-processing, VTK conversion).
+    pub consume_bw: f64,
+}
+
+impl StreamConfig {
+    /// The paper's ratio: one consumer per 15 producers. The receive
+    /// queue must hold a few bursts from *each* of the ~15 producers a
+    /// consumer serves, or producers serialize needlessly.
+    pub fn paper_ratio(producers: usize) -> Self {
+        let consumers = (producers / 15).max(1);
+        StreamConfig {
+            producers,
+            consumers,
+            queue_depth: 4 * producers.div_ceil(consumers),
+            consume_bw: 2.0e9,
+        }
+    }
+}
+
+struct ConsumerState {
+    /// Completion times of in-flight bursts (front = oldest).
+    inflight: VecDeque<SimTime>,
+    /// Real elements delivered and not yet collected.
+    inbox: Vec<StreamElement>,
+    /// Totals.
+    bytes_consumed: u64,
+    /// Pushes served (rotates the flush target across PFS devices —
+    /// consumers write file-per-consumer segments striped like Lustre).
+    pushes: u64,
+}
+
+/// The stream world.
+pub struct StreamSim {
+    pub cfg: StreamConfig,
+    /// Producer clocks [0..P), then consumer clocks [P..P+C).
+    pub clocks: RankClocks,
+    net: NetworkModel,
+    consumers: Vec<ConsumerState>,
+    /// PFS devices consumers flush to.
+    pfs: Vec<Device>,
+    pub elements_streamed: u64,
+}
+
+impl StreamSim {
+    /// Build over a testbed.
+    pub fn new(tb: &Testbed, cfg: StreamConfig) -> Self {
+        let pfs: Vec<Device> = tb
+            .storage
+            .iter()
+            .filter(|p| {
+                matches!(p.kind, DeviceKind::LustreOst | DeviceKind::Hdd | DeviceKind::Ssd)
+            })
+            .map(|p| Device::new(p.clone()))
+            .collect();
+        let consumers = (0..cfg.consumers)
+            .map(|_| ConsumerState {
+                inflight: VecDeque::new(),
+                inbox: Vec::new(),
+                bytes_consumed: 0,
+                pushes: 0,
+            })
+            .collect();
+        StreamSim {
+            clocks: RankClocks::new(cfg.producers + cfg.consumers),
+            net: tb.net.clone(),
+            consumers,
+            pfs,
+            elements_streamed: 0,
+            cfg,
+        }
+    }
+
+    /// The consumer assigned to a producer (contiguous blocks, as the
+    /// MPIStream library maps them).
+    pub fn consumer_of(&self, producer: usize) -> usize {
+        producer * self.cfg.consumers / self.cfg.producers
+    }
+
+    /// Charge `seconds` of simulation compute to a producer.
+    pub fn produce_compute(&mut self, producer: usize, seconds: f64) -> SimTime {
+        self.clocks.advance(producer, seconds)
+    }
+
+    /// Producer pushes a burst of `elements` stream elements; returns
+    /// the producer's new time. The send is asynchronous: the producer
+    /// pays only the injection cost (+ blocking if the consumer queue
+    /// is full). Consumer-side processing (attached computation + I/O
+    /// flush of `flush_bytes`) is scheduled on the consumer's clock.
+    pub fn push(
+        &mut self,
+        producer: usize,
+        elements: u64,
+        flush_bytes: u64,
+    ) -> Result<SimTime> {
+        if producer >= self.cfg.producers {
+            return Err(SageError::Invalid(format!(
+                "rank {producer} is not a producer"
+            )));
+        }
+        let cons = self.consumer_of(producer);
+        let cons_rank = self.cfg.producers + cons;
+        let bytes = elements * StreamElement::BYTES;
+
+        // ---- backpressure -------------------------------------------
+        let mut now = self.clocks.now(producer);
+        {
+            let st = &mut self.consumers[cons];
+            while st.inflight.len() >= self.cfg.queue_depth {
+                let free_at = st.inflight.pop_front().unwrap();
+                now = now.max(free_at);
+            }
+        }
+        // ---- producer-side send (async injection) --------------------
+        let t_send = self.net.pt2pt(bytes);
+        let t_prod = self.clocks.wait_until(producer, now + t_send);
+
+        // ---- consumer-side processing --------------------------------
+        let arrive = t_prod; // rendezvous completes at send completion
+        let start = self.clocks.now(cons_rank).max(arrive);
+        let end_proc = start + bytes as f64 / self.cfg.consume_bw;
+        // the attached computation occupies the consumer; the file flush
+        // is asynchronous (page-cache write + background writeback) —
+        // it occupies the device queue and bounds the burst's
+        // *completion* (backpressure), but not the consumer's CPU
+        let mut end_burst = end_proc;
+        if flush_bytes > 0 && !self.pfs.is_empty() {
+            // stripe consumer flushes across PFS devices round-robin
+            let d = (cons as u64 + self.consumers[cons].pushes) as usize
+                % self.pfs.len();
+            end_burst =
+                self.pfs[d].io(end_proc, flush_bytes, IoOp::Write, Access::Seq);
+        }
+        self.clocks.wait_until(cons_rank, end_proc);
+        let st = &mut self.consumers[cons];
+        st.pushes += 1;
+        st.inflight.push_back(end_burst);
+        st.bytes_consumed += bytes;
+        self.elements_streamed += elements;
+        Ok(t_prod)
+    }
+
+    /// Push *real* elements (correctness paths: the consumer's attached
+    /// computation will see exactly these). Time accounting identical
+    /// to [`push`].
+    pub fn push_real(
+        &mut self,
+        producer: usize,
+        elems: &[StreamElement],
+        flush_bytes: u64,
+    ) -> Result<SimTime> {
+        let t = self.push(producer, elems.len() as u64, flush_bytes)?;
+        let cons = self.consumer_of(producer);
+        self.consumers[cons].inbox.extend_from_slice(elems);
+        Ok(t)
+    }
+
+    /// Collect the elements delivered to a consumer (clears the inbox).
+    /// "Stream elements … are discarded as soon as they are consumed."
+    pub fn collect(&mut self, consumer: usize) -> Vec<StreamElement> {
+        std::mem::take(&mut self.consumers[consumer].inbox)
+    }
+
+    /// Drain: wait for all consumers to finish outstanding bursts, then
+    /// barrier. Returns the total makespan.
+    pub fn drain(&mut self) -> SimTime {
+        for c in 0..self.cfg.consumers {
+            let last = self.consumers[c].inflight.back().copied();
+            if let Some(t) = last {
+                self.clocks.wait_until(self.cfg.producers + c, t);
+            }
+            self.consumers[c].inflight.clear();
+        }
+        self.clocks
+            .barrier(self.net.barrier(self.clocks.len()))
+    }
+
+    /// Total bytes consumed across consumers.
+    pub fn bytes_consumed(&self) -> u64 {
+        self.consumers.iter().map(|c| c.bytes_consumed).sum()
+    }
+
+    /// Makespan.
+    pub fn elapsed(&self) -> SimTime {
+        self.clocks.max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elem(speed: f32, id: u32) -> StreamElement {
+        StreamElement {
+            x: 0.0,
+            y: 0.0,
+            z: 0.0,
+            u: speed,
+            v: 0.0,
+            w: 0.0,
+            q: 1.0,
+            id: id as f32,
+        }
+    }
+
+    #[test]
+    fn mapping_is_balanced() {
+        let tb = Testbed::beskow();
+        let s = StreamSim::new(&tb, StreamConfig::paper_ratio(150));
+        assert_eq!(s.cfg.consumers, 10);
+        assert_eq!(s.consumer_of(0), 0);
+        assert_eq!(s.consumer_of(149), 9);
+        // each consumer serves exactly 15 producers
+        let mut counts = vec![0; 10];
+        for p in 0..150 {
+            counts[s.consumer_of(p)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 15));
+    }
+
+    #[test]
+    fn producers_overlap_consumer_io() {
+        let tb = Testbed::beskow();
+        let mut s = StreamSim::new(&tb, StreamConfig::paper_ratio(15));
+        // produce 3 bursts with heavy consumer-side flushes
+        for step in 0..3 {
+            let _ = step;
+            s.produce_compute(0, 0.01);
+            s.push(0, 1000, 1 << 24).unwrap();
+        }
+        let producer_t = s.clocks.now(0);
+        let consumer_t = s.clocks.now(15);
+        assert!(
+            producer_t < consumer_t,
+            "producer must run ahead of the I/O consumer \
+             (prod {producer_t}, cons {consumer_t})"
+        );
+    }
+
+    #[test]
+    fn backpressure_blocks_producers_eventually() {
+        let tb = Testbed::beskow();
+        let cfg = StreamConfig {
+            producers: 1,
+            consumers: 1,
+            queue_depth: 2,
+            consume_bw: 1e6, // very slow consumer
+        };
+        let mut s = StreamSim::new(&tb, cfg);
+        for _ in 0..8 {
+            s.push(0, 10_000, 0).unwrap();
+        }
+        let producer_t = s.clocks.now(0);
+        // producer cannot be more than queue_depth bursts ahead
+        let consumer_t = s.clocks.now(1);
+        let burst = 10_000.0 * 32.0 / 1e6;
+        assert!(
+            consumer_t - producer_t < 3.0 * burst,
+            "queue bound violated: prod {producer_t} cons {consumer_t}"
+        );
+    }
+
+    #[test]
+    fn real_elements_delivered_exactly_once() {
+        let tb = Testbed::beskow();
+        let mut s = StreamSim::new(&tb, StreamConfig::paper_ratio(15));
+        let batch: Vec<StreamElement> = (0..10).map(|i| elem(1.0, i)).collect();
+        s.push_real(3, &batch, 0).unwrap();
+        let got = s.collect(s.consumer_of(3));
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[5].id, 5.0);
+        assert!(s.collect(s.consumer_of(3)).is_empty(), "discarded after consume");
+    }
+
+    #[test]
+    fn energy_matches_kernel_formula() {
+        let e = elem(3.0, 0);
+        assert!((e.energy() - 4.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn drain_waits_for_consumers() {
+        let tb = Testbed::beskow();
+        let mut s = StreamSim::new(&tb, StreamConfig::paper_ratio(15));
+        s.push(0, 100_000, 1 << 26).unwrap();
+        let before = s.clocks.now(0);
+        let after = s.drain();
+        assert!(after >= before);
+        for r in 0..s.clocks.len() {
+            assert_eq!(s.clocks.now(r), after);
+        }
+    }
+}

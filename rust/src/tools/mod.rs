@@ -1,0 +1,12 @@
+//! SAGE tools layer (§3.2.3): I/O profiling and optimized data
+//! movement.
+//!
+//! * [`rthms`] — the RTHMS data-placement recommender: analyzes access
+//!   patterns and recommends the tier for each memory/storage object.
+//! * [`analytics`] — the data-analytics connector (the role Apache
+//!   Flink plays in the SAGE project): a small dataflow engine whose
+//!   sources are Clovis objects and whose pipelines push computation
+//!   into storage via function shipping where possible.
+
+pub mod analytics;
+pub mod rthms;

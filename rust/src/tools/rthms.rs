@@ -1,0 +1,246 @@
+//! RTHMS: data-placement recommendations on heterogeneous memory /
+//! storage systems (§3.2.3, ref [12]).
+//!
+//! "We designed and developed a tool, called RTHMS, that analyzes
+//! parallel applications and provides recommendations to the programmer
+//! about the data placement of memory objects on heterogeneous memory
+//! systems. Our tool only requires the application binary and the
+//! characteristics of each memory technology (e.g., memory latency and
+//! bandwidth) available in the system."
+//!
+//! Our version consumes the equivalent of the instrumented trace — the
+//! FDMI access stream — and the device characteristics from the
+//! [`Testbed`], scores each object per tier (access intensity ×
+//! latency/bandwidth sensitivity vs capacity pressure), and emits
+//! ranked placement recommendations.
+
+use std::collections::HashMap;
+
+use crate::clovis::fdmi::FdmiRecord;
+use crate::config::Testbed;
+use crate::mero::object::ObjectId;
+use crate::sim::device::{DeviceKind, DeviceProfile};
+
+/// Per-object access profile accumulated from the trace.
+#[derive(Debug, Clone, Default)]
+pub struct AccessProfile {
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Mean access size (small = latency-sensitive, large = bandwidth-
+    /// sensitive) — the RTHMS intensity heuristic.
+    pub accesses: u64,
+}
+
+impl AccessProfile {
+    /// Mean bytes per access.
+    pub fn mean_access(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            (self.bytes_read + self.bytes_written) as f64 / self.accesses as f64
+        }
+    }
+
+    /// Read share of traffic.
+    pub fn read_ratio(&self) -> f64 {
+        let total = self.bytes_read + self.bytes_written;
+        if total == 0 {
+            0.5
+        } else {
+            self.bytes_read as f64 / total as f64
+        }
+    }
+}
+
+/// One placement recommendation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recommendation {
+    pub obj: ObjectId,
+    pub tier: DeviceKind,
+    /// Estimated mean access time on the recommended tier, seconds.
+    pub est_access: f64,
+    /// Ranked alternatives (tier, est access time), best first.
+    pub alternatives: Vec<(DeviceKind, f64)>,
+}
+
+/// The analyzer.
+#[derive(Debug, Default)]
+pub struct Rthms {
+    profiles: HashMap<ObjectId, AccessProfile>,
+}
+
+impl Rthms {
+    /// Fresh analyzer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ingest trace records (FDMI stream = the instrumented trace).
+    pub fn ingest(&mut self, records: &[FdmiRecord]) {
+        for rec in records {
+            match rec {
+                FdmiRecord::ObjectRead { obj, len, .. } => {
+                    let p = self.profiles.entry(*obj).or_default();
+                    p.reads += 1;
+                    p.accesses += 1;
+                    p.bytes_read += len;
+                }
+                FdmiRecord::ObjectWritten { obj, len, .. } => {
+                    let p = self.profiles.entry(*obj).or_default();
+                    p.writes += 1;
+                    p.accesses += 1;
+                    p.bytes_written += len;
+                }
+                FdmiRecord::ObjectDeleted { obj, .. } => {
+                    self.profiles.remove(obj);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Estimated mean access time of `p` on a device `d`.
+    fn est(p: &AccessProfile, d: &DeviceProfile) -> f64 {
+        let mean = p.mean_access().max(1.0);
+        let rw = p.read_ratio();
+        let bw = rw * d.read_bw + (1.0 - rw) * d.write_bw;
+        d.latency + mean / bw
+    }
+
+    /// Recommend a tier for every profiled object. Capacity pressure:
+    /// objects are ranked by access intensity; the fastest tier takes
+    /// the most intense objects until `fast_budget` bytes are assigned,
+    /// mirroring RTHMS's "hot data first into the scarce fast memory".
+    pub fn recommend(&self, tb: &Testbed, fast_budget: u64) -> Vec<Recommendation> {
+        // one representative profile per kind present in the testbed
+        let mut kinds: Vec<(DeviceKind, &DeviceProfile)> = Vec::new();
+        for p in &tb.storage {
+            if !kinds.iter().any(|(k, _)| *k == p.kind) {
+                kinds.push((p.kind, p));
+            }
+        }
+        kinds.sort_by_key(|(k, _)| k.tier());
+
+        // rank objects by traffic intensity
+        let mut ranked: Vec<(&ObjectId, &AccessProfile)> =
+            self.profiles.iter().collect();
+        ranked.sort_by_key(|(_, p)| {
+            std::cmp::Reverse(p.bytes_read + p.bytes_written)
+        });
+
+        let mut used_fast = 0u64;
+        let mut out = Vec::with_capacity(ranked.len());
+        for (obj, p) in ranked {
+            let mut scored: Vec<(DeviceKind, f64)> = kinds
+                .iter()
+                .map(|(k, d)| (*k, Self::est(p, d)))
+                .collect();
+            scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+            // capacity pressure: skip the fastest tier once the budget
+            // is consumed
+            let footprint = p.bytes_written.max(p.bytes_read / 4).max(4096);
+            let pick = scored
+                .iter()
+                .find(|(k, _)| {
+                    if k.tier() == kinds[0].0.tier() {
+                        used_fast + footprint <= fast_budget
+                    } else {
+                        true
+                    }
+                })
+                .copied()
+                .unwrap_or(scored[0]);
+            if pick.0.tier() == kinds[0].0.tier() {
+                used_fast += footprint;
+            }
+            out.push(Recommendation {
+                obj: *obj,
+                tier: pick.0,
+                est_access: pick.1,
+                alternatives: scored,
+            });
+        }
+        out
+    }
+
+    /// Profiled object count.
+    pub fn tracked(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// Borrow a profile.
+    pub fn profile(&self, obj: ObjectId) -> Option<&AccessProfile> {
+        self.profiles.get(&obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read_rec(obj: u64, len: u64, at: f64) -> FdmiRecord {
+        FdmiRecord::ObjectRead { obj: ObjectId(obj), offset: 0, len, at }
+    }
+
+    #[test]
+    fn intense_objects_get_fast_tier_until_budget() {
+        let mut r = Rthms::new();
+        // obj 1: hammered; obj 2: moderate; obj 3: barely touched
+        let mut recs = Vec::new();
+        for i in 0..100 {
+            recs.push(read_rec(1, 1 << 20, i as f64));
+        }
+        for i in 0..10 {
+            recs.push(read_rec(2, 1 << 20, i as f64));
+        }
+        recs.push(read_rec(3, 4096, 0.0));
+        r.ingest(&recs);
+        let tb = Testbed::sage_prototype();
+        // fast budget fits obj1's footprint (100MiB/4 = 25MiB) only
+        let out = r.recommend(&tb, 26 << 20);
+        let tier_of = |o: u64| {
+            out.iter().find(|x| x.obj == ObjectId(o)).unwrap().tier
+        };
+        assert_eq!(tier_of(1), DeviceKind::Nvram, "hottest goes fastest");
+        assert_ne!(tier_of(2), DeviceKind::Nvram, "budget exhausted by obj1");
+    }
+
+    #[test]
+    fn estimates_reflect_device_characteristics() {
+        let mut r = Rthms::new();
+        r.ingest(&[read_rec(1, 1 << 20, 0.0)]);
+        let tb = Testbed::sage_prototype();
+        let rec = &r.recommend(&tb, u64::MAX)[0];
+        // alternatives sorted fastest-first; NVRAM beats SMR
+        let first = rec.alternatives.first().unwrap();
+        let last = rec.alternatives.last().unwrap();
+        assert!(first.1 < last.1);
+        assert_eq!(first.0, DeviceKind::Nvram);
+    }
+
+    #[test]
+    fn deleted_objects_dropped() {
+        let mut r = Rthms::new();
+        r.ingest(&[
+            read_rec(5, 4096, 0.0),
+            FdmiRecord::ObjectDeleted { obj: ObjectId(5), at: 1.0 },
+        ]);
+        assert_eq!(r.tracked(), 0);
+    }
+
+    #[test]
+    fn profile_statistics() {
+        let mut r = Rthms::new();
+        r.ingest(&[
+            read_rec(9, 1000, 0.0),
+            FdmiRecord::ObjectWritten { obj: ObjectId(9), offset: 0, len: 3000, at: 1.0 },
+        ]);
+        let p = r.profile(ObjectId(9)).unwrap();
+        assert_eq!(p.reads, 1);
+        assert_eq!(p.writes, 1);
+        assert_eq!(p.mean_access(), 2000.0);
+        assert_eq!(p.read_ratio(), 0.25);
+    }
+}

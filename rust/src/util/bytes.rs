@@ -1,0 +1,74 @@
+//! Byte-size parsing and human-readable formatting.
+
+/// Parse a size string: plain integers, or suffixed "KiB"/"MiB"/"GiB"/
+/// "TiB" (binary) and "KB"/"MB"/"GB"/"TB" (decimal); fractional values
+/// like "1.5GiB" allowed.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    const UNITS: &[(&str, f64)] = &[
+        ("TiB", 1024f64 * 1024.0 * 1024.0 * 1024.0),
+        ("GiB", 1024f64 * 1024.0 * 1024.0),
+        ("MiB", 1024f64 * 1024.0),
+        ("KiB", 1024f64),
+        ("TB", 1e12),
+        ("GB", 1e9),
+        ("MB", 1e6),
+        ("KB", 1e3),
+        ("B", 1.0),
+    ];
+    for (suffix, mult) in UNITS {
+        if let Some(num) = s.strip_suffix(suffix) {
+            let v: f64 = num.trim().parse().ok()?;
+            return Some((v * mult) as u64);
+        }
+    }
+    s.parse::<u64>().ok()
+}
+
+/// Format a byte count with a binary suffix, 1 decimal place.
+pub fn fmt_size(n: u64) -> String {
+    const STEPS: &[(&str, u64)] = &[
+        ("TiB", 1 << 40),
+        ("GiB", 1 << 30),
+        ("MiB", 1 << 20),
+        ("KiB", 1 << 10),
+    ];
+    for (suffix, div) in STEPS {
+        if n >= *div {
+            return format!("{:.1}{suffix}", n as f64 / *div as f64);
+        }
+    }
+    format!("{n}B")
+}
+
+/// Format bytes/second.
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2}GB/s", bytes_per_sec / 1e9)
+    } else if bytes_per_sec >= 1e6 {
+        format!("{:.1}MB/s", bytes_per_sec / 1e6)
+    } else {
+        format!("{:.0}KB/s", bytes_per_sec / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size("64KiB"), Some(65536));
+        assert_eq!(parse_size("1.5GiB"), Some(1610612736));
+        assert_eq!(parse_size("12MB"), Some(12_000_000));
+        assert_eq!(parse_size("bogus"), None);
+    }
+
+    #[test]
+    fn fmt_sizes() {
+        assert_eq!(fmt_size(512), "512B");
+        assert_eq!(fmt_size(65536), "64.0KiB");
+        assert_eq!(fmt_size(3 << 30), "3.0GiB");
+    }
+}

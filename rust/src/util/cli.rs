@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Model: `prog <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Result, SageError};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".into());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Typed option access with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Required option (error if absent or unparseable).
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        self.options
+            .get(key)
+            .ok_or_else(|| SageError::Config(format!("missing --{key}")))?
+            .parse()
+            .map_err(|_| SageError::Config(format!("bad value for --{key}")))
+    }
+
+    /// Boolean flag (present or "true").
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// String option.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--flag` followed by a non-flag token consumes
+        // it as a value (no declared-flag registry); pass positionals
+        // first or use `--flag=true`.
+        let a = parse("fig3 x y --testbed tegner --elems=1000 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig3"));
+        assert_eq!(a.get_str("testbed", "?"), "tegner");
+        assert_eq!(a.get::<u64>("elems", 0), 1000);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = parse("run");
+        assert_eq!(a.get::<u32>("n", 42), 42);
+        assert!(a.require::<u32>("n").is_err());
+    }
+}

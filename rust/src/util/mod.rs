@@ -1,0 +1,40 @@
+//! In-tree substrates for functionality the offline build cannot pull
+//! from crates.io: JSON/TOML parsing, CLI argument handling, byte-size
+//! helpers.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod toml;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// True iff `n` is a power of two (and non-zero).
+pub fn is_pow2(n: u64) -> bool {
+    n != 0 && (n & (n - 1)) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn pow2_basics() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(4096));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(3));
+    }
+}

@@ -1,0 +1,213 @@
+//! TOML-subset parser for SAGE config files.
+//!
+//! Supports what our configs use: `[section]` and `[section.sub]`
+//! headers, `key = value` with string / integer / float / boolean /
+//! homogeneous-array values, `#` comments, and byte-size suffixes via
+//! [`crate::util::bytes`] when read through [`TomlDoc::get_bytes`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Result, SageError};
+
+/// A scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-section path -> key -> value.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) =
+                line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+            {
+                section = inner.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                SageError::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let value = parse_value(v.trim(), lineno + 1)?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// All section names (dotted paths).
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Fetch `key` from `section` ("" = top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    /// String value or default.
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Integer value or default.
+    pub fn get_i64(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    /// Float value or default.
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    /// Byte size: accepts integers or strings like "64KiB", "1.5GiB".
+    pub fn get_bytes(&self, section: &str, key: &str, default: u64) -> u64 {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) => *i as u64,
+            Some(TomlValue::Str(s)) => {
+                super::bytes::parse_size(s).unwrap_or(default)
+            }
+            _ => default,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue> {
+    let err =
+        || SageError::Config(format!("line {lineno}: bad value: {v}"));
+    if let Some(inner) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim(), lineno))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# SAGE testbed
+name = "blackdog"
+
+[tiers.hdd]
+read_bw = "150MiB"       # sequential
+capacity = 4_000_000_000
+ratio = 0.5
+devices = [1, 2]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name", "?"), "blackdog");
+        assert_eq!(
+            doc.get_bytes("tiers.hdd", "read_bw", 0),
+            150 * 1024 * 1024
+        );
+        assert_eq!(doc.get_i64("tiers.hdd", "capacity", 0), 4_000_000_000);
+        assert_eq!(doc.get_f64("tiers.hdd", "ratio", 0.0), 0.5);
+        assert_eq!(
+            doc.get("tiers.hdd", "devices").unwrap(),
+            &TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2)])
+        );
+    }
+
+    #[test]
+    fn comments_and_errors() {
+        assert!(TomlDoc::parse("key").is_err());
+        assert!(TomlDoc::parse("k = @").is_err());
+        let doc = TomlDoc::parse("k = \"a # not comment\" # real").unwrap();
+        assert_eq!(doc.get_str("", "k", ""), "a # not comment");
+    }
+}

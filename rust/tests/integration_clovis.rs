@@ -1,0 +1,150 @@
+//! Integration: the Clovis API surface — client ops, transactions,
+//! function shipping, FDMI → HSM wiring, ADDB accounting.
+
+use sage::clovis::fdmi::{FdmiRecord, FdmiPlugin};
+use sage::clovis::{Client, FnOutput, FunctionKind};
+use sage::config::Testbed;
+use sage::hsm::{Hsm, TieringPolicy};
+use sage::sim::device::DeviceKind;
+
+fn client() -> Client {
+    Client::new_sim(Testbed::sage_prototype())
+}
+
+#[test]
+fn end_to_end_object_workflow() {
+    let mut c = client();
+    let cont = c.create_container("workflow", Some(DeviceKind::Ssd));
+    let mut objs = Vec::new();
+    for i in 0..4u8 {
+        let o = c.create_object(4096).unwrap();
+        c.write_object(&o, 0, &vec![i; 4 * 65536]).unwrap();
+        c.container_add(cont, o).unwrap();
+        objs.push(o);
+    }
+    // one-shot container scrub (§3.2.1)
+    let results = c.ship_to_container(cont, FunctionKind::IntegrityCheck).unwrap();
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert!(matches!(r.output, FnOutput::Digests(_)));
+        assert!(r.net_bytes < r.net_bytes_moved);
+    }
+    // time advanced monotonically through the workflow
+    assert!(c.now > 0.0);
+}
+
+#[test]
+fn transactions_isolate_and_conflict() {
+    let mut c = client();
+    let t1 = c.tx_begin();
+    let t2 = c.tx_begin();
+    assert_eq!(c.tx_get(t1, b"counter").unwrap(), None);
+    c.tx_put(t2, b"counter".to_vec(), b"1".to_vec()).unwrap();
+    c.tx_commit(t2).unwrap();
+    // t1 read "counter" before t2's commit -> conflict on commit
+    c.tx_put(t1, b"derived".to_vec(), b"x".to_vec()).unwrap();
+    assert!(c.tx_commit(t1).is_err());
+    // retry succeeds
+    let t3 = c.tx_begin();
+    let v = c.tx_get(t3, b"counter").unwrap().unwrap();
+    assert_eq!(v, b"1");
+    c.tx_put(t3, b"derived".to_vec(), b"from-1".to_vec()).unwrap();
+    c.tx_commit(t3).unwrap();
+}
+
+#[test]
+fn kv_gateway_namespace() {
+    // pNFS-style namespace over the KVS (§3.2.3 Parallel File System
+    // Access): paths are keys, object ids are values
+    let mut c = client();
+    let ns = c.create_index();
+    let o1 = c.create_object(4096).unwrap();
+    let o2 = c.create_object(4096).unwrap();
+    c.idx_put(ns, vec![
+        (b"/sim/out/step1.h5".to_vec(), format!("{}", o1.0).into_bytes()),
+        (b"/sim/out/step2.h5".to_vec(), format!("{}", o2.0).into_bytes()),
+    ])
+    .unwrap();
+    // directory listing = ordered scan
+    let entries = c.store.index(ns).unwrap().scan(b"/sim/out/", 10);
+    assert_eq!(entries.len(), 2);
+    assert!(entries[0].0 < entries[1].0);
+    // NEXT walks the namespace
+    let nx = c.idx_next(ns, &[b"/sim/out/step1.h5".to_vec()]).unwrap();
+    assert_eq!(nx[0].as_ref().unwrap().0, b"/sim/out/step2.h5".to_vec());
+}
+
+struct Indexer {
+    seen: std::sync::Arc<std::sync::Mutex<Vec<u64>>>,
+}
+
+impl FdmiPlugin for Indexer {
+    fn name(&self) -> &str {
+        "indexer"
+    }
+    fn filter(&self, rec: &FdmiRecord) -> bool {
+        matches!(rec, FdmiRecord::ObjectWritten { .. })
+    }
+    fn deliver(&mut self, rec: &FdmiRecord) {
+        self.seen.lock().unwrap().push(rec.object().0);
+    }
+}
+
+#[test]
+fn fdmi_plugin_receives_writes_and_hsm_consumes() {
+    let mut c = client();
+    let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    c.fdmi.register(Box::new(Indexer { seen: seen.clone() }));
+
+    let o = c.create_object(4096).unwrap();
+    c.write_object(&o, 0, &vec![1u8; 4 * 65536]).unwrap();
+    c.read_object(&o, 0, 65536).unwrap();
+    assert_eq!(seen.lock().unwrap().as_slice(), &[o.0]);
+
+    // HSM consumes the same bus via drain
+    let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+    let recs = c.fdmi.drain();
+    assert!(recs.len() >= 3); // create + write + read
+    hsm.observe(&recs, &c.store);
+    assert_eq!(hsm.tracked(), 1);
+    assert!(hsm.score(o, c.now) > 0.0);
+}
+
+#[test]
+fn addb_telemetry_aggregates_workflow() {
+    let mut c = client();
+    let o = c.create_object(4096).unwrap();
+    for _ in 0..5 {
+        c.write_object(&o, 0, &vec![9u8; 4 * 65536]).unwrap();
+    }
+    assert_eq!(c.addb.total("clovis", "obj_write_bytes"), 5.0 * 4.0 * 65536.0);
+    let report = c.addb.report();
+    assert!(report.contains("clovis.obj_write_bytes"));
+}
+
+#[test]
+fn shipped_particle_filter_matches_cpu_reference() {
+    let mut c = client();
+    let obj = c.create_object(4096).unwrap();
+    // 2048 particles, 100 hot (speed 10)
+    let mut bytes = Vec::new();
+    for i in 0..2048 {
+        let speed = if i < 100 { 10.0f32 } else { 0.01 };
+        for v in [0.0f32, 0.0, 0.0, speed, 0.0, 0.0, 1.0, i as f32] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    bytes.resize(4 * 65536, 0);
+    c.write_object(&obj, 0, &bytes).unwrap();
+    let r = c
+        .ship_to_object(obj, FunctionKind::ParticleFilter { threshold: 1.0 })
+        .unwrap();
+    match r.output {
+        FnOutput::Particles { selected, stats } => {
+            assert_eq!(selected, 100);
+            assert_eq!(stats[0], 100.0);
+            assert!((stats[1] - 100.0 * 50.0).abs() < 1.0); // E = 0.5*1*100
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}

@@ -1,0 +1,110 @@
+//! Integration: PGAS storage windows + the figure-shape assertions at
+//! reduced scale (full-scale runs live in rust/benches/).
+
+use sage::apps::{dht, hacc, stream};
+use sage::config::Testbed;
+use sage::pgas::{PgasSim, StorageTarget, WindowKind};
+
+#[test]
+fn fig3a_shape_small() {
+    let tb = Testbed::blackdog();
+    let mem = stream::run(&tb, WindowKind::Memory, 50, 2).unwrap();
+    let sto =
+        stream::run(&tb, WindowKind::Storage(StorageTarget::Hdd), 50, 2).unwrap();
+    for (m, s) in mem.iter().zip(sto.iter()) {
+        let deg = 1.0 - s.bandwidth / m.bandwidth;
+        assert!(
+            (0.0..0.35).contains(&deg),
+            "{}: {deg:.3} — storage windows stay DRAM-class on Blackdog",
+            m.kernel
+        );
+    }
+}
+
+#[test]
+fn fig3b_shape_asymmetry() {
+    let tb = Testbed::tegner();
+    let (r, w) = stream::rw_asymmetry(&tb, StorageTarget::Pfs, 2 << 30).unwrap();
+    let ratio = r / w;
+    assert!(
+        (4.0..14.0).contains(&ratio),
+        "Lustre rd/wr asymmetry ~9x expected, got {ratio:.1} ({r:.0}/{w:.0})"
+    );
+}
+
+#[test]
+fn fig3c_shape_collapse() {
+    let tb = Testbed::tegner();
+    let mem = stream::run(&tb, WindowKind::Memory, 100, 1).unwrap();
+    let sto =
+        stream::run(&tb, WindowKind::Storage(StorageTarget::Pfs), 100, 1).unwrap();
+    let deg = 1.0 - sto[0].bandwidth / mem[0].bandwidth;
+    assert!(deg > 0.8, "Tegner storage STREAM collapses (got {deg:.2})");
+}
+
+#[test]
+fn fig5_shape_both_testbeds() {
+    // Tegner: windows beat MPI-IO at scale
+    let tegner = Testbed::tegner();
+    let t_io = hacc::run(&tegner, hacc::HaccImpl::MpiIo, 96, 50_000_000).unwrap();
+    let t_win = hacc::run(
+        &tegner,
+        hacc::HaccImpl::StorageWindows(StorageTarget::Pfs),
+        96,
+        50_000_000,
+    )
+    .unwrap();
+    assert!(t_win < t_io, "windows {t_win} vs mpiio {t_io}");
+
+    // Blackdog: comparable (MPI-IO can be slightly ahead)
+    let bd = Testbed::blackdog();
+    let t_io = hacc::run(&bd, hacc::HaccImpl::MpiIo, 8, 10_000_000).unwrap();
+    let t_win = hacc::run(
+        &bd,
+        hacc::HaccImpl::StorageWindows(StorageTarget::Hdd),
+        8,
+        10_000_000,
+    )
+    .unwrap();
+    let ratio = t_win / t_io;
+    assert!((0.3..3.0).contains(&ratio), "comparable on Blackdog: {ratio:.2}");
+}
+
+#[test]
+fn dht_overflow_and_volume_windows_consistent() {
+    let tb = Testbed::blackdog();
+    let cfg = dht::DhtConfig {
+        ranks: 4,
+        local_volume: 10_000,
+        ops_per_rank: 5_000,
+        sync_interval: u64::MAX,
+    };
+    let t = dht::run(&tb, WindowKind::Storage(StorageTarget::Ssd), &cfg).unwrap();
+    assert!(t > 0.0 && t.is_finite());
+}
+
+#[test]
+fn window_warm_makes_reads_hits() {
+    let tb = Testbed::blackdog();
+    let mut sim = PgasSim::new(tb, 1);
+    let w = sim.alloc_window(WindowKind::Storage(StorageTarget::Hdd), 1 << 24);
+    // cold read pays device time
+    sim.get(w, 0, 0, 0, 1 << 24, false).unwrap();
+    let cold = sim.elapsed();
+    sim.reset_clocks();
+    sim.get(w, 0, 0, 0, 1 << 24, false).unwrap();
+    let warm = sim.elapsed();
+    assert!(cold > 10.0 * warm, "cold {cold} vs warm {warm}");
+}
+
+#[test]
+fn multi_rank_clock_independence() {
+    let tb = Testbed::tegner();
+    let mut sim = PgasSim::new(tb, 48);
+    let w = sim.alloc_window(WindowKind::Memory, 1 << 20);
+    sim.put(w, 7, 7, 0, 1 << 20, false).unwrap();
+    assert!(sim.clocks.now(7) > 0.0);
+    assert_eq!(sim.clocks.now(8), 0.0, "other ranks unaffected");
+    sim.fence(w).unwrap();
+    assert_eq!(sim.clocks.now(8), sim.clocks.now(7));
+}

@@ -1,0 +1,148 @@
+//! Integration: the PJRT runtime — AOT artifacts loaded from
+//! `artifacts/` and executed from rust, with results checked against
+//! CPU references. Skipped gracefully when artifacts are missing
+//! (run `make artifacts` first).
+
+use sage::mero::sns;
+use sage::runtime::Executor;
+use sage::sim::rng::SimRng;
+
+fn executor() -> Option<Executor> {
+    // tests run from the workspace root
+    match Executor::load_default() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_manifest_covers_expected_variants() {
+    let Some(e) = executor() else { return };
+    for name in [
+        "parity_k4",
+        "parity_k8",
+        "postprocess_16k",
+        "postprocess_64k",
+        "alf_histogram_64k",
+        "integrity_16x4k",
+    ] {
+        assert!(e.has(name), "missing artifact {name}");
+        let info = e.info(name).unwrap();
+        assert!(info.num_outputs >= 1);
+    }
+}
+
+#[test]
+fn kernel_parity_equals_cpu_parity() {
+    let Some(e) = executor() else { return };
+    let mut rng = SimRng::new(0xBEEF);
+    for k in [4usize, 8] {
+        let units: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut v = vec![0u8; 65536];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect();
+        let kernel = e.parity(&units).unwrap().expect("variant exists");
+        let cpu = sns::cpu_parity(&units);
+        assert_eq!(kernel, cpu, "k={k}: Pallas parity == CPU XOR");
+    }
+}
+
+#[test]
+fn kernel_parity_partial_unit_padding() {
+    let Some(e) = executor() else { return };
+    let mut rng = SimRng::new(3);
+    // units smaller than the artifact lane count: zero-padded
+    let units: Vec<Vec<u8>> = (0..4)
+        .map(|_| {
+            let mut v = vec![0u8; 1000];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect();
+    let kernel = e.parity(&units).unwrap().expect("padded path");
+    assert_eq!(kernel.len(), 1000);
+    assert_eq!(kernel, sns::cpu_parity(&units));
+}
+
+#[test]
+fn kernel_postprocess_counts_and_energies() {
+    let Some(e) = executor() else { return };
+    let n = 10_000;
+    let hot = 321;
+    let mut rows = Vec::with_capacity(n * 8);
+    for i in 0..n {
+        let speed = if i < hot { 4.0f32 } else { 0.1 };
+        rows.extend_from_slice(&[0.0, 0.0, 0.0, speed, 0.0, 0.0, 2.0, i as f32]);
+    }
+    let out = e.postprocess(&rows, 1.0).unwrap().expect("16k variant");
+    assert_eq!(out.selected, hot);
+    assert_eq!(out.energies.len(), n);
+    // E = 0.5*|q|*v^2 = 0.5*2*16 = 16 for hot particles
+    assert!((out.energies[0] - 16.0).abs() < 1e-4);
+    assert_eq!(out.mask[hot - 1], 1.0);
+    assert_eq!(out.mask[hot], 0.0);
+}
+
+#[test]
+fn kernel_histogram_matches_manual_binning() {
+    let Some(e) = executor() else { return };
+    let mut rng = SimRng::new(77);
+    let vals: Vec<f32> = (0..100_000)
+        .map(|_| rng.gen_uniform(0.0, 64.0) as f32)
+        .collect();
+    let counts = e.histogram(&vals, 0.0, 64.0).unwrap().expect("variant");
+    let mut manual = vec![0f32; 64];
+    for &v in &vals {
+        manual[(v as usize).min(63)] += 1.0;
+    }
+    assert_eq!(counts.iter().sum::<f32>(), 100_000.0);
+    for (a, b) in counts.iter().zip(manual.iter()) {
+        assert!((a - b).abs() < 0.5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn kernel_integrity_stable_and_sensitive() {
+    let Some(e) = executor() else { return };
+    let mut rng = SimRng::new(5);
+    let blocks: Vec<i32> =
+        (0..16 * 4096).map(|_| rng.next_u64() as i32).collect();
+    let d1 = e.integrity(&blocks).unwrap().expect("variant");
+    let d2 = e.integrity(&blocks).unwrap().unwrap();
+    assert_eq!(d1, d2, "digests deterministic");
+    let mut corrupted = blocks.clone();
+    corrupted[5 * 4096 + 17] ^= 1;
+    let d3 = e.integrity(&corrupted).unwrap().unwrap();
+    assert_ne!(d1[5], d3[5], "corruption detected in block 5");
+    assert_eq!(d1[4], d3[4], "other blocks unaffected");
+}
+
+#[test]
+fn sns_write_path_uses_kernel_when_available() {
+    let Some(e) = executor() else { return };
+    use sage::config::Testbed;
+    use sage::mero::{Layout, MeroStore};
+    use sage::sim::device::DeviceKind;
+    let mut s = MeroStore::new(Testbed::sage_prototype().build_cluster());
+    let id = s
+        .create_object(
+            4096,
+            Layout::Raid { data: 4, parity: 1, unit: 65536, tier: DeviceKind::Ssd },
+        )
+        .unwrap();
+    let mut data = vec![0u8; 4 * 65536];
+    SimRng::new(1).fill_bytes(&mut data);
+    // write THROUGH the executor (kernel parity on the write path)
+    s.write_object(id, 0, &data, 0.0, Some(&e)).unwrap();
+    // degraded read must reconstruct with the kernel-computed parity
+    let dev = s.object(id).unwrap().placement(0, 2).unwrap().device;
+    s.cluster.fail_device(dev);
+    let (back, _) = s.read_object(id, 0, data.len() as u64, 1.0).unwrap();
+    assert_eq!(back, data, "kernel parity reconstructs exactly");
+}

@@ -1,0 +1,291 @@
+//! Property-based invariants on the coordinator (in-tree harness,
+//! rust/src/proptest.rs — offline substitute for the proptest crate).
+//!
+//! Invariants:
+//! * SNS: write→read round-trip for arbitrary sizes/geometries;
+//!   reconstruction after any single-device loss
+//! * KV: NEXT is strictly increasing and consistent with scan order
+//! * DTM: committed state == redo-log replay (atomicity w.r.t. crash)
+//! * HSM: migration preserves bytes for arbitrary payloads
+//! * Layout: overhead ≥ 1 and validated layouts map every offset
+//! * PageCache: resident ≤ capacity; hit+miss == bytes requested
+
+use sage::config::Testbed;
+use sage::mero::{Layout, MeroStore};
+use sage::proptest::prop_check;
+use sage::sim::cache::PageCache;
+use sage::sim::device::DeviceKind;
+use sage::sim::rng::SimRng;
+
+fn store() -> MeroStore {
+    MeroStore::new(Testbed::sage_prototype().build_cluster())
+}
+
+#[test]
+fn prop_sns_roundtrip_arbitrary_geometry() {
+    prop_check(
+        "sns-roundtrip",
+        40,
+        |r| {
+            let k = 2 + r.gen_range(6); // 2..8 data units
+            let blocks = 1 + r.gen_range(24); // 4K..100K payload
+            let seed = r.next_u64();
+            vec![k, blocks, seed]
+        },
+        |v| {
+            let (k, blocks, seed) = (v[0] as u32, v[1], v[2]);
+            let mut s = store();
+            let id = s
+                .create_object(
+                    4096,
+                    Layout::Raid { data: k, parity: 1, unit: 16384, tier: DeviceKind::Ssd },
+                )
+                .unwrap();
+            let mut data = vec![0u8; (blocks * 4096) as usize];
+            SimRng::new(seed).fill_bytes(&mut data);
+            let t = s.write_object(id, 0, &data, 0.0, None).unwrap();
+            let (back, _) = s.read_object(id, 0, data.len() as u64, t).unwrap();
+            back == data
+        },
+    );
+}
+
+#[test]
+fn prop_sns_single_failure_reconstructs() {
+    prop_check(
+        "sns-degraded",
+        25,
+        |r| {
+            let k = 2 + r.gen_range(6);
+            let lost_unit = r.gen_range(k); // any data unit
+            let seed = r.next_u64();
+            vec![k, lost_unit, seed]
+        },
+        |v| {
+            let (k, lost, seed) = (v[0] as u32, v[1] as u32, v[2]);
+            let mut s = store();
+            let id = s
+                .create_object(
+                    4096,
+                    Layout::Raid { data: k, parity: 1, unit: 16384, tier: DeviceKind::Ssd },
+                )
+                .unwrap();
+            let mut data = vec![0u8; (k as usize) * 16384];
+            SimRng::new(seed).fill_bytes(&mut data);
+            s.write_object(id, 0, &data, 0.0, None).unwrap();
+            let dev = s.object(id).unwrap().placement(0, lost).unwrap().device;
+            s.cluster.fail_device(dev);
+            match s.read_object(id, 0, data.len() as u64, 1.0) {
+                Ok((back, _)) => back == data,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_kv_next_strictly_increasing() {
+    prop_check(
+        "kv-next-order",
+        50,
+        |r| {
+            let n = 1 + r.gen_range(100);
+            (0..n).map(|_| r.gen_range(10_000)).collect::<Vec<u64>>()
+        },
+        |keys| {
+            let mut s = store();
+            let idx = s.create_index();
+            for k in keys {
+                s.index_mut(idx)
+                    .unwrap()
+                    .put(k.to_be_bytes().to_vec(), vec![1]);
+            }
+            // walk via NEXT from the beginning; must visit keys in
+            // strictly ascending unique order, same as scan
+            let scan: Vec<Vec<u8>> = s
+                .index(idx)
+                .unwrap()
+                .scan(b"", usize::MAX)
+                .into_iter()
+                .map(|(k, _)| k)
+                .collect();
+            let mut walked = Vec::new();
+            let mut cur = vec![0u8; 0];
+            while let Some((k, _)) =
+                s.index(idx).unwrap().next_batch(&[cur.clone()])[0].clone()
+            {
+                if !walked.is_empty() && k <= *walked.last().unwrap() {
+                    return false;
+                }
+                walked.push(k.clone());
+                cur = k;
+            }
+            walked == scan
+        },
+    );
+}
+
+#[test]
+fn prop_dtm_crash_recovery_equals_live_state() {
+    prop_check(
+        "dtm-atomicity",
+        50,
+        |r| {
+            // sequence of (key, value, commit?) triples
+            let n = 1 + r.gen_range(40);
+            (0..n)
+                .map(|_| {
+                    (r.gen_range(10), (r.gen_range(100), r.gen_range(2)))
+                })
+                .collect::<Vec<(u64, (u64, u64))>>()
+        },
+        |ops| {
+            let mut m = sage::mero::dtm::DtmManager::new();
+            for (key, (val, commit)) in ops {
+                let tx = m.begin();
+                m.write(tx, key.to_be_bytes().to_vec(), val.to_be_bytes().to_vec())
+                    .unwrap();
+                if *commit == 1 {
+                    let _ = m.commit(tx, 0.0);
+                } else {
+                    m.abort(tx).unwrap();
+                }
+            }
+            // crash-replay must equal live state exactly
+            let replay = m.recover();
+            replay.iter().all(|(k, v)| m.get(k) == Some(v))
+                && m.committed as usize >= replay.len().min(1)
+        },
+    );
+}
+
+#[test]
+fn prop_hsm_migration_preserves_bytes() {
+    prop_check(
+        "hsm-no-loss",
+        15,
+        |r| {
+            let blocks = 1 + r.gen_range(32);
+            let hops = 1 + r.gen_range(3);
+            let seed = r.next_u64();
+            vec![blocks, hops, seed]
+        },
+        |v| {
+            let (blocks, hops, seed) = (v[0], v[1], v[2]);
+            let mut s = store();
+            let id = s.create_object(4096, Layout::default()).unwrap();
+            let mut data = vec![0u8; (blocks * 4096) as usize];
+            SimRng::new(seed).fill_bytes(&mut data);
+            s.write_object(id, 0, &data, 0.0, None).unwrap();
+            let mut hsm = sage::hsm::Hsm::new(sage::hsm::TieringPolicy::HeatWeighted);
+            let ladder = [DeviceKind::Nvram, DeviceKind::Hdd, DeviceKind::Ssd];
+            let mut from = DeviceKind::Ssd;
+            for h in 0..hops {
+                let to = ladder[(h % 3) as usize];
+                if to == from {
+                    continue;
+                }
+                let plan = vec![sage::hsm::Migration { obj: id, from, to }];
+                if hsm.migrate(&mut s, &plan, 1.0).is_err() {
+                    return false;
+                }
+                from = to;
+            }
+            let (back, _) = s.read_object(id, 0, data.len() as u64, 9.0).unwrap();
+            back == data
+        },
+    );
+}
+
+#[test]
+fn prop_page_cache_conservation() {
+    prop_check(
+        "cache-conservation",
+        60,
+        |r| {
+            let cap_pages = 4 + r.gen_range(60);
+            let n_ops = 1 + r.gen_range(120);
+            let seed = r.next_u64();
+            vec![cap_pages, n_ops, seed]
+        },
+        |v| {
+            let (cap_pages, n_ops, seed) = (v[0], v[1], v[2]);
+            let mut rng = SimRng::new(seed);
+            let mut c = PageCache::new(cap_pages * 4096, 4096);
+            for _ in 0..n_ops {
+                let off = rng.gen_range(cap_pages * 8) * 4096;
+                let len = 1 + rng.gen_range(3 * 4096);
+                let out = if rng.gen_f64() < 0.5 {
+                    c.read(off, len)
+                } else {
+                    c.write(off, len)
+                };
+                // conservation: every requested byte is hit or missed
+                if out.hit + out.miss != len {
+                    return false;
+                }
+                // capacity bound
+                if c.resident() > (cap_pages + 1) * 4096 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_layout_overhead_at_least_one() {
+    prop_check(
+        "layout-overhead",
+        40,
+        |r| {
+            let data = 1 + r.gen_range(10) as u64;
+            let parity = r.gen_range(3) as u64;
+            let copies = 1 + r.gen_range(4) as u64;
+            vec![data, parity, copies]
+        },
+        |v| {
+            let raid = Layout::Raid {
+                data: v[0] as u32,
+                parity: (v[1] as u32).min(2),
+                unit: 4096,
+                tier: DeviceKind::Ssd,
+            };
+            let mirror = Layout::Mirror { copies: v[2] as u32, tier: DeviceKind::Hdd };
+            raid.overhead() >= 1.0 && mirror.overhead() >= 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_stream_elements_conserved() {
+    prop_check(
+        "stream-conservation",
+        20,
+        |r| {
+            let bursts = 1 + r.gen_range(20);
+            let per_burst = 1 + r.gen_range(200);
+            vec![bursts, per_burst]
+        },
+        |v| {
+            use sage::streams::{StreamConfig, StreamElement, StreamSim};
+            let tb = Testbed::beskow();
+            let mut s = StreamSim::new(&tb, StreamConfig::paper_ratio(15));
+            let batch: Vec<StreamElement> = (0..v[1])
+                .map(|i| StreamElement {
+                    x: 0.0, y: 0.0, z: 0.0,
+                    u: 1.0, v: 0.0, w: 0.0,
+                    q: 1.0, id: i as f32,
+                })
+                .collect();
+            let mut sent = 0;
+            for _ in 0..v[0] {
+                s.push_real(0, &batch, 64).unwrap();
+                sent += batch.len();
+            }
+            s.drain();
+            s.collect(0).len() == sent
+        },
+    );
+}
