@@ -1,12 +1,19 @@
 //! Ablation (Tbl A): the SNS parity path — AOT Pallas kernel via PJRT
 //! vs the CPU XOR fallback, across stripe geometries; plus end-to-end
-//! write-path wall-clock (the L3 hot path the perf pass optimizes).
+//! write-path wall-clock (the L3 hot path the perf pass optimizes) and
+//! the §Perf before/after: the zero-copy batched engine vs the
+//! preserved pre-change baseline (`sns_baseline`), measured on a
+//! >= 64 MiB full-stripe write + read cycle.
 //!
 //! Run: `make artifacts && cargo bench --bench ablate_sns`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_sns`
+//! (reduced object size + iteration counts).
+//!
+//! Results append to `bench_results/*.json` (one JSON object per line).
 
 use sage::bench::{record, Bencher};
 use sage::config::Testbed;
-use sage::mero::{sns, Layout, MeroStore};
+use sage::mero::{sns, sns_baseline, Layout, MeroStore};
 use sage::metrics::Table;
 use sage::runtime::Executor;
 use sage::sim::device::DeviceKind;
@@ -120,5 +127,98 @@ fn main() {
     t.row(vec!["healthy read".into(), sage::metrics::fmt_secs(t_healthy - 100.0)]);
     t.row(vec!["degraded read".into(), sage::metrics::fmt_secs(t_degraded - 200.0)]);
     t.row(vec!["device repair".into(), sage::metrics::fmt_secs(t_repair - 300.0)]);
+    print!("{}", t.render());
+
+    hotpath(&mut rng);
+}
+
+/// §Perf before/after: the zero-copy batched engine (`sns` +
+/// `write_object_owned`/`read_object_into`) against the preserved
+/// pre-change engine (`sns_baseline`), on a full-stripe write + read
+/// cycle of one large object. Both engines do the same logical work:
+/// stripe, compute+store parity, persist blocks with per-block CRC32,
+/// read everything back. `SAGE_BENCH_QUICK=1` shrinks the object and
+/// iteration counts for CI smoke runs.
+fn hotpath(rng: &mut SimRng) {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let mib: u64 = if quick { 16 } else { 64 };
+    let total = mib << 20;
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let mut data = vec![0u8; total as usize];
+    rng.fill_bytes(&mut data);
+
+    let mut t = Table::new(
+        &format!("§Perf hot path: {mib} MiB full-stripe write + read cycle"),
+        &["geometry", "engine", "cycle", "throughput", "speedup"],
+    );
+    for (k, p) in [(4u32, 1u32), (4, 2)] {
+        let layout = Layout::Raid {
+            data: k,
+            parity: p,
+            unit: 65536,
+            tier: DeviceKind::Ssd,
+        };
+
+        // --- baseline: pre-change engine (per-block allocs + clones) ---
+        let l = layout.clone();
+        let m_base = Bencher::new(&format!("hotpath_baseline_{k}+{p}"))
+            .iters(warm, iters)
+            .wall(|| {
+                let mut s =
+                    MeroStore::new(Testbed::sage_prototype().build_cluster());
+                let id = s.create_object(4096, l.clone()).unwrap();
+                sns_baseline::write(&mut s, id, 0, &data, 0.0, None).unwrap();
+                let (back, _) =
+                    sns_baseline::read(&mut s, id, 0, total, 1.0).unwrap();
+                back.len()
+            });
+
+        // --- zero-copy engine: persist-by-move + read into reused buf ---
+        let l = layout.clone();
+        let mut back = vec![0u8; total as usize];
+        let m_opt = Bencher::new(&format!("hotpath_zero_copy_{k}+{p}"))
+            .iters(warm, iters)
+            .wall(|| {
+                let mut s =
+                    MeroStore::new(Testbed::sage_prototype().build_cluster());
+                let id = s.create_object(4096, l.clone()).unwrap();
+                // producing the owned buffer is part of the measured cycle
+                let owned = data.clone();
+                s.write_object_owned(id, 0, owned, 0.0, None).unwrap();
+                s.read_object_into(id, 0, &mut back, 1.0).unwrap();
+                back.len()
+            });
+        assert_eq!(back, data, "engines must return identical bytes");
+
+        let speedup = m_base.median / m_opt.median.max(1e-12);
+        let cycle_bytes = (2 * total) as f64; // one write + one read pass
+        t.row(vec![
+            format!("{k}+{p}"),
+            "baseline".into(),
+            sage::metrics::fmt_secs(m_base.median),
+            sage::util::bytes::fmt_bw(cycle_bytes / m_base.median.max(1e-12)),
+            "1.00x".into(),
+        ]);
+        t.row(vec![
+            format!("{k}+{p}"),
+            "zero-copy".into(),
+            sage::metrics::fmt_secs(m_opt.median),
+            sage::util::bytes::fmt_bw(cycle_bytes / m_opt.median.max(1e-12)),
+            format!("{speedup:.2}x"),
+        ]);
+        record("ablate_sns_hotpath", &[
+            ("mib", mib as f64),
+            ("k", k as f64),
+            ("p", p as f64),
+            ("iters", iters as f64),
+            ("baseline_cycle_s", m_base.median),
+            ("baseline_mad_s", m_base.mad),
+            ("zero_copy_cycle_s", m_opt.median),
+            ("zero_copy_mad_s", m_opt.mad),
+            ("baseline_bw_bytes_s", cycle_bytes / m_base.median.max(1e-12)),
+            ("zero_copy_bw_bytes_s", cycle_bytes / m_opt.median.max(1e-12)),
+            ("speedup", speedup),
+        ]);
+    }
     print!("{}", t.render());
 }

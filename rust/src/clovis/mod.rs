@@ -24,6 +24,7 @@ use crate::sim::clock::SimTime;
 use crate::sim::device::DeviceKind;
 
 pub use fshipping::{FnOutput, FunctionKind, ShipResult};
+pub use ops::Extent;
 
 /// A Clovis client handle: the entry point of the SAGE storage API.
 pub struct Client {
@@ -116,6 +117,177 @@ impl Client {
         });
         self.now = t;
         Ok(data)
+    }
+
+    /// Read `dst.len()` bytes directly into a caller buffer (§Perf:
+    /// no per-read allocation; reuse one buffer across reads).
+    /// Semantically identical to [`Client::read_object`].
+    pub fn read_object_into(
+        &mut self,
+        obj: &ObjectId,
+        offset: u64,
+        dst: &mut [u8],
+    ) -> Result<SimTime> {
+        let t = self.store.read_object_into(*obj, offset, dst, self.now)?;
+        self.addb
+            .record(self.now, "clovis", "obj_read_bytes", dst.len() as f64);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectRead {
+            obj: *obj,
+            offset,
+            len: dst.len() as u64,
+            at: self.now,
+        });
+        self.now = t;
+        Ok(t)
+    }
+
+    // ------------------------------------------------------ batched ops
+
+    /// Vectored write: one op per extent, launched as a group at the
+    /// current clock and awaited together (`m0_op_launch`/`m0_op_wait`
+    /// over the batch). ADDB telemetry and the FDMI event are amortized
+    /// to ONE record per batch (§Perf). Returns the group completion
+    /// time (max op finish).
+    pub fn writev(
+        &mut self,
+        obj: &ObjectId,
+        extents: &[(u64, &[u8])],
+    ) -> Result<SimTime> {
+        if extents.is_empty() {
+            return Ok(self.now);
+        }
+        let now = self.now;
+        let mut group = ops::OpGroup::new();
+        let ids: Vec<u64> = extents
+            .iter()
+            .map(|_| group.add(ops::OpKind::ObjWrite))
+            .collect();
+        group.launch_batch(now)?;
+        let mut total = 0u64;
+        for (i, (off, data)) in extents.iter().enumerate() {
+            match self
+                .store
+                .write_object(*obj, *off, data, now, self.exec.as_ref())
+            {
+                Ok(t) => {
+                    group.op_mut(ids[i])?.complete(t)?;
+                    total += data.len() as u64;
+                }
+                Err(e) => {
+                    group.op_mut(ids[i])?.fail(now, &format!("{e}"))?;
+                    return Err(e);
+                }
+            }
+        }
+        let t = group.wait_all()?;
+        self.addb.record(now, "clovis", "obj_writev_bytes", total as f64);
+        self.addb
+            .record(now, "clovis", "obj_writev_ops", extents.len() as f64);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectWritten {
+            obj: *obj,
+            offset: extents[0].0,
+            len: total,
+            at: now,
+        });
+        self.now = t;
+        Ok(t)
+    }
+
+    /// Vectored write of owned buffers (§Perf persist-by-move: each
+    /// buffer becomes object block storage without a copy). Batched
+    /// like [`Client::writev`].
+    pub fn writev_owned(
+        &mut self,
+        obj: &ObjectId,
+        extents: Vec<(u64, Vec<u8>)>,
+    ) -> Result<SimTime> {
+        if extents.is_empty() {
+            return Ok(self.now);
+        }
+        let now = self.now;
+        let first_off = extents[0].0;
+        let n_ops = extents.len();
+        let mut group = ops::OpGroup::new();
+        let ids: Vec<u64> = extents
+            .iter()
+            .map(|_| group.add(ops::OpKind::ObjWrite))
+            .collect();
+        group.launch_batch(now)?;
+        let mut total = 0u64;
+        for (i, (off, data)) in extents.into_iter().enumerate() {
+            let len = data.len() as u64;
+            match self
+                .store
+                .write_object_owned(*obj, off, data, now, self.exec.as_ref())
+            {
+                Ok(t) => {
+                    group.op_mut(ids[i])?.complete(t)?;
+                    total += len;
+                }
+                Err(e) => {
+                    group.op_mut(ids[i])?.fail(now, &format!("{e}"))?;
+                    return Err(e);
+                }
+            }
+        }
+        let t = group.wait_all()?;
+        self.addb.record(now, "clovis", "obj_writev_bytes", total as f64);
+        self.addb.record(now, "clovis", "obj_writev_ops", n_ops as f64);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectWritten {
+            obj: *obj,
+            offset: first_off,
+            len: total,
+            at: now,
+        });
+        self.now = t;
+        Ok(t)
+    }
+
+    /// Vectored read over an extent list, launched as one op group.
+    /// Returns one buffer per extent; ADDB/FDMI amortized to one
+    /// record per batch.
+    pub fn readv(
+        &mut self,
+        obj: &ObjectId,
+        extents: &[ops::Extent],
+    ) -> Result<Vec<Vec<u8>>> {
+        if extents.is_empty() {
+            return Ok(Vec::new());
+        }
+        let now = self.now;
+        let mut group = ops::OpGroup::new();
+        let ids: Vec<u64> = extents
+            .iter()
+            .map(|_| group.add(ops::OpKind::ObjRead))
+            .collect();
+        group.launch_batch(now)?;
+        let mut out = Vec::with_capacity(extents.len());
+        let mut total = 0u64;
+        for (i, e) in extents.iter().enumerate() {
+            match self.store.read_object(*obj, e.offset, e.len, now) {
+                Ok((data, t)) => {
+                    group.op_mut(ids[i])?.complete(t)?;
+                    total += e.len;
+                    out.push(data);
+                }
+                Err(err) => {
+                    group.op_mut(ids[i])?.fail(now, &format!("{err}"))?;
+                    return Err(err);
+                }
+            }
+        }
+        let t = group.wait_all()?;
+        self.addb.record(now, "clovis", "obj_readv_bytes", total as f64);
+        self.addb
+            .record(now, "clovis", "obj_readv_ops", extents.len() as f64);
+        self.fdmi.emit(fdmi::FdmiRecord::ObjectRead {
+            obj: *obj,
+            offset: extents[0].offset,
+            len: total,
+            at: now,
+        });
+        self.now = t;
+        Ok(out)
     }
 
     /// Delete an object at end of life.
@@ -293,6 +465,95 @@ mod tests {
         c.container_add(cont, o1).unwrap();
         c.container_add(cont, o2).unwrap();
         assert_eq!(c.store.container_objects(cont).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writev_matches_sequential_single_ops() {
+        let mut batched = client();
+        let mut sequential = client();
+        let ob = batched.create_object(4096).unwrap();
+        let os = sequential.create_object(4096).unwrap();
+        let stripe = 4 * 65536u64; // default layout stripe width
+        let chunks: Vec<Vec<u8>> = (0..3)
+            .map(|i| vec![(i + 1) as u8; stripe as usize])
+            .collect();
+        let extents: Vec<(u64, &[u8])> = chunks
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i as u64 * stripe, c.as_slice()))
+            .collect();
+        batched.writev(&ob, &extents).unwrap();
+        for (off, data) in &extents {
+            sequential.write_object(&os, *off, data).unwrap();
+        }
+        let nb = batched.read_object(&ob, 0, 3 * stripe).unwrap();
+        let ns = sequential.read_object(&os, 0, 3 * stripe).unwrap();
+        assert_eq!(nb, ns, "vectored and single-op writes store same bytes");
+    }
+
+    #[test]
+    fn writev_amortizes_fdmi_and_addb_to_one_record_per_batch() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let emitted_before = c.fdmi.emitted;
+        let stripe = 4 * 65536u64;
+        let a = vec![1u8; stripe as usize];
+        let b = vec![2u8; stripe as usize];
+        let d = vec![3u8; stripe as usize];
+        c.writev(&obj, &[(0, &a), (stripe, &b), (2 * stripe, &d)]).unwrap();
+        assert_eq!(
+            c.fdmi.emitted - emitted_before,
+            1,
+            "one FDMI event per batch, not per extent"
+        );
+        let summary = c.addb.summary();
+        let (n_batches, bytes) = summary
+            .iter()
+            .find(|(k, _)| k == "clovis.obj_writev_bytes")
+            .map(|(_, v)| *v)
+            .unwrap();
+        assert_eq!(n_batches, 1, "one ADDB sample per batch");
+        assert_eq!(bytes, 3.0 * stripe as f64);
+    }
+
+    #[test]
+    fn readv_and_read_into_match_read_object() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let stripe = 4 * 65536u64;
+        let data: Vec<u8> = (0..2 * stripe).map(|i| (i % 247) as u8).collect();
+        c.write_object(&obj, 0, &data).unwrap();
+        let exts =
+            [Extent::new(0, stripe), Extent::new(stripe, stripe)];
+        let parts = c.readv(&obj, &exts).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], &data[..stripe as usize]);
+        assert_eq!(parts[1], &data[stripe as usize..]);
+        let mut buf = vec![0xFFu8; data.len()];
+        c.read_object_into(&obj, 0, &mut buf).unwrap();
+        assert_eq!(buf, data);
+    }
+
+    #[test]
+    fn writev_owned_roundtrip_and_clock_advance() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let stripe = 4 * 65536u64;
+        let t0 = c.now;
+        let t = c
+            .writev_owned(
+                &obj,
+                vec![
+                    (0, vec![9u8; stripe as usize]),
+                    (stripe, vec![8u8; stripe as usize]),
+                ],
+            )
+            .unwrap();
+        assert!(t > t0, "group completion advances the clock");
+        assert_eq!(c.now, t);
+        let back = c.read_object(&obj, 0, 2 * stripe).unwrap();
+        assert_eq!(&back[..stripe as usize], &vec![9u8; stripe as usize][..]);
+        assert_eq!(&back[stripe as usize..], &vec![8u8; stripe as usize][..]);
     }
 
     #[test]

@@ -1,50 +1,76 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the offline
+//! build carries no proc-macro dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the SAGE stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum SageError {
     /// Object / index / container identifier not found.
-    #[error("no such entity: {0}")]
     NotFound(String),
 
     /// An operation violated API preconditions (bad offset, size, state).
-    #[error("invalid argument: {0}")]
     Invalid(String),
 
     /// Storage pool exhausted or device over capacity.
-    #[error("out of space: {0}")]
     NoSpace(String),
 
     /// Too many failed devices in a parity group to reconstruct data.
-    #[error("data unavailable: {0}")]
     Unavailable(String),
 
     /// Transaction aborted (conflict, explicit abort, or failed node).
-    #[error("transaction aborted: {0}")]
     TxAborted(String),
 
     /// Error from the PJRT runtime (artifact load / compile / execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Config file / CLI parse errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// On-disk / in-flight data failed an integrity check.
-    #[error("integrity violation: {0}")]
     Integrity(String),
 
     /// Underlying I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for SageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SageError::NotFound(s) => write!(f, "no such entity: {s}"),
+            SageError::Invalid(s) => write!(f, "invalid argument: {s}"),
+            SageError::NoSpace(s) => write!(f, "out of space: {s}"),
+            SageError::Unavailable(s) => write!(f, "data unavailable: {s}"),
+            SageError::TxAborted(s) => write!(f, "transaction aborted: {s}"),
+            SageError::Runtime(s) => write!(f, "runtime error: {s}"),
+            SageError::Config(s) => write!(f, "config error: {s}"),
+            SageError::Integrity(s) => write!(f, "integrity violation: {s}"),
+            SageError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SageError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SageError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SageError {
+    fn from(e: std::io::Error) -> Self {
+        SageError::Io(e)
+    }
 }
 
 /// Convenient result alias used across the crate.
 pub type Result<T> = std::result::Result<T, SageError>;
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for SageError {
     fn from(e: xla::Error) -> Self {
         SageError::Runtime(e.to_string())

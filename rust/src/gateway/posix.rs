@@ -12,7 +12,7 @@
 //! block-aligned object I/O here (POSIX's looser alignment is part of
 //! what the gateway provides).
 
-use crate::clovis::Client;
+use crate::clovis::{Client, Extent};
 use crate::error::{Result, SageError};
 use crate::mero::{IndexId, Layout, ObjectId};
 
@@ -119,7 +119,8 @@ impl PosixGateway {
     }
 
     /// pwrite: byte-granular write, translated to block-aligned object
-    /// I/O (read-modify-write of the edge blocks).
+    /// I/O (read-modify-write of the edge blocks). Single-part
+    /// convenience over [`PosixGateway::writev`].
     pub fn write(
         &self,
         client: &mut Client,
@@ -127,19 +128,77 @@ impl PosixGateway {
         offset: u64,
         data: &[u8],
     ) -> Result<()> {
+        self.writev(client, path, &[(offset, data)])
+    }
+
+    /// Vectored pwrite (`pwritev` analog): every part's block-aligned
+    /// envelope is read-modified once (overlapping/adjacent envelopes
+    /// are merged first, so shared edge blocks are RMW'd exactly once)
+    /// and the whole batch goes to storage as ONE Clovis op group
+    /// (§Perf: the batched zero-copy write path). Parts apply in order;
+    /// later parts win where they overlap, matching sequential pwrites.
+    /// Zero-length parts are no-ops and do not extend the file (POSIX
+    /// `pwrite(fd, buf, 0, off)` semantics).
+    pub fn writev(
+        &self,
+        client: &mut Client,
+        path: &str,
+        parts: &[(u64, &[u8])],
+    ) -> Result<()> {
         let p = Self::norm(path)?;
         let Inode::File { obj, size } = self.stat(client, &p)? else {
             return Err(SageError::Invalid(format!("{path} is a directory")));
         };
         let bs = self.block_size;
-        let start = offset / bs * bs;
-        let end = (offset + data.len() as u64).div_ceil(bs) * bs;
-        // RMW the aligned envelope
-        let mut buf = client.read_object(&obj, start, end - start)?;
-        let off_in = (offset - start) as usize;
-        buf[off_in..off_in + data.len()].copy_from_slice(data);
-        client.write_object(&obj, start, &buf)?;
-        let new_size = size.max(offset + data.len() as u64);
+        // block-aligned envelope per non-empty part
+        let mut ranges: Vec<(u64, u64)> = parts
+            .iter()
+            .filter(|(_, d)| !d.is_empty())
+            .map(|(off, d)| {
+                (off / bs * bs, (off + d.len() as u64).div_ceil(bs) * bs)
+            })
+            .collect();
+        if ranges.is_empty() {
+            return Ok(());
+        }
+        ranges.sort_unstable();
+        let mut merged: Vec<(u64, u64)> = Vec::with_capacity(ranges.len());
+        for (s, e) in ranges {
+            match merged.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => merged.push((s, e)),
+            }
+        }
+        // RMW each merged envelope exactly once, reading them all as
+        // ONE vectored op group (one ADDB/FDMI record for the batch)
+        let read_exts: Vec<Extent> = merged
+            .iter()
+            .map(|(s, e)| Extent::new(*s, e - s))
+            .collect();
+        let bufs = client.readv(&obj, &read_exts)?;
+        let mut extents: Vec<(u64, Vec<u8>)> = merged
+            .iter()
+            .zip(bufs)
+            .map(|((s, _), buf)| (*s, buf))
+            .collect();
+        // apply parts in order (each lies inside exactly one envelope)
+        let mut new_size = size;
+        for (off, data) in parts {
+            if data.is_empty() {
+                continue;
+            }
+            let end = off + data.len() as u64;
+            new_size = new_size.max(end);
+            for (s, buf) in extents.iter_mut() {
+                if *off >= *s && end <= *s + buf.len() as u64 {
+                    let i = (*off - *s) as usize;
+                    buf[i..i + data.len()].copy_from_slice(data);
+                    break;
+                }
+            }
+        }
+        // one batched, persist-by-move op group for the whole call
+        client.writev_owned(&obj, extents)?;
         client.store.index_mut(self.ns)?.put(
             p.into_bytes(),
             Inode::File { obj, size: new_size }.encode(),
@@ -166,9 +225,14 @@ impl PosixGateway {
         let bs = self.block_size;
         let start = offset / bs * bs;
         let end = (offset + len).div_ceil(bs) * bs;
-        let buf = client.read_object(&obj, start, end - start)?;
+        // §Perf: fill one buffer in place, then trim the alignment slack
+        // — no second allocation + copy for the envelope
+        let mut buf = vec![0u8; (end - start) as usize];
+        client.read_object_into(&obj, start, &mut buf)?;
         let off_in = (offset - start) as usize;
-        Ok(buf[off_in..off_in + len as usize].to_vec())
+        buf.drain(..off_in);
+        buf.truncate(len as usize);
+        Ok(buf)
     }
 
     /// readdir: immediate children of a directory.
@@ -255,6 +319,43 @@ mod tests {
         assert_eq!(back, b"XYZXYZXYZ");
         let before = gw.read(&mut c, "/f", 3000, 1090).unwrap();
         assert_eq!(&before[..], &payload[..1090]);
+    }
+
+    #[test]
+    fn writev_matches_sequential_pwrites() {
+        let (mut cb, gb) = setup();
+        let (mut cs, gs) = setup();
+        gb.create(&mut cb, "/v").unwrap();
+        gs.create(&mut cs, "/v").unwrap();
+        // scattered parts; the middle two share an edge block and the
+        // last two overlap outright (later part must win)
+        let a: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
+        let parts: Vec<(u64, &[u8])> = vec![
+            (100, &a[..1000]),
+            (4000, &a[1000..2500]),
+            (4096 + 200, &a[2500..3000]),
+            (20_000, &a[3000..5000]),
+            (20_500, &a[..800]),
+        ];
+        gb.writev(&mut cb, "/v", &parts).unwrap();
+        for (off, data) in &parts {
+            gs.write(&mut cs, "/v", *off, data).unwrap();
+        }
+        assert_eq!(gb.size(&cb, "/v").unwrap(), gs.size(&cs, "/v").unwrap());
+        let nb = gb.read(&mut cb, "/v", 0, 30_000).unwrap();
+        let ns = gs.read(&mut cs, "/v", 0, 30_000).unwrap();
+        assert_eq!(nb, ns, "batched pwritev == sequential pwrites");
+    }
+
+    #[test]
+    fn zero_length_write_is_a_posix_noop() {
+        let (mut c, gw) = setup();
+        gw.create(&mut c, "/z").unwrap();
+        gw.write(&mut c, "/z", 0, b"abc").unwrap();
+        // pwrite of 0 bytes past EOF must not extend the file
+        gw.write(&mut c, "/z", 10_000, &[]).unwrap();
+        assert_eq!(gw.size(&c, "/z").unwrap(), 3);
+        assert_eq!(gw.read(&mut c, "/z", 0, 100).unwrap(), b"abc");
     }
 
     #[test]

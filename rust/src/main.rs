@@ -144,6 +144,17 @@ fn demo(args: &Args) -> Result<()> {
     let exec = client.exec.as_ref();
     let (hot, _) = ipic3d::run_real_pipeline(&tb, exec, 5000, 20, 1.5, None)?;
     println!("[demo] streamed {hot} high-energy particles through the pipeline");
+
+    // 4. batched zero-copy checkpointing (writev_owned / readv)
+    let (hot2, ckpt, index) =
+        ipic3d::run_checkpointed_pipeline(&mut client, 5000, 20, 1.5, 8)?;
+    let restored = ipic3d::restore_checkpoint(&mut client, &ckpt, &index)?;
+    let persisted: u64 = restored.iter().map(|b| b.len() as u64).sum();
+    assert_eq!(persisted, hot2);
+    println!(
+        "[demo] checkpointed {persisted} hot particles across {} step batches",
+        index.len()
+    );
     println!("[demo] all OK");
     Ok(())
 }

@@ -24,6 +24,8 @@ pub mod layout;
 pub mod object;
 pub mod pool;
 pub mod sns;
+#[doc(hidden)]
+pub mod sns_baseline;
 
 use std::collections::HashMap;
 
@@ -132,6 +134,20 @@ impl MeroStore {
         sns::write(self, id, offset, sns::Payload::Real(data), now, exec)
     }
 
+    /// Write an owned buffer through the SNS engine (§Perf
+    /// persist-by-move: the buffer becomes the object's block storage
+    /// without a copy). Returns completion time.
+    pub fn write_object_owned(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        data: Vec<u8>,
+        now: SimTime,
+        exec: Option<&crate::runtime::Executor>,
+    ) -> Result<SimTime> {
+        sns::write(self, id, offset, sns::Payload::Owned(data), now, exec)
+    }
+
     /// Phantom write: account placement + time for `len` bytes without
     /// materializing them (used by paper-scale benchmarks).
     pub fn write_object_phantom(
@@ -154,6 +170,19 @@ impl MeroStore {
         now: SimTime,
     ) -> Result<(Vec<u8>, SimTime)> {
         sns::read(self, id, offset, len, now)
+    }
+
+    /// Read `dst.len()` bytes at `offset` directly into `dst` (§Perf:
+    /// the healthy RAID path performs no allocation; the caller can
+    /// reuse one buffer across reads). Returns completion time.
+    pub fn read_object_into(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        dst: &mut [u8],
+        now: SimTime,
+    ) -> Result<SimTime> {
+        sns::read_into(self, id, offset, dst, now)
     }
 
     /// Phantom read: time accounting only.

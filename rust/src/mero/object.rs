@@ -5,8 +5,23 @@
 //! granularity." Block payloads live in a sparse map so petabyte-scale
 //! *phantom* objects (benchmarks) carry no memory cost, while real
 //! objects round-trip bytes exactly.
+//!
+//! ## Zero-copy segment storage (§Perf)
+//!
+//! Payloads are stored as **segments**: one write extent persists as a
+//! single shared buffer (`Arc<Vec<u8>>`) plus one map entry covering
+//! all its blocks — a 64 MiB write costs one buffer move (owned
+//! payloads, [`Mobject::put_blocks`]) or one bulk copy, not ~16k
+//! per-block allocations and map inserts. Overwrites split the
+//! affected segments at block granularity (head/tail keep *views* into
+//! the original buffer — still no payload copies). Per-block CRC32s
+//! live inline in the segment. Reads walk the few segments overlapping
+//! the range and bulk-copy each overlap ([`Mobject::read_range_into`]),
+//! zero-filling sparse gaps. Parity units are `Arc`-shared so
+//! multi-parity layouts store one payload, not `p` deep clones.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::cluster::DeviceId;
 use crate::error::{Result, SageError};
@@ -31,24 +46,34 @@ pub struct PlacedUnit {
     pub is_parity: bool,
 }
 
-/// An object: metadata + sparse block payloads + SNS placement map.
+/// A run of consecutive blocks viewing one shared write buffer.
+#[derive(Debug, Clone)]
+struct Segment {
+    buf: Arc<Vec<u8>>,
+    /// Byte offset of this segment's first block within `buf`.
+    off: usize,
+    /// Number of blocks covered.
+    n: u64,
+    /// CRC32 per covered block (`n` entries).
+    crcs: Vec<u32>,
+}
+
+/// An object: metadata + sparse block segments + SNS placement map.
 #[derive(Debug)]
 pub struct Mobject {
     pub id: ObjectId,
     pub block_size: u64,
     pub layout: Layout,
-    /// Sparse data blocks (block index -> payload). Only blocks written
-    /// through the *real* path exist here.
-    blocks: BTreeMap<u64, Vec<u8>>,
+    /// Sparse, disjoint block segments keyed by first block index.
+    /// Only blocks written through the *real* path exist here.
+    blocks: BTreeMap<u64, Segment>,
     /// SNS unit placements, keyed by (stripe, unit).
     placements: BTreeMap<(u64, u32), PlacedUnit>,
     /// Unit payloads for SNS (parity units included), keyed likewise.
-    /// Present only for real writes.
-    unit_data: BTreeMap<(u64, u32), Vec<u8>>,
+    /// Present only for real writes; `Arc`-shared across parity copies.
+    unit_data: BTreeMap<(u64, u32), Arc<Vec<u8>>>,
     /// Logical extent high-water mark in bytes.
     pub size: u64,
-    /// CRC32 of each written block (integrity checking, §3.2.3).
-    checksums: BTreeMap<u64, u32>,
 }
 
 impl Mobject {
@@ -62,7 +87,6 @@ impl Mobject {
             placements: BTreeMap::new(),
             unit_data: BTreeMap::new(),
             size: 0,
-            checksums: BTreeMap::new(),
         }
     }
 
@@ -77,34 +101,186 @@ impl Mobject {
         Ok(())
     }
 
+    /// Remove block coverage of `[a, b)`, splitting boundary segments.
+    /// Head/tail pieces keep views into their original buffers — no
+    /// payload copies.
+    fn carve(&mut self, a: u64, b: u64) {
+        let bs = self.block_size as usize;
+        // left neighbor extending into [a, b)
+        let left = self
+            .blocks
+            .range(..a)
+            .next_back()
+            .map(|(&k, s)| (k, s.n));
+        if let Some((k, n)) = left {
+            let seg_end = k + n;
+            if seg_end > a {
+                let seg = self.blocks.remove(&k).unwrap();
+                let head_n = a - k;
+                self.blocks.insert(
+                    k,
+                    Segment {
+                        buf: seg.buf.clone(),
+                        off: seg.off,
+                        n: head_n,
+                        crcs: seg.crcs[..head_n as usize].to_vec(),
+                    },
+                );
+                if seg_end > b {
+                    let skip = (b - k) as usize;
+                    self.blocks.insert(
+                        b,
+                        Segment {
+                            buf: seg.buf,
+                            off: seg.off + skip * bs,
+                            n: seg_end - b,
+                            crcs: seg.crcs[skip..].to_vec(),
+                        },
+                    );
+                }
+            }
+        }
+        // segments starting inside [a, b)
+        let keys: Vec<u64> = self.blocks.range(a..b).map(|(&k, _)| k).collect();
+        for k in keys {
+            let seg = self.blocks.remove(&k).unwrap();
+            let seg_end = k + seg.n;
+            if seg_end > b {
+                let skip = (b - k) as usize;
+                self.blocks.insert(
+                    b,
+                    Segment {
+                        buf: seg.buf,
+                        off: seg.off + skip * bs,
+                        n: seg_end - b,
+                        crcs: seg.crcs[skip..].to_vec(),
+                    },
+                );
+            }
+        }
+    }
+
     /// Store a real block payload (length must equal block_size).
     pub fn put_block(&mut self, idx: u64, data: Vec<u8>) {
         debug_assert_eq!(data.len() as u64, self.block_size);
-        self.checksums.insert(idx, crc32fast::hash(&data));
-        self.blocks.insert(idx, data);
-        self.size = self.size.max((idx + 1) * self.block_size);
+        self.put_blocks(idx, Arc::new(data));
+    }
+
+    /// Store a whole write extent as ONE segment sharing ONE buffer
+    /// (§Perf zero-copy path). `data.len()` must be a non-zero
+    /// multiple of block_size; blocks `first_idx..first_idx + n` view
+    /// their slice of `data` without copying.
+    pub fn put_blocks(&mut self, first_idx: u64, data: Arc<Vec<u8>>) {
+        let bs = self.block_size as usize;
+        debug_assert!(bs > 0 && data.len() % bs == 0);
+        let n = (data.len() / bs) as u64;
+        if n == 0 {
+            return;
+        }
+        self.carve(first_idx, first_idx + n);
+        let crcs: Vec<u32> =
+            data.chunks_exact(bs).map(crc32fast::hash).collect();
+        self.blocks
+            .insert(first_idx, Segment { buf: data, off: 0, n, crcs });
+        self.size = self.size.max((first_idx + n) * self.block_size);
+    }
+
+    /// Locate the segment covering `idx`: (first block idx, segment).
+    fn segment_of(&self, idx: u64) -> Option<(u64, &Segment)> {
+        match self.blocks.range(..=idx).next_back() {
+            Some((&k, seg)) if idx < k + seg.n => Some((k, seg)),
+            _ => None,
+        }
     }
 
     /// Fetch a block; zero-filled if never written (sparse semantics).
     pub fn get_block(&self, idx: u64) -> Vec<u8> {
-        self.blocks
-            .get(&idx)
-            .cloned()
-            .unwrap_or_else(|| vec![0; self.block_size as usize])
+        match self.block_ref(idx) {
+            Some(b) => b.to_vec(),
+            None => vec![0; self.block_size as usize],
+        }
     }
 
     /// Borrow a block's payload without copying (None = sparse zeros).
     pub fn block_ref(&self, idx: u64) -> Option<&[u8]> {
-        self.blocks.get(&idx).map(|v| v.as_slice())
+        let bs = self.block_size as usize;
+        self.segment_of(idx).map(|(k, seg)| {
+            let start = seg.off + ((idx - k) as usize) * bs;
+            &seg.buf[start..start + bs]
+        })
+    }
+
+    /// Iterate the materialized blocks in `[first, last]` in index
+    /// order, borrowing payloads.
+    pub fn blocks_in(
+        &self,
+        first: u64,
+        last: u64,
+    ) -> impl Iterator<Item = (u64, &[u8])> {
+        let bs = self.block_size as usize;
+        let start_key = match self.blocks.range(..=first).next_back() {
+            Some((&k, seg)) if k + seg.n > first => k,
+            _ => first,
+        };
+        self.blocks
+            .range(start_key..=last)
+            .flat_map(move |(&k, seg)| {
+                (0..seg.n).filter_map(move |i| {
+                    let idx = k + i;
+                    if idx < first || idx > last {
+                        return None;
+                    }
+                    let start = seg.off + i as usize * bs;
+                    Some((idx, &seg.buf[start..start + bs]))
+                })
+            })
+    }
+
+    /// Fill `dst` with the logical bytes at `offset`: every byte of
+    /// `dst` is written — segment overlaps are bulk-copied (one memcpy
+    /// per segment, §Perf), sparse gaps zero-filled. `offset`/`len`
+    /// need not be block-aligned.
+    pub fn read_range_into(&self, offset: u64, dst: &mut [u8]) {
+        let bs = self.block_size;
+        let len = dst.len() as u64;
+        if len == 0 {
+            return;
+        }
+        let first = offset / bs;
+        let last = (offset + len - 1) / bs;
+        let start_key = match self.blocks.range(..=first).next_back() {
+            Some((&k, seg)) if k + seg.n > first => k,
+            _ => first,
+        };
+        let mut cursor = 0usize; // next byte of dst not yet written
+        for (&k, seg) in self.blocks.range(start_key..=last) {
+            let byte_start = (k * bs).max(offset);
+            let byte_end = ((k + seg.n) * bs).min(offset + len);
+            if byte_start >= byte_end {
+                continue;
+            }
+            let d0 = (byte_start - offset) as usize;
+            let d1 = (byte_end - offset) as usize;
+            if d0 > cursor {
+                dst[cursor..d0].fill(0); // sparse gap
+            }
+            let src = seg.off + (byte_start - k * bs) as usize;
+            dst[d0..d1].copy_from_slice(&seg.buf[src..src + (d1 - d0)]);
+            cursor = d1;
+        }
+        if cursor < dst.len() {
+            dst[cursor..].fill(0);
+        }
     }
 
     /// Verify a block against its stored checksum. Blocks never written
     /// (or phantom) trivially pass.
     pub fn verify_block(&self, idx: u64) -> Result<()> {
-        if let (Some(data), Some(&sum)) =
-            (self.blocks.get(&idx), self.checksums.get(&idx))
-        {
-            if crc32fast::hash(data) != sum {
+        let bs = self.block_size as usize;
+        if let Some((k, seg)) = self.segment_of(idx) {
+            let i = (idx - k) as usize;
+            let start = seg.off + i * bs;
+            if crc32fast::hash(&seg.buf[start..start + bs]) != seg.crcs[i] {
                 return Err(SageError::Integrity(format!(
                     "object {:?} block {idx} checksum mismatch",
                     self.id
@@ -115,11 +291,27 @@ impl Mobject {
     }
 
     /// Corrupt a block in place (test hook for integrity checking).
+    /// The block is re-homed to a private single-block segment that
+    /// keeps the ORIGINAL checksum, so sibling blocks sharing the
+    /// write buffer are unaffected and verification now fails.
     #[doc(hidden)]
     pub fn corrupt_block(&mut self, idx: u64, byte: usize) {
-        if let Some(b) = self.blocks.get_mut(&idx) {
-            b[byte] ^= 0xFF;
-        }
+        let bs = self.block_size as usize;
+        let (own, old_crc) = match self.segment_of(idx) {
+            Some((k, seg)) => {
+                let i = (idx - k) as usize;
+                let start = seg.off + i * bs;
+                (seg.buf[start..start + bs].to_vec(), seg.crcs[i])
+            }
+            None => return,
+        };
+        let mut own = own;
+        own[byte] ^= 0xFF;
+        self.carve(idx, idx + 1);
+        self.blocks.insert(
+            idx,
+            Segment { buf: Arc::new(own), off: 0, n: 1, crcs: vec![old_crc] },
+        );
     }
 
     /// Record an SNS unit placement.
@@ -137,9 +329,10 @@ impl Mobject {
         self.placements.values()
     }
 
-    /// Store an SNS unit payload (real path).
-    pub fn put_unit(&mut self, stripe: u64, unit: u32, data: Vec<u8>) {
-        self.unit_data.insert((stripe, unit), data);
+    /// Store an SNS unit payload (real path). Accepts an owned `Vec`
+    /// or an `Arc` already shared with sibling parity units.
+    pub fn put_unit<T: Into<Arc<Vec<u8>>>>(&mut self, stripe: u64, unit: u32, data: T) {
+        self.unit_data.insert((stripe, unit), data.into());
     }
 
     /// Fetch an SNS unit payload.
@@ -154,7 +347,7 @@ impl Mobject {
 
     /// Number of materialized (real) blocks.
     pub fn real_blocks(&self) -> usize {
-        self.blocks.len()
+        self.blocks.values().map(|s| s.n as usize).sum()
     }
 
     /// Drop all placements and unit payloads (HSM re-tiering: the next
@@ -220,5 +413,102 @@ mod tests {
         assert_eq!(o.get_unit(2, 1), Some(&[1u8, 2, 3][..]));
         o.drop_unit(2, 1);
         assert_eq!(o.get_unit(2, 1), None);
+    }
+
+    #[test]
+    fn put_blocks_shares_one_buffer() {
+        let mut o = obj();
+        let mut payload = vec![0u8; 4 * 4096];
+        for (i, b) in payload.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let buf = Arc::new(payload.clone());
+        o.put_blocks(2, buf.clone());
+        // one segment view + the caller's handle — no deep copies
+        assert_eq!(Arc::strong_count(&buf), 2);
+        assert_eq!(o.real_blocks(), 4);
+        assert_eq!(o.size, 6 * 4096);
+        for i in 0..4u64 {
+            let want = &payload[i as usize * 4096..(i as usize + 1) * 4096];
+            assert_eq!(o.block_ref(2 + i), Some(want));
+            assert!(o.verify_block(2 + i).is_ok());
+        }
+        assert_eq!(o.block_ref(1), None);
+        assert_eq!(o.block_ref(6), None);
+    }
+
+    #[test]
+    fn blocks_in_walks_range_in_order() {
+        let mut o = obj();
+        o.put_blocks(1, Arc::new(vec![1u8; 2 * 4096]));
+        o.put_block(7, vec![7u8; 4096]);
+        let seen: Vec<u64> = o.blocks_in(0, 10).map(|(i, _)| i).collect();
+        assert_eq!(seen, vec![1, 2, 7]);
+        let seen: Vec<u64> = o.blocks_in(2, 6).map(|(i, _)| i).collect();
+        assert_eq!(seen, vec![2]);
+    }
+
+    #[test]
+    fn overwrite_splits_segments_without_copying_payloads() {
+        let mut o = obj();
+        let base = Arc::new(vec![1u8; 6 * 4096]);
+        o.put_blocks(0, base.clone());
+        // overwrite blocks 2..4: head [0,2), new [2,4), tail [4,6)
+        o.put_blocks(2, Arc::new(vec![9u8; 2 * 4096]));
+        // head and tail still VIEW the original buffer (no deep copy)
+        assert_eq!(Arc::strong_count(&base), 3, "base + head + tail views");
+        assert_eq!(o.real_blocks(), 6);
+        for i in [0u64, 1, 4, 5] {
+            assert_eq!(o.block_ref(i).unwrap()[0], 1, "block {i}");
+            assert!(o.verify_block(i).is_ok(), "block {i}");
+        }
+        for i in [2u64, 3] {
+            assert_eq!(o.block_ref(i).unwrap()[0], 9, "block {i}");
+            assert!(o.verify_block(i).is_ok(), "block {i}");
+        }
+    }
+
+    #[test]
+    fn read_range_into_bulk_copies_and_zero_fills() {
+        let mut o = obj();
+        let mut payload = vec![0u8; 2 * 4096];
+        for (i, b) in payload.iter_mut().enumerate() {
+            *b = (i % 253) as u8;
+        }
+        o.put_blocks(1, Arc::new(payload.clone()));
+        // dirty destination spanning [0, 4) blocks
+        let mut dst = vec![0xEEu8; 4 * 4096];
+        o.read_range_into(0, &mut dst);
+        assert_eq!(&dst[..4096], &vec![0u8; 4096][..], "gap before");
+        assert_eq!(&dst[4096..3 * 4096], &payload[..]);
+        assert_eq!(&dst[3 * 4096..], &vec![0u8; 4096][..], "gap after");
+        // unaligned sub-range
+        let mut small = vec![0xEEu8; 100];
+        o.read_range_into(4096 + 50, &mut small);
+        assert_eq!(&small[..], &payload[50..150]);
+    }
+
+    #[test]
+    fn corrupting_one_shared_block_spares_siblings() {
+        let mut o = obj();
+        o.put_blocks(0, Arc::new(vec![3u8; 3 * 4096]));
+        o.corrupt_block(1, 0);
+        assert!(o.verify_block(0).is_ok());
+        assert!(o.verify_block(1).is_err());
+        assert!(o.verify_block(2).is_ok());
+        assert_eq!(o.block_ref(0).unwrap()[0], 3);
+        assert_eq!(o.block_ref(1).unwrap()[0], 3 ^ 0xFF);
+        assert_eq!(o.real_blocks(), 3);
+    }
+
+    #[test]
+    fn overwrite_replaces_block_view() {
+        let mut o = obj();
+        o.put_blocks(0, Arc::new(vec![1u8; 2 * 4096]));
+        o.put_block(0, vec![9u8; 4096]);
+        assert_eq!(o.block_ref(0).unwrap()[0], 9);
+        assert_eq!(o.block_ref(1).unwrap()[0], 1);
+        assert!(o.verify_block(0).is_ok());
+        assert!(o.verify_block(1).is_ok());
     }
 }

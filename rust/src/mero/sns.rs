@@ -12,18 +12,44 @@
 //! otherwise a CPU XOR fallback computes the same bytes. Virtual-time
 //! cost is always modelled from the enclosure's compute capability —
 //! wall-clock kernel time on the build machine is not a TPU proxy.
+//!
+//! ## §Perf: the zero-copy batched write/read engine
+//!
+//! The hot path avoids per-stripe and per-unit map traffic and buffer
+//! churn:
+//! * a **placement plan** (flat `Vec<PlanUnit>`) is computed once per
+//!   write/read, replacing the per-unit `store.object()?.placement()`
+//!   double map lookup of the old engine;
+//! * partial-stripe RMW reuses one **scratch unit buffer set** across
+//!   stripes instead of allocating `data` fresh `Vec<u8>`s per stripe;
+//! * parity is stored **`Arc`-shared** across parity units — one
+//!   payload for p >= 1, never a deep clone per unit;
+//! * the logical bytes of a write persist as **one shared buffer**
+//!   ([`Mobject::put_blocks`]): zero-copy for [`Payload::Owned`]
+//!   (persist-by-move), one bulk copy for [`Payload::Real`];
+//! * [`read_into`] fills a caller-provided buffer — no per-read
+//!   allocation, and the healthy path is a single ordered walk of the
+//!   block map instead of a lookup per block.
+//!
+//! `sns_baseline` preserves the pre-optimization engine as the
+//! differential-test oracle and the benchmark baseline.
+
+use std::sync::Arc;
 
 use crate::error::{Result, SageError};
 use crate::mero::layout::Layout;
-use crate::mero::object::{ObjectId, PlacedUnit};
+use crate::mero::object::{Mobject, ObjectId, PlacedUnit};
 use crate::mero::MeroStore;
 use crate::runtime::Executor;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, DeviceKind, IoOp};
 
-/// Real bytes or a phantom length (time/placement accounting only).
+/// Real bytes (borrowed or owned) or a phantom length (time/placement
+/// accounting only). [`Payload::Owned`] enables persist-by-move: the
+/// buffer becomes the object's block storage without a copy.
 pub enum Payload<'a> {
     Real(&'a [u8]),
+    Owned(Vec<u8>),
     Phantom(u64),
 }
 
@@ -31,11 +57,17 @@ impl Payload<'_> {
     fn len(&self) -> u64 {
         match self {
             Payload::Real(d) => d.len() as u64,
+            Payload::Owned(d) => d.len() as u64,
             Payload::Phantom(l) => *l,
         }
     }
-    fn is_real(&self) -> bool {
-        matches!(self, Payload::Real(_))
+    /// Borrow the real bytes (None for phantom payloads).
+    fn bytes(&self) -> Option<&[u8]> {
+        match self {
+            Payload::Real(d) => Some(d),
+            Payload::Owned(d) => Some(d.as_slice()),
+            Payload::Phantom(_) => None,
+        }
     }
 }
 
@@ -56,7 +88,7 @@ pub fn write(
     if len == 0 {
         return Ok(now);
     }
-    let (block_size, layout) = {
+    let (_block_size, layout) = {
         let obj = store.object(id)?;
         obj.check_aligned(offset, len)?;
         (obj.block_size, obj.layout.clone())
@@ -68,13 +100,10 @@ pub fn write(
     }
 
     // Transparent compression: stripe the deflated bytes.
-    let compressed;
     let payload = if layout.compressed() {
         match payload {
-            Payload::Real(d) => {
-                compressed = deflate(d);
-                Payload::Real(&compressed)
-            }
+            Payload::Real(d) => Payload::Owned(deflate(d)),
+            Payload::Owned(d) => Payload::Owned(deflate(&d)),
             Payload::Phantom(l) => Payload::Phantom(estimate_compressed(l)),
         }
     } else {
@@ -84,7 +113,7 @@ pub fn write(
     match layout.at_offset(offset).clone() {
         Layout::Raid { data, parity, unit, tier } => write_raid(
             store, id, offset, payload, now, exec,
-            RaidGeom { data, parity, unit, tier }, block_size,
+            RaidGeom { data, parity, unit, tier },
         ),
         Layout::Mirror { copies, tier } => {
             write_mirror(store, id, offset, payload, now, copies, tier)
@@ -116,6 +145,46 @@ impl RaidGeom {
     }
 }
 
+/// One unit of a write/read placement plan: the per-unit facts the hot
+/// loops need, gathered in a single pass (§Perf).
+#[derive(Clone, Copy)]
+struct PlanUnit {
+    device: usize,
+    failed: bool,
+    placed: bool,
+}
+
+/// Flat placement plan for `stripes` x `units_per_stripe`, stripe-major.
+fn build_plan(
+    store: &MeroStore,
+    id: ObjectId,
+    first_stripe: u64,
+    last_stripe: u64,
+    g: RaidGeom,
+) -> Result<Vec<PlanUnit>> {
+    let ups = g.units_per_stripe();
+    let n = (last_stripe - first_stripe + 1) as usize * ups as usize;
+    let mut plan = Vec::with_capacity(n);
+    let obj = store.object(id)?;
+    for stripe in first_stripe..=last_stripe {
+        for u in 0..ups {
+            match obj.placement(stripe, u) {
+                Some(pu) => plan.push(PlanUnit {
+                    device: pu.device,
+                    failed: store.cluster.devices[pu.device].failed,
+                    placed: true,
+                }),
+                None => plan.push(PlanUnit {
+                    device: 0,
+                    failed: false,
+                    placed: false,
+                }),
+            }
+        }
+    }
+    Ok(plan)
+}
+
 fn write_raid(
     store: &mut MeroStore,
     id: ObjectId,
@@ -124,75 +193,86 @@ fn write_raid(
     now: SimTime,
     exec: Option<&Executor>,
     g: RaidGeom,
-    _block_size: u64,
 ) -> Result<SimTime> {
     let len = payload.len();
     let width = g.stripe_width();
     let first_stripe = offset / width;
     let last_stripe = (offset + len - 1) / width;
+    let ups = g.units_per_stripe() as usize;
+
+    // ---- placement (first touch) + plan: once per write, not per unit
+    for stripe in first_stripe..=last_stripe {
+        ensure_placement(store, id, stripe, g)?;
+    }
+    let plan = build_plan(store, id, first_stripe, last_stripe, g)?;
+
     let mut done = now;
+    // RMW scratch units: allocated on the first partial stripe, reused
+    // for every later one (§Perf: no per-stripe buffer churn).
+    let mut scratch: Vec<Vec<u8>> = Vec::new();
 
     for stripe in first_stripe..=last_stripe {
         let sbase = stripe * width;
         let wstart = offset.max(sbase);
         let wend = (offset + len).min(sbase + width);
         let full_stripe = wstart == sbase && wend == sbase + width;
+        let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
 
         // ---- parity over the stripe's data units ------------------------
         // Full stripes: XOR directly over slices of the caller's buffer
-        // (no unit copies — the §Perf hot-path fix). Partial stripes:
-        // assemble patched units from the block map (RMW).
-        let parity_unit: Option<Vec<u8>> = if payload.is_real() && g.parity > 0 {
-            let data = match &payload {
-                Payload::Real(d) => *d,
-                _ => unreachable!(),
-            };
-            if full_stripe {
-                let slices: Vec<&[u8]> = (0..g.data)
-                    .map(|u| {
-                        let ustart = (sbase + u as u64 * g.unit - offset) as usize;
-                        &data[ustart..ustart + g.unit as usize]
-                    })
-                    .collect();
-                Some(compute_parity_slices(&slices, exec)?)
-            } else {
-                let mut units: Vec<Vec<u8>> = Vec::with_capacity(g.data as usize);
-                for u in 0..g.data {
-                    let ustart = sbase + u as u64 * g.unit;
-                    let uend = ustart + g.unit;
-                    // read-modify-write: start from the old logical bytes
-                    let mut buf =
-                        read_logical(store.object(id)?, ustart, g.unit);
-                    let ov_start = wstart.max(ustart);
-                    let ov_end = wend.min(uend);
-                    if ov_start < ov_end {
-                        buf[(ov_start - ustart) as usize
-                            ..(ov_end - ustart) as usize]
-                            .copy_from_slice(
-                                &data[(ov_start - offset) as usize
-                                    ..(ov_end - offset) as usize],
-                            );
+        // (no unit copies). Partial stripes: patch the reusable scratch
+        // units from the block map (RMW).
+        let parity_unit: Option<Vec<u8>> = match payload.bytes() {
+            Some(data) if g.parity > 0 => {
+                if full_stripe {
+                    let slices: Vec<&[u8]> = (0..g.data)
+                        .map(|u| {
+                            let ustart =
+                                (sbase + u as u64 * g.unit - offset) as usize;
+                            &data[ustart..ustart + g.unit as usize]
+                        })
+                        .collect();
+                    Some(compute_parity_slices(&slices, exec)?)
+                } else {
+                    if scratch.is_empty() {
+                        scratch =
+                            vec![vec![0u8; g.unit as usize]; g.data as usize];
                     }
-                    units.push(buf);
+                    let obj = store.object(id)?;
+                    for (u, buf) in scratch.iter_mut().enumerate() {
+                        let ustart = sbase + u as u64 * g.unit;
+                        let uend = ustart + g.unit;
+                        // read-modify-write: start from the old logical
+                        // bytes (zero-filled where sparse) …
+                        read_logical_into(obj, ustart, buf);
+                        // … then patch in the new bytes
+                        let ov_start = wstart.max(ustart);
+                        let ov_end = wend.min(uend);
+                        if ov_start < ov_end {
+                            buf[(ov_start - ustart) as usize
+                                ..(ov_end - ustart) as usize]
+                                .copy_from_slice(
+                                    &data[(ov_start - offset) as usize
+                                        ..(ov_end - offset) as usize],
+                                );
+                        }
+                    }
+                    Some(compute_parity(&scratch, exec)?)
                 }
-                Some(compute_parity(&units, exec)?)
             }
-        } else {
-            None
+            _ => None,
         };
-
-        // ---- placement (first touch) -----------------------------------
-        ensure_placement(store, id, stripe, g)?;
 
         // ---- RMW read cost for partial stripes --------------------------
         let mut t_stripe = now;
         if !full_stripe {
             // must read old data units + parity to recompute parity
             let mut t_read = now;
-            for u in 0..g.units_per_stripe() {
-                let dev = store.object(id)?.placement(stripe, u).unwrap().device;
-                if !store.cluster.devices[dev].failed {
-                    let t = store.cluster.io(dev, now, g.unit, IoOp::Read, Access::Random);
+            for pu in punits {
+                if pu.placed && !pu.failed {
+                    let t = store
+                        .cluster
+                        .io(pu.device, now, g.unit, IoOp::Read, Access::Random);
                     t_read = t_read.max(t);
                 }
             }
@@ -201,37 +281,33 @@ fn write_raid(
 
         // ---- parity compute cost ----------------------------------------
         if g.parity > 0 {
-            let node = {
-                let dev = store.object(id)?.placement(stripe, 0).unwrap().device;
-                store.cluster.node_of(dev).unwrap_or(0)
-            };
-            let _ = node;
             t_stripe += (g.data as u64 * g.unit) as f64 / XOR_BW;
         }
 
         // ---- unit writes (parallel across distinct devices) -------------
         let mut t_done = t_stripe;
-        for u in 0..g.units_per_stripe() {
-            let pu = *store.object(id)?.placement(stripe, u).unwrap();
-            if store.cluster.devices[pu.device].failed {
+        for pu in punits {
+            if !pu.placed || pu.failed {
                 continue; // degraded write: skip failed device
             }
             let t_net = store.cluster.net.pt2pt(g.unit);
-            let t = store
-                .cluster
-                .io(pu.device, t_stripe + t_net, g.unit, IoOp::Write, Access::Seq);
+            let t = store.cluster.io(
+                pu.device,
+                t_stripe + t_net,
+                g.unit,
+                IoOp::Write,
+                Access::Seq,
+            );
             t_done = t_done.max(t);
         }
 
-        // ---- persist parity (data units live in the block map) ---------
+        // ---- persist parity (data units live in the block map) ----------
+        // One Arc-shared payload serves every parity unit of the stripe.
         if let Some(p) = parity_unit {
+            let shared: Arc<Vec<u8>> = Arc::new(p);
             let obj = store.object_mut(id)?;
             for pi in 0..g.parity {
-                if pi + 1 == g.parity {
-                    obj.put_unit(stripe, g.data + pi, p);
-                    break;
-                }
-                obj.put_unit(stripe, g.data + pi, p.clone());
+                obj.put_unit(stripe, g.data + pi, shared.clone());
             }
         }
 
@@ -239,20 +315,40 @@ fn write_raid(
     }
 
     // update logical size + store real blocks for block-granular access
-    if let Payload::Real(data) = payload {
-        let obj = store.object_mut(id)?;
-        let bs = obj.block_size;
-        for (i, chunk) in data.chunks(bs as usize).enumerate() {
-            let mut block = chunk.to_vec();
-            block.resize(bs as usize, 0);
-            obj.put_block(offset / bs + i as u64, block);
-        }
-    } else {
+    if let Payload::Phantom(_) = payload {
         let obj = store.object_mut(id)?;
         obj.size = obj.size.max(offset + len);
+    } else {
+        persist_extent(store, id, offset, payload)?;
     }
 
     Ok(done)
+}
+
+/// Persist a real write extent into the block map as ONE shared buffer:
+/// owned payloads move in without a copy, borrowed payloads cost a
+/// single bulk copy (§Perf).
+fn persist_extent(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    payload: Payload<'_>,
+) -> Result<()> {
+    let bs = store.object(id)?.block_size;
+    let mut data = match payload {
+        Payload::Owned(d) => d,
+        Payload::Real(d) => {
+            let rounded = crate::util::round_up(d.len() as u64, bs) as usize;
+            let mut v = Vec::with_capacity(rounded);
+            v.extend_from_slice(d);
+            v
+        }
+        Payload::Phantom(_) => return Ok(()),
+    };
+    let rounded = crate::util::round_up(data.len() as u64, bs) as usize;
+    data.resize(rounded, 0);
+    store.object_mut(id)?.put_blocks(offset / bs, Arc::new(data));
+    Ok(())
 }
 
 fn write_mirror(
@@ -293,15 +389,7 @@ fn write_mirror(
         let t = store.cluster.io(d, now + t_net, len, IoOp::Write, Access::Seq);
         t_done = t_done.max(t);
     }
-    if let Payload::Real(data) = payload {
-        let obj = store.object_mut(id)?;
-        let bs = obj.block_size;
-        for (i, chunk) in data.chunks(bs as usize).enumerate() {
-            let mut block = chunk.to_vec();
-            block.resize(bs as usize, 0);
-            obj.put_block(offset / bs + i as u64, block);
-        }
-    }
+    persist_extent(store, id, offset, payload)?;
     Ok(t_done)
 }
 
@@ -359,34 +447,19 @@ pub fn compute_parity_slices(units: &[&[u8]], exec: Option<&Executor>) -> Result
 /// Read a logical byte range from the object's block map (sparse
 /// blocks read as zeros). The block map is the single store for data;
 /// SNS unit payloads exist only for parity.
-fn read_logical(obj: &crate::mero::object::Mobject, offset: u64, len: u64) -> Vec<u8> {
+fn read_logical(obj: &Mobject, offset: u64, len: u64) -> Vec<u8> {
     let mut out = vec![0u8; len as usize];
     read_logical_into(obj, offset, &mut out);
     out
 }
 
-/// Copy a logical byte range directly into `dst` (zero-copy read path:
-/// no intermediate unit buffer).
-fn read_logical_into(obj: &crate::mero::object::Mobject, offset: u64, dst: &mut [u8]) {
-    let bs = obj.block_size;
-    let len = dst.len() as u64;
-    if len == 0 {
-        return;
-    }
-    let first = offset / bs;
-    let last = (offset + len - 1) / bs;
-    for b in first..=last {
-        let bstart = b * bs;
-        let ov_start = offset.max(bstart);
-        let ov_end = (offset + len).min(bstart + bs);
-        if let Some(block) = obj.block_ref(b) {
-            dst[(ov_start - offset) as usize..(ov_end - offset) as usize]
-                .copy_from_slice(
-                    &block[(ov_start - bstart) as usize
-                        ..(ov_end - bstart) as usize],
-                );
-        }
-    }
+/// Fill `dst` with the logical bytes at `offset` (zero-copy read path:
+/// no intermediate unit buffer). Every byte of `dst` is written:
+/// materialized segments are bulk-copied in one ordered walk of the
+/// segment map (§Perf: one memcpy per segment, no per-block lookups),
+/// sparse gaps are zero-filled.
+fn read_logical_into(obj: &Mobject, offset: u64, dst: &mut [u8]) {
+    obj.read_range_into(offset, dst);
 }
 
 /// Pure-CPU XOR parity (u64-lane main loop; byte tail).
@@ -422,11 +495,10 @@ pub fn read(
     len: u64,
     now: SimTime,
 ) -> Result<(Vec<u8>, SimTime)> {
-    let (block_size, layout, size) = {
-        let o = store.object(id)?;
-        (o.block_size, o.layout.clone(), o.size)
-    };
-    let _ = size;
+    if len == 0 {
+        return Ok((Vec::new(), now));
+    }
+    let layout = store.object(id)?.layout.clone();
     store.object(id)?.check_aligned(offset, len)?;
 
     match layout.at_offset(offset).clone() {
@@ -436,58 +508,151 @@ pub fn read(
                 // compressed extents are whole-object: read the stored
                 // (physical) extent, inflate, return the logical bytes
                 let phys = store.object(id)?.size;
-                let (buf, t) = read_raid(store, id, 0, phys.max(len), now, g)?;
+                let mut buf = vec![0u8; phys.max(len) as usize];
+                let t = read_raid_into(store, id, 0, &mut buf, now, g)?;
                 let mut raw = inflate(&buf);
                 raw.resize(len as usize, 0);
                 return Ok((raw, t));
             }
-            let (buf, t) = read_raid(store, id, offset, len, now, g)?;
-            Ok((buf, t))
-        }
-        Layout::Mirror { .. } => {
-            // mirrors: serve from block map, cost = one replica read
-            let mut out = Vec::with_capacity(len as usize);
-            let obj = store.object(id)?;
-            for b in (offset / block_size)..((offset + len) / block_size) {
-                out.extend_from_slice(&obj.get_block(b));
-            }
-            let dev = store
-                .object(id)?
-                .placed_units()
-                .find(|u| !store.cluster.devices[u.device].failed)
-                .map(|u| u.device);
-            let t = match dev {
-                Some(d) => store.cluster.io(d, now, len, IoOp::Read, Access::Seq),
-                None => {
-                    return Err(SageError::Unavailable(
-                        "all mirror replicas failed".into(),
-                    ))
-                }
-            };
+            let mut out = vec![0u8; len as usize];
+            let t = read_raid_into(store, id, offset, &mut out, now, g)?;
             Ok((out, t))
         }
+        Layout::Mirror { .. } => read_mirror(store, id, offset, len, now),
         other => Err(SageError::Invalid(format!(
             "unsupported read layout {other:?}"
         ))),
     }
 }
 
-fn read_raid(
+/// Read `dst.len()` bytes at `offset` directly into `dst` (§Perf: the
+/// caller owns — and can reuse — the destination buffer; the healthy
+/// RAID path performs no allocation at all). Semantically identical to
+/// [`read`], including parity reconstruction under device failures.
+pub fn read_into(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    dst: &mut [u8],
+    now: SimTime,
+) -> Result<SimTime> {
+    let len = dst.len() as u64;
+    if len == 0 {
+        return Ok(now);
+    }
+    let layout = store.object(id)?.layout.clone();
+    store.object(id)?.check_aligned(offset, len)?;
+    match layout.at_offset(offset).clone() {
+        Layout::Raid { data, parity, unit, tier } if !layout.compressed() => {
+            let g = RaidGeom { data, parity, unit, tier };
+            read_raid_into(store, id, offset, dst, now, g)
+        }
+        _ => {
+            // compressed / mirrored layouts: cold path through `read`
+            let (data, t) = read(store, id, offset, len, now)?;
+            dst.copy_from_slice(&data);
+            Ok(t)
+        }
+    }
+}
+
+fn read_mirror(
     store: &mut MeroStore,
     id: ObjectId,
     offset: u64,
     len: u64,
     now: SimTime,
-    g: RaidGeom,
 ) -> Result<(Vec<u8>, SimTime)> {
-    let width = g.stripe_width();
+    // mirrors: serve from block map, cost = one replica read
     let mut out = vec![0u8; len as usize];
-    let mut t_done = now;
+    read_logical_into(store.object(id)?, offset, &mut out);
+    let dev = store
+        .object(id)?
+        .placed_units()
+        .find(|u| !store.cluster.devices[u.device].failed)
+        .map(|u| u.device);
+    let t = match dev {
+        Some(d) => store.cluster.io(d, now, len, IoOp::Read, Access::Seq),
+        None => {
+            return Err(SageError::Unavailable(
+                "all mirror replicas failed".into(),
+            ))
+        }
+    };
+    Ok((out, t))
+}
 
+fn read_raid_into(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    dst: &mut [u8],
+    now: SimTime,
+    g: RaidGeom,
+) -> Result<SimTime> {
+    let len = dst.len() as u64;
+    if len == 0 {
+        return Ok(now);
+    }
+    let width = g.stripe_width();
+    let ups = g.units_per_stripe() as usize;
     let first_stripe = offset / width;
     let last_stripe = (offset + len - 1) / width;
+    let plan = build_plan(store, id, first_stripe, last_stripe, g)?;
+
+    // Degraded only if a *placed data* unit OVERLAPPING the requested
+    // range sits on a failed device — failures of parity units or of
+    // data units outside [offset, offset+len) don't affect this read.
+    let mut degraded = false;
+    'scan: for stripe in first_stripe..=last_stripe {
+        let sbase = stripe * width;
+        let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
+        for u in 0..g.data {
+            let ustart = sbase + u as u64 * g.unit;
+            let uend = ustart + g.unit;
+            if offset.max(ustart) >= (offset + len).min(uend) {
+                continue;
+            }
+            let pu = punits[u as usize];
+            if pu.placed && pu.failed {
+                degraded = true;
+                break 'scan;
+            }
+        }
+    }
+
+    if !degraded {
+        // ---- healthy fast path: ONE bulk copy from the block map ----
+        read_logical_into(store.object(id)?, offset, dst);
+        // device-time accounting per overlapping placed data unit
+        let mut t_done = now;
+        for stripe in first_stripe..=last_stripe {
+            let sbase = stripe * width;
+            let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
+            for u in 0..g.data {
+                let ustart = sbase + u as u64 * g.unit;
+                let uend = ustart + g.unit;
+                if offset.max(ustart) >= (offset + len).min(uend) {
+                    continue;
+                }
+                let pu = punits[u as usize];
+                if pu.placed {
+                    let t = store
+                        .cluster
+                        .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
+                    t_done = t_done.max(t);
+                }
+            }
+        }
+        return Ok(t_done);
+    }
+
+    // ---- degraded path: per-unit copies + parity reconstruction ----
+    dst.fill(0); // reconstruct-to-None (phantom) regions read as zeros
+    let mut t_done = now;
     for stripe in first_stripe..=last_stripe {
         let sbase = stripe * width;
+        let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
         for u in 0..g.data {
             let ustart = sbase + u as u64 * g.unit;
             let uend = ustart + g.unit;
@@ -497,46 +662,39 @@ fn read_raid(
                 continue;
             }
             // never written: sparse zeros, no device I/O
-            let placed = store.object(id)?.placement(stripe, u).copied();
-            let Some(pu) = placed else { continue };
-
-            let failed = store.cluster.devices[pu.device].failed;
-            if !failed {
-                // healthy fast path: copy straight from the block map
-                // into the output (no intermediate unit buffer, §Perf)
-                let t =
-                    store
-                        .cluster
-                        .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
-                let obj = store.object(id)?;
-                if obj.real_blocks() > 0 {
-                    read_logical_into(
-                        obj,
-                        ov_start,
-                        &mut out[(ov_start - offset) as usize
-                            ..(ov_end - offset) as usize],
-                    );
-                }
+            let pu = punits[u as usize];
+            if !pu.placed {
+                continue;
+            }
+            if !pu.failed {
+                // healthy unit: copy straight from the block map
+                let t = store
+                    .cluster
+                    .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
+                read_logical_into(
+                    store.object(id)?,
+                    ov_start,
+                    &mut dst[(ov_start - offset) as usize
+                        ..(ov_end - offset) as usize],
+                );
                 t_done = t_done.max(t);
                 continue;
             }
-            let (bytes, t) = {
-                if g.parity == 0 {
-                    return Err(SageError::Unavailable(format!(
-                        "unit ({stripe},{u}) lost and no parity"
-                    )));
-                }
-                reconstruct_unit(store, id, stripe, u, now, g)?
-            };
+            if g.parity == 0 {
+                return Err(SageError::Unavailable(format!(
+                    "unit ({stripe},{u}) lost and no parity"
+                )));
+            }
+            let (bytes, t) = reconstruct_unit(store, id, stripe, u, now, g)?;
             if let Some(b) = bytes {
-                let dst = (ov_start - offset) as usize..(ov_end - offset) as usize;
-                let src = (ov_start - ustart) as usize..(ov_end - ustart) as usize;
-                out[dst].copy_from_slice(&b[src]);
+                let d = (ov_start - offset) as usize..(ov_end - offset) as usize;
+                let s = (ov_start - ustart) as usize..(ov_end - ustart) as usize;
+                dst[d].copy_from_slice(&b[s]);
             }
             t_done = t_done.max(t);
         }
     }
-    Ok((out, t_done))
+    Ok(t_done)
 }
 
 /// Rebuild one lost data unit from survivors + parity.
@@ -620,8 +778,8 @@ pub fn read_phantom(
     match layout.at_offset(offset).clone() {
         Layout::Raid { data, parity, unit, tier } => {
             let g = RaidGeom { data, parity, unit, tier };
-            let (_, t) = read_raid(store, id, offset, len.min(1 << 30), now, g)?;
-            Ok(t)
+            let mut buf = vec![0u8; len.min(1 << 30) as usize];
+            read_raid_into(store, id, offset, &mut buf, now, g)
         }
         _ => {
             let (_, t) = read(store, id, offset, len, now)?;
@@ -709,16 +867,11 @@ pub fn repair(
 
 // ------------------------------------------------------------ compression
 
-/// Deflate (compressed layouts). Header = [orig_len u64 | comp_len u64]
-/// so inflate can slice the zlib stream out of the zero padding that
-/// unit alignment adds.
+/// Deflate (compressed layouts) via the in-tree run codec. Header =
+/// [orig_len u64 | comp_len u64] so inflate can slice the token stream
+/// out of the zero padding that unit alignment adds.
 fn deflate(data: &[u8]) -> Vec<u8> {
-    use flate2::write::ZlibEncoder;
-    use flate2::Compression;
-    use std::io::Write as _;
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(data).unwrap();
-    let z = enc.finish().unwrap();
+    let z = crate::util::compress::compress(data);
     let mut out = Vec::with_capacity(16 + z.len());
     out.extend_from_slice(&(data.len() as u64).to_le_bytes());
     out.extend_from_slice(&(z.len() as u64).to_le_bytes());
@@ -727,17 +880,13 @@ fn deflate(data: &[u8]) -> Vec<u8> {
 }
 
 fn inflate(data: &[u8]) -> Vec<u8> {
-    use flate2::read::ZlibDecoder;
-    use std::io::Read as _;
     if data.len() < 16 {
         return Vec::new();
     }
     let orig = u64::from_le_bytes(data[0..8].try_into().unwrap()) as usize;
     let clen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
     let body = &data[16..(16 + clen).min(data.len())];
-    let mut dec = ZlibDecoder::new(body);
-    let mut out = Vec::with_capacity(orig);
-    dec.read_to_end(&mut out).ok();
+    let mut out = crate::util::compress::decompress(body);
     out.truncate(orig);
     out
 }
@@ -902,5 +1051,104 @@ mod tests {
         assert_eq!(s.object(id).unwrap().real_blocks(), 0);
         let t2 = s.read_object_phantom(id, 0, 1 << 28, t).unwrap();
         assert!(t2 > t);
+    }
+
+    // ------------------------------------------------ §Perf engine tests
+
+    #[test]
+    fn owned_write_roundtrip_persist_by_move() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 2, 11);
+        let t = s
+            .write_object_owned(id, 0, data.clone(), 0.0, None)
+            .unwrap();
+        assert!(t > 0.0);
+        let (back, _) = s.read_object(id, 0, data.len() as u64, t).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn read_into_matches_read_including_sparse_gaps() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384, 12);
+        // leave stripe 0 sparse; write stripe 1 only
+        s.write_object(id, 4 * 16384, &data, 0.0, None).unwrap();
+        let total = 2 * 4 * 16384u64;
+        let (via_read, _) = s.read_object(id, 0, total, 1.0).unwrap();
+        // dirty destination proves every byte is (re)written
+        let mut via_into = vec![0xAAu8; total as usize];
+        s.read_object_into(id, 0, &mut via_into, 1.0).unwrap();
+        assert_eq!(via_read, via_into);
+        assert_eq!(&via_into[..4 * 16384], &vec![0u8; 4 * 16384][..]);
+        assert_eq!(&via_into[4 * 16384..], &data[..]);
+    }
+
+    #[test]
+    fn read_into_reconstructs_under_failure() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384, 13);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 2).unwrap().device;
+        s.cluster.fail_device(dev);
+        let mut back = vec![0xEEu8; data.len()];
+        let t = s.read_object_into(id, 0, &mut back, 1.0).unwrap();
+        assert_eq!(back, data);
+        assert!(t > 1.0);
+    }
+
+    #[test]
+    fn read_not_touching_failed_unit_stays_on_fast_path() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384, 17);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        // fail the device of data unit 3; read only unit 0's bytes
+        let dev = s.object(id).unwrap().placement(0, 3).unwrap().device;
+        s.cluster.fail_device(dev);
+        let mut buf = vec![0u8; 16384];
+        s.read_object_into(id, 0, &mut buf, 1.0).unwrap();
+        assert_eq!(buf, &data[..16384]);
+        // reading the failed unit itself still reconstructs
+        let mut buf3 = vec![0u8; 16384];
+        s.read_object_into(id, 3 * 16384, &mut buf3, 2.0).unwrap();
+        assert_eq!(buf3, &data[3 * 16384..]);
+    }
+
+    #[test]
+    fn parity_units_share_one_payload() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 2, 2);
+        let data = random_bytes(2 * 16384, 14);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let obj = s.object(id).unwrap();
+        let p0 = obj.get_unit(0, 2).expect("first parity payload");
+        let p1 = obj.get_unit(0, 3).expect("second parity payload");
+        assert_eq!(p0, p1);
+        // same allocation, not a deep clone (§Perf satellite)
+        assert_eq!(p0.as_ptr(), p1.as_ptr());
+    }
+
+    #[test]
+    fn rmw_scratch_reuse_keeps_bytes_exact() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let full = random_bytes(4 * 16384 * 3, 15);
+        s.write_object(id, 0, &full, 0.0, None).unwrap();
+        // one write spanning two partial stripes exercises scratch reuse
+        let patch = random_bytes(4 * 16384, 16);
+        let off = 2 * 16384u64; // middle of stripe 0 into stripe 1
+        s.write_object(id, off, &patch, 1.0, None).unwrap();
+        let mut want = full.clone();
+        want[off as usize..off as usize + patch.len()].copy_from_slice(&patch);
+        let (back, _) = s.read_object(id, 0, want.len() as u64, 2.0).unwrap();
+        assert_eq!(back, want);
+        // parity must match the patched data: degraded read proves it
+        let dev = s.object(id).unwrap().placement(0, 1).unwrap().device;
+        s.cluster.fail_device(dev);
+        let (back2, _) = s.read_object(id, 0, want.len() as u64, 3.0).unwrap();
+        assert_eq!(back2, want);
     }
 }

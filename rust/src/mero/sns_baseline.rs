@@ -1,0 +1,455 @@
+//! The pre-optimization SNS engine, preserved verbatim-in-spirit as
+//! (a) the wall-clock **baseline** for the §Perf hot-path benchmark
+//! (`benches/ablate_sns.rs`) and (b) the **differential-test oracle**
+//! the property tests compare the zero-copy engine against
+//! (`tests/prop_vectored_io.rs`).
+//!
+//! Characteristic costs of this engine — exactly what the §Perf work
+//! in [`super::sns`] removes:
+//! * `store.object()?.placement()` double map lookup per unit, per
+//!   stripe, per write/read;
+//! * a fresh `Vec<u8>` per data unit for every partial-stripe RMW;
+//! * `chunk.to_vec()` + `resize` per 4 KiB block on persist (one heap
+//!   allocation per block);
+//! * `p.clone()` per extra parity unit;
+//! * reads allocate a zeroed output and look blocks up one index at a
+//!   time.
+//!
+//! Plain RAID layouts only (no mirror/compression): that is the hot
+//! path under measurement. Stored state is byte-identical to the
+//! optimized engine's, so reads from either engine interoperate.
+
+use crate::error::{Result, SageError};
+use crate::mero::layout::Layout;
+use crate::mero::object::{Mobject, ObjectId, PlacedUnit};
+use crate::mero::MeroStore;
+use crate::runtime::Executor;
+use crate::sim::clock::SimTime;
+use crate::sim::device::{Access, DeviceKind, IoOp};
+
+use super::sns::{compute_parity, compute_parity_slices, cpu_parity};
+
+/// XOR costing constant (mirror of the engine's).
+const XOR_BW: f64 = 5.0e9;
+
+#[derive(Clone, Copy)]
+struct Geom {
+    data: u32,
+    parity: u32,
+    unit: u64,
+    tier: DeviceKind,
+}
+
+impl Geom {
+    fn stripe_width(&self) -> u64 {
+        self.data as u64 * self.unit
+    }
+    fn units_per_stripe(&self) -> u32 {
+        self.data + self.parity
+    }
+}
+
+fn geom(store: &MeroStore, id: ObjectId, offset: u64) -> Result<Geom> {
+    let layout = store.object(id)?.layout.clone();
+    if layout.compressed() {
+        return Err(SageError::Invalid(
+            "sns_baseline: plain RAID layouts only".into(),
+        ));
+    }
+    match layout.at_offset(offset) {
+        Layout::Raid { data, parity, unit, tier } => Ok(Geom {
+            data: *data,
+            parity: *parity,
+            unit: *unit,
+            tier: *tier,
+        }),
+        _ => Err(SageError::Invalid(
+            "sns_baseline: plain RAID layouts only".into(),
+        )),
+    }
+}
+
+/// Pre-optimization write path (borrowed payload, per-block persist).
+pub fn write(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    data: &[u8],
+    now: SimTime,
+    exec: Option<&Executor>,
+) -> Result<SimTime> {
+    let len = data.len() as u64;
+    if len == 0 {
+        return Ok(now);
+    }
+    store.object(id)?.check_aligned(offset, len)?;
+    let g = geom(store, id, offset)?;
+    let width = g.stripe_width();
+    let first_stripe = offset / width;
+    let last_stripe = (offset + len - 1) / width;
+    let mut done = now;
+
+    for stripe in first_stripe..=last_stripe {
+        let sbase = stripe * width;
+        let wstart = offset.max(sbase);
+        let wend = (offset + len).min(sbase + width);
+        let full_stripe = wstart == sbase && wend == sbase + width;
+
+        // ---- parity: fresh unit buffers per partial stripe -------------
+        let parity_unit: Option<Vec<u8>> = if g.parity > 0 {
+            if full_stripe {
+                let slices: Vec<&[u8]> = (0..g.data)
+                    .map(|u| {
+                        let ustart = (sbase + u as u64 * g.unit - offset) as usize;
+                        &data[ustart..ustart + g.unit as usize]
+                    })
+                    .collect();
+                Some(compute_parity_slices(&slices, exec)?)
+            } else {
+                let mut units: Vec<Vec<u8>> = Vec::with_capacity(g.data as usize);
+                for u in 0..g.data {
+                    let ustart = sbase + u as u64 * g.unit;
+                    let uend = ustart + g.unit;
+                    let mut buf =
+                        read_logical(store.object(id)?, ustart, g.unit);
+                    let ov_start = wstart.max(ustart);
+                    let ov_end = wend.min(uend);
+                    if ov_start < ov_end {
+                        buf[(ov_start - ustart) as usize
+                            ..(ov_end - ustart) as usize]
+                            .copy_from_slice(
+                                &data[(ov_start - offset) as usize
+                                    ..(ov_end - offset) as usize],
+                            );
+                    }
+                    units.push(buf);
+                }
+                Some(compute_parity(&units, exec)?)
+            }
+        } else {
+            None
+        };
+
+        ensure_placement(store, id, stripe, g)?;
+
+        // ---- RMW read cost: placement looked up per unit ---------------
+        let mut t_stripe = now;
+        if !full_stripe {
+            let mut t_read = now;
+            for u in 0..g.units_per_stripe() {
+                let dev = store.object(id)?.placement(stripe, u).unwrap().device;
+                if !store.cluster.devices[dev].failed {
+                    let t =
+                        store.cluster.io(dev, now, g.unit, IoOp::Read, Access::Random);
+                    t_read = t_read.max(t);
+                }
+            }
+            t_stripe = t_read;
+        }
+
+        if g.parity > 0 {
+            t_stripe += (g.data as u64 * g.unit) as f64 / XOR_BW;
+        }
+
+        // ---- unit writes: placement looked up per unit -----------------
+        let mut t_done = t_stripe;
+        for u in 0..g.units_per_stripe() {
+            let pu = *store.object(id)?.placement(stripe, u).unwrap();
+            if store.cluster.devices[pu.device].failed {
+                continue;
+            }
+            let t_net = store.cluster.net.pt2pt(g.unit);
+            let t = store
+                .cluster
+                .io(pu.device, t_stripe + t_net, g.unit, IoOp::Write, Access::Seq);
+            t_done = t_done.max(t);
+        }
+
+        // ---- persist parity: deep clone per extra parity unit ----------
+        if let Some(p) = parity_unit {
+            let obj = store.object_mut(id)?;
+            for pi in 0..g.parity {
+                if pi + 1 == g.parity {
+                    obj.put_unit(stripe, g.data + pi, p);
+                    break;
+                }
+                obj.put_unit(stripe, g.data + pi, p.clone());
+            }
+        }
+
+        done = done.max(t_done);
+    }
+
+    // ---- persist blocks: one allocation + copy per block ---------------
+    {
+        let obj = store.object_mut(id)?;
+        let bs = obj.block_size;
+        for (i, chunk) in data.chunks(bs as usize).enumerate() {
+            let mut block = chunk.to_vec();
+            block.resize(bs as usize, 0);
+            obj.put_block(offset / bs + i as u64, block);
+        }
+    }
+
+    Ok(done)
+}
+
+fn ensure_placement(
+    store: &mut MeroStore,
+    id: ObjectId,
+    stripe: u64,
+    g: Geom,
+) -> Result<()> {
+    if store.object(id)?.placement(stripe, 0).is_some() {
+        return Ok(());
+    }
+    let mut used = Vec::new();
+    for u in 0..g.units_per_stripe() {
+        let d = store.pools.allocate(&mut store.cluster, g.tier, g.unit, &used)?;
+        used.push(d);
+        store.object_mut(id)?.place_unit(PlacedUnit {
+            stripe,
+            unit: u,
+            device: d,
+            size: g.unit,
+            is_parity: u >= g.data,
+        });
+    }
+    Ok(())
+}
+
+/// Pre-optimization read: zeroed output allocation + per-index block
+/// lookups + per-unit placement lookups.
+pub fn read(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    len: u64,
+    now: SimTime,
+) -> Result<(Vec<u8>, SimTime)> {
+    if len == 0 {
+        return Ok((Vec::new(), now));
+    }
+    store.object(id)?.check_aligned(offset, len)?;
+    let g = geom(store, id, offset)?;
+    let width = g.stripe_width();
+    let mut out = vec![0u8; len as usize];
+    let mut t_done = now;
+
+    let first_stripe = offset / width;
+    let last_stripe = (offset + len - 1) / width;
+    for stripe in first_stripe..=last_stripe {
+        let sbase = stripe * width;
+        for u in 0..g.data {
+            let ustart = sbase + u as u64 * g.unit;
+            let uend = ustart + g.unit;
+            let ov_start = offset.max(ustart);
+            let ov_end = (offset + len).min(uend);
+            if ov_start >= ov_end {
+                continue;
+            }
+            let placed = store.object(id)?.placement(stripe, u).copied();
+            let Some(pu) = placed else { continue };
+
+            let failed = store.cluster.devices[pu.device].failed;
+            if !failed {
+                let t = store
+                    .cluster
+                    .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
+                let obj = store.object(id)?;
+                if obj.real_blocks() > 0 {
+                    copy_logical(
+                        obj,
+                        ov_start,
+                        &mut out[(ov_start - offset) as usize
+                            ..(ov_end - offset) as usize],
+                    );
+                }
+                t_done = t_done.max(t);
+                continue;
+            }
+            if g.parity == 0 {
+                return Err(SageError::Unavailable(format!(
+                    "unit ({stripe},{u}) lost and no parity"
+                )));
+            }
+            let (bytes, t) = reconstruct_unit(store, id, stripe, u, now, g)?;
+            if let Some(b) = bytes {
+                let dst = (ov_start - offset) as usize..(ov_end - offset) as usize;
+                let src = (ov_start - ustart) as usize..(ov_end - ustart) as usize;
+                out[dst].copy_from_slice(&b[src]);
+            }
+            t_done = t_done.max(t);
+        }
+    }
+    Ok((out, t_done))
+}
+
+/// Per-block-index logical read into a zeroed buffer (the old cost
+/// profile: one map lookup per block index in the range).
+fn copy_logical(obj: &Mobject, offset: u64, dst: &mut [u8]) {
+    let bs = obj.block_size;
+    let len = dst.len() as u64;
+    if len == 0 {
+        return;
+    }
+    let first = offset / bs;
+    let last = (offset + len - 1) / bs;
+    for b in first..=last {
+        let bstart = b * bs;
+        let ov_start = offset.max(bstart);
+        let ov_end = (offset + len).min(bstart + bs);
+        if let Some(block) = obj.block_ref(b) {
+            dst[(ov_start - offset) as usize..(ov_end - offset) as usize]
+                .copy_from_slice(
+                    &block[(ov_start - bstart) as usize
+                        ..(ov_end - bstart) as usize],
+                );
+        }
+    }
+}
+
+fn read_logical(obj: &Mobject, offset: u64, len: u64) -> Vec<u8> {
+    let mut out = vec![0u8; len as usize];
+    copy_logical(obj, offset, &mut out);
+    out
+}
+
+fn reconstruct_unit(
+    store: &mut MeroStore,
+    id: ObjectId,
+    stripe: u64,
+    lost: u32,
+    now: SimTime,
+    g: Geom,
+) -> Result<(Option<Vec<u8>>, SimTime)> {
+    let mut t_read = now;
+    let mut survivors: Vec<Vec<u8>> = Vec::new();
+    let mut have_all_payloads = store.object(id)?.real_blocks() > 0;
+    let mut alive = 0;
+    let mut lost_data_units = 1;
+    let sbase = stripe * g.stripe_width();
+    for u in 0..g.units_per_stripe() {
+        if u == lost {
+            continue;
+        }
+        let pu = *store
+            .object(id)?
+            .placement(stripe, u)
+            .ok_or_else(|| SageError::Unavailable("missing placement".into()))?;
+        if store.cluster.devices[pu.device].failed {
+            if u < g.data {
+                lost_data_units += 1;
+            }
+            continue;
+        }
+        alive += 1;
+        let t = store
+            .cluster
+            .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
+        t_read = t_read.max(t);
+        if !have_all_payloads {
+            continue;
+        }
+        if u < g.data {
+            let obj = store.object(id)?;
+            survivors.push(read_logical(obj, sbase + u as u64 * g.unit, g.unit));
+        } else {
+            match store.object(id)?.get_unit(stripe, u) {
+                Some(b) => survivors.push(b.to_vec()),
+                None => have_all_payloads = false,
+            }
+        }
+    }
+    if alive < g.data || lost_data_units > 1 {
+        return Err(SageError::Unavailable(format!(
+            "stripe {stripe}: {lost_data_units} data units lost, {alive} live \
+             (XOR parity tolerates one data loss)"
+        )));
+    }
+    let t = t_read + g.unit as f64 * g.data as f64 / XOR_BW;
+    let payload = if have_all_payloads && !survivors.is_empty() {
+        let take = g.data as usize;
+        Some(cpu_parity(&survivors[..take.min(survivors.len())]))
+    } else {
+        None
+    };
+    Ok((payload, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+    use crate::sim::rng::SimRng;
+
+    fn stores() -> (MeroStore, MeroStore) {
+        (
+            MeroStore::new(Testbed::sage_prototype().build_cluster()),
+            MeroStore::new(Testbed::sage_prototype().build_cluster()),
+        )
+    }
+
+    fn raid(s: &mut MeroStore, k: u32, p: u32) -> ObjectId {
+        s.create_object(
+            4096,
+            Layout::Raid { data: k, parity: p, unit: 16384, tier: DeviceKind::Ssd },
+        )
+        .unwrap()
+    }
+
+    fn random_bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = SimRng::new(seed);
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    #[test]
+    fn baseline_and_engine_agree_on_full_stripes() {
+        let (mut a, mut b) = stores();
+        let ida = raid(&mut a, 4, 1);
+        let idb = raid(&mut b, 4, 1);
+        let data = random_bytes(4 * 16384 * 2, 21);
+        write(&mut a, ida, 0, &data, 0.0, None).unwrap();
+        b.write_object(idb, 0, &data, 0.0, None).unwrap();
+        let (ra, _) = read(&mut a, ida, 0, data.len() as u64, 1.0).unwrap();
+        let (rb, _) = b.read_object(idb, 0, data.len() as u64, 1.0).unwrap();
+        assert_eq!(ra, data);
+        assert_eq!(rb, data);
+        // cross-engine: each engine reads the other's stored state
+        let (cross_a, _) = b.read_object(idb, 0, data.len() as u64, 2.0).unwrap();
+        let (cross_b, _) = read(&mut a, ida, 0, data.len() as u64, 2.0).unwrap();
+        assert_eq!(cross_a, cross_b);
+    }
+
+    #[test]
+    fn baseline_and_engine_agree_on_rmw_and_degraded() {
+        let (mut a, mut b) = stores();
+        let ida = raid(&mut a, 4, 1);
+        let idb = raid(&mut b, 4, 1);
+        let full = random_bytes(4 * 16384, 22);
+        let patch = random_bytes(8192, 23);
+        write(&mut a, ida, 0, &full, 0.0, None).unwrap();
+        write(&mut a, ida, 4096, &patch, 1.0, None).unwrap();
+        b.write_object(idb, 0, &full, 0.0, None).unwrap();
+        b.write_object(idb, 4096, &patch, 1.0, None).unwrap();
+        // degrade the same logical unit in both stores
+        let da = a.object(ida).unwrap().placement(0, 1).unwrap().device;
+        let db = b.object(idb).unwrap().placement(0, 1).unwrap().device;
+        a.cluster.fail_device(da);
+        b.cluster.fail_device(db);
+        let (ra, _) = read(&mut a, ida, 0, full.len() as u64, 2.0).unwrap();
+        let (rb, _) = b.read_object(idb, 0, full.len() as u64, 2.0).unwrap();
+        assert_eq!(ra, rb, "reconstruction must agree between engines");
+    }
+
+    #[test]
+    fn baseline_rejects_non_raid() {
+        let (mut a, _) = stores();
+        let id = a
+            .create_object(4096, Layout::Mirror { copies: 2, tier: DeviceKind::Ssd })
+            .unwrap();
+        assert!(write(&mut a, id, 0, &[0u8; 4096], 0.0, None).is_err());
+    }
+}

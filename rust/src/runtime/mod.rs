@@ -6,12 +6,19 @@
 //! `parity_k8`, `postprocess_16k`, `postprocess_64k`); callers such as
 //! the SNS write path and the function-shipping engine pick the variant
 //! matching their (padded) request size via the typed helpers below.
+//!
+//! The PJRT backend (the `xla` crate) is gated behind the **`pjrt`**
+//! cargo feature: the offline build carries no XLA binding, so the
+//! default build compiles this module as a stub whose [`Executor::load`]
+//! fails cleanly. Every caller already falls back to the CPU reference
+//! implementations (identical bytes, no kernel offload), so the whole
+//! stack — SNS parity, function shipping, post-processing — works
+//! unchanged without the feature.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::error::{Result, SageError};
-use crate::util::json::Json;
 
 /// Manifest entry for one artifact.
 #[derive(Debug, Clone)]
@@ -23,8 +30,12 @@ pub struct ArtifactInfo {
 }
 
 /// The PJRT executor: a CPU client + one loaded executable per variant.
+/// Without the `pjrt` feature this is an uninstantiable stub —
+/// [`Executor::load`] always errors and callers use CPU fallbacks.
 pub struct Executor {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     infos: HashMap<String, ArtifactInfo>,
 }
@@ -32,7 +43,20 @@ pub struct Executor {
 impl Executor {
     /// Load every artifact listed in `<dir>/manifest.json`, compiling
     /// each HLO text module on the PJRT CPU client.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(_dir: &Path) -> Result<Executor> {
+        Err(SageError::Runtime(
+            "PJRT runtime not compiled in (build with the `pjrt` feature); \
+             CPU fallbacks remain fully functional"
+                .into(),
+        ))
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.json`, compiling
+    /// each HLO text module on the PJRT CPU client.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: &Path) -> Result<Executor> {
+        use crate::util::json::Json;
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
             SageError::Runtime(format!(
@@ -100,7 +124,7 @@ impl Executor {
 
     /// Whether a named variant is loaded.
     pub fn has(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
+        self.infos.contains_key(name)
     }
 
     /// Artifact metadata.
@@ -110,6 +134,7 @@ impl Executor {
 
     /// Raw execution: run `name` with the given literals, unpack the
     /// result tuple.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let exe = self
             .exes
@@ -125,6 +150,15 @@ impl Executor {
     /// SNS parity via the Pallas kernel. Picks `parity_k{K}` by the
     /// number of units; returns `Ok(None)` when no variant matches (the
     /// caller falls back to CPU XOR).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn parity(&self, _units: &[Vec<u8>]) -> Result<Option<Vec<u8>>> {
+        Ok(None)
+    }
+
+    /// SNS parity via the Pallas kernel. Picks `parity_k{K}` by the
+    /// number of units; returns `Ok(None)` when no variant matches (the
+    /// caller falls back to CPU XOR).
+    #[cfg(feature = "pjrt")]
     pub fn parity(&self, units: &[Vec<u8>]) -> Result<Option<Vec<u8>>> {
         let k = units.len();
         let name = format!("parity_k{k}");
@@ -166,6 +200,24 @@ impl Executor {
     /// iPIC3D post-processing (`postprocess_{16k,64k}`): energies, mask
     /// and stats for up to 65536 particles (padded). `particles` is
     /// row-major (n, 8) with columns (x,y,z,u,v,w,q,id).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn postprocess(
+        &self,
+        particles: &[f32],
+        _threshold: f32,
+    ) -> Result<Option<PostprocessOut>> {
+        if particles.len() % 8 != 0 {
+            return Err(SageError::Invalid(
+                "particles must be (n, 8) row-major".into(),
+            ));
+        }
+        Ok(None)
+    }
+
+    /// iPIC3D post-processing (`postprocess_{16k,64k}`): energies, mask
+    /// and stats for up to 65536 particles (padded). `particles` is
+    /// row-major (n, 8) with columns (x,y,z,u,v,w,q,id).
+    #[cfg(feature = "pjrt")]
     pub fn postprocess(
         &self,
         particles: &[f32],
@@ -206,6 +258,15 @@ impl Executor {
     /// ALF log histogram (`alf_histogram_64k`): 64 uniform bins over
     /// `[lo, hi)`. Longer inputs are processed in artifact-capacity
     /// chunks and summed (the kernel is linear in its input blocks).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn histogram(&self, _values: &[f32], _lo: f32, _hi: f32) -> Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
+
+    /// ALF log histogram (`alf_histogram_64k`): 64 uniform bins over
+    /// `[lo, hi)`. Longer inputs are processed in artifact-capacity
+    /// chunks and summed (the kernel is linear in its input blocks).
+    #[cfg(feature = "pjrt")]
     pub fn histogram(&self, values: &[f32], lo: f32, hi: f32) -> Result<Option<Vec<f32>>> {
         let name = "alf_histogram_64k";
         let Some(info) = self.infos.get(name) else {
@@ -233,6 +294,14 @@ impl Executor {
 
     /// Fletcher-style block digests (`integrity_16x4k`): 16 blocks of
     /// 4096 i32 lanes; returns [sum, weighted-sum] per block.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn integrity(&self, _blocks: &[i32]) -> Result<Option<Vec<[i32; 2]>>> {
+        Ok(None)
+    }
+
+    /// Fletcher-style block digests (`integrity_16x4k`): 16 blocks of
+    /// 4096 i32 lanes; returns [sum, weighted-sum] per block.
+    #[cfg(feature = "pjrt")]
     pub fn integrity(&self, blocks: &[i32]) -> Result<Option<Vec<[i32; 2]>>> {
         let name = "integrity_16x4k";
         let Some(info) = self.infos.get(name) else {
@@ -250,7 +319,14 @@ impl Executor {
 
     /// Device count of the PJRT client (diagnostics).
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.device_count()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            0
+        }
     }
 }
 

@@ -1,0 +1,143 @@
+//! In-tree byte-run compression codec (offline substitute for a zlib
+//! dependency). Used by compressed layouts ([`crate::mero::sns`]).
+//!
+//! The format is a token stream:
+//! * `0x00 len:u16le <len bytes>` — literal run, `1..=65535` bytes
+//! * `0x01 len:u16le byte` — `byte` repeated `len` times, `4..=65535`
+//!
+//! Scientific dumps (zero padding, repeated fields) compress well; the
+//! worst case adds 3 bytes per 64 KiB of incompressible input. The
+//! codec is byte-exact on round-trip, which is all the storage path
+//! requires — ratio parity with zlib is not a goal.
+
+/// Minimum run length worth encoding (below this a literal is smaller).
+const MIN_RUN: usize = 4;
+/// Maximum run/literal length one token can carry.
+const MAX_LEN: usize = 65535;
+
+/// Compress `data`; output is self-delimiting given its own length.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    let mut lit_start = 0;
+    while i < data.len() {
+        // measure the run starting at i
+        let b = data[i];
+        let mut j = i + 1;
+        while j < data.len() && data[j] == b && j - i < MAX_LEN {
+            j += 1;
+        }
+        let run = j - i;
+        if run >= MIN_RUN {
+            flush_literal(&mut out, &data[lit_start..i]);
+            out.push(0x01);
+            out.extend_from_slice(&(run as u16).to_le_bytes());
+            out.push(b);
+            i = j;
+            lit_start = i;
+        } else {
+            i += run;
+        }
+    }
+    flush_literal(&mut out, &data[lit_start..]);
+    out
+}
+
+fn flush_literal(out: &mut Vec<u8>, lit: &[u8]) {
+    for chunk in lit.chunks(MAX_LEN) {
+        if chunk.is_empty() {
+            continue;
+        }
+        out.push(0x00);
+        out.extend_from_slice(&(chunk.len() as u16).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+}
+
+/// Decompress a [`compress`] stream. Malformed/truncated input yields
+/// the bytes decoded so far (callers bound the result by the recorded
+/// original length).
+pub fn decompress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0;
+    while i + 3 <= data.len() {
+        let tag = data[i];
+        let len = u16::from_le_bytes([data[i + 1], data[i + 2]]) as usize;
+        i += 3;
+        match tag {
+            0x00 => {
+                if i + len > data.len() {
+                    break;
+                }
+                out.extend_from_slice(&data[i..i + len]);
+                i += len;
+            }
+            0x01 => {
+                if i >= data.len() {
+                    break;
+                }
+                let b = data[i];
+                i += 1;
+                out.resize(out.len() + len, b);
+            }
+            _ => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::SimRng;
+
+    #[test]
+    fn roundtrip_compressible() {
+        let mut data = vec![42u8; 64 * 1024];
+        data[1000] = 7;
+        let z = compress(&data);
+        assert!(z.len() < data.len() / 8, "runs must compress well");
+        assert_eq!(decompress(&z), data);
+    }
+
+    #[test]
+    fn roundtrip_incompressible() {
+        let mut data = vec![0u8; 100_000];
+        SimRng::new(9).fill_bytes(&mut data);
+        let z = compress(&data);
+        assert!(z.len() < data.len() + 3 * (data.len() / MAX_LEN + 1) + 3);
+        assert_eq!(decompress(&z), data);
+    }
+
+    #[test]
+    fn roundtrip_edge_cases() {
+        for data in [
+            Vec::new(),
+            vec![1u8],
+            vec![5u8; 3],          // below MIN_RUN
+            vec![5u8; MIN_RUN],    // exactly MIN_RUN
+            vec![9u8; MAX_LEN + 10], // run split across tokens
+        ] {
+            assert_eq!(decompress(&compress(&data)), data);
+        }
+    }
+
+    #[test]
+    fn mixed_runs_and_literals() {
+        let mut data = Vec::new();
+        for i in 0..50u8 {
+            data.extend_from_slice(&[i, i.wrapping_add(1), i.wrapping_add(2)]);
+            data.resize(data.len() + (i as usize % 9), i);
+        }
+        assert_eq!(decompress(&compress(&data)), data);
+    }
+
+    #[test]
+    fn truncated_input_is_safe() {
+        let z = compress(&vec![3u8; 1000]);
+        for cut in 0..z.len() {
+            let partial = decompress(&z[..cut]);
+            assert!(partial.len() <= 1000);
+        }
+    }
+}

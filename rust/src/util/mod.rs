@@ -4,6 +4,7 @@
 
 pub mod bytes;
 pub mod cli;
+pub mod compress;
 pub mod json;
 pub mod toml;
 
