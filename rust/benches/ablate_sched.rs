@@ -1,0 +1,267 @@
+//! Ablation: sharded per-device op scheduling vs the preserved
+//! serial-fold oracle (`sage::mero::sns_serial`) on a SKEWED 4+2 pool —
+//! one SMR-class (tier-4) straggler admitted to the flash pool next to
+//! seven healthy SSDs, the geometry from ISSUE 2.
+//!
+//! Three measurements:
+//! * **virtual time** — completion of a batched full-stripe write +
+//!   read cycle under the serial fold (op i+1 waits for op i, one
+//!   `io()` per unit) vs the sharded scheduler (one dispatch pass to
+//!   per-device shards, completion = max over frontiers). The sharded
+//!   engine must complete no later on every geometry (also enforced by
+//!   `tests/prop_sched.rs`).
+//! * **slow-device isolation** — per-device completion frontiers of
+//!   the sharded batch: the straggler's shard finishes late, the flash
+//!   shards do not wait for it.
+//! * **wall clock** — cycle throughput of the two engines (the sharded
+//!   path also batches device accounting into device-contiguous runs),
+//!   median ± MAD via the in-tree `Bencher`.
+//!
+//! Run: `cargo bench --bench ablate_sched`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_sched`
+//! Rows append to `bench_results/ablate_sched.json`
+//! (`virtual_speedup`, `wall_speedup` = serial / sharded; both >= 1.0
+//! is the acceptance bar). Byte-equivalence of the engines is asserted
+//! in-bench and property-tested in `tests/prop_sched.rs`.
+
+use sage::bench::{record, Bencher};
+use sage::cluster::{Cluster, EnclosureCompute};
+use sage::mero::{sns_serial, Layout, MeroStore};
+use sage::metrics::Table;
+use sage::sim::device::{DeviceKind, DeviceProfile};
+use sage::sim::network::NetworkModel;
+use sage::sim::rng::SimRng;
+use sage::sim::sched::IoScheduler;
+
+const UNIT: u64 = 65536;
+const K: u32 = 4;
+const P: u32 = 2;
+
+fn layout() -> Layout {
+    Layout::Raid { data: K, parity: P, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// The skewed 4+2 pool: seven healthy SSDs plus ONE SMR-class
+/// straggler (tier-4 bandwidth/latency/seek profile) admitted to the
+/// flash pool, so some stripes of every large batch land on it.
+fn skewed_cluster() -> Cluster {
+    let mut profiles: Vec<DeviceProfile> =
+        (0..7).map(|_| DeviceProfile::ssd(2 << 40)).collect();
+    let mut straggler = DeviceProfile::smr(2 << 40);
+    straggler.kind = DeviceKind::Ssd; // pooled with the flash devices
+    profiles.push(straggler);
+    let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+    for chunk in profiles.chunks(4) {
+        c.add_node(
+            chunk.to_vec(),
+            EnclosureCompute { cores: 16, flops: 5e10 },
+        );
+    }
+    c
+}
+
+/// Index of the straggler device in [`skewed_cluster`] (the one SSD
+/// whose profile carries SMR write bandwidth).
+fn straggler_dev(c: &Cluster) -> usize {
+    (0..c.devices.len())
+        .find(|&d| c.devices[d].profile.write_bw < 100e6)
+        .expect("straggler present")
+}
+
+/// Serial-fold cycle: batched write then batched read, one chained
+/// timeline (the de-sharded oracle). Returns (bytes read, completion).
+fn serial_cycle(data: &[u8], n_extents: usize) -> (Vec<u8>, f64) {
+    let stripe = (K as u64) * UNIT;
+    let mut s = MeroStore::new(skewed_cluster());
+    let id = s.create_object(4096, layout()).unwrap();
+    let w_exts: Vec<(u64, &[u8])> = (0..n_extents)
+        .map(|i| {
+            let off = i as u64 * stripe;
+            (off, &data[off as usize..(off + stripe) as usize])
+        })
+        .collect();
+    let t_w = sns_serial::writev(&mut s, id, &w_exts, 0.0, None).unwrap();
+    let r_exts: Vec<(u64, u64)> =
+        (0..n_extents).map(|i| (i as u64 * stripe, stripe)).collect();
+    let (bufs, t_r) = sns_serial::readv(&mut s, id, &r_exts, t_w).unwrap();
+    (bufs.concat(), t_r)
+}
+
+/// Sharded cycle: the same batch dispatched through per-device shards
+/// (one scheduler per op group). Returns (bytes read, completion,
+/// accounting calls, logical I/Os).
+fn sharded_cycle(data: &[u8], n_extents: usize) -> (Vec<u8>, f64, u64, u64) {
+    let stripe = (K as u64) * UNIT;
+    let mut s = MeroStore::new(skewed_cluster());
+    let id = s.create_object(4096, layout()).unwrap();
+    let mut wsched = IoScheduler::new();
+    let mut t_w = 0.0f64;
+    for i in 0..n_extents {
+        let off = i as u64 * stripe;
+        let t = s
+            .write_object_with(
+                id,
+                off,
+                &data[off as usize..(off + stripe) as usize],
+                0.0,
+                None,
+                &mut wsched,
+            )
+            .unwrap();
+        t_w = t_w.max(t);
+    }
+    t_w = t_w.max(wsched.wait_all());
+    let mut rsched = IoScheduler::new();
+    let mut back = vec![0u8; n_extents * stripe as usize];
+    let t_r = s
+        .read_object_into_with(id, 0, &mut back, t_w, &mut rsched)
+        .unwrap();
+    (
+        back,
+        t_r,
+        wsched.io_calls() + rsched.io_calls(),
+        wsched.ios() + rsched.ios(),
+    )
+}
+
+fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let n_extents = if quick { 8 } else { 32 };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let stripe = (K as u64) * UNIT;
+    let total = n_extents as u64 * stripe;
+
+    let mut rng = SimRng::new(7);
+    let mut data = vec![0u8; total as usize];
+    rng.fill_bytes(&mut data);
+
+    // ---- virtual-time completion: serial fold vs sharded ---------------
+    let (serial_bytes, t_serial) = serial_cycle(&data, n_extents);
+    let (sharded_bytes, t_sharded, io_calls, ios) =
+        sharded_cycle(&data, n_extents);
+    assert_eq!(serial_bytes, data, "serial oracle must round-trip");
+    assert_eq!(sharded_bytes, data, "sharded engine must round-trip");
+    assert!(
+        t_sharded <= t_serial * (1.0 + 1e-9),
+        "sharded completion must not exceed the serial fold \
+         ({t_sharded} vs {t_serial})"
+    );
+    let virtual_speedup = t_serial / t_sharded.max(1e-12);
+
+    let mut t = Table::new(
+        &format!(
+            "Sharded vs serial-fold op execution \
+             ({n_extents} full stripes, {K}+{P}, skewed pool)"
+        ),
+        &["engine", "virtual completion", "io() calls", "unit I/Os"],
+    );
+    // serial: one io() per unit — (k+p) writes + k reads per stripe
+    let serial_ios = (n_extents as u64) * (2 * K + P) as u64;
+    t.row(vec![
+        "serial fold".into(),
+        sage::metrics::fmt_secs(t_serial),
+        serial_ios.to_string(),
+        serial_ios.to_string(),
+    ]);
+    t.row(vec![
+        "sharded".into(),
+        sage::metrics::fmt_secs(t_sharded),
+        io_calls.to_string(),
+        ios.to_string(),
+    ]);
+    t.row(vec![
+        "speedup".into(),
+        format!("{virtual_speedup:.2}x"),
+        "".into(),
+        "".into(),
+    ]);
+    print!("{}", t.render());
+
+    // ---- slow-device isolation: per-shard completion frontiers ---------
+    let mut s = MeroStore::new(skewed_cluster());
+    let straggler = straggler_dev(&s.cluster);
+    let id = s.create_object(4096, layout()).unwrap();
+    let mut sched = IoScheduler::new();
+    for i in 0..n_extents {
+        let off = i as u64 * stripe;
+        s.write_object_with(
+            id,
+            off,
+            &data[off as usize..(off + stripe) as usize],
+            0.0,
+            None,
+            &mut sched,
+        )
+        .unwrap();
+    }
+    let mut t = Table::new(
+        "Per-device completion frontiers (sharded write batch)",
+        &["device", "profile", "frontier"],
+    );
+    let mut fast_max = 0.0f64;
+    for d in 0..s.cluster.devices.len() {
+        let f = sched.frontier(d);
+        if d != straggler {
+            fast_max = fast_max.max(f);
+        }
+        t.row(vec![
+            format!("dev{d}"),
+            if d == straggler { "SMR straggler".into() } else { "SSD".into() },
+            sage::metrics::fmt_secs(f),
+        ]);
+    }
+    print!("{}", t.render());
+    let isolation = sched.frontier(straggler) / fast_max.max(1e-12);
+    println!(
+        "straggler frontier / fastest-shard frontier = {isolation:.1}x \
+         (healthy shards do not wait for the straggler)\n"
+    );
+
+    // ---- wall-clock cycle throughput ----------------------------------
+    let m_serial = Bencher::new("sched_serial_fold")
+        .iters(warm, iters)
+        .wall(|| serial_cycle(&data, n_extents).1);
+    let m_sharded = Bencher::new("sched_sharded")
+        .iters(warm, iters)
+        .wall(|| sharded_cycle(&data, n_extents).1);
+    let wall_speedup = m_serial.median / m_sharded.median.max(1e-12);
+    let cycle_bytes = (2 * total) as f64;
+
+    let mut t = Table::new(
+        &format!("Wall-clock cycle ({} MiB write + read)", total >> 20),
+        &["engine", "cycle", "throughput", "speedup"],
+    );
+    t.row(vec![
+        "serial fold".into(),
+        sage::metrics::fmt_secs(m_serial.median),
+        sage::util::bytes::fmt_bw(cycle_bytes / m_serial.median.max(1e-12)),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "sharded".into(),
+        sage::metrics::fmt_secs(m_sharded.median),
+        sage::util::bytes::fmt_bw(cycle_bytes / m_sharded.median.max(1e-12)),
+        format!("{wall_speedup:.2}x"),
+    ]);
+    print!("{}", t.render());
+
+    record("ablate_sched", &[
+        ("k", K as f64),
+        ("p", P as f64),
+        ("n_extents", n_extents as f64),
+        ("iters", iters as f64),
+        ("serial_virtual_s", t_serial),
+        ("sharded_virtual_s", t_sharded),
+        ("virtual_speedup", virtual_speedup),
+        ("straggler_isolation", isolation),
+        ("serial_cycle_s", m_serial.median),
+        ("serial_mad_s", m_serial.mad),
+        ("sharded_cycle_s", m_sharded.median),
+        ("sharded_mad_s", m_sharded.mad),
+        ("serial_bw_bytes_s", cycle_bytes / m_serial.median.max(1e-12)),
+        ("sharded_bw_bytes_s", cycle_bytes / m_sharded.median.max(1e-12)),
+        ("wall_speedup", wall_speedup),
+        ("sharded_io_calls", io_calls as f64),
+        ("sharded_unit_ios", ios as f64),
+    ]);
+}

@@ -183,9 +183,11 @@ fn encode_batch(elems: &[StreamElement], block: u64) -> Vec<u8> {
 /// Checkpoint a group of hot-particle batches into `obj` starting at
 /// byte `start`, as ONE batched op group (§Perf: `writev_owned`
 /// persist-by-move — one extent per step batch, no payload copies, one
-/// ADDB/FDMI record for the whole flush). Returns the `(offset,
-/// n_elems)` index entries for the batches written plus the next free
-/// (block-aligned) offset.
+/// ADDB/FDMI record for the whole flush; the group's unit I/Os are
+/// dispatched to per-device shards so the step batches' stripes
+/// overlap in virtual time — sharded op execution, `sim::sched`).
+/// Returns the `(offset, n_elems)` index entries for the batches
+/// written plus the next free (block-aligned) offset.
 pub fn checkpoint_hot_particles(
     client: &mut Client,
     obj: &ObjectId,
@@ -211,7 +213,8 @@ pub fn checkpoint_hot_particles(
 }
 
 /// Restore checkpointed batches through the vectored read path: one
-/// `readv` op group for the whole index.
+/// `readv` op group for the whole index, sharded across the devices
+/// holding the checkpoint stripes.
 pub fn restore_checkpoint(
     client: &mut Client,
     obj: &ObjectId,
@@ -454,6 +457,20 @@ mod tests {
         assert_eq!(total, hot, "checkpoints account for every hot particle");
         // batched writes also advanced the virtual clock
         assert!(c.now > 0.0);
+    }
+
+    #[test]
+    fn checkpointed_pipeline_is_deterministic() {
+        // checkpoint flushes ride the sharded group scheduler; the
+        // whole pipeline must reproduce bit-exact state AND virtual
+        // time across runs with the same seed
+        let run = || {
+            let mut c = Client::new_sim(Testbed::sage_prototype());
+            let (hot, _obj, index) =
+                run_checkpointed_pipeline(&mut c, 1200, 20, 1.5, 4).unwrap();
+            (hot, index, c.now.to_bits())
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

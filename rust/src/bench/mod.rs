@@ -1,5 +1,7 @@
 //! Benchmark harness (criterion-style, in-tree because the offline
-//! build has no criterion).
+//! build has no criterion). Drives the §4 evaluation benches and the
+//! §Perf ablations — protocol in `rust/bench_results/README.md`,
+//! module map in ARCHITECTURE.md.
 //!
 //! Two measurement modes:
 //! * [`Bencher::wall`] — wall-clock timing with warmup and repeated

@@ -8,7 +8,7 @@
 //! failure states are observable exactly as an application would see
 //! them.
 //!
-//! ## Batched (vectored) operations
+//! ## Batched (vectored) operations, sharded across the cluster
 //!
 //! The `m0_op_launch`/`m0_op_wait` idiom launches *groups* of ops and
 //! waits on the group, not on individual ops. That is the data-path
@@ -18,20 +18,30 @@
 //! * [`Extent`] describes one `(offset, len)` piece of a vectored I/O;
 //! * [`OpGroup::add`] stages one op per extent, [`OpGroup::launch_batch`]
 //!   moves every staged op INIT → LAUNCHED at one timestamp (all ops of
-//!   a batch are in flight concurrently — their device I/Os queue in
-//!   virtual time from the same start), and [`OpGroup::wait_all`]
-//!   completes at the *max* finish time, exactly like `m0_op_wait` on a
-//!   group;
+//!   a batch are in flight concurrently);
+//! * every op of the group dispatches its unit I/Os onto the group's
+//!   [`IoScheduler`] ([`OpGroup::sched`]) — per-device submission
+//!   queues with completion frontiers, so the batch's units land on
+//!   their home devices in one pass and overlap in virtual time;
+//! * [`OpGroup::wait_all`] completes at the max over the scheduler's
+//!   **per-device completion frontiers** (folded with the op state
+//!   machine's finish times), exactly like `m0_op_wait` on a group —
+//!   a slow device only delays the ops whose units queue on it;
 //! * [`crate::clovis::Client::writev`] / [`Client::readv`] /
 //!   [`Client::writev_owned`](crate::clovis::Client::writev_owned) drive
 //!   this machinery over extent lists and amortize the per-op ADDB
 //!   telemetry and FDMI event emission to **one record per batch**
 //!   instead of one per op.
 //!
+//! The de-sharded semantics (completion as a serial fold over the
+//! batch) are preserved in `mero::sns_serial` as the differential
+//! oracle; `benches/ablate_sched.rs` measures the gap.
+//!
 //! [`Client::readv`]: crate::clovis::Client::readv
 
 use crate::error::{Result, SageError};
 use crate::sim::clock::SimTime;
+use crate::sim::sched::IoScheduler;
 
 /// One `(offset, len)` piece of a vectored I/O request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,17 +158,31 @@ impl Op {
     }
 }
 
-/// A group of ops awaited together (`m0_op_wait` analog).
+/// A group of ops awaited together (`m0_op_wait` analog), owning the
+/// sharded per-device [`IoScheduler`] its ops execute on.
 #[derive(Debug, Default)]
 pub struct OpGroup {
     ops: Vec<Op>,
     next_id: u64,
+    sched: IoScheduler,
 }
 
 impl OpGroup {
     /// Empty group.
     pub fn new() -> Self {
         OpGroup::default()
+    }
+
+    /// The group's sharded I/O scheduler: ops executed under this
+    /// group dispatch their unit I/Os here (one submission pass to
+    /// home-device shards; see `sim::sched`).
+    pub fn sched(&mut self) -> &mut IoScheduler {
+        &mut self.sched
+    }
+
+    /// Read-only view of the scheduler (frontiers, dispatch stats).
+    pub fn sched_ref(&self) -> &IoScheduler {
+        &self.sched
     }
 
     /// Add an op; returns its id.
@@ -191,10 +215,12 @@ impl OpGroup {
             .ok_or_else(|| SageError::NotFound(format!("op {id}")))
     }
 
-    /// Wait for all ops: the completion time is the max finish time.
-    /// Errors if any op FAILED or is still pending.
+    /// Wait for all ops: the completion time is the max over the
+    /// scheduler's per-device completion frontiers, folded with each
+    /// op's recorded finish time (sharded execution — NOT a serial
+    /// fold over units). Errors if any op FAILED or is still pending.
     pub fn wait_all(&self) -> Result<SimTime> {
-        let mut t = 0.0f64;
+        let mut t = self.sched.wait_all();
         for op in &self.ops {
             match op.state {
                 OpState::Executed => {
@@ -273,6 +299,23 @@ mod tests {
         assert_eq!(g.op_mut(c).unwrap().launched_at, Some(1.0));
         // idempotent on an already-launched group
         assert_eq!(g.launch_batch(2.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wait_all_folds_in_device_frontiers() {
+        use crate::sim::device::{Access, Device, DeviceProfile, IoOp};
+        let mut g = OpGroup::new();
+        let a = g.add(OpKind::ObjWrite);
+        g.op_mut(a).unwrap().launch(0.0).unwrap();
+        // the op's unit I/O dispatches to its home-device shard
+        let mut devs = vec![Device::new(DeviceProfile::ssd(1 << 30))];
+        g.sched().submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        let t = g.sched().drain(&mut devs);
+        assert!(t > 0.0);
+        g.op_mut(a).unwrap().complete(t).unwrap();
+        assert_eq!(g.wait_all().unwrap(), t);
+        assert_eq!(g.sched_ref().wait_all(), t, "frontier == group completion");
+        assert_eq!(g.sched_ref().shard_count(), 1);
     }
 
     #[test]

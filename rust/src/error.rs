@@ -1,7 +1,8 @@
 //! Crate-wide error type.
 //!
 //! Hand-rolled `Display`/`Error` impls (no `thiserror`): the offline
-//! build carries no proc-macro dependencies.
+//! build carries no proc-macro dependencies. See ARCHITECTURE.md
+//! §Module map.
 
 use std::fmt;
 

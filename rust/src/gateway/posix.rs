@@ -10,7 +10,10 @@
 //! (`path -> inode record`), files backed by Mero objects, directories
 //! as key prefixes. Byte-granular file I/O is translated to
 //! block-aligned object I/O here (POSIX's looser alignment is part of
-//! what the gateway provides).
+//! what the gateway provides). Vectored calls ride the sharded op
+//! scheduler end to end: one Clovis op group for the RMW envelope
+//! reads, one for the writes, each dispatched to per-device shards
+//! (`sim::sched`; see ARCHITECTURE.md §Module map).
 
 use crate::clovis::{Client, Extent};
 use crate::error::{Result, SageError};
@@ -135,10 +138,12 @@ impl PosixGateway {
     /// envelope is read-modified once (overlapping/adjacent envelopes
     /// are merged first, so shared edge blocks are RMW'd exactly once)
     /// and the whole batch goes to storage as ONE Clovis op group
-    /// (§Perf: the batched zero-copy write path). Parts apply in order;
-    /// later parts win where they overlap, matching sequential pwrites.
-    /// Zero-length parts are no-ops and do not extend the file (POSIX
-    /// `pwrite(fd, buf, 0, off)` semantics).
+    /// (§Perf: the batched zero-copy write path, sharded across the
+    /// envelopes' home devices by the group scheduler — a slow device
+    /// only delays the envelopes striped onto it). Parts apply in
+    /// order; later parts win where they overlap, matching sequential
+    /// pwrites. Zero-length parts are no-ops and do not extend the
+    /// file (POSIX `pwrite(fd, buf, 0, off)` semantics).
     pub fn writev(
         &self,
         client: &mut Client,
@@ -345,6 +350,23 @@ mod tests {
         let nb = gb.read(&mut cb, "/v", 0, 30_000).unwrap();
         let ns = gs.read(&mut cs, "/v", 0, 30_000).unwrap();
         assert_eq!(nb, ns, "batched pwritev == sequential pwrites");
+    }
+
+    #[test]
+    fn writev_through_sharded_scheduler_is_deterministic() {
+        // the pwritev batch rides the group scheduler; two identical
+        // runs must produce identical bytes AND identical virtual time
+        let run = || {
+            let (mut c, gw) = setup();
+            gw.create(&mut c, "/d").unwrap();
+            let a: Vec<u8> = (0..9000u32).map(|i| (i % 249) as u8).collect();
+            let parts: Vec<(u64, &[u8])> =
+                vec![(50, &a[..4000]), (8000, &a[4000..9000])];
+            gw.writev(&mut c, "/d", &parts).unwrap();
+            let back = gw.read(&mut c, "/d", 0, 14_000).unwrap();
+            (back, c.now.to_bits())
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

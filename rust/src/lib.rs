@@ -13,11 +13,19 @@
 //!   FDMI), [`hsm`] (tiering), [`pgas`] (MPI-storage-window analog),
 //!   [`streams`] (MPI-stream analog), all running over a simulated
 //!   cluster ([`sim`], [`cluster`]) with deterministic virtual time.
+//!   Object I/O executes on the sharded per-device scheduler
+//!   ([`sim::sched`]): op groups dispatch unit I/Os to home-device
+//!   shards and complete at the max over per-device frontiers.
 //! * **L2/L1 (build time)** — JAX graphs + Pallas kernels under
 //!   `python/compile/`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Runtime bridge** — [`runtime`] loads the artifacts once via the
 //!   PJRT CPU client (`xla` crate) and executes them from the storage
 //!   hot path (SNS parity, shipped functions).
+//!
+//! The full paper → module map (which module reproduces which section
+//! of the paper, §3.1–§4.2) lives in `ARCHITECTURE.md` at the repo
+//! root; `README.md` has the quickstart, the tier-1 verify command and
+//! the bench protocol.
 //!
 //! ## Quickstart
 //!

@@ -26,6 +26,8 @@ pub mod pool;
 pub mod sns;
 #[doc(hidden)]
 pub mod sns_baseline;
+#[doc(hidden)]
+pub mod sns_serial;
 
 use std::collections::HashMap;
 
@@ -33,6 +35,7 @@ use crate::cluster::Cluster;
 use crate::error::{Result, SageError};
 use crate::sim::clock::SimTime;
 use crate::sim::device::DeviceKind;
+use crate::sim::sched::IoScheduler;
 
 pub use container::{Container, ContainerId};
 pub use kvs::{IndexId, KvIndex};
@@ -183,6 +186,64 @@ impl MeroStore {
         now: SimTime,
     ) -> Result<SimTime> {
         sns::read_into(self, id, offset, dst, now)
+    }
+
+    // ------------------------------------------- sharded group variants
+    //
+    // The `*_with` variants dispatch device I/O onto an external
+    // [`IoScheduler`] — the per-device shards shared by a whole Clovis
+    // op group (`OpGroup::sched`). Ops of the group overlap in virtual
+    // time across devices; the group completes at the max over
+    // per-device completion frontiers (`IoScheduler::wait_all`).
+
+    /// [`MeroStore::write_object`] onto a shared group scheduler.
+    pub fn write_object_with(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        data: &[u8],
+        now: SimTime,
+        exec: Option<&crate::runtime::Executor>,
+        sched: &mut IoScheduler,
+    ) -> Result<SimTime> {
+        sns::write_with(self, id, offset, sns::Payload::Real(data), now, exec, sched)
+    }
+
+    /// [`MeroStore::write_object_owned`] onto a shared group scheduler.
+    pub fn write_object_owned_with(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        data: Vec<u8>,
+        now: SimTime,
+        exec: Option<&crate::runtime::Executor>,
+        sched: &mut IoScheduler,
+    ) -> Result<SimTime> {
+        sns::write_with(self, id, offset, sns::Payload::Owned(data), now, exec, sched)
+    }
+
+    /// [`MeroStore::read_object`] onto a shared group scheduler.
+    pub fn read_object_with(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        len: u64,
+        now: SimTime,
+        sched: &mut IoScheduler,
+    ) -> Result<(Vec<u8>, SimTime)> {
+        sns::read_with(self, id, offset, len, now, sched)
+    }
+
+    /// [`MeroStore::read_object_into`] onto a shared group scheduler.
+    pub fn read_object_into_with(
+        &mut self,
+        id: ObjectId,
+        offset: u64,
+        dst: &mut [u8],
+        now: SimTime,
+        sched: &mut IoScheduler,
+    ) -> Result<SimTime> {
+        sns::read_into_with(self, id, offset, dst, now, sched)
     }
 
     /// Phantom read: time accounting only.

@@ -58,6 +58,16 @@ struct Segment {
     crcs: Vec<u32>,
 }
 
+/// An SNS unit payload: a view into a (possibly shared) buffer.
+/// Parity units of one write all view ONE per-write parity buffer
+/// (§Perf: no per-stripe parity allocation, no clone per parity copy).
+#[derive(Debug, Clone)]
+struct UnitView {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
 /// An object: metadata + sparse block segments + SNS placement map.
 #[derive(Debug)]
 pub struct Mobject {
@@ -70,8 +80,9 @@ pub struct Mobject {
     /// SNS unit placements, keyed by (stripe, unit).
     placements: BTreeMap<(u64, u32), PlacedUnit>,
     /// Unit payloads for SNS (parity units included), keyed likewise.
-    /// Present only for real writes; `Arc`-shared across parity copies.
-    unit_data: BTreeMap<(u64, u32), Arc<Vec<u8>>>,
+    /// Present only for real writes; stored as views so one per-write
+    /// parity buffer serves every parity unit of every stripe.
+    unit_data: BTreeMap<(u64, u32), UnitView>,
     /// Logical extent high-water mark in bytes.
     pub size: u64,
 }
@@ -330,14 +341,35 @@ impl Mobject {
     }
 
     /// Store an SNS unit payload (real path). Accepts an owned `Vec`
-    /// or an `Arc` already shared with sibling parity units.
+    /// or an `Arc` already shared with sibling parity units; the whole
+    /// buffer becomes the unit's payload.
     pub fn put_unit<T: Into<Arc<Vec<u8>>>>(&mut self, stripe: u64, unit: u32, data: T) {
-        self.unit_data.insert((stripe, unit), data.into());
+        let buf: Arc<Vec<u8>> = data.into();
+        let len = buf.len();
+        self.unit_data.insert((stripe, unit), UnitView { buf, off: 0, len });
+    }
+
+    /// Store an SNS unit payload as a VIEW into a shared buffer
+    /// (§Perf: every parity unit of a multi-stripe write views one
+    /// per-write parity buffer — one allocation per write, not one per
+    /// stripe per parity copy).
+    pub fn put_unit_view(
+        &mut self,
+        stripe: u64,
+        unit: u32,
+        buf: Arc<Vec<u8>>,
+        off: usize,
+        len: usize,
+    ) {
+        debug_assert!(off + len <= buf.len(), "unit view out of bounds");
+        self.unit_data.insert((stripe, unit), UnitView { buf, off, len });
     }
 
     /// Fetch an SNS unit payload.
     pub fn get_unit(&self, stripe: u64, unit: u32) -> Option<&[u8]> {
-        self.unit_data.get(&(stripe, unit)).map(|v| v.as_slice())
+        self.unit_data
+            .get(&(stripe, unit))
+            .map(|v| &v.buf[v.off..v.off + v.len])
     }
 
     /// Drop a unit payload (e.g. the device holding it failed).
@@ -413,6 +445,25 @@ mod tests {
         assert_eq!(o.get_unit(2, 1), Some(&[1u8, 2, 3][..]));
         o.drop_unit(2, 1);
         assert_eq!(o.get_unit(2, 1), None);
+    }
+
+    #[test]
+    fn unit_views_share_one_buffer() {
+        let mut o = obj();
+        // one per-write parity buffer; two stripes' parity as views
+        let buf = Arc::new(vec![5u8; 2 * 1024]);
+        o.put_unit_view(0, 2, buf.clone(), 0, 1024);
+        o.put_unit_view(1, 2, buf.clone(), 1024, 1024);
+        assert_eq!(Arc::strong_count(&buf), 3, "views, not clones");
+        assert_eq!(o.get_unit(0, 2).unwrap().len(), 1024);
+        assert_eq!(
+            o.get_unit(0, 2).unwrap().as_ptr() as usize + 1024,
+            o.get_unit(1, 2).unwrap().as_ptr() as usize,
+            "adjacent views into the same allocation"
+        );
+        o.drop_unit(0, 2);
+        assert!(o.get_unit(0, 2).is_none());
+        assert!(o.get_unit(1, 2).is_some());
     }
 
     #[test]

@@ -13,6 +13,23 @@
 //! cost is always modelled from the enclosure's compute capability —
 //! wall-clock kernel time on the build machine is not a TPU proxy.
 //!
+//! ## Sharded op execution (ISSUE 2 tentpole)
+//!
+//! Device time is no longer accounted with a direct `io()` call per
+//! unit: the engine **dispatches** unit I/Os onto an
+//! [`IoScheduler`] — per-device submission queues with completion
+//! frontiers (`sim::sched`) — in one pass over the placement plan, and
+//! drains the shards per phase (RMW reads, then unit writes). Units on
+//! different devices overlap in virtual time; a slow or degraded
+//! device only delays the stripes that actually queue on it; the
+//! operation completes at the max over per-device frontiers. The
+//! `*_with` entry points ([`write_with`], [`read_with`],
+//! [`read_into_with`]) accept an external scheduler so a whole Clovis
+//! op group shares one set of shards; the plain entry points wrap a
+//! private scheduler for self-contained calls. `sns_serial` preserves
+//! the de-sharded engine (serial-fold completion, one `io()` per unit)
+//! as the differential oracle and scheduling baseline.
+//!
 //! ## §Perf: the zero-copy batched write/read engine
 //!
 //! The hot path avoids per-stripe and per-unit map traffic and buffer
@@ -22,8 +39,13 @@
 //!   double map lookup of the old engine;
 //! * partial-stripe RMW reuses one **scratch unit buffer set** across
 //!   stripes instead of allocating `data` fresh `Vec<u8>`s per stripe;
-//! * parity is stored **`Arc`-shared** across parity units — one
-//!   payload for p >= 1, never a deep clone per unit;
+//! * parity for the WHOLE write is computed into **one per-write
+//!   parity buffer**; every parity unit of every stripe is a *view*
+//!   into it ([`Mobject::put_unit_view`]) — one allocation per write,
+//!   never a clone per unit or per stripe;
+//! * device accounting is **batched**: shard submissions coalesce into
+//!   device-contiguous runs, one `io_run()` call per run instead of
+//!   one `io()` per unit;
 //! * the logical bytes of a write persist as **one shared buffer**
 //!   ([`Mobject::put_blocks`]): zero-copy for [`Payload::Owned`]
 //!   (persist-by-move), one bulk copy for [`Payload::Real`];
@@ -31,8 +53,8 @@
 //!   allocation, and the healthy path is a single ordered walk of the
 //!   block map instead of a lookup per block.
 //!
-//! `sns_baseline` preserves the pre-optimization engine as the
-//! differential-test oracle and the benchmark baseline.
+//! `sns_baseline` preserves the pre-PR-1 engine as the zero-copy
+//! differential-test oracle and allocation baseline.
 
 use std::sync::Arc;
 
@@ -43,6 +65,7 @@ use crate::mero::MeroStore;
 use crate::runtime::Executor;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, DeviceKind, IoOp};
+use crate::sim::sched::{IoScheduler, Ticket};
 
 /// Real bytes (borrowed or owned) or a phantom length (time/placement
 /// accounting only). [`Payload::Owned`] enables persist-by-move: the
@@ -75,7 +98,8 @@ impl Payload<'_> {
 /// virtual-time costing of parity generation and reconstruction.
 const XOR_BW: f64 = 5.0e9;
 
-/// Write `payload` at `offset` of object `id`. Returns completion time.
+/// Write `payload` at `offset` of object `id` as a self-contained op
+/// (private scheduler). Returns completion time.
 pub fn write(
     store: &mut MeroStore,
     id: ObjectId,
@@ -83,6 +107,23 @@ pub fn write(
     payload: Payload<'_>,
     now: SimTime,
     exec: Option<&Executor>,
+) -> Result<SimTime> {
+    let mut sched = IoScheduler::new();
+    write_with(store, id, offset, payload, now, exec, &mut sched)
+}
+
+/// Write `payload` at `offset`, dispatching device I/O onto `sched` —
+/// the shared per-device shards of the caller's op group (sharded op
+/// execution; see the module docs). Returns this op's completion time;
+/// the group completion is `sched.wait_all()`.
+pub fn write_with(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    payload: Payload<'_>,
+    now: SimTime,
+    exec: Option<&Executor>,
+    sched: &mut IoScheduler,
 ) -> Result<SimTime> {
     let len = payload.len();
     if len == 0 {
@@ -114,6 +155,7 @@ pub fn write(
         Layout::Raid { data, parity, unit, tier } => write_raid(
             store, id, offset, payload, now, exec,
             RaidGeom { data, parity, unit, tier },
+            sched,
         ),
         Layout::Mirror { copies, tier } => {
             write_mirror(store, id, offset, payload, now, copies, tier)
@@ -124,19 +166,20 @@ pub fn write(
     }
 }
 
+/// RAID stripe geometry (shared with the `sns_serial` oracle).
 #[derive(Clone, Copy)]
-struct RaidGeom {
-    data: u32,
-    parity: u32,
-    unit: u64,
-    tier: DeviceKind,
+pub(crate) struct RaidGeom {
+    pub(crate) data: u32,
+    pub(crate) parity: u32,
+    pub(crate) unit: u64,
+    pub(crate) tier: DeviceKind,
 }
 
 impl RaidGeom {
-    fn stripe_width(&self) -> u64 {
+    pub(crate) fn stripe_width(&self) -> u64 {
         self.data as u64 * self.unit
     }
-    fn units_per_stripe(&self) -> u32 {
+    pub(crate) fn units_per_stripe(&self) -> u32 {
         self.data + self.parity
     }
     /// RAID-5 rotation: device-slot of logical unit `u` in `stripe`.
@@ -193,12 +236,15 @@ fn write_raid(
     now: SimTime,
     exec: Option<&Executor>,
     g: RaidGeom,
+    sched: &mut IoScheduler,
 ) -> Result<SimTime> {
     let len = payload.len();
     let width = g.stripe_width();
     let first_stripe = offset / width;
     let last_stripe = (offset + len - 1) / width;
     let ups = g.units_per_stripe() as usize;
+    let n_stripes = (last_stripe - first_stripe + 1) as usize;
+    let unit_len = g.unit as usize;
 
     // ---- placement (first touch) + plan: once per write, not per unit
     for stripe in first_stripe..=last_stripe {
@@ -206,112 +252,145 @@ fn write_raid(
     }
     let plan = build_plan(store, id, first_stripe, last_stripe, g)?;
 
+    // ---- phase A: dispatch EVERY partial stripe's RMW reads to their
+    // home-device shards in one pass, then drain — reads of different
+    // stripes overlap in virtual time instead of queueing behind the
+    // previous stripe's writes (sharded op execution).
+    let mut rmw: Vec<(usize, Ticket)> = Vec::new();
+    for si in 0..n_stripes {
+        let stripe = first_stripe + si as u64;
+        let sbase = stripe * width;
+        let wstart = offset.max(sbase);
+        let wend = (offset + len).min(sbase + width);
+        if wstart == sbase && wend == sbase + width {
+            continue; // full stripe: no RMW
+        }
+        // must read old data units + parity to recompute parity
+        for pu in &plan[si * ups..][..ups] {
+            if pu.placed && !pu.failed {
+                rmw.push((
+                    si,
+                    sched.submit(pu.device, now, g.unit, IoOp::Read, Access::Random),
+                ));
+            }
+        }
+    }
+    sched.drain(&mut store.cluster.devices);
+    // per-stripe RMW read frontier (max completion of its reads)
+    let mut t_read = vec![now; n_stripes];
+    for (si, ticket) in &rmw {
+        t_read[*si] = t_read[*si].max(sched.completion(*ticket));
+    }
+
+    // Parity for the whole write lands in ONE buffer; parity units
+    // become views into it (§Perf: one allocation per write).
+    let real_parity = g.parity > 0 && payload.bytes().is_some();
+    let mut parity_buf =
+        vec![0u8; if real_parity { n_stripes * unit_len } else { 0 }];
+
     let mut done = now;
     // RMW scratch units: allocated on the first partial stripe, reused
     // for every later one (§Perf: no per-stripe buffer churn).
     let mut scratch: Vec<Vec<u8>> = Vec::new();
 
-    for stripe in first_stripe..=last_stripe {
+    for si in 0..n_stripes {
+        let stripe = first_stripe + si as u64;
         let sbase = stripe * width;
         let wstart = offset.max(sbase);
         let wend = (offset + len).min(sbase + width);
         let full_stripe = wstart == sbase && wend == sbase + width;
-        let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
+        let punits = &plan[si * ups..][..ups];
 
         // ---- parity over the stripe's data units ------------------------
         // Full stripes: XOR directly over slices of the caller's buffer
         // (no unit copies). Partial stripes: patch the reusable scratch
-        // units from the block map (RMW).
-        let parity_unit: Option<Vec<u8>> = match payload.bytes() {
-            Some(data) if g.parity > 0 => {
-                if full_stripe {
-                    let slices: Vec<&[u8]> = (0..g.data)
-                        .map(|u| {
-                            let ustart =
-                                (sbase + u as u64 * g.unit - offset) as usize;
-                            &data[ustart..ustart + g.unit as usize]
-                        })
-                        .collect();
-                    Some(compute_parity_slices(&slices, exec)?)
-                } else {
-                    if scratch.is_empty() {
-                        scratch =
-                            vec![vec![0u8; g.unit as usize]; g.data as usize];
-                    }
-                    let obj = store.object(id)?;
-                    for (u, buf) in scratch.iter_mut().enumerate() {
-                        let ustart = sbase + u as u64 * g.unit;
-                        let uend = ustart + g.unit;
-                        // read-modify-write: start from the old logical
-                        // bytes (zero-filled where sparse) …
-                        read_logical_into(obj, ustart, buf);
-                        // … then patch in the new bytes
-                        let ov_start = wstart.max(ustart);
-                        let ov_end = wend.min(uend);
-                        if ov_start < ov_end {
-                            buf[(ov_start - ustart) as usize
-                                ..(ov_end - ustart) as usize]
-                                .copy_from_slice(
-                                    &data[(ov_start - offset) as usize
-                                        ..(ov_end - offset) as usize],
-                                );
-                        }
-                    }
-                    Some(compute_parity(&scratch, exec)?)
+        // units from the block map (RMW). Result goes straight into this
+        // stripe's slice of the per-write parity buffer.
+        if real_parity {
+            let data = payload.bytes().expect("real_parity implies bytes");
+            let pslice = &mut parity_buf[si * unit_len..(si + 1) * unit_len];
+            if full_stripe {
+                let slices: Vec<&[u8]> = (0..g.data)
+                    .map(|u| {
+                        let ustart =
+                            (sbase + u as u64 * g.unit - offset) as usize;
+                        &data[ustart..ustart + unit_len]
+                    })
+                    .collect();
+                parity_into(&slices, exec, pslice)?;
+            } else {
+                if scratch.is_empty() {
+                    scratch = vec![vec![0u8; unit_len]; g.data as usize];
                 }
-            }
-            _ => None,
-        };
-
-        // ---- RMW read cost for partial stripes --------------------------
-        let mut t_stripe = now;
-        if !full_stripe {
-            // must read old data units + parity to recompute parity
-            let mut t_read = now;
-            for pu in punits {
-                if pu.placed && !pu.failed {
-                    let t = store
-                        .cluster
-                        .io(pu.device, now, g.unit, IoOp::Read, Access::Random);
-                    t_read = t_read.max(t);
+                let obj = store.object(id)?;
+                for (u, buf) in scratch.iter_mut().enumerate() {
+                    let ustart = sbase + u as u64 * g.unit;
+                    let uend = ustart + g.unit;
+                    // read-modify-write: start from the old logical
+                    // bytes (zero-filled where sparse) …
+                    read_logical_into(obj, ustart, buf);
+                    // … then patch in the new bytes
+                    let ov_start = wstart.max(ustart);
+                    let ov_end = wend.min(uend);
+                    if ov_start < ov_end {
+                        buf[(ov_start - ustart) as usize
+                            ..(ov_end - ustart) as usize]
+                            .copy_from_slice(
+                                &data[(ov_start - offset) as usize
+                                    ..(ov_end - offset) as usize],
+                            );
+                    }
                 }
+                let slices: Vec<&[u8]> =
+                    scratch.iter().map(|b| b.as_slice()).collect();
+                parity_into(&slices, exec, pslice)?;
             }
-            t_stripe = t_read;
         }
 
-        // ---- parity compute cost ----------------------------------------
+        // ---- parity compute cost (after the stripe's RMW frontier) ------
+        let mut t_stripe = t_read[si];
         if g.parity > 0 {
             t_stripe += (g.data as u64 * g.unit) as f64 / XOR_BW;
         }
 
-        // ---- unit writes (parallel across distinct devices) -------------
-        let mut t_done = t_stripe;
+        // ---- phase B: dispatch the stripe's unit writes to their home
+        // shards (one drain below covers the whole write; full-stripe
+        // batches coalesce into one accounting run per device)
         for pu in punits {
             if !pu.placed || pu.failed {
                 continue; // degraded write: skip failed device
             }
             let t_net = store.cluster.net.pt2pt(g.unit);
-            let t = store.cluster.io(
+            sched.submit(
                 pu.device,
                 t_stripe + t_net,
                 g.unit,
                 IoOp::Write,
                 Access::Seq,
             );
-            t_done = t_done.max(t);
         }
 
-        // ---- persist parity (data units live in the block map) ----------
-        // One Arc-shared payload serves every parity unit of the stripe.
-        if let Some(p) = parity_unit {
-            let shared: Arc<Vec<u8>> = Arc::new(p);
-            let obj = store.object_mut(id)?;
+        done = done.max(t_stripe);
+    }
+    done = done.max(sched.drain(&mut store.cluster.devices));
+
+    // ---- persist parity: every parity unit of every stripe is a view
+    // into the ONE per-write parity buffer (§Perf).
+    if real_parity {
+        let shared: Arc<Vec<u8>> = Arc::new(parity_buf);
+        let obj = store.object_mut(id)?;
+        for si in 0..n_stripes {
+            let stripe = first_stripe + si as u64;
             for pi in 0..g.parity {
-                obj.put_unit(stripe, g.data + pi, shared.clone());
+                obj.put_unit_view(
+                    stripe,
+                    g.data + pi,
+                    shared.clone(),
+                    si * unit_len,
+                    unit_len,
+                );
             }
         }
-
-        done = done.max(t_done);
     }
 
     // update logical size + store real blocks for block-granular access
@@ -325,10 +404,33 @@ fn write_raid(
     Ok(done)
 }
 
+/// XOR parity over borrowed unit slices, written into `out` (a slice
+/// of the per-write parity buffer) — via the AOT Pallas kernel when
+/// one is loaded, else the auto-vectorized CPU loop. Same bytes as
+/// [`compute_parity_slices`], zero intermediate allocation on the CPU
+/// path.
+fn parity_into(
+    units: &[&[u8]],
+    exec: Option<&Executor>,
+    out: &mut [u8],
+) -> Result<()> {
+    if let Some(e) = exec {
+        let owned: Vec<Vec<u8>> = units.iter().map(|u| u.to_vec()).collect();
+        if let Some(p) = e.parity(&owned)? {
+            out.copy_from_slice(&p);
+            return Ok(());
+        }
+    }
+    out.copy_from_slice(units[0]);
+    cpu_parity_slices_into(&units[1..], out);
+    Ok(())
+}
+
 /// Persist a real write extent into the block map as ONE shared buffer:
 /// owned payloads move in without a copy, borrowed payloads cost a
-/// single bulk copy (§Perf).
-fn persist_extent(
+/// single bulk copy (§Perf). Shared with the `sns_serial` oracle so
+/// both engines store byte-identical state.
+pub(crate) fn persist_extent(
     store: &mut MeroStore,
     id: ObjectId,
     offset: u64,
@@ -478,22 +580,42 @@ pub fn cpu_parity(units: &[Vec<u8>]) -> Vec<u8> {
 /// vectorization. Tried and reverted.
 pub fn cpu_parity_slices(units: &[&[u8]]) -> Vec<u8> {
     let mut out = units[0].to_vec();
-    for u in &units[1..] {
+    cpu_parity_slices_into(&units[1..], &mut out);
+    out
+}
+
+/// The single XOR kernel both CPU paths share: fold `units` into
+/// `out` in place (callers seed `out` with the first unit).
+fn cpu_parity_slices_into(units: &[&[u8]], out: &mut [u8]) {
+    for u in units {
         // zip elides bounds checks => rustc vectorizes this loop
         for (o, b) in out.iter_mut().zip(u.iter()) {
             *o ^= b;
         }
     }
-    out
 }
 
-/// Read `len` bytes at `offset`, reconstructing lost units via parity.
+/// Read `len` bytes at `offset`, reconstructing lost units via parity
+/// (self-contained op: private scheduler).
 pub fn read(
     store: &mut MeroStore,
     id: ObjectId,
     offset: u64,
     len: u64,
     now: SimTime,
+) -> Result<(Vec<u8>, SimTime)> {
+    let mut sched = IoScheduler::new();
+    read_with(store, id, offset, len, now, &mut sched)
+}
+
+/// [`read`] dispatching device I/O onto the caller's group scheduler.
+pub fn read_with(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    len: u64,
+    now: SimTime,
+    sched: &mut IoScheduler,
 ) -> Result<(Vec<u8>, SimTime)> {
     if len == 0 {
         return Ok((Vec::new(), now));
@@ -509,13 +631,13 @@ pub fn read(
                 // (physical) extent, inflate, return the logical bytes
                 let phys = store.object(id)?.size;
                 let mut buf = vec![0u8; phys.max(len) as usize];
-                let t = read_raid_into(store, id, 0, &mut buf, now, g)?;
+                let t = read_raid_into_with(store, id, 0, &mut buf, now, g, sched)?;
                 let mut raw = inflate(&buf);
                 raw.resize(len as usize, 0);
                 return Ok((raw, t));
             }
             let mut out = vec![0u8; len as usize];
-            let t = read_raid_into(store, id, offset, &mut out, now, g)?;
+            let t = read_raid_into_with(store, id, offset, &mut out, now, g, sched)?;
             Ok((out, t))
         }
         Layout::Mirror { .. } => read_mirror(store, id, offset, len, now),
@@ -536,6 +658,20 @@ pub fn read_into(
     dst: &mut [u8],
     now: SimTime,
 ) -> Result<SimTime> {
+    let mut sched = IoScheduler::new();
+    read_into_with(store, id, offset, dst, now, &mut sched)
+}
+
+/// [`read_into`] dispatching device I/O onto the caller's group
+/// scheduler (sharded op execution).
+pub fn read_into_with(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    dst: &mut [u8],
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<SimTime> {
     let len = dst.len() as u64;
     if len == 0 {
         return Ok(now);
@@ -545,11 +681,11 @@ pub fn read_into(
     match layout.at_offset(offset).clone() {
         Layout::Raid { data, parity, unit, tier } if !layout.compressed() => {
             let g = RaidGeom { data, parity, unit, tier };
-            read_raid_into(store, id, offset, dst, now, g)
+            read_raid_into_with(store, id, offset, dst, now, g, sched)
         }
         _ => {
             // compressed / mirrored layouts: cold path through `read`
-            let (data, t) = read(store, id, offset, len, now)?;
+            let (data, t) = read_with(store, id, offset, len, now, sched)?;
             dst.copy_from_slice(&data);
             Ok(t)
         }
@@ -582,13 +718,14 @@ fn read_mirror(
     Ok((out, t))
 }
 
-fn read_raid_into(
+fn read_raid_into_with(
     store: &mut MeroStore,
     id: ObjectId,
     offset: u64,
     dst: &mut [u8],
     now: SimTime,
     g: RaidGeom,
+    sched: &mut IoScheduler,
 ) -> Result<SimTime> {
     let len = dst.len() as u64;
     if len == 0 {
@@ -624,8 +761,9 @@ fn read_raid_into(
     if !degraded {
         // ---- healthy fast path: ONE bulk copy from the block map ----
         read_logical_into(store.object(id)?, offset, dst);
-        // device-time accounting per overlapping placed data unit
-        let mut t_done = now;
+        // sharded device-time accounting: every overlapping placed data
+        // unit is dispatched to its home shard in one pass (coalescing
+        // into one accounting run per device), then the shards drain
         for stripe in first_stripe..=last_stripe {
             let sbase = stripe * width;
             let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
@@ -637,14 +775,12 @@ fn read_raid_into(
                 }
                 let pu = punits[u as usize];
                 if pu.placed {
-                    let t = store
-                        .cluster
-                        .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
-                    t_done = t_done.max(t);
+                    sched.submit(pu.device, now, g.unit, IoOp::Read, Access::Seq);
                 }
             }
         }
-        return Ok(t_done);
+        let t_done = sched.drain(&mut store.cluster.devices);
+        return Ok(now.max(t_done));
     }
 
     // ---- degraded path: per-unit copies + parity reconstruction ----
@@ -698,8 +834,9 @@ fn read_raid_into(
 }
 
 /// Rebuild one lost data unit from survivors + parity.
-/// Returns (payload if real data exists, completion time).
-fn reconstruct_unit(
+/// Returns (payload if real data exists, completion time). Shared with
+/// the `sns_serial` oracle so both engines reconstruct identically.
+pub(crate) fn reconstruct_unit(
     store: &mut MeroStore,
     id: ObjectId,
     stripe: u64,
@@ -779,7 +916,8 @@ pub fn read_phantom(
         Layout::Raid { data, parity, unit, tier } => {
             let g = RaidGeom { data, parity, unit, tier };
             let mut buf = vec![0u8; len.min(1 << 30) as usize];
-            read_raid_into(store, id, offset, &mut buf, now, g)
+            let mut sched = IoScheduler::new();
+            read_raid_into_with(store, id, offset, &mut buf, now, g, &mut sched)
         }
         _ => {
             let (_, t) = read(store, id, offset, len, now)?;
@@ -1129,6 +1267,73 @@ mod tests {
         assert_eq!(p0, p1);
         // same allocation, not a deep clone (§Perf satellite)
         assert_eq!(p0.as_ptr(), p1.as_ptr());
+    }
+
+    #[test]
+    fn parity_views_share_one_buffer_across_stripes() {
+        // §Perf: a multi-stripe write computes ALL its parity into one
+        // buffer; per-stripe parity units are adjacent views into it
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 3, 18); // 3 full stripes
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let obj = s.object(id).unwrap();
+        let p0 = obj.get_unit(0, 4).expect("stripe 0 parity");
+        let p1 = obj.get_unit(1, 4).expect("stripe 1 parity");
+        let p2 = obj.get_unit(2, 4).expect("stripe 2 parity");
+        assert_eq!(p0.len(), 16384);
+        assert_eq!(p0.as_ptr() as usize + 16384, p1.as_ptr() as usize);
+        assert_eq!(p1.as_ptr() as usize + 16384, p2.as_ptr() as usize);
+        // and each view holds the XOR of its stripe's data units
+        let units: Vec<Vec<u8>> =
+            (0..4).map(|u| data[u * 16384..(u + 1) * 16384].to_vec()).collect();
+        assert_eq!(p0, &cpu_parity(&units)[..]);
+    }
+
+    #[test]
+    fn sharded_write_batches_device_accounting() {
+        // full-stripe batch: every stripe's writes carry the same
+        // submit time, so each device's submissions coalesce into ONE
+        // accounting run (§Perf: one io() per device-contiguous run)
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 4, 19); // 4 full stripes
+        let mut sched = IoScheduler::new();
+        write_with(
+            &mut s,
+            id,
+            0,
+            Payload::Real(&data),
+            0.0,
+            None,
+            &mut sched,
+        )
+        .unwrap();
+        assert_eq!(sched.ios(), 4 * 5, "5 unit writes per stripe");
+        assert_eq!(
+            sched.io_calls(),
+            sched.shard_count() as u64,
+            "one accounting run per touched device"
+        );
+        assert!(sched.io_calls() < sched.ios());
+        assert!(sched.wait_all() > 0.0);
+    }
+
+    #[test]
+    fn sharded_execution_is_deterministic() {
+        let run = || {
+            let mut s = store();
+            let id = raid_obj(&mut s, 4, 2);
+            let data = random_bytes(4 * 16384 * 2, 20);
+            let t1 = s.write_object(id, 0, &data, 0.0, None).unwrap();
+            // partial overwrite exercises the two-phase RMW dispatch
+            let patch = random_bytes(16384, 21);
+            let t2 = s.write_object(id, 8192, &patch, t1, None).unwrap();
+            let (back, t3) =
+                s.read_object(id, 0, data.len() as u64, t2).unwrap();
+            (back, t1.to_bits(), t2.to_bits(), t3.to_bits())
+        };
+        assert_eq!(run(), run(), "same seed, same bytes, same virtual times");
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! The de-sharded op-execution path, preserved as the **serial-fold
+//! oracle** for the sharded scheduler (ISSUE 2 tentpole; see
+//! ARCHITECTURE.md and `sim::sched`).
+//!
+//! Differential contract, enforced by `tests/prop_sched.rs` and the
+//! in-bench asserts of `benches/ablate_sched.rs`:
+//!
+//! * **bytes** — this engine persists byte-identical state to the
+//!   sharded engine (same block segments via [`sns::persist_extent`],
+//!   same parity bytes) and reads reconstruct identically (shared
+//!   [`sns::reconstruct_unit`]), so either engine can read the other's
+//!   objects;
+//! * **time** — completion is a *serial fold*: [`writev`]/[`readv`]
+//!   thread ONE timeline through the batch (op `i+1` submits when op
+//!   `i` completes) and every unit I/O inside an op chains on that
+//!   timeline with its own `io()` call. One slow device therefore
+//!   pushes completion for every later unit and op in the group —
+//!   exactly the serialization the sharded engine removes. Sharded
+//!   completion must be <= this oracle's on every geometry.
+//!
+//! Plain RAID layouts only (the hot path under measurement), like
+//! `sns_baseline` — which remains the *allocation* baseline for the
+//! PR-1 zero-copy work, while this module is the *scheduling* baseline
+//! for the PR-2 sharding work.
+//!
+//! [`sns::persist_extent`]: super::sns
+//! [`sns::reconstruct_unit`]: super::sns
+
+use std::sync::Arc;
+
+use crate::error::{Result, SageError};
+use crate::mero::layout::Layout;
+use crate::mero::object::{Mobject, ObjectId, PlacedUnit};
+use crate::mero::MeroStore;
+use crate::runtime::Executor;
+use crate::sim::clock::SimTime;
+use crate::sim::device::{Access, IoOp};
+
+use super::sns::{
+    compute_parity, compute_parity_slices, persist_extent, reconstruct_unit,
+    Payload, RaidGeom,
+};
+
+/// XOR costing constant (mirror of the engine's).
+const XOR_BW: f64 = 5.0e9;
+
+fn geom(store: &MeroStore, id: ObjectId, offset: u64) -> Result<RaidGeom> {
+    let layout = store.object(id)?.layout.clone();
+    if layout.compressed() {
+        return Err(SageError::Invalid(
+            "sns_serial: plain RAID layouts only".into(),
+        ));
+    }
+    match layout.at_offset(offset) {
+        Layout::Raid { data, parity, unit, tier } => Ok(RaidGeom {
+            data: *data,
+            parity: *parity,
+            unit: *unit,
+            tier: *tier,
+        }),
+        _ => Err(SageError::Invalid(
+            "sns_serial: plain RAID layouts only".into(),
+        )),
+    }
+}
+
+fn ensure_placement(
+    store: &mut MeroStore,
+    id: ObjectId,
+    stripe: u64,
+    g: RaidGeom,
+) -> Result<()> {
+    if store.object(id)?.placement(stripe, 0).is_some() {
+        return Ok(());
+    }
+    let mut used = Vec::new();
+    for u in 0..g.units_per_stripe() {
+        let d = store.pools.allocate(&mut store.cluster, g.tier, g.unit, &used)?;
+        used.push(d);
+        store.object_mut(id)?.place_unit(PlacedUnit {
+            stripe,
+            unit: u,
+            device: d,
+            size: g.unit,
+            is_parity: u >= g.data,
+        });
+    }
+    Ok(())
+}
+
+fn read_logical(obj: &Mobject, offset: u64, len: u64) -> Vec<u8> {
+    let mut out = vec![0u8; len as usize];
+    obj.read_range_into(offset, &mut out);
+    out
+}
+
+/// Serial-fold write: unit I/Os chain on one timeline; returns the
+/// time the LAST unit completes. Stored bytes are identical to the
+/// sharded engine's.
+pub fn write(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    data: &[u8],
+    now: SimTime,
+    exec: Option<&Executor>,
+) -> Result<SimTime> {
+    let len = data.len() as u64;
+    if len == 0 {
+        return Ok(now);
+    }
+    store.object(id)?.check_aligned(offset, len)?;
+    let g = geom(store, id, offset)?;
+    let width = g.stripe_width();
+    let first_stripe = offset / width;
+    let last_stripe = (offset + len - 1) / width;
+    let mut t = now;
+
+    for stripe in first_stripe..=last_stripe {
+        ensure_placement(store, id, stripe, g)?;
+        let sbase = stripe * width;
+        let wstart = offset.max(sbase);
+        let wend = (offset + len).min(sbase + width);
+        let full_stripe = wstart == sbase && wend == sbase + width;
+
+        // ---- parity bytes (same values as the sharded engine) ----------
+        let parity_unit: Option<Vec<u8>> = if g.parity > 0 {
+            if full_stripe {
+                let slices: Vec<&[u8]> = (0..g.data)
+                    .map(|u| {
+                        let ustart = (sbase + u as u64 * g.unit - offset) as usize;
+                        &data[ustart..ustart + g.unit as usize]
+                    })
+                    .collect();
+                Some(compute_parity_slices(&slices, exec)?)
+            } else {
+                let mut units: Vec<Vec<u8>> = Vec::with_capacity(g.data as usize);
+                for u in 0..g.data {
+                    let ustart = sbase + u as u64 * g.unit;
+                    let uend = ustart + g.unit;
+                    let mut buf =
+                        read_logical(store.object(id)?, ustart, g.unit);
+                    let ov_start = wstart.max(ustart);
+                    let ov_end = wend.min(uend);
+                    if ov_start < ov_end {
+                        buf[(ov_start - ustart) as usize
+                            ..(ov_end - ustart) as usize]
+                            .copy_from_slice(
+                                &data[(ov_start - offset) as usize
+                                    ..(ov_end - offset) as usize],
+                            );
+                    }
+                    units.push(buf);
+                }
+                Some(compute_parity(&units, exec)?)
+            }
+        } else {
+            None
+        };
+
+        // ---- RMW reads: SERIAL chain (each starts when the previous
+        // completes, even on a different device) ------------------------
+        if !full_stripe {
+            for u in 0..g.units_per_stripe() {
+                let pu = *store.object(id)?.placement(stripe, u).unwrap();
+                if !store.cluster.devices[pu.device].failed {
+                    t = store
+                        .cluster
+                        .io(pu.device, t, g.unit, IoOp::Read, Access::Random);
+                }
+            }
+        }
+
+        if g.parity > 0 {
+            t += (g.data as u64 * g.unit) as f64 / XOR_BW;
+        }
+
+        // ---- unit writes: SERIAL chain ---------------------------------
+        for u in 0..g.units_per_stripe() {
+            let pu = *store.object(id)?.placement(stripe, u).unwrap();
+            if store.cluster.devices[pu.device].failed {
+                continue;
+            }
+            let t_net = store.cluster.net.pt2pt(g.unit);
+            t = store
+                .cluster
+                .io(pu.device, t + t_net, g.unit, IoOp::Write, Access::Seq);
+        }
+
+        // ---- persist parity (Arc-shared across the stripe's copies) ----
+        if let Some(p) = parity_unit {
+            let shared: Arc<Vec<u8>> = Arc::new(p);
+            let obj = store.object_mut(id)?;
+            for pi in 0..g.parity {
+                obj.put_unit(stripe, g.data + pi, shared.clone());
+            }
+        }
+    }
+
+    persist_extent(store, id, offset, Payload::Real(data))?;
+    Ok(t)
+}
+
+/// Serial-fold read: overlapping unit I/Os chain on one timeline.
+/// Returns (bytes, completion) — bytes identical to the sharded
+/// engine's, including parity reconstruction under failures.
+pub fn read(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    len: u64,
+    now: SimTime,
+) -> Result<(Vec<u8>, SimTime)> {
+    if len == 0 {
+        return Ok((Vec::new(), now));
+    }
+    store.object(id)?.check_aligned(offset, len)?;
+    let g = geom(store, id, offset)?;
+    let width = g.stripe_width();
+    let mut out = vec![0u8; len as usize];
+    let mut t = now;
+
+    let first_stripe = offset / width;
+    let last_stripe = (offset + len - 1) / width;
+    for stripe in first_stripe..=last_stripe {
+        let sbase = stripe * width;
+        for u in 0..g.data {
+            let ustart = sbase + u as u64 * g.unit;
+            let uend = ustart + g.unit;
+            let ov_start = offset.max(ustart);
+            let ov_end = (offset + len).min(uend);
+            if ov_start >= ov_end {
+                continue;
+            }
+            let placed = store.object(id)?.placement(stripe, u).copied();
+            let Some(pu) = placed else { continue }; // sparse zeros
+            if !store.cluster.devices[pu.device].failed {
+                t = store
+                    .cluster
+                    .io(pu.device, t, g.unit, IoOp::Read, Access::Seq);
+                store.object(id)?.read_range_into(
+                    ov_start,
+                    &mut out[(ov_start - offset) as usize
+                        ..(ov_end - offset) as usize],
+                );
+                continue;
+            }
+            if g.parity == 0 {
+                return Err(SageError::Unavailable(format!(
+                    "unit ({stripe},{u}) lost and no parity"
+                )));
+            }
+            // reconstruction chains on the same timeline
+            let (bytes, tr) = reconstruct_unit(store, id, stripe, u, t, g)?;
+            if let Some(b) = bytes {
+                let d = (ov_start - offset) as usize..(ov_end - offset) as usize;
+                let s = (ov_start - ustart) as usize..(ov_end - ustart) as usize;
+                out[d].copy_from_slice(&b[s]);
+            }
+            t = t.max(tr);
+        }
+    }
+    Ok((out, t))
+}
+
+/// Serial-fold batch write: op `i+1` submits when op `i` completes —
+/// the group-level serialization the sharded `Client::writev` removes.
+pub fn writev(
+    store: &mut MeroStore,
+    id: ObjectId,
+    extents: &[(u64, &[u8])],
+    now: SimTime,
+    exec: Option<&Executor>,
+) -> Result<SimTime> {
+    let mut t = now;
+    for (off, data) in extents {
+        t = write(store, id, *off, data, t, exec)?;
+    }
+    Ok(t)
+}
+
+/// Serial-fold batch read over `(offset, len)` extents.
+pub fn readv(
+    store: &mut MeroStore,
+    id: ObjectId,
+    extents: &[(u64, u64)],
+    now: SimTime,
+) -> Result<(Vec<Vec<u8>>, SimTime)> {
+    let mut t = now;
+    let mut out = Vec::with_capacity(extents.len());
+    for (off, len) in extents {
+        let (d, tt) = read(store, id, *off, *len, t)?;
+        t = tt;
+        out.push(d);
+    }
+    Ok((out, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+    use crate::sim::device::DeviceKind;
+    use crate::sim::rng::SimRng;
+
+    fn stores() -> (MeroStore, MeroStore) {
+        (
+            MeroStore::new(Testbed::sage_prototype().build_cluster()),
+            MeroStore::new(Testbed::sage_prototype().build_cluster()),
+        )
+    }
+
+    fn raid(s: &mut MeroStore, k: u32, p: u32) -> ObjectId {
+        s.create_object(
+            4096,
+            Layout::Raid { data: k, parity: p, unit: 16384, tier: DeviceKind::Ssd },
+        )
+        .unwrap()
+    }
+
+    fn random_bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = SimRng::new(seed);
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    #[test]
+    fn serial_and_sharded_engines_store_identical_bytes() {
+        let (mut a, mut b) = stores();
+        let ida = raid(&mut a, 4, 1);
+        let idb = raid(&mut b, 4, 1);
+        let data = random_bytes(4 * 16384 * 2, 31);
+        write(&mut a, ida, 0, &data, 0.0, None).unwrap();
+        b.write_object(idb, 0, &data, 0.0, None).unwrap();
+        // cross-engine reads: each engine reads the other's state
+        let (cross_a, _) = b.read_object(idb, 0, data.len() as u64, 1.0).unwrap();
+        let (cross_b, _) = read(&mut a, ida, 0, data.len() as u64, 1.0).unwrap();
+        assert_eq!(cross_a, data);
+        assert_eq!(cross_b, data);
+        // parity bytes agree too (degraded read through each engine)
+        let da = a.object(ida).unwrap().placement(0, 1).unwrap().device;
+        let db = b.object(idb).unwrap().placement(0, 1).unwrap().device;
+        a.cluster.fail_device(da);
+        b.cluster.fail_device(db);
+        let (ra, _) = read(&mut a, ida, 0, data.len() as u64, 2.0).unwrap();
+        let (rb, _) = b.read_object(idb, 0, data.len() as u64, 2.0).unwrap();
+        assert_eq!(ra, rb, "reconstruction must agree between engines");
+    }
+
+    #[test]
+    fn serial_fold_chains_the_batch() {
+        // two single-stripe ops on the serial path take strictly longer
+        // than the later op alone: the fold pushes op 2 behind op 1
+        let (mut a, _) = stores();
+        let id = raid(&mut a, 4, 1);
+        let data = random_bytes(4 * 16384, 32);
+        let t_one = write(&mut a, id, 0, &data, 0.0, None).unwrap();
+        let t_batch = writev(
+            &mut a,
+            id,
+            &[(0, &data[..]), (4 * 16384, &data[..])],
+            100.0,
+            None,
+        )
+        .unwrap();
+        assert!(t_batch - 100.0 > t_one, "serial fold accumulates");
+    }
+
+    #[test]
+    fn serial_rejects_non_raid() {
+        let (mut a, _) = stores();
+        let id = a
+            .create_object(4096, Layout::Mirror { copies: 2, tier: DeviceKind::Ssd })
+            .unwrap();
+        assert!(write(&mut a, id, 0, &[0u8; 4096], 0.0, None).is_err());
+    }
+}

@@ -1,5 +1,6 @@
 //! Metrics: summary statistics, bandwidth series and table printing for
-//! the benchmark harness and ADDB reports.
+//! the benchmark harness and the ADDB (§3.2.2) performance reports.
+//! In-tree substrate — see ARCHITECTURE.md §Module map.
 
 use std::fmt::Write as _;
 

@@ -1,4 +1,7 @@
 //! Property-test harness (offline substitute for the proptest crate).
+//! In-tree substrate (ARCHITECTURE.md §Module map); backs the
+//! differential oracles in `rust/tests/` (§3.2.1 SNS engines, sharded
+//! scheduler).
 //!
 //! [`prop_check`] runs a property over N deterministically-generated
 //! random cases; on failure it performs greedy shrinking via the

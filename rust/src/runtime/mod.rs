@@ -1,6 +1,8 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
 //! produced once by `make artifacts`) and executes them on the request
-//! path. Python never runs here.
+//! path. Python never runs here. This is the L2/L1 → L3 bridge of the
+//! three-layer build (ARCHITECTURE.md §Module map); it serves the
+//! §3.2.1 SNS parity and function-shipping hot spots.
 //!
 //! One compiled executable per model variant (e.g. `parity_k4`,
 //! `parity_k8`, `postprocess_16k`, `postprocess_64k`); callers such as

@@ -1,5 +1,7 @@
 //! Simulation substrate: deterministic virtual time, storage-device
-//! models, an OS page-cache model and a network model.
+//! models, the sharded op scheduler, an OS page-cache model and a
+//! network model (the §4.1 testbeds' hardware side; see
+//! ARCHITECTURE.md).
 //!
 //! The SAGE reproduction separates **real data operations** (the object
 //! store really stores bytes, parity is really computed, the DHT really
@@ -13,9 +15,11 @@ pub mod clock;
 pub mod device;
 pub mod network;
 pub mod rng;
+pub mod sched;
 
 pub use cache::PageCache;
 pub use clock::{RankClocks, SimTime};
 pub use device::{Device, DeviceKind, DeviceProfile};
 pub use network::NetworkModel;
 pub use rng::SimRng;
+pub use sched::{IoScheduler, Ticket};

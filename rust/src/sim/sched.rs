@@ -1,0 +1,324 @@
+//! Sharded asynchronous op execution: per-device submission queues
+//! with completion frontiers (the ISSUE 2 tentpole; ARCHITECTURE.md
+//! §Sharded scheduler).
+//!
+//! SAGE absorbs Exascale I/O by letting many devices service one
+//! logical operation concurrently (§3.1–§3.2 of the paper: multi-tier
+//! enclosures, SNS striping). The [`IoScheduler`] is the simulation's
+//! expression of that: every [`Device`] is an independent virtual-time
+//! server with its own **shard** — a submission queue plus a
+//! *completion frontier* (the virtual time its queue runs dry). A
+//! batch of unit I/Os is dispatched to home-device shards in one pass;
+//! draining the shards advances each device independently, so units on
+//! different devices overlap in virtual time and a degraded/slow
+//! device only delays the requests that actually queue on it. The
+//! batch completes at the **max over per-device frontiers** — not at a
+//! serial fold over units (`mero::sns_serial` preserves the fold as
+//! the differential oracle; `tests/prop_sched.rs` checks sharded
+//! completion <= serial completion on every sampled geometry).
+//!
+//! §Perf: submissions to one shard that share a timestamp, size and
+//! access pattern coalesce into a **device-contiguous run**, accounted
+//! with ONE [`Device::io_run`] call instead of one [`Device::io`] call
+//! per unit — the ROADMAP "batch the virtual-time device accounting"
+//! item. Coalescing never changes virtual time: a run of `n` equal
+//! I/Os queued back-to-back completes exactly when `n` chained `io()`
+//! calls would.
+
+use std::collections::BTreeMap;
+
+use super::clock::SimTime;
+use super::device::{Access, Device, IoOp};
+
+/// Handle for one submitted I/O; redeem with
+/// [`IoScheduler::completion`] after the next [`IoScheduler::drain`].
+pub type Ticket = usize;
+
+/// A device-contiguous run: consecutive submissions to one shard with
+/// identical timestamp/size/op/access, accounted as one `io_run` call.
+#[derive(Debug)]
+struct Run {
+    submit_at: SimTime,
+    size: u64,
+    op: IoOp,
+    access: Access,
+    tickets: Vec<Ticket>,
+}
+
+/// One device's slice of the scheduler: pending runs + the virtual
+/// time up to which the device's queue has been driven.
+#[derive(Debug, Default)]
+struct Shard {
+    pending: Vec<Run>,
+    frontier: SimTime,
+}
+
+/// The sharded op-execution scheduler. One instance serves one op
+/// group (or one self-contained store operation): submissions queue on
+/// per-device shards, [`IoScheduler::drain`] executes them against the
+/// devices, [`IoScheduler::wait_all`] is the group completion.
+#[derive(Debug, Default)]
+pub struct IoScheduler {
+    /// Per-device shards, keyed by device id (deterministic order).
+    shards: BTreeMap<usize, Shard>,
+    /// Completion time per ticket (valid after the draining pass).
+    completions: Vec<SimTime>,
+    /// Device accounting calls issued (one per device-contiguous run).
+    n_runs: u64,
+    /// Logical I/Os submitted.
+    n_ios: u64,
+}
+
+impl IoScheduler {
+    /// Empty scheduler.
+    pub fn new() -> Self {
+        IoScheduler::default()
+    }
+
+    /// Queue one unit I/O on `device`'s shard at virtual time
+    /// `submit_at`. Returns a [`Ticket`] redeemable for the completion
+    /// time after the next [`IoScheduler::drain`]. Consecutive
+    /// submissions to the same shard with identical parameters
+    /// coalesce into one device-contiguous run (§Perf).
+    pub fn submit(
+        &mut self,
+        device: usize,
+        submit_at: SimTime,
+        size: u64,
+        op: IoOp,
+        access: Access,
+    ) -> Ticket {
+        let ticket = self.completions.len();
+        // placeholder until drained; never observed by correct callers
+        self.completions.push(submit_at);
+        self.n_ios += 1;
+        let shard = self.shards.entry(device).or_default();
+        if let Some(run) = shard.pending.last_mut() {
+            if run.submit_at == submit_at
+                && run.size == size
+                && run.op == op
+                && run.access == access
+            {
+                run.tickets.push(ticket);
+                return ticket;
+            }
+        }
+        shard.pending.push(Run {
+            submit_at,
+            size,
+            op,
+            access,
+            tickets: vec![ticket],
+        });
+        ticket
+    }
+
+    /// Execute every pending run against its device, advancing each
+    /// shard's completion frontier independently. Returns the max
+    /// completion time of the *drained* batch (0.0 if nothing was
+    /// pending). Callable repeatedly: later phases (e.g. stripe writes
+    /// that depend on RMW reads) submit and drain again; frontiers
+    /// accumulate across drains.
+    pub fn drain(&mut self, devices: &mut [Device]) -> SimTime {
+        let mut batch_done = 0.0f64;
+        for (&dev, shard) in self.shards.iter_mut() {
+            for run in shard.pending.drain(..) {
+                let d = &mut devices[dev];
+                let svc = d.profile.service_time(run.size, run.op, run.access);
+                let start = run.submit_at.max(d.busy_until);
+                let end = d.io_run(
+                    run.submit_at,
+                    run.tickets.len() as u64,
+                    run.size,
+                    run.op,
+                    run.access,
+                );
+                for (i, &t) in run.tickets.iter().enumerate() {
+                    self.completions[t] = start + (i + 1) as f64 * svc;
+                }
+                shard.frontier = shard.frontier.max(end);
+                self.n_runs += 1;
+                batch_done = batch_done.max(end);
+            }
+        }
+        batch_done
+    }
+
+    /// Completion time of a drained ticket.
+    pub fn completion(&self, ticket: Ticket) -> SimTime {
+        self.completions[ticket]
+    }
+
+    /// Group completion: the **max over per-device completion
+    /// frontiers** (0.0 if nothing has been drained). This is what
+    /// `OpGroup::wait_all` folds in instead of a serial walk.
+    pub fn wait_all(&self) -> SimTime {
+        self.shards.values().fold(0.0, |t, s| t.max(s.frontier))
+    }
+
+    /// Completion frontier of one device's shard (0.0 if untouched).
+    pub fn frontier(&self, device: usize) -> SimTime {
+        self.shards.get(&device).map_or(0.0, |s| s.frontier)
+    }
+
+    /// Number of shards (distinct devices touched).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Device accounting calls issued so far — one per
+    /// device-contiguous run (<= [`IoScheduler::ios`]).
+    pub fn io_calls(&self) -> u64 {
+        self.n_runs
+    }
+
+    /// Logical unit I/Os submitted so far.
+    pub fn ios(&self) -> u64 {
+        self.n_ios
+    }
+
+    /// Submitted-but-not-yet-drained I/Os.
+    pub fn pending(&self) -> usize {
+        self.shards
+            .values()
+            .map(|s| s.pending.iter().map(|r| r.tickets.len()).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceProfile;
+
+    fn ssd() -> Device {
+        Device::new(DeviceProfile::ssd(1 << 40))
+    }
+
+    fn smr() -> Device {
+        Device::new(DeviceProfile::smr(1 << 40))
+    }
+
+    #[test]
+    fn devices_overlap_in_virtual_time() {
+        let mut devs = vec![ssd(), ssd()];
+        let mut sched = IoScheduler::new();
+        let a = sched.submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        let b = sched.submit(1, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        let done = sched.drain(&mut devs);
+        // both devices served concurrently: group completes when ONE
+        // 1 MiB write does, not two back-to-back
+        assert_eq!(sched.completion(a), sched.completion(b));
+        assert_eq!(done, sched.completion(a));
+        assert_eq!(sched.wait_all(), done);
+        assert!(done < 2.0 * sched.completion(a));
+        assert_eq!(sched.shard_count(), 2);
+    }
+
+    #[test]
+    fn same_shard_serializes_and_coalesces_runs() {
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::new();
+        let t0 = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        let t1 = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        let t2 = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        sched.drain(&mut devs);
+        // one accounting call for the device-contiguous run of three
+        assert_eq!(sched.io_calls(), 1);
+        assert_eq!(sched.ios(), 3);
+        // queueing within the run is preserved
+        let svc = devs[0].profile.service_time(1 << 20, IoOp::Read, Access::Seq);
+        assert!(sched.completion(t0) < sched.completion(t1));
+        assert!(sched.completion(t1) < sched.completion(t2));
+        assert!((sched.completion(t2) - 3.0 * svc).abs() < 1e-12);
+        assert_eq!(sched.frontier(0), sched.completion(t2));
+        assert_eq!(devs[0].bytes_read, 3 << 20);
+    }
+
+    #[test]
+    fn run_coalescing_matches_chained_io_calls() {
+        // n submissions through the scheduler == n chained io() calls
+        let mut serial = ssd();
+        let mut t = 0.0;
+        for _ in 0..5 {
+            t = serial.io(0.0, 4096, IoOp::Write, Access::Seq);
+        }
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::new();
+        let mut last = 0;
+        for _ in 0..5 {
+            last = sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        }
+        sched.drain(&mut devs);
+        assert!((sched.completion(last) - t).abs() < 1e-12);
+        assert!((devs[0].busy_until - serial.busy_until).abs() < 1e-12);
+        assert_eq!(devs[0].bytes_written, serial.bytes_written);
+        assert_eq!(sched.io_calls(), 1, "one accounting call for the run");
+    }
+
+    #[test]
+    fn slow_shard_does_not_drag_fast_shard() {
+        // one tier-4 SMR straggler next to flash: its shard's frontier
+        // is late, the flash shard's is not — and wait_all is the max
+        let mut devs = vec![ssd(), smr()];
+        let mut sched = IoScheduler::new();
+        sched.submit(0, 0.0, 1 << 22, IoOp::Write, Access::Seq);
+        sched.submit(1, 0.0, 1 << 22, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        assert!(sched.frontier(1) > 5.0 * sched.frontier(0));
+        assert_eq!(sched.wait_all(), sched.frontier(1));
+    }
+
+    #[test]
+    fn multi_phase_drains_accumulate_frontiers() {
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::new();
+        let a = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Random);
+        let t_read = sched.drain(&mut devs);
+        assert_eq!(t_read, sched.completion(a));
+        // phase 2 submits at the phase-1 completion (RMW dependency)
+        sched.submit(0, t_read, 1 << 20, IoOp::Write, Access::Seq);
+        let t_write = sched.drain(&mut devs);
+        assert!(t_write > t_read);
+        assert_eq!(sched.wait_all(), t_write);
+        // nothing pending: an empty drain reports 0.0 and changes nothing
+        assert_eq!(sched.pending(), 0);
+        assert_eq!(sched.drain(&mut devs), 0.0);
+        assert_eq!(sched.wait_all(), t_write);
+    }
+
+    #[test]
+    fn interleaved_submissions_coalesce_per_shard() {
+        // global submission order a,b,a,b: each shard still sees ONE
+        // contiguous run of two
+        let mut devs = vec![ssd(), ssd()];
+        let mut sched = IoScheduler::new();
+        sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.submit(1, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.submit(1, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        assert_eq!(sched.io_calls(), 2);
+        assert_eq!(sched.ios(), 4);
+    }
+
+    #[test]
+    fn execution_is_deterministic() {
+        let run = || {
+            let mut devs = vec![ssd(), smr(), ssd()];
+            let mut sched = IoScheduler::new();
+            for i in 0..30u64 {
+                sched.submit(
+                    (i % 3) as usize,
+                    (i / 3) as f64 * 1e-4,
+                    4096 * (1 + i % 4),
+                    if i % 2 == 0 { IoOp::Read } else { IoOp::Write },
+                    Access::Seq,
+                );
+            }
+            sched.drain(&mut devs);
+            sched.wait_all()
+        };
+        assert_eq!(run().to_bits(), run().to_bits());
+    }
+}

@@ -1,6 +1,7 @@
 //! In-tree substrates for functionality the offline build cannot pull
 //! from crates.io: JSON/TOML parsing, CLI argument handling, byte-size
-//! helpers.
+//! helpers, compression. No paper section of its own — see
+//! ARCHITECTURE.md §Module map.
 
 pub mod bytes;
 pub mod cli;
