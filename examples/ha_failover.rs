@@ -68,7 +68,7 @@ fn main() -> sage::Result<()> {
                     degraded_reads += 1;
                     let (bytes, t_done) = sns::repair(store, &objs, d, t)?;
                     store.cluster.replace_device(d);
-                    store.ha.repair_done(d);
+                    store.ha.repair_done(d, t_done);
                     repairs += 1;
                     println!(
                         "t={t:6.0}s  rebuilt {} in {:.2}s",
@@ -78,7 +78,7 @@ fn main() -> sage::Result<()> {
                 }
                 RepairAction::ProactiveDrain(d) => {
                     println!("t={t:6.0}s  device {d}: repeated transients -> proactive drain");
-                    store.ha.repair_done(d);
+                    store.ha.repair_done(d, t);
                 }
                 RepairAction::NodeAlert { node, events } => {
                     println!("t={t:6.0}s  node {node}: {events} correlated events -> operator alert");
@@ -99,10 +99,12 @@ fn main() -> sage::Result<()> {
         objs.len()
     );
     println!(
-        "HA counters: {} repairs, {} drains, {} alerts",
+        "HA counters: {} repairs, {} drains, {} alerts, \
+         mean repair {:.2}s",
         client.store.ha.repairs_started,
         client.store.ha.drains_started,
-        client.store.ha.alerts
+        client.store.ha.alerts,
+        client.store.ha.mean_repair_time()
     );
     Ok(())
 }

@@ -1,10 +1,19 @@
 //! Ablation (Tbl B): HSM tiering policies under a zipfian heat trace —
 //! heat-weighted (SAGE) vs FIFO vs static placement. Reports mean
-//! access latency (virtual time) and migration traffic.
+//! access latency (virtual time), migration traffic, and the
+//! wall-clock policy-cycle cost (median ± MAD via the in-tree
+//! `Bencher`).
+//!
+//! Migrations execute through the scheduler-driven recovery plane:
+//! each HSM cycle's plan runs as ONE batched op group on a sharded
+//! per-device scheduler (`Client::migrate_with`), which also publishes
+//! the `ObjectMigrated` FDMI feed the heat map consumes.
 //!
 //! Run: `cargo bench --bench ablate_hsm`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_hsm`
+//! Rows append to `bench_results/ablate_hsm.json`.
 
-use sage::bench::record;
+use sage::bench::{record, Bencher};
 use sage::clovis::Client;
 use sage::config::Testbed;
 use sage::hsm::{Hsm, TieringPolicy};
@@ -12,15 +21,20 @@ use sage::metrics::Table;
 use sage::sim::rng::SimRng;
 
 /// One policy evaluation: skewed reads over a population, periodic HSM
-/// cycles, report (mean read latency, migrations, bytes moved).
-fn run_policy(policy: TieringPolicy) -> (f64, u64, u64) {
+/// cycles batched through the recovery plane. Returns (mean read
+/// latency, migrations, bytes moved).
+fn run_policy(
+    policy: TieringPolicy,
+    n_objects: usize,
+    rounds: u32,
+) -> (f64, u64, u64) {
     let mut c = Client::new_sim(Testbed::sage_prototype());
     let mut hsm = Hsm::new(policy);
     hsm.half_life = 20.0;
     let mut rng = SimRng::new(7);
 
     let payload: Vec<u8> = vec![42u8; 4 * 65536];
-    let objs: Vec<_> = (0..30)
+    let objs: Vec<_> = (0..n_objects)
         .map(|_| {
             let o = c.create_object(4096).unwrap();
             c.write_object(&o, 0, &payload).unwrap();
@@ -31,7 +45,7 @@ fn run_policy(policy: TieringPolicy) -> (f64, u64, u64) {
 
     let mut read_time = 0.0;
     let mut reads = 0u32;
-    for round in 0..600 {
+    for round in 0..rounds {
         let pick = rng.gen_zipf(objs.len() as u64, 0.85) as usize;
         let before = c.now;
         c.read_object(&objs[pick], 0, 65536).unwrap();
@@ -41,34 +55,64 @@ fn run_policy(policy: TieringPolicy) -> (f64, u64, u64) {
             let recs = c.fdmi.drain();
             hsm.observe(&recs, &c.store);
             let plan = hsm.plan(c.now);
-            hsm.migrate(&mut c.store, &plan, c.now).ok();
+            // one batched op group per HSM cycle (recovery plane)
+            c.migrate_with(&mut hsm, &plan).ok();
         }
     }
     (read_time / reads as f64, hsm.migrations_run, hsm.bytes_moved)
 }
 
 fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let (n_objects, rounds) = if quick { (12, 200) } else { (30, 600) };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+
     let mut t = Table::new(
-        "Tbl B: HSM policy ablation (zipf 0.85 reads, 30 objects)",
-        &["policy", "mean read", "migrations", "bytes moved"],
+        &format!(
+            "Tbl B: HSM policy ablation (zipf 0.85 reads, \
+             {n_objects} objects, {rounds} rounds)"
+        ),
+        &["policy", "mean read", "migrations", "bytes moved", "cycle (wall)"],
     );
-    for (name, policy) in [
+    for (idx, (name, policy)) in [
         ("heat-weighted", TieringPolicy::HeatWeighted),
         ("fifo", TieringPolicy::Fifo),
         ("static", TieringPolicy::Static),
-    ] {
-        let (lat, migs, bytes) = run_policy(policy);
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let (lat, migs, bytes) = run_policy(policy, n_objects, rounds);
+        let m = Bencher::new(&format!("hsm_{name}"))
+            .iters(warm, iters)
+            .wall(|| run_policy(policy, n_objects, rounds).0);
         t.row(vec![
             name.into(),
             sage::metrics::fmt_secs(lat),
             migs.to_string(),
             sage::util::bytes::fmt_size(bytes),
+            format!(
+                "{} ± {}",
+                sage::metrics::fmt_secs(m.median),
+                sage::metrics::fmt_secs(m.mad)
+            ),
         ]);
-        record("ablate_hsm", &[("mean_read_s", lat), ("migrations", migs as f64)]);
+        record("ablate_hsm", &[
+            ("policy", idx as f64),
+            ("n_objects", n_objects as f64),
+            ("rounds", rounds as f64),
+            ("iters", iters as f64),
+            ("mean_read_s", lat),
+            ("migrations", migs as f64),
+            ("bytes_moved", bytes as f64),
+            ("cycle_s", m.median),
+            ("cycle_mad_s", m.mad),
+        ]);
     }
     print!("{}", t.render());
     println!(
         "expected: heat-weighted promotes the hot set (lowest latency); \
-         static never moves; fifo moves more for less gain"
+         static never moves; fifo demotes one first-in resident per \
+         tier per cycle"
     );
 }

@@ -1,0 +1,288 @@
+//! Ablation: scheduler-driven SNS repair vs the serial-fold oracle on
+//! a SKEWED 4+2 pool — seven healthy SSDs plus ONE SMR-class (tier-4
+//! profile) straggler admitted to the flash pool — with one failed
+//! device (the ISSUE 3 recovery-plane geometry).
+//!
+//! Measurements:
+//! * **virtual time** — completion of rebuilding every lost unit:
+//!   serial fold (`sns_serial::repair`: survivor reads and the rebuild
+//!   write chain unit after unit through direct `io()` calls) vs
+//!   sharded (`sns::repair_with`: ONE scheduler, phase A survivor
+//!   reads across all objects, phase B rebuild writes at each unit's
+//!   reconstruction frontier). `virtual_speedup` = serial / sharded,
+//!   must be >= 1 (also property-tested in `tests/prop_repair.rs`).
+//! * **per-target frontier** — the completion frontier of every device
+//!   shard after the sharded repair: rebuild writes stream onto target
+//!   devices while survivor reads of later stripes are in flight, and
+//!   the straggler's shard finishes late without dragging the rest.
+//! * **wall clock** — repair cycle (store build + fail + rebuild)
+//!   median ± MAD via the in-tree `Bencher`.
+//!
+//! Byte-equivalence is asserted in-bench: both engines rebuild the
+//! same byte count and every object reads back its original contents.
+//!
+//! Run: `cargo bench --bench ablate_repair`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_repair`
+//! Rows append to `bench_results/ablate_repair.json`.
+
+use sage::bench::{record, Bencher};
+use sage::cluster::{Cluster, EnclosureCompute};
+use sage::mero::{sns, sns_serial, Layout, MeroStore, ObjectId};
+use sage::metrics::Table;
+use sage::sim::device::{DeviceKind, DeviceProfile};
+use sage::sim::network::NetworkModel;
+use sage::sim::rng::SimRng;
+use sage::sim::sched::IoScheduler;
+
+const UNIT: u64 = 65536;
+const K: u32 = 4;
+const P: u32 = 2;
+const STRIPES_PER_OBJ: u64 = 2;
+
+fn layout() -> Layout {
+    Layout::Raid { data: K, parity: P, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// The skewed 4+2 pool: seven healthy SSDs plus ONE SMR-class
+/// straggler (tier-4 bandwidth/latency/seek profile) admitted to the
+/// flash pool, so some survivor reads and rebuild writes land on it.
+fn skewed_cluster() -> Cluster {
+    let mut profiles: Vec<DeviceProfile> =
+        (0..7).map(|_| DeviceProfile::ssd(2 << 40)).collect();
+    let mut straggler = DeviceProfile::smr(2 << 40);
+    straggler.kind = DeviceKind::Ssd; // pooled with the flash devices
+    profiles.push(straggler);
+    let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+    for chunk in profiles.chunks(4) {
+        c.add_node(
+            chunk.to_vec(),
+            EnclosureCompute { cores: 16, flops: 5e10 },
+        );
+    }
+    c
+}
+
+/// Index of the straggler device in [`skewed_cluster`].
+fn straggler_dev(c: &Cluster) -> usize {
+    (0..c.devices.len())
+        .find(|&d| c.devices[d].profile.write_bw < 100e6)
+        .expect("straggler present")
+}
+
+/// Build a store with `n_objects` striped objects written through the
+/// given engine, then fail the device holding object 0's first unit.
+/// Both engines allocate in the same order, so the failed device and
+/// all placements agree across the serial and sharded stores.
+fn seeded_store(
+    serial_engine: bool,
+    n_objects: usize,
+    datas: &[Vec<u8>],
+) -> (MeroStore, Vec<ObjectId>, usize) {
+    let mut s = MeroStore::new(skewed_cluster());
+    let mut objs = Vec::with_capacity(n_objects);
+    let mut t = 0.0f64;
+    for data in datas.iter().take(n_objects) {
+        let id = s.create_object(4096, layout()).unwrap();
+        t = if serial_engine {
+            sns_serial::write(&mut s, id, 0, data, t, None).unwrap()
+        } else {
+            s.write_object(id, 0, data, t, None).unwrap()
+        };
+        objs.push(id);
+    }
+    let dev = s.object(objs[0]).unwrap().placement(0, 0).unwrap().device;
+    s.cluster.fail_device(dev);
+    (s, objs, dev)
+}
+
+/// One full repair cycle (store build + fail + rebuild) through the
+/// chosen engine. The repaired store is returned so the byte oracle
+/// can read it back without rebuilding everything.
+struct RepairRun {
+    bytes: u64,
+    t: f64,
+    store: MeroStore,
+    objs: Vec<ObjectId>,
+    dev: usize,
+    /// Sharded engine only: per-device frontiers + dispatch stats.
+    frontiers: Vec<f64>,
+    io_calls: u64,
+    ios: u64,
+}
+
+fn run_repair(serial: bool, n_objects: usize, datas: &[Vec<u8>]) -> RepairRun {
+    let (mut store, objs, dev) = seeded_store(serial, n_objects, datas);
+    if serial {
+        let (bytes, t) = sns_serial::repair(&mut store, &objs, dev, 0.0).unwrap();
+        return RepairRun {
+            bytes, t, store, objs, dev,
+            frontiers: Vec::new(), io_calls: 0, ios: 0,
+        };
+    }
+    let mut sched = IoScheduler::new();
+    let (bytes, t) =
+        sns::repair_with(&mut store, &objs, dev, 0.0, &mut sched).unwrap();
+    let frontiers: Vec<f64> =
+        (0..store.cluster.devices.len()).map(|d| sched.frontier(d)).collect();
+    let (io_calls, ios) = (sched.io_calls(), sched.ios());
+    RepairRun { bytes, t, store, objs, dev, frontiers, io_calls, ios }
+}
+
+fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let n_objects = if quick { 4 } else { 16 };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let obj_bytes = STRIPES_PER_OBJ * K as u64 * UNIT;
+
+    let mut rng = SimRng::new(11);
+    let datas: Vec<Vec<u8>> = (0..n_objects)
+        .map(|_| {
+            let mut d = vec![0u8; obj_bytes as usize];
+            rng.fill_bytes(&mut d);
+            d
+        })
+        .collect();
+
+    // ---- virtual-time completion: serial fold vs sharded ---------------
+    let mut serial = run_repair(true, n_objects, &datas);
+    let mut sharded = run_repair(false, n_objects, &datas);
+    let (t_serial, t_sharded) = (serial.t, sharded.t);
+    let (io_calls, ios) = (sharded.io_calls, sharded.ios);
+    assert_eq!(
+        serial.bytes, sharded.bytes,
+        "both engines rebuild the same units"
+    );
+    assert!(serial.bytes > 0, "the failed device held units to rebuild");
+    assert_eq!(
+        serial.dev, sharded.dev,
+        "identical allocation => same failed device"
+    );
+    assert!(
+        t_sharded <= t_serial * (1.0 + 1e-9),
+        "sharded repair must not exceed the serial fold \
+         ({t_sharded} vs {t_serial})"
+    );
+    let virtual_speedup = t_serial / t_sharded.max(1e-12);
+
+    // byte oracle on the SAME repaired stores: every object reads back
+    // its original contents (the failed device is still down; its
+    // units were re-homed)
+    for (i, data) in datas.iter().enumerate() {
+        let (a, _) = sns_serial::read(
+            &mut serial.store,
+            serial.objs[i],
+            0,
+            obj_bytes,
+            1e6,
+        )
+        .unwrap();
+        let (b, _) = sns::read(
+            &mut sharded.store,
+            sharded.objs[i],
+            0,
+            obj_bytes,
+            1e6,
+        )
+        .unwrap();
+        assert_eq!(&a, data, "serial store intact after repair");
+        assert_eq!(&b, data, "sharded store intact after repair");
+    }
+    let frontiers = std::mem::take(&mut sharded.frontiers);
+
+    let mut t = Table::new(
+        &format!(
+            "Scheduler-driven repair vs serial fold \
+             ({n_objects} objects x {STRIPES_PER_OBJ} stripes, {K}+{P}, \
+             skewed pool, 1 failed device)"
+        ),
+        &["engine", "virtual completion", "io() calls", "unit I/Os"],
+    );
+    t.row(vec![
+        "serial fold".into(),
+        sage::metrics::fmt_secs(t_serial),
+        ios.to_string(),
+        ios.to_string(),
+    ]);
+    t.row(vec![
+        "sharded".into(),
+        sage::metrics::fmt_secs(t_sharded),
+        io_calls.to_string(),
+        ios.to_string(),
+    ]);
+    t.row(vec![
+        "speedup".into(),
+        format!("{virtual_speedup:.2}x"),
+        "".into(),
+        "".into(),
+    ]);
+    print!("{}", t.render());
+
+    // ---- per-target frontier: rebuild writes stream across devices -----
+    let probe = MeroStore::new(skewed_cluster());
+    let straggler = straggler_dev(&probe.cluster);
+    let mut t = Table::new(
+        "Per-device completion frontiers (sharded repair)",
+        &["device", "profile", "frontier"],
+    );
+    let mut fast_max = 0.0f64;
+    for (d, f) in frontiers.iter().enumerate() {
+        if d != straggler {
+            fast_max = fast_max.max(*f);
+        }
+        t.row(vec![
+            format!("dev{d}"),
+            if d == straggler { "SMR straggler".into() } else { "SSD".into() },
+            sage::metrics::fmt_secs(*f),
+        ]);
+    }
+    print!("{}", t.render());
+    let isolation = frontiers[straggler] / fast_max.max(1e-12);
+    println!(
+        "straggler frontier / fastest-target frontier = {isolation:.2}x \
+         (healthy targets do not wait for the straggler)\n"
+    );
+
+    // ---- wall-clock repair cycle --------------------------------------
+    let m_serial = Bencher::new("repair_serial_fold")
+        .iters(warm, iters)
+        .wall(|| run_repair(true, n_objects, &datas).t);
+    let m_sharded = Bencher::new("repair_sharded")
+        .iters(warm, iters)
+        .wall(|| run_repair(false, n_objects, &datas).t);
+    let wall_speedup = m_serial.median / m_sharded.median.max(1e-12);
+
+    let mut t = Table::new(
+        "Wall-clock repair cycle (build + fail + rebuild)",
+        &["engine", "cycle", "speedup"],
+    );
+    t.row(vec![
+        "serial fold".into(),
+        sage::metrics::fmt_secs(m_serial.median),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "sharded".into(),
+        sage::metrics::fmt_secs(m_sharded.median),
+        format!("{wall_speedup:.2}x"),
+    ]);
+    print!("{}", t.render());
+
+    record("ablate_repair", &[
+        ("k", K as f64),
+        ("p", P as f64),
+        ("n_objects", n_objects as f64),
+        ("iters", iters as f64),
+        ("bytes_rebuilt", sharded.bytes as f64),
+        ("serial_virtual_s", t_serial),
+        ("sharded_virtual_s", t_sharded),
+        ("virtual_speedup", virtual_speedup),
+        ("straggler_isolation", isolation),
+        ("serial_cycle_s", m_serial.median),
+        ("serial_mad_s", m_serial.mad),
+        ("sharded_cycle_s", m_sharded.median),
+        ("sharded_mad_s", m_sharded.mad),
+        ("wall_speedup", wall_speedup),
+        ("sharded_io_calls", io_calls as f64),
+        ("sharded_unit_ios", ios as f64),
+    ]);
+}

@@ -21,6 +21,10 @@ pub enum FdmiRecord {
     ObjectWritten { obj: ObjectId, offset: u64, len: u64, at: SimTime },
     ObjectRead { obj: ObjectId, offset: u64, len: u64, at: SimTime },
     ObjectDeleted { obj: ObjectId, at: SimTime },
+    /// Data movement between tiers, published by the recovery plane
+    /// (`Client::migrate_with`) once per moved object. Tier stamps are
+    /// [`DeviceKind::tier`](crate::sim::device::DeviceKind::tier)
+    /// indices; `hsm::storage_kind_for_tier` decodes them.
     ObjectMigrated { obj: ObjectId, from_tier: u8, to_tier: u8, at: SimTime },
 }
 

@@ -26,6 +26,91 @@ use crate::sim::device::DeviceKind;
 pub use fshipping::{FnOutput, FunctionKind, ShipResult};
 pub use ops::Extent;
 
+/// One coalesced write extent: borrowed when it is a single caller
+/// extent, owned when adjacent extents were merged into one buffer.
+enum Coalesced<'a> {
+    Borrowed(&'a [u8]),
+    Owned(Vec<u8>),
+}
+
+impl Coalesced<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Coalesced::Borrowed(d) => d.len(),
+            Coalesced::Owned(v) => v.len(),
+        }
+    }
+}
+
+impl Coalesced<'_> {
+    fn extend_into(self, v: &mut Vec<u8>) {
+        match self {
+            Coalesced::Borrowed(d) => v.extend_from_slice(d),
+            Coalesced::Owned(d) => v.extend_from_slice(&d),
+        }
+    }
+}
+
+/// Cross-op extent coalescing (ROADMAP §Perf): merge runs of
+/// list-adjacent extents (`prev.offset + prev.len == next.offset`)
+/// into single ops before striping. Only exactly-adjacent,
+/// list-consecutive, non-empty neighbours merge, so overlapping
+/// extents keep their application order and the persisted bytes are
+/// identical to the unmerged batch — while merged partial stripes
+/// become full stripes, saving RMW parity envelopes (and their
+/// survivor-read round trips). The ONE implementation behind both
+/// `writev` and `writev_owned`, so the two paths can never coalesce
+/// differently.
+fn coalesce<'a>(list: Vec<(u64, Coalesced<'a>)>) -> Vec<(u64, Coalesced<'a>)> {
+    let mut out: Vec<(u64, Coalesced<'a>)> = Vec::with_capacity(list.len());
+    for (off, data) in list {
+        let adjacent = out.last().map_or(false, |(poff, prev)| {
+            prev.len() > 0 && data.len() > 0 && *poff + prev.len() as u64 == off
+        });
+        if !adjacent {
+            out.push((off, data));
+            continue;
+        }
+        let (_, prev) = out.last_mut().unwrap();
+        let mut v = match std::mem::replace(prev, Coalesced::Borrowed(&[])) {
+            Coalesced::Borrowed(d) => d.to_vec(),
+            Coalesced::Owned(v) => v,
+        };
+        data.extend_into(&mut v);
+        *prev = Coalesced::Owned(v);
+    }
+    out
+}
+
+/// [`coalesce`] over borrowed extents (the `writev` path).
+fn coalesce_extents<'a>(extents: &[(u64, &'a [u8])]) -> Vec<(u64, Coalesced<'a>)> {
+    coalesce(
+        extents
+            .iter()
+            .map(|&(off, d)| (off, Coalesced::Borrowed(d)))
+            .collect(),
+    )
+}
+
+/// [`coalesce`] over owned buffers (the `writev_owned` path;
+/// persist-by-move is preserved — buffers merge by appending, never by
+/// re-borrowing).
+fn coalesce_owned_extents(extents: Vec<(u64, Vec<u8>)>) -> Vec<(u64, Vec<u8>)> {
+    coalesce(
+        extents
+            .into_iter()
+            .map(|(off, d)| (off, Coalesced::Owned(d)))
+            .collect(),
+    )
+    .into_iter()
+    .map(|(off, c)| match c {
+        Coalesced::Owned(v) => (off, v),
+        // unreachable: every input above is Owned
+        Coalesced::Borrowed(d) => (off, d.to_vec()),
+    })
+    .collect()
+}
+
 /// A Clovis client handle: the entry point of the SAGE storage API.
 pub struct Client {
     pub store: MeroStore,
@@ -150,9 +235,14 @@ impl Client {
     /// different devices overlap in virtual time and the group
     /// completes at the max over per-device completion frontiers
     /// (sharded op execution; `mero::sns_serial` keeps the serial-fold
-    /// semantics as the oracle). ADDB telemetry and the FDMI event are
-    /// amortized to ONE record per batch (§Perf). Returns the group
-    /// completion time.
+    /// semantics as the oracle). List-adjacent extents are **coalesced
+    /// into one op before striping** (ROADMAP §Perf cross-op
+    /// coalescing): merged partial stripes become full stripes, saving
+    /// RMW parity envelopes, while overlapping extents keep their
+    /// application order — persisted bytes are identical to the
+    /// unmerged batch. ADDB telemetry and the FDMI event are amortized
+    /// to ONE record per batch (§Perf). Returns the group completion
+    /// time.
     pub fn writev(
         &mut self,
         obj: &ObjectId,
@@ -162,26 +252,40 @@ impl Client {
             return Ok(self.now);
         }
         let now = self.now;
+        // cross-op coalescing: list-adjacent extents merge into one op
+        // before striping (fewer RMW envelopes; bytes unchanged)
+        let merged = coalesce_extents(extents);
         let mut group = ops::OpGroup::new();
-        let ids: Vec<u64> = extents
+        let ids: Vec<u64> = merged
             .iter()
             .map(|_| group.add(ops::OpKind::ObjWrite))
             .collect();
         group.launch_batch(now)?;
         let mut total = 0u64;
-        for (i, (off, data)) in extents.iter().enumerate() {
-            let r = self.store.write_object_with(
-                *obj,
-                *off,
-                data,
-                now,
-                self.exec.as_ref(),
-                group.sched(),
-            );
+        for (i, (off, data)) in merged.into_iter().enumerate() {
+            let len = data.len() as u64;
+            let r = match data {
+                Coalesced::Borrowed(d) => self.store.write_object_with(
+                    *obj,
+                    off,
+                    d,
+                    now,
+                    self.exec.as_ref(),
+                    group.sched(),
+                ),
+                Coalesced::Owned(v) => self.store.write_object_owned_with(
+                    *obj,
+                    off,
+                    v,
+                    now,
+                    self.exec.as_ref(),
+                    group.sched(),
+                ),
+            };
             match r {
                 Ok(t) => {
                     group.op_mut(ids[i])?.complete(t)?;
-                    total += data.len() as u64;
+                    total += len;
                 }
                 Err(e) => {
                     group.op_mut(ids[i])?.fail(now, &format!("{e}"))?;
@@ -193,6 +297,12 @@ impl Client {
         self.addb.record(now, "clovis", "obj_writev_bytes", total as f64);
         self.addb
             .record(now, "clovis", "obj_writev_ops", extents.len() as f64);
+        self.addb.record(
+            now,
+            "clovis",
+            "obj_writev_merged_ops",
+            ids.len() as f64,
+        );
         self.addb.record(
             now,
             "clovis",
@@ -223,14 +333,17 @@ impl Client {
         let now = self.now;
         let first_off = extents[0].0;
         let n_ops = extents.len();
+        // cross-op coalescing on owned buffers: list-adjacent extents
+        // append into the previous buffer before striping
+        let merged = coalesce_owned_extents(extents);
         let mut group = ops::OpGroup::new();
-        let ids: Vec<u64> = extents
+        let ids: Vec<u64> = merged
             .iter()
             .map(|_| group.add(ops::OpKind::ObjWrite))
             .collect();
         group.launch_batch(now)?;
         let mut total = 0u64;
-        for (i, (off, data)) in extents.into_iter().enumerate() {
+        for (i, (off, data)) in merged.into_iter().enumerate() {
             let len = data.len() as u64;
             let r = self.store.write_object_owned_with(
                 *obj,
@@ -254,6 +367,12 @@ impl Client {
         let t = group.wait_all()?;
         self.addb.record(now, "clovis", "obj_writev_bytes", total as f64);
         self.addb.record(now, "clovis", "obj_writev_ops", n_ops as f64);
+        self.addb.record(
+            now,
+            "clovis",
+            "obj_writev_merged_ops",
+            ids.len() as f64,
+        );
         self.addb.record(
             now,
             "clovis",
@@ -333,6 +452,125 @@ impl Client {
         self.store.delete_object(obj)?;
         self.fdmi.emit(fdmi::FdmiRecord::ObjectDeleted { obj, at: self.now });
         Ok(())
+    }
+
+    // ------------------------------------------------- recovery plane
+
+    /// Execute an HSM migration `plan` as ONE batched op group on the
+    /// group's sharded scheduler (scheduler-driven recovery plane):
+    /// every source read dispatches up front, rewrites stream behind
+    /// their own read frontiers, and the op completes at the max over
+    /// per-device frontiers (`Hsm::migrate_with`). Emits one
+    /// [`fdmi::FdmiRecord::ObjectMigrated`] per moved object — the
+    /// HSM/analytics data-movement feed — plus batch-amortized ADDB
+    /// telemetry, and advances the client clock.
+    pub fn migrate_with(
+        &mut self,
+        hsm: &mut crate::hsm::Hsm,
+        plan: &[crate::hsm::Migration],
+    ) -> Result<SimTime> {
+        if plan.is_empty() {
+            return Ok(self.now);
+        }
+        let now = self.now;
+        let mut group = ops::OpGroup::new();
+        let id = group.add(ops::OpKind::Migrate);
+        group.launch_batch(now)?;
+        let bytes_before = hsm.bytes_moved;
+        let r = hsm.migrate_with(&mut self.store, plan, now, group.sched());
+        // objects migrated before a mid-plan failure really moved:
+        // publish their records + telemetry either way, so FDMI
+        // consumers never diverge from the store. `last_migrated` is
+        // the HSM's own record of what completed — not a re-derivation
+        // of its skip rules.
+        if !hsm.last_migrated().is_empty() {
+            self.addb.record(
+                now,
+                "hsm",
+                "migrate_objects",
+                hsm.last_migrated().len() as f64,
+            );
+            self.addb.record(
+                now,
+                "hsm",
+                "migrate_bytes",
+                (hsm.bytes_moved - bytes_before) as f64,
+            );
+            self.addb.record(
+                now,
+                "hsm",
+                "migrate_io_runs",
+                group.sched_ref().io_calls() as f64,
+            );
+        }
+        for m in hsm.last_migrated() {
+            self.fdmi.emit(fdmi::FdmiRecord::ObjectMigrated {
+                obj: m.obj,
+                from_tier: m.from.tier(),
+                to_tier: m.to.tier(),
+                at: now,
+            });
+        }
+        let t = match r {
+            Ok(t) => {
+                group.op_mut(id)?.complete(t)?;
+                group.wait_all()?
+            }
+            Err(e) => {
+                group.op_mut(id)?.fail(now, &format!("{e}"))?;
+                return Err(e);
+            }
+        };
+        self.now = self.now.max(t);
+        Ok(t)
+    }
+
+    /// SNS-repair `failed_dev` over `objects` as ONE batched op group
+    /// (scheduler-driven recovery plane): survivor reads dispatch
+    /// across per-device shards in one pass, rebuild writes stream
+    /// onto the replacement devices, and the HA subsystem's
+    /// `repair_done` is stamped with the group's `wait_all` completion
+    /// — so repair telemetry carries the real scheduler frontier, not
+    /// a serial fold. The repaired device is returned to service empty
+    /// (`replace_device`). Returns (bytes rebuilt, completion time)
+    /// and advances the client clock.
+    pub fn repair_with(
+        &mut self,
+        objects: &[ObjectId],
+        failed_dev: usize,
+    ) -> Result<(u64, SimTime)> {
+        let now = self.now;
+        let mut group = ops::OpGroup::new();
+        let id = group.add(ops::OpKind::Repair);
+        group.launch_batch(now)?;
+        let r = crate::mero::sns::repair_with(
+            &mut self.store,
+            objects,
+            failed_dev,
+            now,
+            group.sched(),
+        );
+        let (bytes, t) = match r {
+            Ok((bytes, t)) => {
+                group.op_mut(id)?.complete(t)?;
+                (bytes, group.wait_all()?)
+            }
+            Err(e) => {
+                group.op_mut(id)?.fail(now, &format!("{e}"))?;
+                return Err(e);
+            }
+        };
+        self.store.cluster.replace_device(failed_dev);
+        self.store.ha.repair_done(failed_dev, t);
+        self.addb.record(now, "sns", "repair_bytes", bytes as f64);
+        self.addb.record(
+            now,
+            "sns",
+            "repair_io_runs",
+            group.sched_ref().io_calls() as f64,
+        );
+        self.now = self.now.max(t);
+        Ok((bytes, t))
     }
 
     // ------------------------------------------------------------ indices
@@ -614,6 +852,136 @@ mod tests {
         let back = c.read_object(&obj, 0, 2 * stripe).unwrap();
         assert_eq!(&back[..stripe as usize], &vec![9u8; stripe as usize][..]);
         assert_eq!(&back[stripe as usize..], &vec![8u8; stripe as usize][..]);
+    }
+
+    #[test]
+    fn writev_coalesces_adjacent_extents_before_striping() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let stripe = 4 * 65536u64;
+        // two half-stripe extents, adjacent in list order: they merge
+        // into ONE full-stripe op (no RMW envelope at all)
+        let half = (stripe / 2) as usize;
+        let a = vec![5u8; half];
+        let b = vec![6u8; half];
+        c.writev(&obj, &[(0, &a), (stripe / 2, &b)]).unwrap();
+        let summary = c.addb.summary();
+        let (_, merged) = summary
+            .iter()
+            .find(|(k, _)| k == "clovis.obj_writev_merged_ops")
+            .map(|(_, v)| *v)
+            .expect("merged-op stat recorded");
+        assert_eq!(merged, 1.0, "adjacent extents merge into one op");
+        let back = c.read_object(&obj, 0, stripe).unwrap();
+        assert_eq!(&back[..half], &a[..]);
+        assert_eq!(&back[half..], &b[..]);
+    }
+
+    #[test]
+    fn writev_overlapping_extents_apply_in_list_order() {
+        // coalescing must not reorder: a duplicate-offset extent later
+        // in the list wins, exactly like sequential single ops
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let stripe = 4 * 65536u64;
+        let a = vec![1u8; stripe as usize];
+        let b = vec![2u8; 8192];
+        c.writev(&obj, &[(0, &a), (0, &b)]).unwrap();
+        let back = c.read_object(&obj, 0, stripe).unwrap();
+        assert_eq!(&back[..8192], &b[..]);
+        assert_eq!(&back[8192..], &a[8192..]);
+    }
+
+    #[test]
+    fn writev_owned_coalesces_adjacent_extents() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let stripe = 4 * 65536u64;
+        let half = (stripe / 2) as usize;
+        c.writev_owned(
+            &obj,
+            vec![(0, vec![7u8; half]), (stripe / 2, vec![8u8; half])],
+        )
+        .unwrap();
+        let summary = c.addb.summary();
+        let (_, merged) = summary
+            .iter()
+            .find(|(k, _)| k == "clovis.obj_writev_merged_ops")
+            .map(|(_, v)| *v)
+            .expect("merged-op stat recorded");
+        assert_eq!(merged, 1.0);
+        let back = c.read_object(&obj, 0, stripe).unwrap();
+        assert_eq!(&back[..half], &vec![7u8; half][..]);
+        assert_eq!(&back[half..], &vec![8u8; half][..]);
+    }
+
+    #[test]
+    fn migrate_with_emits_object_migrated_fdmi() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![3u8; 4 * 65536];
+        c.write_object(&obj, 0, &data).unwrap();
+        let mut hsm =
+            crate::hsm::Hsm::new(crate::hsm::TieringPolicy::HeatWeighted);
+        let plan = vec![crate::hsm::Migration {
+            obj,
+            from: DeviceKind::Ssd,
+            to: DeviceKind::Nvram,
+        }];
+        let _ = c.fdmi.drain();
+        let t = c.migrate_with(&mut hsm, &plan).unwrap();
+        assert!(t > 0.0);
+        let recs = c.fdmi.drain();
+        assert!(
+            recs.iter().any(|r| matches!(
+                r,
+                fdmi::FdmiRecord::ObjectMigrated {
+                    obj: o,
+                    from_tier: 2,
+                    to_tier: 1,
+                    ..
+                } if *o == obj
+            )),
+            "migration path must publish ObjectMigrated: {recs:?}"
+        );
+        let back = c.read_object(&obj, 0, data.len() as u64).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(
+            c.store.object(obj).unwrap().layout.tier(),
+            DeviceKind::Nvram
+        );
+    }
+
+    #[test]
+    fn repair_with_restores_redundancy_and_stamps_ha() {
+        use crate::cluster::failure::{FailureEvent, FailureKind};
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![9u8; 2 * 4 * 65536];
+        c.write_object(&obj, 0, &data).unwrap();
+        let dev =
+            c.store.object(obj).unwrap().placement(0, 1).unwrap().device;
+        c.store.cluster.fail_device(dev);
+        let at = c.now;
+        c.store.ha.observe(
+            FailureEvent { at, kind: FailureKind::Device(dev) },
+            |_| Some(0),
+        );
+        let (bytes, t) = c.repair_with(&[obj], dev).unwrap();
+        assert!(bytes > 0);
+        assert!(t >= at);
+        assert!(
+            c.store.ha.repairing().is_empty(),
+            "repair_done stamped through the recovery plane"
+        );
+        assert_eq!(c.store.ha.repair_log.len(), 1);
+        let (d, from, to) = c.store.ha.repair_log[0];
+        assert_eq!(d, dev);
+        assert_eq!(from, at);
+        assert_eq!(to, t, "repair_done carries the group wait_all completion");
+        assert!(!c.store.cluster.devices[dev].failed, "device replaced");
+        let back = c.read_object(&obj, 0, data.len() as u64).unwrap();
+        assert_eq!(back, data);
     }
 
     #[test]

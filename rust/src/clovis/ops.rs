@@ -86,6 +86,10 @@ pub enum OpKind {
     IdxNext,
     FnShip,
     Tx,
+    /// HSM migration batch (scheduler-driven recovery plane).
+    Migrate,
+    /// SNS repair of a failed device (scheduler-driven recovery plane).
+    Repair,
 }
 
 /// One asynchronous operation.

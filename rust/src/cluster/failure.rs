@@ -21,6 +21,15 @@ pub enum FailureKind {
     Transient(DeviceId),
 }
 
+impl FailureKind {
+    /// The device the event concerns (hard failure or transient).
+    pub fn device(self) -> DeviceId {
+        match self {
+            FailureKind::Device(d) | FailureKind::Transient(d) => d,
+        }
+    }
+}
+
 /// A failure at a point in virtual time.
 #[derive(Debug, Clone, Copy)]
 pub struct FailureEvent {
@@ -72,6 +81,20 @@ impl FailureSchedule {
         Self::scripted(events)
     }
 
+    /// Insert a future event, keeping time order. Used by the recovery
+    /// plane: once SNS repair rebuilds a device and `replace_device`
+    /// returns it to service, the device rejoins the failure
+    /// population — callers re-arm it by injecting its next sampled
+    /// failure after the repair completion time.
+    pub fn inject(&mut self, ev: FailureEvent) {
+        let pos = self.events[self.cursor..]
+            .iter()
+            .position(|e| e.at > ev.at)
+            .map(|p| self.cursor + p)
+            .unwrap_or(self.events.len());
+        self.events.insert(pos, ev);
+    }
+
     /// Pop all events with `at <= now`.
     pub fn due(&mut self, now: SimTime) -> Vec<FailureEvent> {
         let mut out = Vec::new();
@@ -105,6 +128,22 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].kind, FailureKind::Transient(0));
         assert_eq!(s.due(10.0).len(), 1);
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn inject_keeps_time_order_and_device_accessor() {
+        let mut s = FailureSchedule::scripted(vec![
+            FailureEvent { at: 1.0, kind: FailureKind::Transient(0) },
+            FailureEvent { at: 9.0, kind: FailureKind::Device(1) },
+        ]);
+        assert_eq!(s.due(2.0).len(), 1);
+        // re-arm a repaired device between the remaining events
+        s.inject(FailureEvent { at: 5.0, kind: FailureKind::Device(7) });
+        let d = s.due(6.0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind.device(), 7);
+        assert_eq!(s.due(10.0)[0].kind.device(), 1);
         assert_eq!(s.remaining(), 0);
     }
 

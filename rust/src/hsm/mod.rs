@@ -4,14 +4,25 @@
 //! based on data usage." Implemented as an FDMI consumer: read/write
 //! events feed a per-object heat map; a [`TieringPolicy`] decides
 //! promotions (hot data up to NVRAM/flash) and demotions (cold data
-//! down to disk/archive); the [`MigrationEngine`] executes movements
-//! with real read+rewrite through the SNS layer.
+//! down to disk/archive); [`Hsm::migrate`] executes movements with
+//! real read+rewrite through the SNS layer.
 //!
 //! Policies (compared in the `ablate_hsm` bench):
 //! * [`TieringPolicy::HeatWeighted`] — exponential-decay heat score
 //!   (the SAGE approach: usage-driven)
-//! * [`TieringPolicy::Fifo`] — demote oldest first, promote on any use
+//! * [`TieringPolicy::Fifo`] — demote the oldest untouched resident of
+//!   each fast tier (one per planning cycle), promote on recent use
 //! * [`TieringPolicy::Static`] — never move (placement-at-create only)
+//!
+//! ## Scheduler-driven migration (ISSUE 3 tentpole)
+//!
+//! [`Hsm::migrate`] no longer executes movements as a serial
+//! read-then-write fold: [`Hsm::migrate_with`] batches the whole plan
+//! onto ONE sharded `IoScheduler` — phase A dispatches every source
+//! read up front, phase B rewrites each object at its own read
+//! frontier — so a demotion to a slow SMR tier no longer blocks
+//! promotions to NVRAM. `Client::migrate_with` wraps this in a Clovis
+//! op group and emits `FdmiRecord::ObjectMigrated` per moved object.
 
 use std::collections::HashMap;
 
@@ -22,6 +33,7 @@ use crate::mero::object::ObjectId;
 use crate::mero::MeroStore;
 use crate::sim::clock::SimTime;
 use crate::sim::device::DeviceKind;
+use crate::sim::sched::IoScheduler;
 
 /// Per-object usage heat with exponential decay.
 #[derive(Debug, Clone)]
@@ -59,6 +71,10 @@ pub struct Hsm {
     /// Demote when score falls below this.
     pub demote_threshold: f64,
     heat: HashMap<ObjectId, Heat>,
+    /// Migrations completed by the most recent [`Hsm::migrate_with`]
+    /// call (in execution order; survives a mid-plan error, so callers
+    /// can publish exactly what really moved).
+    last_migrated: Vec<Migration>,
     pub migrations_run: u64,
     pub bytes_moved: u64,
 }
@@ -72,6 +88,7 @@ impl Hsm {
             promote_threshold: 3.0,
             demote_threshold: 0.2,
             heat: HashMap::new(),
+            last_migrated: Vec::new(),
             migrations_run: 0,
             bytes_moved: 0,
         }
@@ -119,9 +136,23 @@ impl Hsm {
                     e.last_touch = at;
                     e.size = size.max(e.size);
                 }
-                FdmiRecord::ObjectMigrated { .. } => {}
+                FdmiRecord::ObjectMigrated { to_tier, .. } => {
+                    // keep the tracked tier in sync for consumers that
+                    // did not run the migration themselves (data
+                    // movement is not usage: no heat bump)
+                    if let Some(h) = self.heat.get_mut(&obj) {
+                        if let Some(kind) = storage_kind_for_tier(*to_tier) {
+                            h.tier = kind;
+                        }
+                    }
+                }
             }
         }
+    }
+
+    /// Tier the HSM currently tracks `obj` on (None if untracked).
+    pub fn tier_of(&self, obj: ObjectId) -> Option<DeviceKind> {
+        self.heat.get(&obj).map(|h| h.tier)
     }
 
     /// Current heat score of an object, decayed to `now`.
@@ -152,36 +183,89 @@ impl Hsm {
                 }
             }
             TieringPolicy::Fifo => {
-                // demote the oldest resident of each fast tier; promote
-                // anything touched in the last half-life window
+                // promote anything touched within the last half-life
+                // window; demote the OLDEST (first-in) untouched
+                // resident of each fast tier — one per tier per
+                // planning cycle, regardless of absolute age
+                let mut oldest: HashMap<DeviceKind, (ObjectId, SimTime)> =
+                    HashMap::new();
                 for (&obj, h) in &self.heat {
                     if now - h.last_touch < self.half_life {
                         if let Some(up) = promote_target(h.tier) {
                             plan.push(Migration { obj, from: h.tier, to: up });
                         }
-                    } else if now - h.created > 4.0 * self.half_life {
-                        if let Some(down) = demote_target(h.tier) {
-                            plan.push(Migration { obj, from: h.tier, to: down });
-                        }
+                        continue;
+                    }
+                    if demote_target(h.tier).is_none() {
+                        continue; // already on the slowest tier
+                    }
+                    let e = oldest.entry(h.tier).or_insert((obj, h.created));
+                    // deterministic: earliest created wins, object id
+                    // breaks ties
+                    if h.created < e.1 || (h.created == e.1 && obj < e.0) {
+                        *e = (obj, h.created);
+                    }
+                }
+                for (tier, (obj, _)) in oldest {
+                    if let Some(down) = demote_target(tier) {
+                        plan.push(Migration { obj, from: tier, to: down });
                     }
                 }
             }
         }
+        // objects appear at most once, so this sort gives plan() a
+        // total deterministic order even though the heat map (and the
+        // FIFO per-tier fold above) iterate HashMaps
         plan.sort_by_key(|m| m.obj);
         plan
     }
 
-    /// Execute migrations: read through SNS, rewrite with the target
-    /// tier's layout, release the old placement. Returns completion
-    /// time. Data integrity invariant: bytes before == bytes after
-    /// (tested in prop_invariants).
+    /// Execute migrations as a self-contained batch (private
+    /// scheduler): see [`Hsm::migrate_with`]. Returns completion time.
+    /// Data integrity invariant: bytes before == bytes after (tested
+    /// in prop_invariants and `tests/prop_repair.rs`).
     pub fn migrate(
         &mut self,
         store: &mut MeroStore,
         plan: &[Migration],
         now: SimTime,
     ) -> Result<SimTime> {
-        let mut t = now;
+        let mut sched = IoScheduler::new();
+        self.migrate_with(store, plan, now, &mut sched)
+    }
+
+    /// Execute the whole migration plan as ONE scheduler-driven batch
+    /// (scheduler-driven recovery plane): phase A reads every source
+    /// object through the caller's group scheduler — all reads
+    /// dispatch at `now`, so a demotion to a slow SMR tier no longer
+    /// blocks promotions to NVRAM — then phase B releases the old
+    /// placements, retargets each layout, and rewrites through the
+    /// same scheduler at each object's own read frontier. Returns the
+    /// batch completion (max over the moved objects' write
+    /// completions). Peak memory is the plan's total byte size (every
+    /// staged source is held until its rewrite) — the price of the
+    /// overlap: rewriting each object as soon as its read returns
+    /// would queue later sources' reads behind earlier rewrites and
+    /// re-serialize the fold.
+    pub fn migrate_with(
+        &mut self,
+        store: &mut MeroStore,
+        plan: &[Migration],
+        now: SimTime,
+        sched: &mut IoScheduler,
+    ) -> Result<SimTime> {
+        // A migration whose source read has completed (in plan order,
+        // so pool allocation matches the serial fold exactly).
+        struct Staged {
+            m: Migration,
+            size: u64,
+            data: Option<Vec<u8>>,
+            t_read: SimTime,
+        }
+
+        // ---- phase A: batched source reads --------------------------
+        self.last_migrated.clear();
+        let mut staged: Vec<Staged> = Vec::new();
         for m in plan {
             let size = store.object(m.obj)?.size;
             if size == 0 {
@@ -189,50 +273,74 @@ impl Hsm {
             }
             let is_real = store.object(m.obj)?.real_blocks() > 0;
             let (data, t_read) = if is_real {
-                let (d, tr) = crate::mero::sns::read(store, m.obj, 0, size, t)?;
+                let (d, tr) =
+                    crate::mero::sns::read_with(store, m.obj, 0, size, now, sched)?;
                 (Some(d), tr)
             } else {
-                (None, crate::mero::sns::read_phantom(store, m.obj, 0, size, t)?)
+                (
+                    None,
+                    crate::mero::sns::read_phantom_with(
+                        store, m.obj, 0, size, now, sched,
+                    )?,
+                )
             };
+            staged.push(Staged { m: m.clone(), size, data, t_read });
+        }
+
+        // ---- phase B: release, retarget, rewrite --------------------
+        let mut t = now;
+        for s in staged {
             // release old placements
             let old_units: Vec<_> =
-                store.object(m.obj)?.placed_units().copied().collect();
+                store.object(s.m.obj)?.placed_units().copied().collect();
             for u in &old_units {
                 store.pools.release(&mut store.cluster, u.device, u.size);
             }
             // retarget the layout and clear placements by re-creating
             // the unit map through a fresh write
             {
-                let obj = store.object_mut(m.obj)?;
-                obj.layout = retier(&obj.layout, m.to);
+                let obj = store.object_mut(s.m.obj)?;
+                obj.layout = retier(&obj.layout, s.m.to);
                 obj.clear_placements(); // next write re-places on `to`
             }
-            let t_write = match data {
-                Some(d) => crate::mero::sns::write(
+            let t_write = match s.data {
+                Some(d) => crate::mero::sns::write_with(
                     store,
-                    m.obj,
+                    s.m.obj,
                     0,
-                    crate::mero::sns::Payload::Real(&d),
-                    t_read,
+                    crate::mero::sns::Payload::Owned(d),
+                    s.t_read,
                     None,
+                    sched,
                 )?,
-                None => crate::mero::sns::write(
+                None => crate::mero::sns::write_with(
                     store,
-                    m.obj,
+                    s.m.obj,
                     0,
-                    crate::mero::sns::Payload::Phantom(size),
-                    t_read,
+                    crate::mero::sns::Payload::Phantom(s.size),
+                    s.t_read,
                     None,
+                    sched,
                 )?,
             };
-            t = t_write;
+            t = t.max(t_write);
             self.migrations_run += 1;
-            self.bytes_moved += size;
-            if let Some(h) = self.heat.get_mut(&m.obj) {
-                h.tier = m.to;
+            self.bytes_moved += s.size;
+            if let Some(h) = self.heat.get_mut(&s.m.obj) {
+                h.tier = s.m.to;
             }
+            self.last_migrated.push(s.m);
         }
         Ok(t)
+    }
+
+    /// Migrations actually completed by the most recent
+    /// [`Hsm::migrate_with`] call, in execution order — the source of
+    /// truth for what moved (zero-size plan entries are skipped; on a
+    /// mid-plan error the completed prefix is preserved), consumed by
+    /// `Client::migrate_with` to publish `ObjectMigrated` records.
+    pub fn last_migrated(&self) -> &[Migration] {
+        &self.last_migrated
     }
 
     /// Number of tracked objects.
@@ -247,6 +355,21 @@ pub fn promote_target(t: DeviceKind) -> Option<DeviceKind> {
         DeviceKind::Smr => Some(DeviceKind::Hdd),
         DeviceKind::Hdd | DeviceKind::LustreOst => Some(DeviceKind::Ssd),
         DeviceKind::Ssd => Some(DeviceKind::Nvram),
+        _ => None,
+    }
+}
+
+/// Storage tier index → device kind: the inverse of
+/// [`DeviceKind::tier`] over the HSM-managed storage tiers, used to
+/// decode `FdmiRecord::ObjectMigrated` tier stamps. Tier 3 maps to
+/// HDD (Lustre OSTs share the index but are not an HSM target); DRAM
+/// (tier 0) is not a storage pool.
+pub fn storage_kind_for_tier(tier: u8) -> Option<DeviceKind> {
+    match tier {
+        1 => Some(DeviceKind::Nvram),
+        2 => Some(DeviceKind::Ssd),
+        3 => Some(DeviceKind::Hdd),
+        4 => Some(DeviceKind::Smr),
         _ => None,
     }
 }
@@ -389,6 +512,113 @@ mod tests {
         let (back, _) = store.read_object(obj, 0, data.len() as u64, t).unwrap();
         assert_eq!(back, data, "migration must not lose bytes");
         assert_eq!(hsm.migrations_run, 1);
+    }
+
+    #[test]
+    fn fifo_demotes_only_the_oldest_resident_per_tier() {
+        // the pinned FIFO semantics: ONE demotion per fast tier per
+        // planning cycle — the first-in (oldest-created) untouched
+        // resident — not every object past an age threshold
+        let mut hsm = Hsm::new(TieringPolicy::Fifo);
+        let store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        for (i, at) in [(1u64, 0.0), (2, 5.0), (3, 10.0)] {
+            hsm.observe(
+                &[FdmiRecord::ObjectCreated { obj: ObjectId(i), at }],
+                &store,
+            );
+        }
+        let plan = hsm.plan(1000.0);
+        let demotions: Vec<_> =
+            plan.iter().filter(|m| m.to.tier() > m.from.tier()).collect();
+        assert_eq!(
+            demotions.len(),
+            1,
+            "one demotion per tier per cycle: {plan:?}"
+        );
+        assert_eq!(demotions[0].obj, ObjectId(1), "oldest resident first");
+        assert_eq!(demotions[0].from, DeviceKind::Ssd);
+        assert_eq!(demotions[0].to, DeviceKind::Hdd);
+        // a recently-touched resident promotes instead of demoting
+        hsm.observe(
+            &[FdmiRecord::ObjectRead {
+                obj: ObjectId(3),
+                offset: 0,
+                len: 4096,
+                at: 1000.0,
+            }],
+            &store,
+        );
+        let plan = hsm.plan(1001.0);
+        assert!(plan
+            .iter()
+            .any(|m| m.obj == ObjectId(3) && m.to == DeviceKind::Nvram));
+        assert!(plan
+            .iter()
+            .all(|m| !(m.obj == ObjectId(3) && m.to.tier() > 2)));
+    }
+
+    #[test]
+    fn observe_object_migrated_updates_tracked_tier() {
+        // an HSM instance that did NOT run the migration itself stays
+        // consistent by consuming the ObjectMigrated feed
+        let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+        let store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        hsm.observe(
+            &[FdmiRecord::ObjectCreated { obj: ObjectId(1), at: 0.0 }],
+            &store,
+        );
+        assert_eq!(hsm.tier_of(ObjectId(1)), Some(DeviceKind::Ssd));
+        let before = hsm.score(ObjectId(1), 1.0);
+        hsm.observe(
+            &[FdmiRecord::ObjectMigrated {
+                obj: ObjectId(1),
+                from_tier: DeviceKind::Ssd.tier(),
+                to_tier: DeviceKind::Nvram.tier(),
+                at: 1.0,
+            }],
+            &store,
+        );
+        assert_eq!(hsm.tier_of(ObjectId(1)), Some(DeviceKind::Nvram));
+        // data movement is not usage: the heat score did not bump
+        assert!(hsm.score(ObjectId(1), 1.0) <= before + 1e-12);
+    }
+
+    #[test]
+    fn batched_migrate_with_shares_one_scheduler() {
+        // two migrations in one plan: reads dispatch up front, writes
+        // stream behind them, nothing left pending on the scheduler
+        let mut store = MeroStore::new(Testbed::sage_prototype().build_cluster());
+        let mut objs = Vec::new();
+        for i in 0..2u8 {
+            let o = store.create_object(4096, Layout::default()).unwrap();
+            let data = vec![i + 1; 4 * 65536];
+            store.write_object(o, 0, &data, 0.0, None).unwrap();
+            objs.push((o, data));
+        }
+        let plan = vec![
+            Migration { obj: objs[0].0, from: DeviceKind::Ssd, to: DeviceKind::Nvram },
+            Migration { obj: objs[1].0, from: DeviceKind::Ssd, to: DeviceKind::Hdd },
+        ];
+        let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+        let mut sched = IoScheduler::new();
+        let t = hsm.migrate_with(&mut store, &plan, 1.0, &mut sched).unwrap();
+        assert!(t > 1.0);
+        assert_eq!(sched.pending(), 0);
+        assert!(sched.ios() > 0, "all migration I/O rides the scheduler");
+        assert_eq!(hsm.migrations_run, 2);
+        for (o, data) in &objs {
+            let (back, _) =
+                store.read_object(*o, 0, data.len() as u64, t).unwrap();
+            assert_eq!(&back, data, "batched migration preserves bytes");
+        }
+        assert_eq!(
+            store.object(objs[0].0).unwrap().layout.tier(),
+            DeviceKind::Nvram
+        );
+        assert_eq!(
+            store.object(objs[1].0).unwrap().layout.tier(),
+            DeviceKind::Hdd
+        );
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct HaSubsystem {
     history: Vec<FailureEvent>,
     /// Devices already being repaired (suppress duplicate actions).
     in_repair: HashMap<DeviceId, SimTime>,
+    /// Completed recovery actions — device rebuilds AND proactive
+    /// drains — as (device, engaged at, completed at) in virtual time.
+    /// The completion stamp is the recovery plane's scheduler
+    /// completion (`IoScheduler::wait_all` over the repair's op
+    /// group), threaded in via [`HaSubsystem::repair_done`].
+    pub repair_log: Vec<(DeviceId, SimTime, SimTime)>,
     /// Counters for ADDB.
     pub repairs_started: u64,
     pub drains_started: u64,
@@ -68,6 +74,7 @@ impl HaSubsystem {
             node_threshold: 8,
             history: Vec::new(),
             in_repair: HashMap::new(),
+            repair_log: Vec::new(),
             repairs_started: 0,
             drains_started: 0,
             alerts: 0,
@@ -113,13 +120,7 @@ impl HaSubsystem {
                     let node_count = self
                         .history
                         .iter()
-                        .filter(|e| {
-                            let dd = match e.kind {
-                                FailureKind::Device(x)
-                                | FailureKind::Transient(x) => x,
-                            };
-                            node_of(dd) == Some(node)
-                        })
+                        .filter(|e| node_of(e.kind.device()) == Some(node))
                         .count();
                     if node_count >= self.node_threshold {
                         self.alerts += 1;
@@ -134,9 +135,31 @@ impl HaSubsystem {
         }
     }
 
-    /// Mark a repair finished; the device may be observed again.
-    pub fn repair_done(&mut self, dev: DeviceId) {
-        self.in_repair.remove(&dev);
+    /// Mark a repair finished at `completed_at` — the repair op
+    /// group's scheduler completion (`IoScheduler::wait_all`), carried
+    /// here by the recovery plane (`Client::repair_with`). The device
+    /// may be observed again, and the repair interval is appended to
+    /// [`HaSubsystem::repair_log`].
+    pub fn repair_done(&mut self, dev: DeviceId, completed_at: SimTime) {
+        if let Some(engaged_at) = self.in_repair.remove(&dev) {
+            self.repair_log.push((dev, engaged_at, completed_at));
+        }
+    }
+
+    /// Mean duration of completed recovery actions in virtual time
+    /// (0.0 when none have completed) — the "how fast does the cluster
+    /// heal" telemetry the §3.2.1 HA narrative asks for. Includes
+    /// proactive drains, which complete near-instantly until a drain
+    /// executor lands (ROADMAP §Perf open item).
+    pub fn mean_repair_time(&self) -> SimTime {
+        if self.repair_log.is_empty() {
+            return 0.0;
+        }
+        self.repair_log
+            .iter()
+            .map(|(_, from, to)| (to - from).max(0.0))
+            .sum::<f64>()
+            / self.repair_log.len() as f64
     }
 
     /// Devices currently under repair.
@@ -166,9 +189,12 @@ mod tests {
         // duplicate event while repairing: suppressed
         let a2 = ha.observe(ev(2.0, FailureKind::Device(3)), |_| Some(0));
         assert_eq!(a2, RepairAction::None);
-        ha.repair_done(3);
+        ha.repair_done(3, 2.5);
         let a3 = ha.observe(ev(3.0, FailureKind::Device(3)), |_| Some(0));
         assert_eq!(a3, RepairAction::RebuildDevice(3));
+        // the completion stamp landed in the repair log
+        assert_eq!(ha.repair_log, vec![(3, 1.0, 2.5)]);
+        assert!((ha.mean_repair_time() - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -30,6 +30,33 @@
 //! the de-sharded engine (serial-fold completion, one `io()` per unit)
 //! as the differential oracle and scheduling baseline.
 //!
+//! ## Scheduler-driven recovery plane (ISSUE 3 tentpole)
+//!
+//! Recovery traffic is a first-class scheduled workload, not a serial
+//! fold of direct `io()` calls:
+//!
+//! * **degraded reads** — the degraded path of the RAID read plans
+//!   every stripe's survivor reads up front (`plan_reconstruct`),
+//!   submits them to per-device shards in ONE pass, drains once, and
+//!   XOR-reconstructs from the completed buffers. Reconstructions of
+//!   different stripes overlap in virtual time instead of chaining
+//!   behind each other.
+//! * **repair** — [`repair_with`] rebuilds a failed device in two
+//!   phases on ONE scheduler: phase A submits the survivor reads of
+//!   every lost unit across ALL objects, phase B allocates replacement
+//!   homes and submits the rebuild writes at each unit's
+//!   reconstruction frontier — so writes stream onto target devices
+//!   while survivor reads of later stripes are still in flight.
+//! * **oracle** — `sns_serial` keeps the serial-fold timings
+//!   (`sns_serial::read`, `sns_serial::repair`) as the differential
+//!   baseline; `tests/prop_repair.rs` proves byte-identity and
+//!   sharded-completion <= serial on every sampled geometry, and
+//!   `benches/ablate_repair.rs` measures the gap.
+//!
+//! Both engines reconstruct through the one shared planner
+//! (`plan_reconstruct`), which separates *what to read and which bytes
+//! come back* from *when the reads complete*.
+//!
 //! ## §Perf: the zero-copy batched write/read engine
 //!
 //! The hot path avoids per-stripe and per-unit map traffic and buffer
@@ -158,7 +185,7 @@ pub fn write_with(
             sched,
         ),
         Layout::Mirror { copies, tier } => {
-            write_mirror(store, id, offset, payload, now, copies, tier)
+            write_mirror(store, id, offset, payload, now, copies, tier, sched)
         }
         other => Err(SageError::Invalid(format!(
             "unsupported write layout {other:?}"
@@ -461,6 +488,7 @@ fn write_mirror(
     now: SimTime,
     copies: u32,
     tier: DeviceKind,
+    sched: &mut IoScheduler,
 ) -> Result<SimTime> {
     let len = payload.len();
     // placement: one pseudo-stripe per written extent, keyed by offset
@@ -482,15 +510,17 @@ fn write_mirror(
         let d = store.object(id)?.placement(stripe, u).unwrap().device;
         devs.push(d);
     }
-    let mut t_done = now;
+    // replica writes ride the shards like every other unit I/O (the
+    // recovery plane migrates mirrored objects through the same
+    // scheduler as RAID traffic)
     for &d in &devs {
         if store.cluster.devices[d].failed {
             continue;
         }
         let t_net = store.cluster.net.pt2pt(len);
-        let t = store.cluster.io(d, now + t_net, len, IoOp::Write, Access::Seq);
-        t_done = t_done.max(t);
+        sched.submit(d, now + t_net, len, IoOp::Write, Access::Seq);
     }
+    let t_done = now.max(sched.drain(&mut store.cluster.devices));
     persist_extent(store, id, offset, payload)?;
     Ok(t_done)
 }
@@ -640,7 +670,7 @@ pub fn read_with(
             let t = read_raid_into_with(store, id, offset, &mut out, now, g, sched)?;
             Ok((out, t))
         }
-        Layout::Mirror { .. } => read_mirror(store, id, offset, len, now),
+        Layout::Mirror { .. } => read_mirror(store, id, offset, len, now, sched),
         other => Err(SageError::Invalid(format!(
             "unsupported read layout {other:?}"
         ))),
@@ -698,8 +728,10 @@ fn read_mirror(
     offset: u64,
     len: u64,
     now: SimTime,
+    sched: &mut IoScheduler,
 ) -> Result<(Vec<u8>, SimTime)> {
-    // mirrors: serve from block map, cost = one replica read
+    // mirrors: serve from block map, cost = one replica read (failover
+    // to any surviving replica), dispatched on the replica's shard
     let mut out = vec![0u8; len as usize];
     read_logical_into(store.object(id)?, offset, &mut out);
     let dev = store
@@ -707,14 +739,13 @@ fn read_mirror(
         .placed_units()
         .find(|u| !store.cluster.devices[u.device].failed)
         .map(|u| u.device);
-    let t = match dev {
-        Some(d) => store.cluster.io(d, now, len, IoOp::Read, Access::Seq),
-        None => {
-            return Err(SageError::Unavailable(
-                "all mirror replicas failed".into(),
-            ))
-        }
+    let Some(d) = dev else {
+        return Err(SageError::Unavailable(
+            "all mirror replicas failed".into(),
+        ));
     };
+    sched.submit(d, now, len, IoOp::Read, Access::Seq);
+    let t = now.max(sched.drain(&mut store.cluster.devices));
     Ok((out, t))
 }
 
@@ -783,9 +814,27 @@ fn read_raid_into_with(
         return Ok(now.max(t_done));
     }
 
-    // ---- degraded path: per-unit copies + parity reconstruction ----
+    // ---- degraded path (scheduler-driven recovery plane): plan every
+    // stripe's survivor reads up front, submit them to per-device
+    // shards in ONE pass, drain once, then XOR-reconstruct from the
+    // completed buffers. Reconstructions of different stripes overlap
+    // in virtual time instead of chaining behind each other; the read
+    // completes at the max over the rebuilds' survivor frontiers plus
+    // their XOR cost.
     dst.fill(0); // reconstruct-to-None (phantom) regions read as zeros
-    let mut t_done = now;
+
+    // One lost data unit awaiting its survivor reads.
+    struct Rebuild {
+        // destination byte range in `dst`
+        dst_range: std::ops::Range<usize>,
+        // source byte range inside the reconstructed unit
+        src_range: std::ops::Range<usize>,
+        // reconstructed bytes (None for phantom objects)
+        payload: Option<Vec<u8>>,
+        // survivor-read tickets the rebuild waits on
+        tickets: Vec<Ticket>,
+    }
+    let mut rebuilds: Vec<Rebuild> = Vec::new();
     for stripe in first_stripe..=last_stripe {
         let sbase = stripe * width;
         let punits = &plan[(stripe - first_stripe) as usize * ups..][..ups];
@@ -803,17 +852,15 @@ fn read_raid_into_with(
                 continue;
             }
             if !pu.failed {
-                // healthy unit: copy straight from the block map
-                let t = store
-                    .cluster
-                    .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
+                // healthy unit: copy straight from the block map and
+                // account the unit read on its home shard
+                sched.submit(pu.device, now, g.unit, IoOp::Read, Access::Seq);
                 read_logical_into(
                     store.object(id)?,
                     ov_start,
                     &mut dst[(ov_start - offset) as usize
                         ..(ov_end - offset) as usize],
                 );
-                t_done = t_done.max(t);
                 continue;
             }
             if g.parity == 0 {
@@ -821,34 +868,66 @@ fn read_raid_into_with(
                     "unit ({stripe},{u}) lost and no parity"
                 )));
             }
-            let (bytes, t) = reconstruct_unit(store, id, stripe, u, now, g)?;
-            if let Some(b) = bytes {
-                let d = (ov_start - offset) as usize..(ov_end - offset) as usize;
-                let s = (ov_start - ustart) as usize..(ov_end - ustart) as usize;
-                dst[d].copy_from_slice(&b[s]);
-            }
-            t_done = t_done.max(t);
+            let sp = plan_reconstruct(store, id, stripe, u, g)?;
+            let tickets = sp
+                .devices
+                .iter()
+                .map(|&d| sched.submit(d, now, g.unit, IoOp::Read, Access::Seq))
+                .collect();
+            rebuilds.push(Rebuild {
+                dst_range: (ov_start - offset) as usize
+                    ..(ov_end - offset) as usize,
+                src_range: (ov_start - ustart) as usize
+                    ..(ov_end - ustart) as usize,
+                payload: sp.payload,
+                tickets,
+            });
+        }
+    }
+    let mut t_done = now.max(sched.drain(&mut store.cluster.devices));
+    let t_xor = g.unit as f64 * g.data as f64 / XOR_BW;
+    for rb in rebuilds {
+        let t_read = rb
+            .tickets
+            .iter()
+            .fold(now, |t, &tk| t.max(sched.completion(tk)));
+        t_done = t_done.max(t_read + t_xor);
+        if let Some(b) = rb.payload {
+            dst[rb.dst_range].copy_from_slice(&b[rb.src_range]);
         }
     }
     Ok(t_done)
 }
 
-/// Rebuild one lost data unit from survivors + parity.
-/// Returns (payload if real data exists, completion time). Shared with
-/// the `sns_serial` oracle so both engines reconstruct identically.
-pub(crate) fn reconstruct_unit(
-    store: &mut MeroStore,
+/// Survivor-read plan for rebuilding one lost data unit: the devices
+/// whose unit reads the rebuild must wait on, plus the bytes
+/// XOR-recovered from the block map / parity payloads. Pure planning —
+/// NO device time is accounted here: the sharded engine submits the
+/// reads to an `IoScheduler`, the `sns_serial` oracle chains `io()`
+/// calls over `devices` — so both engines reconstruct byte-identically
+/// from one code path and differ only in scheduling.
+pub(crate) struct SurvivorPlan {
+    /// Home devices of the alive units (data + parity) to read.
+    pub(crate) devices: Vec<usize>,
+    /// Reconstructed bytes (None when the object is phantom).
+    pub(crate) payload: Option<Vec<u8>>,
+}
+
+/// Plan the reconstruction of lost unit (`stripe`, `lost`): validate
+/// recoverability (XOR parity tolerates ONE lost data unit per stripe)
+/// and compute the recovered bytes.
+pub(crate) fn plan_reconstruct(
+    store: &MeroStore,
     id: ObjectId,
     stripe: u64,
     lost: u32,
-    now: SimTime,
     g: RaidGeom,
-) -> Result<(Option<Vec<u8>>, SimTime)> {
-    let mut t_read = now;
+) -> Result<SurvivorPlan> {
     let mut survivors: Vec<Vec<u8>> = Vec::new();
     let mut have_all_payloads = store.object(id)?.real_blocks() > 0;
     let mut alive = 0;
     let mut lost_data_units = 1; // `lost` itself is a data unit
+    let mut devices = Vec::new();
     let sbase = stripe * g.stripe_width();
     for u in 0..g.units_per_stripe() {
         if u == lost {
@@ -865,10 +944,7 @@ pub(crate) fn reconstruct_unit(
             continue;
         }
         alive += 1;
-        let t = store
-            .cluster
-            .io(pu.device, now, g.unit, IoOp::Read, Access::Seq);
-        t_read = t_read.max(t);
+        devices.push(pu.device);
         if !have_all_payloads {
             continue;
         }
@@ -891,7 +967,6 @@ pub(crate) fn reconstruct_unit(
              (XOR parity tolerates one data loss)"
         )));
     }
-    let t = t_read + g.unit as f64 * g.data as f64 / XOR_BW;
     // XOR of the K surviving units (data+parity, minus duplicates beyond
     // the first parity — single-parity reconstruction uses k units).
     let payload = if have_all_payloads && !survivors.is_empty() {
@@ -900,10 +975,11 @@ pub(crate) fn reconstruct_unit(
     } else {
         None
     };
-    Ok((payload, t))
+    Ok(SurvivorPlan { devices, payload })
 }
 
-/// Phantom read: time accounting without materializing data.
+/// Phantom read: time accounting without materializing data
+/// (self-contained op: private scheduler).
 pub fn read_phantom(
     store: &mut MeroStore,
     id: ObjectId,
@@ -911,32 +987,77 @@ pub fn read_phantom(
     len: u64,
     now: SimTime,
 ) -> Result<SimTime> {
+    let mut sched = IoScheduler::new();
+    read_phantom_with(store, id, offset, len, now, &mut sched)
+}
+
+/// [`read_phantom`] dispatching device I/O onto the caller's group
+/// scheduler (used by the batched HSM migration path).
+pub fn read_phantom_with(
+    store: &mut MeroStore,
+    id: ObjectId,
+    offset: u64,
+    len: u64,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<SimTime> {
     let layout = store.object(id)?.layout.clone();
     match layout.at_offset(offset).clone() {
         Layout::Raid { data, parity, unit, tier } => {
             let g = RaidGeom { data, parity, unit, tier };
             let mut buf = vec![0u8; len.min(1 << 30) as usize];
-            let mut sched = IoScheduler::new();
-            read_raid_into_with(store, id, offset, &mut buf, now, g, &mut sched)
+            read_raid_into_with(store, id, offset, &mut buf, now, g, sched)
         }
         _ => {
-            let (_, t) = read(store, id, offset, len, now)?;
+            let (_, t) = read_with(store, id, offset, len, now, sched)?;
             Ok(t)
         }
     }
 }
 
 /// Rebuild every unit that lived on `failed_dev` onto other devices of
-/// the same tier. Returns (bytes rebuilt, completion time). Driven by
-/// the HA subsystem's repair decisions (§3.2.1).
+/// the same tier, as a self-contained op (private scheduler). Returns
+/// (bytes rebuilt, completion time). Driven by the HA subsystem's
+/// repair decisions (§3.2.1).
 pub fn repair(
     store: &mut MeroStore,
     objects: &[ObjectId],
     failed_dev: usize,
     now: SimTime,
 ) -> Result<(u64, SimTime)> {
-    let mut rebuilt = 0u64;
-    let mut t_done = now;
+    let mut sched = IoScheduler::new();
+    repair_with(store, objects, failed_dev, now, &mut sched)
+}
+
+/// [`repair`] dispatching ALL device I/O onto the caller's group
+/// scheduler (scheduler-driven recovery plane): phase A plans every
+/// lost unit across every object and submits the survivor reads to
+/// their home shards in one pass; phase B allocates replacement homes
+/// and submits each rebuild write at its unit's reconstruction
+/// frontier. Rebuild writes therefore stream onto target devices while
+/// survivor reads of later stripes are still in flight, and one slow
+/// survivor only delays the stripes that queue on it. Bytes and
+/// placements are identical to the `sns_serial::repair` serial-fold
+/// oracle (`tests/prop_repair.rs`); completion is never later.
+pub fn repair_with(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    failed_dev: usize,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<(u64, SimTime)> {
+    // One planned rebuild: the lost unit, its recovered payload, and
+    // the survivor-read tickets its rebuild write must wait on.
+    struct PlannedRebuild {
+        id: ObjectId,
+        pu: PlacedUnit,
+        g: RaidGeom,
+        payload: Option<Vec<u8>>,
+        tickets: Vec<Ticket>,
+    }
+
+    // ---- phase A: plan + submit every survivor read in ONE pass ----
+    let mut work: Vec<PlannedRebuild> = Vec::new();
     for &id in objects {
         let lost: Vec<PlacedUnit> = store
             .object(id)?
@@ -944,6 +1065,9 @@ pub fn repair(
             .filter(|u| u.device == failed_dev)
             .copied()
             .collect();
+        if lost.is_empty() {
+            continue;
+        }
         let layout = store.object(id)?.layout.clone();
         let Layout::Raid { data, parity, unit, tier } =
             layout.at_offset(0).clone()
@@ -953,13 +1077,21 @@ pub fn repair(
         let g = RaidGeom { data, parity, unit, tier };
         for pu in lost {
             // reconstruct (for data units) or recompute (parity units)
-            let (payload, t_rec) = if pu.unit < g.data {
-                reconstruct_unit(store, id, pu.stripe, pu.unit, t_done, g)?
+            let (payload, tickets) = if pu.unit < g.data {
+                let sp = plan_reconstruct(store, id, pu.stripe, pu.unit, g)?;
+                let tickets = sp
+                    .devices
+                    .iter()
+                    .map(|&d| {
+                        sched.submit(d, now, g.unit, IoOp::Read, Access::Seq)
+                    })
+                    .collect();
+                (sp.payload, tickets)
             } else {
                 // recompute parity from the stripe's logical data
+                // (block map — no survivor I/O, XOR cost only)
                 let obj = store.object(id)?;
-                let ok = obj.real_blocks() > 0;
-                let payload = if ok {
+                let payload = if obj.real_blocks() > 0 {
                     let sbase = pu.stripe * g.stripe_width();
                     let datas: Vec<Vec<u8>> = (0..g.data)
                         .map(|u| {
@@ -970,36 +1102,50 @@ pub fn repair(
                 } else {
                     None
                 };
-                let t = t_done + g.unit as f64 * g.data as f64 / XOR_BW;
-                (payload, t)
+                (payload, Vec::new())
             };
-            // allocate a fresh home, excluding the stripe's other devices
-            let exclude: Vec<usize> = store
-                .object(id)?
-                .placed_units()
-                .filter(|u| u.stripe == pu.stripe)
-                .map(|u| u.device)
-                .collect();
-            let new_dev =
-                store.pools.allocate(&mut store.cluster, g.tier, g.unit, &exclude)?;
-            let t_w = store
-                .cluster
-                .io(new_dev, t_rec, g.unit, IoOp::Write, Access::Seq);
-            store.object_mut(id)?.place_unit(PlacedUnit {
-                device: new_dev,
-                ..pu
-            });
-            // only parity payloads live in unit_data; reconstructed
-            // data units are already represented by the block map
-            if pu.unit >= g.data {
-                if let Some(b) = payload {
-                    store.object_mut(id)?.put_unit(pu.stripe, pu.unit, b);
-                }
-            }
-            rebuilt += g.unit;
-            t_done = t_done.max(t_w);
+            work.push(PlannedRebuild { id, pu, g, payload, tickets });
         }
     }
+    if work.is_empty() {
+        return Ok((0, now));
+    }
+    sched.drain(&mut store.cluster.devices);
+
+    // ---- phase B: allocate replacement homes and submit the rebuild
+    // writes, each at its own reconstruction frontier ----
+    let mut rebuilt = 0u64;
+    for w in work {
+        let g = w.g;
+        let t_rec = w
+            .tickets
+            .iter()
+            .fold(now, |t, &tk| t.max(sched.completion(tk)))
+            + g.unit as f64 * g.data as f64 / XOR_BW;
+        // allocate a fresh home, excluding the stripe's other devices
+        let exclude: Vec<usize> = store
+            .object(w.id)?
+            .placed_units()
+            .filter(|u| u.stripe == w.pu.stripe)
+            .map(|u| u.device)
+            .collect();
+        let new_dev =
+            store.pools.allocate(&mut store.cluster, g.tier, g.unit, &exclude)?;
+        sched.submit(new_dev, t_rec, g.unit, IoOp::Write, Access::Seq);
+        store.object_mut(w.id)?.place_unit(PlacedUnit {
+            device: new_dev,
+            ..w.pu
+        });
+        // only parity payloads live in unit_data; reconstructed
+        // data units are already represented by the block map
+        if w.pu.unit >= g.data {
+            if let Some(b) = w.payload {
+                store.object_mut(w.id)?.put_unit(w.pu.stripe, w.pu.unit, b);
+            }
+        }
+        rebuilt += g.unit;
+    }
+    let t_done = now.max(sched.drain(&mut store.cluster.devices));
     Ok((rebuilt, t_done))
 }
 
@@ -1334,6 +1480,81 @@ mod tests {
             (back, t1.to_bits(), t2.to_bits(), t3.to_bits())
         };
         assert_eq!(run(), run(), "same seed, same bytes, same virtual times");
+    }
+
+    // ---------------------------------------- recovery-plane tests
+
+    #[test]
+    fn degraded_read_dispatches_through_scheduler() {
+        // survivor reads of a degraded read ride the shards: nothing
+        // pending after the call, and the batch accounted at least the
+        // healthy-unit reads plus the lost unit's survivor reads
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384, 41);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 1).unwrap().device;
+        s.cluster.fail_device(dev);
+        let mut sched = IoScheduler::new();
+        let mut back = vec![0u8; data.len()];
+        let t = read_into_with(&mut s, id, 0, &mut back, 1.0, &mut sched)
+            .unwrap();
+        assert_eq!(back, data);
+        assert!(t > 1.0);
+        assert_eq!(sched.pending(), 0, "degraded read drains its shards");
+        // 3 healthy overlapping data units + 4 survivor reads (3 data
+        // + 1 parity) for the lost unit
+        assert_eq!(sched.ios(), 7);
+        assert!(sched.io_calls() <= sched.ios());
+    }
+
+    #[test]
+    fn repair_with_dispatches_only_scheduler_io() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 2, 42);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 2).unwrap().device;
+        s.cluster.fail_device(dev);
+        let mut sched = IoScheduler::new();
+        let (bytes, t) =
+            repair_with(&mut s, &[id], dev, 1.0, &mut sched).unwrap();
+        assert!(bytes >= 16384, "the failed device's units rebuilt");
+        assert!(t > 1.0);
+        assert_eq!(sched.pending(), 0, "both phases drained");
+        // every rebuilt unit wrote once; data units also read survivors
+        assert!(sched.ios() > 2, "survivor reads + rebuild writes");
+        assert!(
+            (t - sched.wait_all()).abs() < 1e-12,
+            "completion is the max over per-device frontiers"
+        );
+        // redundancy restored: a second failure is survivable
+        let dev2 = s.object(id).unwrap().placement(0, 0).unwrap().device;
+        s.cluster.fail_device(dev2);
+        let (back, _) = s.read_object(id, 0, data.len() as u64, t).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn repair_on_shared_scheduler_overlaps_with_group() {
+        // a repair and a foreground read can share one group scheduler:
+        // the group completes at the max over per-device frontiers,
+        // not at a serial fold of the two operations
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384, 43);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 3).unwrap().device;
+        s.cluster.fail_device(dev);
+        let mut sched = IoScheduler::new();
+        let (_, t_repair) =
+            repair_with(&mut s, &[id], dev, 1.0, &mut sched).unwrap();
+        let mut buf = vec![0u8; 16384];
+        let t_read =
+            read_into_with(&mut s, id, 0, &mut buf, 1.0, &mut sched).unwrap();
+        assert_eq!(buf, &data[..16384]);
+        let group = sched.wait_all();
+        assert!(group >= t_repair.max(t_read) - 1e-12);
     }
 
     #[test]

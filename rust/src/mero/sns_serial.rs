@@ -2,14 +2,15 @@
 //! oracle** for the sharded scheduler (ISSUE 2 tentpole; see
 //! ARCHITECTURE.md and `sim::sched`).
 //!
-//! Differential contract, enforced by `tests/prop_sched.rs` and the
-//! in-bench asserts of `benches/ablate_sched.rs`:
+//! Differential contract, enforced by `tests/prop_sched.rs`,
+//! `tests/prop_repair.rs` and the in-bench asserts of
+//! `benches/ablate_sched.rs` / `benches/ablate_repair.rs`:
 //!
 //! * **bytes** — this engine persists byte-identical state to the
 //!   sharded engine (same block segments via [`sns::persist_extent`],
 //!   same parity bytes) and reads reconstruct identically (shared
-//!   [`sns::reconstruct_unit`]), so either engine can read the other's
-//!   objects;
+//!   [`sns::plan_reconstruct`] planner), so either engine can read the
+//!   other's objects;
 //! * **time** — completion is a *serial fold*: [`writev`]/[`readv`]
 //!   thread ONE timeline through the batch (op `i+1` submits when op
 //!   `i` completes) and every unit I/O inside an op chains on that
@@ -17,6 +18,10 @@
 //!   pushes completion for every later unit and op in the group —
 //!   exactly the serialization the sharded engine removes. Sharded
 //!   completion must be <= this oracle's on every geometry.
+//! * **recovery** — [`repair`] preserves the serial-fold rebuild (one
+//!   lost unit after another, survivor reads and rebuild write chained
+//!   with direct `io()` calls) as the oracle for the scheduler-driven
+//!   recovery plane (`sns::repair_with`, sharded degraded reads).
 //!
 //! Plain RAID layouts only (the hot path under measurement), like
 //! `sns_baseline` — which remains the *allocation* baseline for the
@@ -24,7 +29,7 @@
 //! for the PR-2 sharding work.
 //!
 //! [`sns::persist_extent`]: super::sns
-//! [`sns::reconstruct_unit`]: super::sns
+//! [`sns::plan_reconstruct`]: super::sns
 
 use std::sync::Arc;
 
@@ -37,8 +42,8 @@ use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, IoOp};
 
 use super::sns::{
-    compute_parity, compute_parity_slices, persist_extent, reconstruct_unit,
-    Payload, RaidGeom,
+    compute_parity, compute_parity_slices, cpu_parity, persist_extent,
+    plan_reconstruct, Payload, RaidGeom,
 };
 
 /// XOR costing constant (mirror of the engine's).
@@ -92,6 +97,108 @@ fn read_logical(obj: &Mobject, offset: u64, len: u64) -> Vec<u8> {
     let mut out = vec![0u8; len as usize];
     obj.read_range_into(offset, &mut out);
     out
+}
+
+/// Serial-timing reconstruction of one lost data unit: every survivor
+/// read is accounted with a direct `io()` call submitted at `now` (the
+/// de-sharded semantics the recovery plane replaces). Bytes come from
+/// the shared `sns::plan_reconstruct` planner, so both engines
+/// reconstruct identically and differ only in scheduling.
+fn reconstruct_unit(
+    store: &mut MeroStore,
+    id: ObjectId,
+    stripe: u64,
+    lost: u32,
+    now: SimTime,
+    g: RaidGeom,
+) -> Result<(Option<Vec<u8>>, SimTime)> {
+    let plan = plan_reconstruct(store, id, stripe, lost, g)?;
+    let mut t_read = now;
+    for &d in &plan.devices {
+        let t = store.cluster.io(d, now, g.unit, IoOp::Read, Access::Seq);
+        t_read = t_read.max(t);
+    }
+    Ok((plan.payload, t_read + g.unit as f64 * g.data as f64 / XOR_BW))
+}
+
+/// Serial-fold repair oracle: lost units rebuild one after another —
+/// each unit's survivor reads start at the previous unit's rebuild
+/// completion and the rebuild write chains behind its reconstruction
+/// via direct `io()` calls (the pre-recovery-plane semantics). The
+/// sharded `sns::repair` must produce identical bytes and placements
+/// and complete no later (`tests/prop_repair.rs`,
+/// `benches/ablate_repair.rs`).
+pub fn repair(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    failed_dev: usize,
+    now: SimTime,
+) -> Result<(u64, SimTime)> {
+    let mut rebuilt = 0u64;
+    let mut t_done = now;
+    for &id in objects {
+        let lost: Vec<PlacedUnit> = store
+            .object(id)?
+            .placed_units()
+            .filter(|u| u.device == failed_dev)
+            .copied()
+            .collect();
+        let layout = store.object(id)?.layout.clone();
+        let Layout::Raid { data, parity, unit, tier } =
+            layout.at_offset(0).clone()
+        else {
+            continue;
+        };
+        let g = RaidGeom { data, parity, unit, tier };
+        for pu in lost {
+            // reconstruct (for data units) or recompute (parity units)
+            let (payload, t_rec) = if pu.unit < g.data {
+                reconstruct_unit(store, id, pu.stripe, pu.unit, t_done, g)?
+            } else {
+                // recompute parity from the stripe's logical data
+                let obj = store.object(id)?;
+                let payload = if obj.real_blocks() > 0 {
+                    let sbase = pu.stripe * g.stripe_width();
+                    let datas: Vec<Vec<u8>> = (0..g.data)
+                        .map(|u| {
+                            read_logical(obj, sbase + u as u64 * g.unit, g.unit)
+                        })
+                        .collect();
+                    Some(cpu_parity(&datas))
+                } else {
+                    None
+                };
+                let t = t_done + g.unit as f64 * g.data as f64 / XOR_BW;
+                (payload, t)
+            };
+            // allocate a fresh home, excluding the stripe's other devices
+            let exclude: Vec<usize> = store
+                .object(id)?
+                .placed_units()
+                .filter(|u| u.stripe == pu.stripe)
+                .map(|u| u.device)
+                .collect();
+            let new_dev =
+                store.pools.allocate(&mut store.cluster, g.tier, g.unit, &exclude)?;
+            let t_w = store
+                .cluster
+                .io(new_dev, t_rec, g.unit, IoOp::Write, Access::Seq);
+            store.object_mut(id)?.place_unit(PlacedUnit {
+                device: new_dev,
+                ..pu
+            });
+            // only parity payloads live in unit_data; reconstructed
+            // data units are already represented by the block map
+            if pu.unit >= g.data {
+                if let Some(b) = payload {
+                    store.object_mut(id)?.put_unit(pu.stripe, pu.unit, b);
+                }
+            }
+            rebuilt += g.unit;
+            t_done = t_done.max(t_w);
+        }
+    }
+    Ok((rebuilt, t_done))
 }
 
 /// Serial-fold write: unit I/Os chain on one timeline; returns the
@@ -365,6 +472,34 @@ mod tests {
         )
         .unwrap();
         assert!(t_batch - 100.0 > t_one, "serial fold accumulates");
+    }
+
+    #[test]
+    fn serial_repair_oracle_matches_sharded_repair() {
+        let (mut a, mut b) = stores();
+        let ida = raid(&mut a, 4, 1);
+        let idb = raid(&mut b, 4, 1);
+        let data = random_bytes(4 * 16384 * 2, 33);
+        write(&mut a, ida, 0, &data, 0.0, None).unwrap();
+        b.write_object(idb, 0, &data, 0.0, None).unwrap();
+        let da = a.object(ida).unwrap().placement(0, 1).unwrap().device;
+        let db = b.object(idb).unwrap().placement(0, 1).unwrap().device;
+        assert_eq!(da, db, "identical write order => identical placements");
+        a.cluster.fail_device(da);
+        b.cluster.fail_device(db);
+        let (ra, ta) = repair(&mut a, &[ida], da, 100.0).unwrap();
+        let (rb, tb) =
+            crate::mero::sns::repair(&mut b, &[idb], db, 100.0).unwrap();
+        assert_eq!(ra, rb, "same bytes rebuilt");
+        assert!(
+            tb <= ta * (1.0 + 1e-9),
+            "sharded repair never later: {tb} vs {ta}"
+        );
+        let (va, _) = read(&mut a, ida, 0, data.len() as u64, 2.0 * ta).unwrap();
+        let (vb, _) =
+            b.read_object(idb, 0, data.len() as u64, 2.0 * ta).unwrap();
+        assert_eq!(va, data);
+        assert_eq!(vb, data);
     }
 
     #[test]

@@ -42,12 +42,19 @@ fn failure_storm_no_data_loss() {
             if let RepairAction::RebuildDevice(d) =
                 c.store.ha.observe(ev, |x| nodes[x])
             {
-                sns::repair(&mut c.store, &objs, d, t).unwrap();
-                c.store.cluster.replace_device(d);
-                c.store.ha.repair_done(d);
+                // the recovery plane: repair as one batched op group on
+                // a sharded scheduler; repair_done carries the group's
+                // wait_all completion; the device returns to service
+                c.now = c.now.max(t);
+                c.repair_with(&objs, d).unwrap();
             }
         }
     }
+    assert_eq!(
+        c.store.ha.repair_log.len() as u64,
+        c.store.ha.repairs_started,
+        "every engaged repair was completed and stamped"
+    );
     for (o, d) in objs.iter().zip(datas.iter()) {
         let back = c.read_object(o, 0, d.len() as u64).unwrap();
         assert_eq!(&back, d, "object survived the storm");
@@ -135,6 +142,59 @@ fn migration_to_failed_tier_errors_cleanly() {
     let plan = vec![Migration { obj: o, from: DeviceKind::Ssd, to: DeviceKind::Nvram }];
     let res = hsm.migrate(&mut c.store, &plan, 1.0);
     assert!(res.is_err(), "no space on a fully-failed tier");
+}
+
+#[test]
+fn repaired_device_rearms_and_survives_second_failure() {
+    // full recovery-plane cycle: fail → repair_with (batched, sharded)
+    // → replace → re-arm via FailureSchedule::inject → fail again →
+    // repair again; no data loss, both repairs stamped
+    let mut c = Client::new_sim(Testbed::sage_prototype());
+    let mut objs = Vec::new();
+    let mut datas = Vec::new();
+    for i in 0..4u64 {
+        let o = c.create_object(4096).unwrap();
+        let mut d = vec![0u8; 4 * 65536];
+        SimRng::new(100 + i).fill_bytes(&mut d);
+        c.write_object(&o, 0, &d).unwrap();
+        objs.push(o);
+        datas.push(d);
+    }
+    let dev = c.store.object(objs[0]).unwrap().placement(0, 0).unwrap().device;
+    let mut sched = FailureSchedule::scripted(vec![FailureEvent {
+        at: 10.0,
+        kind: FailureKind::Device(dev),
+    }]);
+    let mut completed = Vec::new();
+    let mut t = 0.0;
+    while t < 100.0 {
+        t += 10.0;
+        for ev in sched.due(t) {
+            let d = ev.kind.device();
+            c.store.cluster.fail_device(d);
+            if let RepairAction::RebuildDevice(d) =
+                c.store.ha.observe(ev, |_| Some(0))
+            {
+                c.now = c.now.max(ev.at);
+                let (_, t_done) = c.repair_with(&objs, d).unwrap();
+                completed.push(t_done);
+                // the repaired device rejoins the failure population
+                if completed.len() == 1 {
+                    sched.inject(FailureEvent {
+                        at: t_done + 20.0,
+                        kind: FailureKind::Device(d),
+                    });
+                }
+            }
+        }
+    }
+    assert_eq!(completed.len(), 2, "the re-armed failure was repaired too");
+    assert_eq!(c.store.ha.repair_log.len(), 2);
+    assert!(c.store.ha.mean_repair_time() >= 0.0);
+    for (o, d) in objs.iter().zip(datas.iter()) {
+        let back = c.read_object(o, 0, d.len() as u64).unwrap();
+        assert_eq!(&back, d, "no data loss across the re-armed cycle");
+    }
 }
 
 #[test]

@@ -85,10 +85,11 @@ fn failure_repair_cycle_via_ha() {
         |d| nodes[d],
     );
     assert_eq!(action, RepairAction::RebuildDevice(dev));
-    let (rebuilt, _) = sns::repair(&mut s, &objs, dev, 1.0).unwrap();
+    let (rebuilt, t_repair) = sns::repair(&mut s, &objs, dev, 1.0).unwrap();
     assert!(rebuilt > 0);
     s.cluster.replace_device(dev);
-    s.ha.repair_done(dev);
+    s.ha.repair_done(dev, t_repair);
+    assert_eq!(s.ha.repair_log.len(), 1, "completion stamped in the log");
     // everything still reads back
     for (id, d) in objs.iter().zip(datas.iter()) {
         let (back, _) = s.read_object(*id, 0, d.len() as u64, 2.0).unwrap();

@@ -1,0 +1,252 @@
+//! Property tests for the scheduler-driven recovery plane (ISSUE 3):
+//!
+//! 1. **Repair equivalence** — sharded `sns::repair` rebuilds
+//!    byte-identical state to the `sns_serial::repair` serial-fold
+//!    oracle (identical placements, identical post-repair reads) and
+//!    completes no later, on every sampled geometry.
+//! 2. **Degraded-read equivalence under double failure** — on 4+2,
+//!    with TWO failed devices, sharded degraded reads return the same
+//!    bytes as the serial oracle, or both engines agree the data is
+//!    unavailable (XOR parity tolerates one lost data unit per
+//!    stripe).
+//! 3. **Batched migration** — `Hsm::migrate` over ONE scheduler
+//!    preserves bytes exactly and completes no later than the
+//!    one-migration-at-a-time serial fold.
+
+use sage::config::Testbed;
+use sage::hsm::{Hsm, Migration, TieringPolicy};
+use sage::mero::{sns, sns_serial, Layout, MeroStore, ObjectId};
+use sage::proptest::prop_check;
+use sage::sim::device::DeviceKind;
+
+const BS: u64 = 4096;
+const UNIT: u64 = 16384;
+
+fn layout(k: u32, p: u32) -> Layout {
+    Layout::Raid { data: k, parity: p, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// Deterministic payload for extent (idx, len_blocks).
+fn bytes_for(idx: u64, len_blocks: u64) -> Vec<u8> {
+    (0..len_blocks * BS)
+        .map(|j| ((idx * 151 + len_blocks * 43 + j) % 251) as u8)
+        .collect()
+}
+
+/// Total logical span of an extent list, in bytes.
+fn span(extents: &[(u64, u64)]) -> u64 {
+    extents.iter().map(|(i, l)| (i + l) * BS).max().unwrap_or(0)
+}
+
+fn gen_extents(r: &mut sage::sim::rng::SimRng) -> Vec<(u64, u64)> {
+    let n = 1 + r.gen_range(5) as usize;
+    (0..n)
+        .map(|_| (r.gen_range(48), 1 + r.gen_range(12)))
+        .collect()
+}
+
+/// Two stores with the extents applied through each engine — identical
+/// write order, so placements agree; only scheduling differs.
+fn paired_stores(
+    k: u32,
+    p: u32,
+    extents: &[(u64, u64)],
+) -> (MeroStore, ObjectId, MeroStore, ObjectId) {
+    let mut ser = MeroStore::new(Testbed::sage_prototype().build_cluster());
+    let mut sh = MeroStore::new(Testbed::sage_prototype().build_cluster());
+    let ids = ser.create_object(BS, layout(k, p)).unwrap();
+    let idh = sh.create_object(BS, layout(k, p)).unwrap();
+    let mut t_ser = 0.0;
+    let mut t_sh = 0.0;
+    for (idx, lenb) in extents {
+        let data = bytes_for(*idx, *lenb);
+        if data.is_empty() {
+            continue;
+        }
+        t_ser = sns_serial::write(&mut ser, ids, idx * BS, &data, t_ser, None)
+            .unwrap();
+        t_sh = sh.write_object(idh, idx * BS, &data, t_sh, None).unwrap();
+    }
+    (ser, ids, sh, idh)
+}
+
+#[test]
+fn prop_sharded_repair_matches_serial_oracle() {
+    for (k, p) in [(4u32, 2u32), (4, 1), (3, 2)] {
+        prop_check(
+            &format!("repair-{k}+{p}"),
+            12,
+            gen_extents,
+            |extents: &Vec<(u64, u64)>| {
+                let total = span(extents);
+                if total == 0 {
+                    return true;
+                }
+                let (mut ser, ids, mut sh, idh) = paired_stores(k, p, extents);
+                // fail the device of the same LOGICAL unit in each store
+                let unit = 1.min(k - 1);
+                let a = ser.object(ids).unwrap().placement(0, unit).copied();
+                let b = sh.object(idh).unwrap().placement(0, unit).copied();
+                let (da, db) = match (a, b) {
+                    (Some(ua), Some(ub)) => (ua.device, ub.device),
+                    // stripe 0 untouched by the extents: nothing to fail
+                    (None, None) => return true,
+                    _ => return false, // placement maps must agree
+                };
+                if da != db {
+                    return false; // identical write order => same homes
+                }
+                ser.cluster.fail_device(da);
+                sh.cluster.fail_device(db);
+                let now = 1000.0;
+                let (b_ser, t_ser) =
+                    sns_serial::repair(&mut ser, &[ids], da, now).unwrap();
+                let (b_sh, t_sh) =
+                    sns::repair(&mut sh, &[idh], db, now).unwrap();
+                if b_ser != b_sh {
+                    return false; // same units rebuilt
+                }
+                if t_sh > t_ser * (1.0 + 1e-9) + 1e-12 {
+                    return false; // sharded repair never completes later
+                }
+                // post-repair state is byte-identical (the failed
+                // device is still down, its units re-homed)
+                let (want, _) =
+                    sns_serial::read(&mut ser, ids, 0, total, 2.0 * now)
+                        .unwrap();
+                let (got, _) =
+                    sns::read(&mut sh, idh, 0, total, 2.0 * now).unwrap();
+                want == got
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_degraded_reads_and_repair_match_oracle_double_failure() {
+    let (k, p) = (4u32, 2u32);
+    prop_check(
+        "recovery-double-4+2",
+        12,
+        gen_extents,
+        |extents: &Vec<(u64, u64)>| {
+            let total = span(extents);
+            if total == 0 {
+                return true;
+            }
+            let (mut ser, ids, mut sh, idh) = paired_stores(k, p, extents);
+            // fail the devices of logical units 1 and 2 of stripe 0
+            let mut failed = Vec::new();
+            for unit in [1u32, 2] {
+                let a = ser.object(ids).unwrap().placement(0, unit).copied();
+                let b = sh.object(idh).unwrap().placement(0, unit).copied();
+                match (a, b) {
+                    (Some(ua), Some(ub)) => {
+                        if ua.device != ub.device {
+                            return false;
+                        }
+                        ser.cluster.fail_device(ua.device);
+                        sh.cluster.fail_device(ub.device);
+                        failed.push(ua.device);
+                    }
+                    (None, None) => return true,
+                    _ => return false,
+                }
+            }
+            // degraded reads: identical bytes, or both unavailable
+            // (two lost data units in one stripe are beyond XOR)
+            let want = sns_serial::read(&mut ser, ids, 0, total, 100.0)
+                .map(|(d, _)| d);
+            let got =
+                sns::read(&mut sh, idh, 0, total, 100.0).map(|(d, _)| d);
+            let reads_agree = match (want, got) {
+                (Ok(a), Ok(b)) => a == b,
+                (Err(_), Err(_)) => true,
+                _ => false,
+            };
+            if !reads_agree {
+                return false;
+            }
+            // repair of one device with the other still down: both
+            // engines agree on success (and bytes) or on unavailability
+            let r_ser = sns_serial::repair(&mut ser, &[ids], failed[0], 500.0);
+            let r_sh = sns::repair(&mut sh, &[idh], failed[0], 500.0);
+            match (r_ser, r_sh) {
+                (Ok((ba, ta)), Ok((bb, tb))) => {
+                    ba == bb && tb <= ta * (1.0 + 1e-9) + 1e-12
+                }
+                (Err(_), Err(_)) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_batched_migrate_preserves_bytes_and_leq_serial_fold() {
+    // batched Hsm::migrate (ONE scheduler for the whole plan) vs the
+    // one-migration-at-a-time serial fold: bytes preserved everywhere,
+    // and the batch completes no later on every sampled population
+    prop_check(
+        "hsm-migrate-batched",
+        10,
+        gen_extents,
+        |extents: &Vec<(u64, u64)>| {
+            let mk = || {
+                let mut s =
+                    MeroStore::new(Testbed::sage_prototype().build_cluster());
+                let mut objs = Vec::new();
+                for (round, (idx, lenb)) in extents.iter().enumerate() {
+                    let id = s.create_object(BS, layout(4, 1)).unwrap();
+                    let data = bytes_for(*idx + round as u64, *lenb + 1);
+                    s.write_object(id, 0, &data, 0.0, None).unwrap();
+                    objs.push((id, data));
+                }
+                (s, objs)
+            };
+            let (mut sa, objs_a) = mk();
+            let (mut sb, objs_b) = mk();
+            // same creation order => same object ids in both stores
+            assert_eq!(
+                objs_a.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+                objs_b.iter().map(|(id, _)| *id).collect::<Vec<_>>()
+            );
+            // alternate promotions and demotions in one plan
+            let tiers = [DeviceKind::Nvram, DeviceKind::Hdd];
+            let plan: Vec<Migration> = objs_a
+                .iter()
+                .enumerate()
+                .map(|(i, (id, _))| Migration {
+                    obj: *id,
+                    from: DeviceKind::Ssd,
+                    to: tiers[i % 2],
+                })
+                .collect();
+            let mut hsm_a = Hsm::new(TieringPolicy::HeatWeighted);
+            let t_batch = hsm_a.migrate(&mut sa, &plan, 10.0).unwrap();
+            let mut hsm_b = Hsm::new(TieringPolicy::HeatWeighted);
+            let mut t_serial = 10.0;
+            for m in &plan {
+                t_serial = hsm_b
+                    .migrate(&mut sb, std::slice::from_ref(m), t_serial)
+                    .unwrap();
+            }
+            if t_batch > t_serial * (1.0 + 1e-9) + 1e-12 {
+                return false;
+            }
+            // bytes preserved in the batched store, tiers retargeted
+            for (i, (id, data)) in objs_a.iter().enumerate() {
+                let (back, _) = sa
+                    .read_object(*id, 0, data.len() as u64, t_batch + 1.0)
+                    .unwrap();
+                if &back != data {
+                    return false;
+                }
+                if sa.object(*id).unwrap().layout.tier() != tiers[i % 2] {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
