@@ -3,9 +3,10 @@
 //!
 //! Devices fail (hard + transient) under an exponential failure
 //! schedule; the HA subsystem analyzes the quasi-ordered event set and
-//! engages SNS repair; reads served during the degraded window
-//! reconstruct through parity, and after repair the data has full
-//! redundancy again.
+//! engages SNS repair — or a proactive drain when a device degrades
+//! (repeated transients) before hard-failing; reads served during the
+//! degraded window reconstruct through parity, and after recovery the
+//! data has full redundancy again.
 //!
 //! Run: `cargo run --release --example ha_failover`
 
@@ -78,7 +79,18 @@ fn main() -> sage::Result<()> {
                 }
                 RepairAction::ProactiveDrain(d) => {
                     println!("t={t:6.0}s  device {d}: repeated transients -> proactive drain");
-                    store.ha.repair_done(d, t);
+                    // the recovery plane executes the drain: units are
+                    // read off the still-live device and re-homed at
+                    // their own read frontiers; the device stays in
+                    // service and a later hard failure of it has
+                    // nothing left to rebuild
+                    let (bytes, t_done) = sns::drain(store, &objs, d, t)?;
+                    store.ha.repair_done(d, t_done);
+                    println!(
+                        "t={t:6.0}s  drained {} off device {d} in {:.2}s",
+                        sage::util::bytes::fmt_size(bytes),
+                        t_done - t
+                    );
                 }
                 RepairAction::NodeAlert { node, events } => {
                     println!("t={t:6.0}s  node {node}: {events} correlated events -> operator alert");

@@ -1,0 +1,360 @@
+//! Ablation: ONE mixed-workload Clovis session vs sequential legacy
+//! calls (the ISSUE 4 tentpole measurement — the paper's headline
+//! scenario of in-storage compute overlapping foreground I/O and
+//! background data movement on one set of device queues).
+//!
+//! Pool: seven healthy SSDs plus ONE SMR-class (tier-4 profile)
+//! straggler admitted to the flash pool, plus six HDDs (the demotion
+//! target tier). Workload per cycle:
+//!
+//! * **ship** — `FunctionKind::IntegrityCheck` shipped to each
+//!   analytics object (in-storage compute; the node-local read rides
+//!   the session's shards),
+//! * **write** — a multi-stripe checkpoint batch onto a fresh object,
+//! * **migrate** — a cold-object demotion plan (SSD → HDD) through the
+//!   recovery plane.
+//!
+//! Engines:
+//! * **sequential legacy** — `ship_to_object` per object, then
+//!   `writev`, then `migrate_with`; every call waits for the previous
+//!   one (the pre-session programming model: each entry point builds
+//!   its own private op group).
+//! * **session** — the same ops staged on ONE `client.session()` with
+//!   no `.after` edges: everything dispatches at the session clock and
+//!   overlaps across per-device shards.
+//!
+//! Reported: virtual makespan of both engines (`virtual_speedup` =
+//! sequential / session, asserted >= 1), the session's per-device
+//! frontier table (`straggler_isolation` = straggler frontier /
+//! fastest SSD frontier), and the wall-clock cycle median ± MAD via
+//! the in-tree `Bencher`. Byte-equivalence is asserted in-bench: both
+//! engines' stores read back identical bytes and the migrated objects
+//! land on the same tier.
+//!
+//! Run: `cargo bench --bench ablate_session`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_session`
+//! Rows append to `bench_results/ablate_session.json`.
+
+use sage::bench::{record, Bencher};
+use sage::clovis::addb::Addb;
+use sage::clovis::fdmi::FdmiBus;
+use sage::clovis::{Client, FunctionKind};
+use sage::cluster::{Cluster, EnclosureCompute};
+use sage::hsm::{Hsm, Migration, TieringPolicy};
+use sage::mero::{Layout, MeroStore, ObjectId};
+use sage::metrics::Table;
+use sage::sim::device::{DeviceKind, DeviceProfile};
+use sage::sim::network::NetworkModel;
+use sage::sim::rng::SimRng;
+
+const UNIT: u64 = 65536;
+const K: u32 = 4;
+const P: u32 = 2;
+
+fn layout() -> Layout {
+    Layout::Raid { data: K, parity: P, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// Seven healthy SSDs + one SMR-class straggler pooled with the flash
+/// devices (as in `ablate_sched`/`ablate_repair`), plus six HDDs so a
+/// 4+2 demotion target exists.
+fn mixed_cluster() -> Cluster {
+    let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+    c.add_node(
+        (0..4).map(|_| DeviceProfile::ssd(2 << 40)).collect(),
+        EnclosureCompute { cores: 16, flops: 5e10 },
+    );
+    let mut straggler = DeviceProfile::smr(2 << 40);
+    straggler.kind = DeviceKind::Ssd; // pooled with the flash devices
+    let mut node_b: Vec<DeviceProfile> =
+        (0..3).map(|_| DeviceProfile::ssd(2 << 40)).collect();
+    node_b.push(straggler);
+    c.add_node(node_b, EnclosureCompute { cores: 16, flops: 5e10 });
+    c.add_node(
+        (0..6).map(|_| DeviceProfile::hdd(4 << 40)).collect(),
+        EnclosureCompute { cores: 4, flops: 1e10 },
+    );
+    c
+}
+
+/// Index of the straggler device in [`mixed_cluster`].
+fn straggler_dev(c: &Cluster) -> usize {
+    (0..c.devices.len())
+        .find(|&d| {
+            c.devices[d].profile.kind == DeviceKind::Ssd
+                && c.devices[d].profile.write_bw < 100e6
+        })
+        .expect("straggler present")
+}
+
+fn client() -> Client {
+    Client {
+        store: MeroStore::new(mixed_cluster()),
+        exec: None,
+        addb: Addb::new(4096),
+        fdmi: FdmiBus::new(),
+        now: 0.0,
+    }
+}
+
+struct Prepared {
+    c: Client,
+    analytics: Vec<ObjectId>,
+    cold: Vec<ObjectId>,
+    chk: ObjectId,
+    cold_data: Vec<Vec<u8>>,
+    ana_data: Vec<Vec<u8>>,
+}
+
+/// Build identical pre-state for either engine: analytics objects to
+/// ship on, cold objects to demote, and a fresh checkpoint object.
+fn prepare(n_ship: usize, n_cold: usize) -> Prepared {
+    let mut c = client();
+    let mut rng = SimRng::new(17);
+    let stripe = K as u64 * UNIT;
+    let mut analytics = Vec::new();
+    let mut ana_data = Vec::new();
+    for _ in 0..n_ship {
+        let o = c.create_object_with(4096, layout()).unwrap();
+        let mut d = vec![0u8; stripe as usize];
+        rng.fill_bytes(&mut d);
+        c.write_object(&o, 0, &d).unwrap();
+        analytics.push(o);
+        ana_data.push(d);
+    }
+    let mut cold = Vec::new();
+    let mut cold_data = Vec::new();
+    for _ in 0..n_cold {
+        let o = c.create_object_with(4096, layout()).unwrap();
+        let mut d = vec![0u8; 2 * stripe as usize];
+        rng.fill_bytes(&mut d);
+        c.write_object(&o, 0, &d).unwrap();
+        cold.push(o);
+        cold_data.push(d);
+    }
+    let chk = c.create_object_with(4096, layout()).unwrap();
+    // common clock origin for both engines
+    c.now = 1.0;
+    Prepared { c, analytics, cold, chk, cold_data, ana_data }
+}
+
+fn chk_extents(n_stripes: usize) -> Vec<(u64, Vec<u8>)> {
+    let stripe = K as u64 * UNIT;
+    let mut rng = SimRng::new(23);
+    (0..n_stripes)
+        .map(|i| {
+            let mut d = vec![0u8; stripe as usize];
+            rng.fill_bytes(&mut d);
+            (i as u64 * stripe, d)
+        })
+        .collect()
+}
+
+fn plan(cold: &[ObjectId]) -> Vec<Migration> {
+    cold.iter()
+        .map(|&obj| Migration { obj, from: DeviceKind::Ssd, to: DeviceKind::Hdd })
+        .collect()
+}
+
+struct CycleOutcome {
+    p: Prepared,
+    makespan: f64,
+    io_calls: u64,
+    ios: u64,
+    frontiers: Vec<(usize, f64)>,
+}
+
+/// Sequential legacy engine: each entry point builds its own private
+/// op group; the client clock serializes the calls.
+fn run_sequential(n_ship: usize, n_cold: usize, n_stripes: usize) -> CycleOutcome {
+    let mut p = prepare(n_ship, n_cold);
+    let t0 = p.c.now;
+    let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+    let analytics = p.analytics.clone();
+    for &obj in &analytics {
+        p.c.ship_to_object(obj, FunctionKind::IntegrityCheck).unwrap();
+    }
+    let chk = p.chk;
+    p.c.writev_owned(&chk, chk_extents(n_stripes)).unwrap();
+    let mig = plan(&p.cold);
+    p.c.migrate_with(&mut hsm, &mig).unwrap();
+    let makespan = p.c.now - t0;
+    CycleOutcome { p, makespan, io_calls: 0, ios: 0, frontiers: Vec::new() }
+}
+
+/// Session engine: the same ops staged on ONE scheduler-backed group,
+/// no dependency edges — mixed kinds overlap on shared shards.
+fn run_session(n_ship: usize, n_cold: usize, n_stripes: usize) -> CycleOutcome {
+    let mut p = prepare(n_ship, n_cold);
+    let t0 = p.c.now;
+    let mut hsm = Hsm::new(TieringPolicy::HeatWeighted);
+    let mig = plan(&p.cold);
+    let chk = p.chk;
+    let analytics = p.analytics.clone();
+    let extents = chk_extents(n_stripes);
+    let mut s = p.c.session();
+    for &obj in &analytics {
+        s.ship(obj, FunctionKind::IntegrityCheck);
+    }
+    s.write_owned(&chk, extents);
+    s.migrate(&mut hsm, &mig);
+    let rep = s.run().unwrap();
+    CycleOutcome {
+        makespan: rep.completed_at - t0,
+        io_calls: rep.io_calls,
+        ios: rep.ios,
+        frontiers: rep.frontiers,
+        p,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let (n_ship, n_cold, n_stripes) = if quick { (2, 2, 8) } else { (4, 4, 32) };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let stripe = K as u64 * UNIT;
+
+    // ---- virtual-time makespan: sequential legacy vs one session ----
+    let mut seq = run_sequential(n_ship, n_cold, n_stripes);
+    let mut ses = run_session(n_ship, n_cold, n_stripes);
+    assert!(
+        ses.makespan <= seq.makespan * (1.0 + 1e-9),
+        "one session must not exceed the sequential legacy calls \
+         ({} vs {})",
+        ses.makespan,
+        seq.makespan
+    );
+    let virtual_speedup = seq.makespan / ses.makespan.max(1e-12);
+
+    // byte + placement oracle on the SAME stores: checkpoint, migrated
+    // cold objects (now on HDD) and analytics objects read back
+    // identical bytes in both engines
+    let chk_want = chk_extents(n_stripes);
+    for engine in [&mut seq.p, &mut ses.p] {
+        let chk = engine.chk;
+        for (off, want) in &chk_want {
+            let got = engine.c.read_object(&chk, *off, stripe).unwrap();
+            assert_eq!(&got, want, "checkpoint bytes intact");
+        }
+        let cold = engine.cold.clone();
+        for (o, want) in cold.iter().zip(engine.cold_data.clone().iter()) {
+            assert_eq!(
+                engine.c.store.object(*o).unwrap().layout.tier(),
+                DeviceKind::Hdd,
+                "cold object demoted"
+            );
+            let got = engine.c.read_object(o, 0, want.len() as u64).unwrap();
+            assert_eq!(&got, want, "migrated bytes intact");
+        }
+        let ana = engine.analytics.clone();
+        for (o, want) in ana.iter().zip(engine.ana_data.clone().iter()) {
+            let got = engine.c.read_object(o, 0, want.len() as u64).unwrap();
+            assert_eq!(&got, want, "analytics bytes intact");
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Mixed workload (ship x{n_ship} + write x{n_stripes} stripes + \
+             migrate x{n_cold}), {K}+{P}, skewed pool"
+        ),
+        &["engine", "virtual makespan", "io() calls", "unit I/Os"],
+    );
+    t.row(vec![
+        "sequential legacy".into(),
+        sage::metrics::fmt_secs(seq.makespan),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "one session".into(),
+        sage::metrics::fmt_secs(ses.makespan),
+        ses.io_calls.to_string(),
+        ses.ios.to_string(),
+    ]);
+    t.row(vec![
+        "speedup".into(),
+        format!("{virtual_speedup:.2}x"),
+        "".into(),
+        "".into(),
+    ]);
+    print!("{}", t.render());
+
+    // ---- per-device frontier table (session engine) -----------------
+    let probe = mixed_cluster();
+    let straggler = straggler_dev(&probe);
+    let mut t = Table::new(
+        "Per-device completion frontiers (one session)",
+        &["device", "profile", "frontier"],
+    );
+    let mut fast_max = 0.0f64;
+    let mut straggler_frontier = 0.0f64;
+    for &(d, f) in &ses.frontiers {
+        let kind = probe.devices[d].profile.kind;
+        if d == straggler {
+            straggler_frontier = f;
+        } else if kind == DeviceKind::Ssd {
+            fast_max = fast_max.max(f);
+        }
+        t.row(vec![
+            format!("dev{d}"),
+            if d == straggler {
+                "SMR straggler".into()
+            } else {
+                format!("{kind:?}")
+            },
+            sage::metrics::fmt_secs(f),
+        ]);
+    }
+    print!("{}", t.render());
+    let isolation = straggler_frontier / fast_max.max(1e-12);
+    println!(
+        "straggler frontier / fastest-SSD frontier = {isolation:.2}x \
+         (healthy shards do not wait for the straggler)\n"
+    );
+
+    // ---- wall-clock cycle -------------------------------------------
+    let m_seq = Bencher::new("mixed_sequential_legacy")
+        .iters(warm, iters)
+        .wall(|| run_sequential(n_ship, n_cold, n_stripes).makespan);
+    let m_ses = Bencher::new("mixed_one_session")
+        .iters(warm, iters)
+        .wall(|| run_session(n_ship, n_cold, n_stripes).makespan);
+    let wall_speedup = m_seq.median / m_ses.median.max(1e-12);
+
+    let mut t = Table::new(
+        "Wall-clock mixed-workload cycle (build + run)",
+        &["engine", "cycle", "speedup"],
+    );
+    t.row(vec![
+        "sequential legacy".into(),
+        sage::metrics::fmt_secs(m_seq.median),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "one session".into(),
+        sage::metrics::fmt_secs(m_ses.median),
+        format!("{wall_speedup:.2}x"),
+    ]);
+    print!("{}", t.render());
+
+    record("ablate_session", &[
+        ("k", K as f64),
+        ("p", P as f64),
+        ("n_ship", n_ship as f64),
+        ("n_cold", n_cold as f64),
+        ("n_chk_stripes", n_stripes as f64),
+        ("iters", iters as f64),
+        ("sequential_virtual_s", seq.makespan),
+        ("session_virtual_s", ses.makespan),
+        ("virtual_speedup", virtual_speedup),
+        ("straggler_isolation", isolation),
+        ("session_io_calls", ses.io_calls as f64),
+        ("session_unit_ios", ses.ios as f64),
+        ("sequential_cycle_s", m_seq.median),
+        ("sequential_mad_s", m_seq.mad),
+        ("session_cycle_s", m_ses.median),
+        ("session_mad_s", m_ses.mad),
+        ("wall_speedup", wall_speedup),
+    ]);
+}

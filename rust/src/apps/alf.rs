@@ -20,7 +20,9 @@ pub fn generate_log_values(n: usize, seed: u64) -> Vec<f32> {
         .collect()
 }
 
-/// Store log values as an object (f32 LE bytes), padded to block size.
+/// Store log values as an object (f32 LE bytes), padded to block
+/// size. One session write op (`writev_owned`): the encoded buffer
+/// persists by move (§Perf — no payload copy into block storage).
 pub fn store_log(client: &mut Client, values: &[f32]) -> Result<ObjectId> {
     let obj = client.create_object(4096)?;
     let mut bytes = Vec::with_capacity(values.len() * 4);
@@ -31,7 +33,7 @@ pub fn store_log(client: &mut Client, values: &[f32]) -> Result<ObjectId> {
     let stripe = 4 * 65536;
     let padded = bytes.len().div_ceil(stripe) * stripe;
     bytes.resize(padded, 0);
-    client.write_object(&obj, 0, &bytes)?;
+    client.writev_owned(&obj, vec![(0, bytes)])?;
     Ok(obj)
 }
 
@@ -45,7 +47,10 @@ pub struct AlfReport {
     pub net_bytes_moved: u64,
 }
 
-/// Run the shipped histogram over a stored log object.
+/// Run the shipped histogram over a stored log object — a session
+/// ship op (in-storage compute on the group's shards; stage
+/// `Session::ship` next to foreground writes instead to overlap
+/// analytics with I/O).
 pub fn analyze(
     client: &mut Client,
     obj: ObjectId,

@@ -181,11 +181,13 @@ fn encode_batch(elems: &[StreamElement], block: u64) -> Vec<u8> {
 }
 
 /// Checkpoint a group of hot-particle batches into `obj` starting at
-/// byte `start`, as ONE batched op group (§Perf: `writev_owned`
-/// persist-by-move — one extent per step batch, no payload copies, one
-/// ADDB/FDMI record for the whole flush; the group's unit I/Os are
-/// dispatched to per-device shards so the step batches' stripes
+/// byte `start`, as ONE session write op (`writev_owned`; §Perf
+/// persist-by-move — one extent per step batch, no payload copies,
+/// one ADDB/FDMI record for the whole flush; the group's unit I/Os
+/// are dispatched to per-device shards so the step batches' stripes
 /// overlap in virtual time — sharded op execution, `sim::sched`).
+/// Step batches land at consecutive offsets, so cross-op coalescing
+/// merges the whole flush into one striped op (no RMW envelopes).
 /// Returns the `(offset, n_elems)` index entries for the batches
 /// written plus the next free (block-aligned) offset.
 pub fn checkpoint_hot_particles(
@@ -212,9 +214,10 @@ pub fn checkpoint_hot_particles(
     Ok((index, off))
 }
 
-/// Restore checkpointed batches through the vectored read path: one
-/// `readv` op group for the whole index, sharded across the devices
-/// holding the checkpoint stripes.
+/// Restore checkpointed batches through one session read op (`readv`)
+/// for the whole index, sharded across the devices holding the
+/// checkpoint stripes; adjacent index entries coalesce into one
+/// striped read.
 pub fn restore_checkpoint(
     client: &mut Client,
     obj: &ObjectId,

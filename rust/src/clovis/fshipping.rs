@@ -20,6 +20,7 @@ use crate::error::Result;
 use crate::mero::object::ObjectId;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, IoOp};
+use crate::sim::sched::IoScheduler;
 
 /// The well-defined functions the SAGE use cases offload.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,13 +67,33 @@ const RESULT_BYTES: u64 = 1024;
 /// RPC descriptor size, bytes.
 const RPC_BYTES: u64 = 256;
 
-/// Ship `func` to the storage node holding `obj`.
+/// Ship `func` to the storage node holding `obj` as a self-contained
+/// op at the client clock (private scheduler).
 pub fn ship_to_object(
     client: &mut Client,
     obj: ObjectId,
     func: FunctionKind,
 ) -> Result<ShipResult> {
     let now = client.now;
+    let mut sched = IoScheduler::new();
+    ship_to_object_with(client, obj, func, now, &mut sched)
+}
+
+/// [`ship_to_object`] dispatching the node-local object read onto the
+/// caller's group scheduler at `now` (sharded op execution): in a
+/// Clovis session the shipped computation's on-node read shares
+/// device shards with foreground I/O and recovery traffic, so
+/// in-storage compute genuinely overlaps a checkpoint write or a
+/// migration on the same device queues instead of serializing through
+/// a private `cluster.io()` fold. A lone call on a fresh scheduler is
+/// time-identical to the pre-session behaviour.
+pub fn ship_to_object_with(
+    client: &mut Client,
+    obj: ObjectId,
+    func: FunctionKind,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<ShipResult> {
     let size = client.store.object(obj)?.size;
     let is_real = client.store.object(obj)?.real_blocks() > 0;
 
@@ -85,18 +106,16 @@ pub fn ship_to_object(
         .map(|u| u.device);
 
     // --- time model: shipped path ------------------------------------
-    // RPC there + local read of the object + in-enclosure compute +
-    // result back.
+    // RPC there + local read of the object (on the group's shard for
+    // the home device) + in-enclosure compute + result back.
     let net = client.store.cluster.net.clone();
     let mut t = now + net.pt2pt(RPC_BYTES);
     let (node, local_read) = match dev {
         Some(d) => {
             let node = client.store.cluster.node_of(d).unwrap_or(0);
-            let t_read = client
-                .store
-                .cluster
-                .io(d, t, size.max(1), IoOp::Read, Access::Seq);
-            (node, t_read)
+            let ticket = sched.submit(d, t, size.max(1), IoOp::Read, Access::Seq);
+            sched.drain(&mut client.store.cluster.devices);
+            (node, sched.completion(ticket))
         }
         None => (0, t),
     };
@@ -106,6 +125,8 @@ pub fn ship_to_object(
     t += net.pt2pt(RESULT_BYTES);
 
     // --- counterfactual: move data to client --------------------------
+    // (reported for the data-movement comparison, not part of the op
+    // group's completion — it queues on the device like any probe)
     let mut t_move = now;
     if let Some(d) = dev {
         t_move = client
@@ -118,7 +139,7 @@ pub fn ship_to_object(
 
     // --- actually run the function on real data -----------------------
     let output = if is_real {
-        run_function(client, obj, &func)?
+        run_function(client, obj, &func, now)?
     } else {
         FnOutput::Phantom
     };
@@ -143,9 +164,10 @@ fn run_function(
     client: &mut Client,
     obj: ObjectId,
     func: &FunctionKind,
+    now: SimTime,
 ) -> Result<FnOutput> {
     let size = client.store.object(obj)?.size;
-    let (data, _) = crate::mero::sns::read(&mut client.store, obj, 0, size, client.now)?;
+    let (data, _) = crate::mero::sns::read(&mut client.store, obj, 0, size, now)?;
     match func {
         FunctionKind::ParticleFilter { threshold } => {
             // interpret bytes as (n, 8) f32 particles

@@ -1,19 +1,32 @@
 //! Clovis: the transactional storage API on top of Mero (§3.2.2).
 //!
-//! * access interface — objects, indices, containers, layouts,
-//!   transactions ([`Client`] methods; op lifecycle in [`ops`])
+//! * access interface — ONE asynchronous op interface for every
+//!   operation kind: [`Client::session`] yields the [`session`]
+//!   op builder (object I/O, KV indices, transactions, function
+//!   shipping, migration and repair all stage ops on one
+//!   scheduler-backed group); op lifecycle in [`ops`]
 //! * function shipping — [`fshipping`] (§3.2.1): run computations on
 //!   the storage nodes where the data lives
 //! * management interface — [`addb`] telemetry and the [`fdmi`]
 //!   extension/plugin interface
 //!
 //! [`Client`] is what applications and the high-level HPC interfaces
-//! (PGAS I/O, MPI streams, HDF5/pNFS gateways) link against.
+//! (PGAS I/O, MPI streams, HDF5/pNFS gateways) link against. Its
+//! vectored legacy entry points ([`Client::writev`], [`Client::readv`],
+//! [`Client::migrate_with`], [`Client::repair_with`],
+//! [`Client::ship_to_object`]) are thin wrappers over one-op sessions,
+//! equal to their session-built equivalents in bytes, placements and
+//! bit-identical completion times (`tests/prop_session.rs`). Relative
+//! to the pre-session engine, stored bytes and write timings are
+//! unchanged; `readv` additionally gained cross-op extent coalescing
+//! (this PR's ROADMAP item), which preserves bytes and ordering and
+//! can only tighten read timings (shared edge units are read once).
 
 pub mod addb;
 pub mod fdmi;
 pub mod fshipping;
 pub mod ops;
+pub mod session;
 
 use crate::config::Testbed;
 use crate::error::Result;
@@ -25,6 +38,7 @@ use crate::sim::device::DeviceKind;
 
 pub use fshipping::{FnOutput, FunctionKind, ShipResult};
 pub use ops::Extent;
+pub use session::{OpHandle, OpOutput, Session, SessionReport};
 
 /// One coalesced write extent: borrowed when it is a single caller
 /// extent, owned when adjacent extents were merged into one buffer.
@@ -64,7 +78,7 @@ impl Coalesced<'_> {
 fn coalesce<'a>(list: Vec<(u64, Coalesced<'a>)>) -> Vec<(u64, Coalesced<'a>)> {
     let mut out: Vec<(u64, Coalesced<'a>)> = Vec::with_capacity(list.len());
     for (off, data) in list {
-        let adjacent = out.last().map_or(false, |(poff, prev)| {
+        let adjacent = out.last().is_some_and(|(poff, prev)| {
             prev.len() > 0 && data.len() > 0 && *poff + prev.len() as u64 == off
         });
         if !adjacent {
@@ -109,6 +123,15 @@ fn coalesce_owned_extents(extents: Vec<(u64, Vec<u8>)>) -> Vec<(u64, Vec<u8>)> {
         Coalesced::Borrowed(d) => (off, d.to_vec()),
     })
     .collect()
+}
+
+/// Shared error shape for a session op whose output variant does not
+/// match what the staging call guarantees — a logic error surfaced
+/// loudly by every legacy wrapper instead of coerced to a default.
+fn unexpected_output(kind: &str, other: &OpOutput) -> crate::error::SageError {
+    crate::error::SageError::Invalid(format!(
+        "{kind} op yielded unexpected output {other:?}"
+    ))
 }
 
 /// A Clovis client handle: the entry point of the SAGE storage API.
@@ -227,96 +250,43 @@ impl Client {
     }
 
     // ------------------------------------------------------ batched ops
+    //
+    // The vectored entry points below are thin wrappers over one-op
+    // [`Session`]s (the op-builder API, ISSUE 4): signatures, stored
+    // bytes, placements and completion times are identical to their
+    // pre-session selves (`tests/prop_session.rs` pins this), while
+    // the execution engine lives in exactly one place
+    // (`session::exec`). Stage several ops on one session instead to
+    // overlap mixed kinds on shared device shards.
 
-    /// Vectored write: one op per extent, launched as a group at the
-    /// current clock and awaited together (`m0_op_launch`/`m0_op_wait`
-    /// over the batch). Every op dispatches its unit I/Os onto the
-    /// group's sharded per-device scheduler in one pass, so extents on
-    /// different devices overlap in virtual time and the group
-    /// completes at the max over per-device completion frontiers
-    /// (sharded op execution; `mero::sns_serial` keeps the serial-fold
-    /// semantics as the oracle). List-adjacent extents are **coalesced
-    /// into one op before striping** (ROADMAP §Perf cross-op
-    /// coalescing): merged partial stripes become full stripes, saving
-    /// RMW parity envelopes, while overlapping extents keep their
-    /// application order — persisted bytes are identical to the
-    /// unmerged batch. ADDB telemetry and the FDMI event are amortized
-    /// to ONE record per batch (§Perf). Returns the group completion
-    /// time.
+    /// The Clovis op builder: every operation kind staged as an op on
+    /// ONE scheduler-backed group — see [`session::Session`].
+    pub fn session<'c, 'd>(&'c mut self) -> Session<'c, 'd> {
+        Session::new(self)
+    }
+
+    /// Vectored write over borrowed extents: one session op, launched
+    /// at the current clock (`m0_op_launch`/`m0_op_wait` over the
+    /// batch). Unit I/Os dispatch onto the group's sharded per-device
+    /// scheduler in one pass, so extents on different devices overlap
+    /// in virtual time and the call completes at the max over
+    /// per-device completion frontiers (`mero::sns_serial` keeps the
+    /// serial-fold semantics as the oracle). List-adjacent extents are
+    /// **coalesced into one op before striping** (ROADMAP §Perf
+    /// cross-op coalescing): merged partial stripes become full
+    /// stripes, saving RMW parity envelopes, while overlapping extents
+    /// keep their application order — persisted bytes are identical to
+    /// the unmerged batch. ADDB telemetry and the FDMI event are
+    /// amortized to ONE record per batch (§Perf). Returns the group
+    /// completion time.
     pub fn writev(
         &mut self,
         obj: &ObjectId,
         extents: &[(u64, &[u8])],
     ) -> Result<SimTime> {
-        if extents.is_empty() {
-            return Ok(self.now);
-        }
-        let now = self.now;
-        // cross-op coalescing: list-adjacent extents merge into one op
-        // before striping (fewer RMW envelopes; bytes unchanged)
-        let merged = coalesce_extents(extents);
-        let mut group = ops::OpGroup::new();
-        let ids: Vec<u64> = merged
-            .iter()
-            .map(|_| group.add(ops::OpKind::ObjWrite))
-            .collect();
-        group.launch_batch(now)?;
-        let mut total = 0u64;
-        for (i, (off, data)) in merged.into_iter().enumerate() {
-            let len = data.len() as u64;
-            let r = match data {
-                Coalesced::Borrowed(d) => self.store.write_object_with(
-                    *obj,
-                    off,
-                    d,
-                    now,
-                    self.exec.as_ref(),
-                    group.sched(),
-                ),
-                Coalesced::Owned(v) => self.store.write_object_owned_with(
-                    *obj,
-                    off,
-                    v,
-                    now,
-                    self.exec.as_ref(),
-                    group.sched(),
-                ),
-            };
-            match r {
-                Ok(t) => {
-                    group.op_mut(ids[i])?.complete(t)?;
-                    total += len;
-                }
-                Err(e) => {
-                    group.op_mut(ids[i])?.fail(now, &format!("{e}"))?;
-                    return Err(e);
-                }
-            }
-        }
-        let t = group.wait_all()?;
-        self.addb.record(now, "clovis", "obj_writev_bytes", total as f64);
-        self.addb
-            .record(now, "clovis", "obj_writev_ops", extents.len() as f64);
-        self.addb.record(
-            now,
-            "clovis",
-            "obj_writev_merged_ops",
-            ids.len() as f64,
-        );
-        self.addb.record(
-            now,
-            "clovis",
-            "obj_writev_io_runs",
-            group.sched_ref().io_calls() as f64,
-        );
-        self.fdmi.emit(fdmi::FdmiRecord::ObjectWritten {
-            obj: *obj,
-            offset: extents[0].0,
-            len: total,
-            at: now,
-        });
-        self.now = t;
-        Ok(t)
+        let mut s = self.session();
+        s.write(obj, extents);
+        Ok(s.run()?.completed_at)
     }
 
     /// Vectored write of owned buffers (§Perf persist-by-move: each
@@ -327,124 +297,32 @@ impl Client {
         obj: &ObjectId,
         extents: Vec<(u64, Vec<u8>)>,
     ) -> Result<SimTime> {
-        if extents.is_empty() {
-            return Ok(self.now);
-        }
-        let now = self.now;
-        let first_off = extents[0].0;
-        let n_ops = extents.len();
-        // cross-op coalescing on owned buffers: list-adjacent extents
-        // append into the previous buffer before striping
-        let merged = coalesce_owned_extents(extents);
-        let mut group = ops::OpGroup::new();
-        let ids: Vec<u64> = merged
-            .iter()
-            .map(|_| group.add(ops::OpKind::ObjWrite))
-            .collect();
-        group.launch_batch(now)?;
-        let mut total = 0u64;
-        for (i, (off, data)) in merged.into_iter().enumerate() {
-            let len = data.len() as u64;
-            let r = self.store.write_object_owned_with(
-                *obj,
-                off,
-                data,
-                now,
-                self.exec.as_ref(),
-                group.sched(),
-            );
-            match r {
-                Ok(t) => {
-                    group.op_mut(ids[i])?.complete(t)?;
-                    total += len;
-                }
-                Err(e) => {
-                    group.op_mut(ids[i])?.fail(now, &format!("{e}"))?;
-                    return Err(e);
-                }
-            }
-        }
-        let t = group.wait_all()?;
-        self.addb.record(now, "clovis", "obj_writev_bytes", total as f64);
-        self.addb.record(now, "clovis", "obj_writev_ops", n_ops as f64);
-        self.addb.record(
-            now,
-            "clovis",
-            "obj_writev_merged_ops",
-            ids.len() as f64,
-        );
-        self.addb.record(
-            now,
-            "clovis",
-            "obj_writev_io_runs",
-            group.sched_ref().io_calls() as f64,
-        );
-        self.fdmi.emit(fdmi::FdmiRecord::ObjectWritten {
-            obj: *obj,
-            offset: first_off,
-            len: total,
-            at: now,
-        });
-        self.now = t;
-        Ok(t)
+        let mut s = self.session();
+        s.write_owned(obj, extents);
+        Ok(s.run()?.completed_at)
     }
 
-    /// Vectored read over an extent list, launched as one op group and
-    /// dispatched through the group's sharded per-device scheduler
-    /// (extents on different devices overlap in virtual time). Returns
-    /// one buffer per extent; ADDB/FDMI amortized to one record per
-    /// batch.
+    /// Vectored read over an extent list: one session op dispatched
+    /// through the group's sharded per-device scheduler (extents on
+    /// different devices overlap in virtual time). List-adjacent
+    /// extents are **coalesced into one striped read before dispatch**
+    /// (ROADMAP cross-op read coalescing, mirroring the `writev`
+    /// merge): the merged buffer is sliced back per caller extent, so
+    /// the returned buffers are byte-identical and order-preserving
+    /// while shared edge units are read once. Returns one buffer per
+    /// extent; ADDB/FDMI amortized to one record per batch.
     pub fn readv(
         &mut self,
         obj: &ObjectId,
         extents: &[ops::Extent],
     ) -> Result<Vec<Vec<u8>>> {
-        if extents.is_empty() {
-            return Ok(Vec::new());
+        let mut s = self.session();
+        let h = s.read(obj, extents);
+        let mut report = s.run()?;
+        match report.outputs.swap_remove(h.index()) {
+            OpOutput::Read(bufs) => Ok(bufs),
+            other => Err(unexpected_output("read", &other)),
         }
-        let now = self.now;
-        let mut group = ops::OpGroup::new();
-        let ids: Vec<u64> = extents
-            .iter()
-            .map(|_| group.add(ops::OpKind::ObjRead))
-            .collect();
-        group.launch_batch(now)?;
-        let mut out = Vec::with_capacity(extents.len());
-        let mut total = 0u64;
-        for (i, e) in extents.iter().enumerate() {
-            let r = self
-                .store
-                .read_object_with(*obj, e.offset, e.len, now, group.sched());
-            match r {
-                Ok((data, t)) => {
-                    group.op_mut(ids[i])?.complete(t)?;
-                    total += e.len;
-                    out.push(data);
-                }
-                Err(err) => {
-                    group.op_mut(ids[i])?.fail(now, &format!("{err}"))?;
-                    return Err(err);
-                }
-            }
-        }
-        let t = group.wait_all()?;
-        self.addb.record(now, "clovis", "obj_readv_bytes", total as f64);
-        self.addb
-            .record(now, "clovis", "obj_readv_ops", extents.len() as f64);
-        self.addb.record(
-            now,
-            "clovis",
-            "obj_readv_io_runs",
-            group.sched_ref().io_calls() as f64,
-        );
-        self.fdmi.emit(fdmi::FdmiRecord::ObjectRead {
-            obj: *obj,
-            offset: extents[0].offset,
-            len: total,
-            at: now,
-        });
-        self.now = t;
-        Ok(out)
     }
 
     /// Delete an object at end of life.
@@ -469,60 +347,9 @@ impl Client {
         hsm: &mut crate::hsm::Hsm,
         plan: &[crate::hsm::Migration],
     ) -> Result<SimTime> {
-        if plan.is_empty() {
-            return Ok(self.now);
-        }
-        let now = self.now;
-        let mut group = ops::OpGroup::new();
-        let id = group.add(ops::OpKind::Migrate);
-        group.launch_batch(now)?;
-        let bytes_before = hsm.bytes_moved;
-        let r = hsm.migrate_with(&mut self.store, plan, now, group.sched());
-        // objects migrated before a mid-plan failure really moved:
-        // publish their records + telemetry either way, so FDMI
-        // consumers never diverge from the store. `last_migrated` is
-        // the HSM's own record of what completed — not a re-derivation
-        // of its skip rules.
-        if !hsm.last_migrated().is_empty() {
-            self.addb.record(
-                now,
-                "hsm",
-                "migrate_objects",
-                hsm.last_migrated().len() as f64,
-            );
-            self.addb.record(
-                now,
-                "hsm",
-                "migrate_bytes",
-                (hsm.bytes_moved - bytes_before) as f64,
-            );
-            self.addb.record(
-                now,
-                "hsm",
-                "migrate_io_runs",
-                group.sched_ref().io_calls() as f64,
-            );
-        }
-        for m in hsm.last_migrated() {
-            self.fdmi.emit(fdmi::FdmiRecord::ObjectMigrated {
-                obj: m.obj,
-                from_tier: m.from.tier(),
-                to_tier: m.to.tier(),
-                at: now,
-            });
-        }
-        let t = match r {
-            Ok(t) => {
-                group.op_mut(id)?.complete(t)?;
-                group.wait_all()?
-            }
-            Err(e) => {
-                group.op_mut(id)?.fail(now, &format!("{e}"))?;
-                return Err(e);
-            }
-        };
-        self.now = self.now.max(t);
-        Ok(t)
+        let mut s = self.session();
+        s.migrate(hsm, plan);
+        Ok(s.run()?.completed_at)
     }
 
     /// SNS-repair `failed_dev` over `objects` as ONE batched op group
@@ -539,38 +366,40 @@ impl Client {
         objects: &[ObjectId],
         failed_dev: usize,
     ) -> Result<(u64, SimTime)> {
-        let now = self.now;
-        let mut group = ops::OpGroup::new();
-        let id = group.add(ops::OpKind::Repair);
-        group.launch_batch(now)?;
-        let r = crate::mero::sns::repair_with(
-            &mut self.store,
-            objects,
-            failed_dev,
-            now,
-            group.sched(),
-        );
-        let (bytes, t) = match r {
-            Ok((bytes, t)) => {
-                group.op_mut(id)?.complete(t)?;
-                (bytes, group.wait_all()?)
-            }
-            Err(e) => {
-                group.op_mut(id)?.fail(now, &format!("{e}"))?;
-                return Err(e);
-            }
+        let mut s = self.session();
+        let h = s.repair(objects, failed_dev);
+        let report = s.run()?;
+        let bytes = match report.output(h) {
+            OpOutput::Repair { bytes } => *bytes,
+            other => return Err(unexpected_output("repair", other)),
         };
-        self.store.cluster.replace_device(failed_dev);
-        self.store.ha.repair_done(failed_dev, t);
-        self.addb.record(now, "sns", "repair_bytes", bytes as f64);
-        self.addb.record(
-            now,
-            "sns",
-            "repair_io_runs",
-            group.sched_ref().io_calls() as f64,
-        );
-        self.now = self.now.max(t);
-        Ok((bytes, t))
+        Ok((bytes, report.completed_at))
+    }
+
+    /// Proactively drain a DEGRADING (still-live) device through the
+    /// recovery plane, as ONE session op (`.migrate`-shaped two-phase
+    /// drain): every unit homed on `dev` across `objects` is read off
+    /// the device and rewritten elsewhere at its own read frontier —
+    /// no reconstruction, the device still serves reads. Executes
+    /// [`RepairAction::ProactiveDrain`] decisions: the HA subsystem's
+    /// `repair_done` is stamped with the drain's completion frontier
+    /// and the device STAYS in service (it never failed). Returns
+    /// (bytes moved, completion time) and advances the client clock.
+    ///
+    /// [`RepairAction::ProactiveDrain`]: crate::mero::ha::RepairAction::ProactiveDrain
+    pub fn drain_with(
+        &mut self,
+        objects: &[ObjectId],
+        dev: usize,
+    ) -> Result<(u64, SimTime)> {
+        let mut s = self.session();
+        let h = s.drain(objects, dev);
+        let report = s.run()?;
+        let bytes = match report.output(h) {
+            OpOutput::Drain { bytes } => *bytes,
+            other => return Err(unexpected_output("drain", other)),
+        };
+        Ok((bytes, report.completed_at))
     }
 
     // ------------------------------------------------------------ indices
@@ -665,28 +494,54 @@ impl Client {
     // -------------------------------------------------- function shipping
 
     /// Ship a function to the storage node holding `obj` (§3.2.1):
-    /// the computation runs where the data lives.
+    /// the computation runs where the data lives. One session op —
+    /// stage [`Session::ship`] next to writes/reads/migrations instead
+    /// to overlap in-storage compute with foreground I/O on shared
+    /// device shards (the paper's headline mixed workload).
     pub fn ship_to_object(
         &mut self,
         obj: ObjectId,
         func: FunctionKind,
     ) -> Result<ShipResult> {
-        let r = fshipping::ship_to_object(self, obj, func)?;
-        self.now = r.t_done;
-        Ok(r)
+        let mut s = self.session();
+        let h = s.ship(obj, func);
+        let mut report = s.run()?;
+        match report.outputs.swap_remove(h.index()) {
+            OpOutput::Ship(r) => Ok(r),
+            other => Err(unexpected_output("ship", &other)),
+        }
     }
 
     /// One-shot operation: ship a function to every object in a
-    /// container (§3.2.1 Containers).
+    /// container (§3.2.1 Containers), as ONE `.after`-chained session
+    /// (each shipment dispatches at its predecessor's completion
+    /// frontier — identical to the former sequential calls, but on one
+    /// op group).
     pub fn ship_to_container(
         &mut self,
         container: ContainerId,
         func: FunctionKind,
     ) -> Result<Vec<ShipResult>> {
         let objs = self.store.container_objects(container)?;
-        let mut out = Vec::with_capacity(objs.len());
+        if objs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut s = self.session();
+        let mut prev: Option<OpHandle> = None;
         for obj in objs {
-            out.push(self.ship_to_object(obj, func.clone())?);
+            let h = s.ship(obj, func.clone());
+            if let Some(p) = prev {
+                s.after(h, p)?;
+            }
+            prev = Some(h);
+        }
+        let report = s.run()?;
+        let mut out = Vec::with_capacity(report.outputs.len());
+        for o in report.outputs {
+            match o {
+                OpOutput::Ship(r) => out.push(r),
+                other => return Err(unexpected_output("ship", &other)),
+            }
         }
         Ok(out)
     }
@@ -982,6 +837,54 @@ mod tests {
         assert!(!c.store.cluster.devices[dev].failed, "device replaced");
         let back = c.read_object(&obj, 0, data.len() as u64).unwrap();
         assert_eq!(back, data);
+    }
+
+    #[test]
+    fn drain_with_moves_units_off_live_device_and_stamps_ha() {
+        use crate::cluster::failure::{FailureEvent, FailureKind};
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![4u8; 2 * 4 * 65536];
+        c.write_object(&obj, 0, &data).unwrap();
+        let dev = c.store.object(obj).unwrap().placement(0, 0).unwrap().device;
+        // three transients on one device inside the window: the HA
+        // subsystem decides a proactive drain…
+        let mut action = crate::mero::ha::RepairAction::None;
+        for i in 0..3u32 {
+            action = c.store.ha.observe(
+                FailureEvent {
+                    at: i as f64,
+                    kind: FailureKind::Transient(dev),
+                },
+                |_| Some(0),
+            );
+        }
+        assert_eq!(action, crate::mero::ha::RepairAction::ProactiveDrain(dev));
+        // …and the recovery plane executes it as a session
+        c.now = 3.0;
+        let (bytes, t) = c.drain_with(&[obj], dev).unwrap();
+        assert!(bytes > 0, "the device held units to move");
+        assert!(t > 3.0, "the drain takes real virtual time");
+        assert!(
+            c.store
+                .object(obj)
+                .unwrap()
+                .placed_units()
+                .all(|u| u.device != dev),
+            "no unit remains on the drained device"
+        );
+        assert!(!c.store.cluster.devices[dev].failed, "device stays in service");
+        assert!(c.store.ha.repairing().is_empty(), "drain stamped as done");
+        assert_eq!(c.store.ha.repair_log.len(), 1);
+        let (d, from, to) = c.store.ha.repair_log[0];
+        assert_eq!(d, dev);
+        assert_eq!(from, 2.0, "engaged at the deciding transient");
+        assert_eq!(to, t, "completed at the drain's frontier");
+        // redundancy is intact: the drained device can now hard-fail
+        // with nothing to rebuild from it, and bytes survive
+        c.store.cluster.fail_device(dev);
+        let back = c.read_object(&obj, 0, data.len() as u64).unwrap();
+        assert_eq!(back, data, "bytes survive the drained device's failure");
     }
 
     #[test]

@@ -37,6 +37,25 @@
 //! batch) are preserved in `mero::sns_serial` as the differential
 //! oracle; `benches/ablate_sched.rs` measures the gap.
 //!
+//! ## The op-builder model (`Session`)
+//!
+//! Since ISSUE 4 the public face of this machinery is the
+//! [`Session`](crate::clovis::session::Session) op builder:
+//! `Client::session()` yields a builder over ONE scheduler-backed
+//! `OpGroup`; every operation kind — object writes/reads, KV index
+//! access, transactions, function shipping, HSM migration, SNS repair
+//! and proactive drains — stages an op returning an
+//! [`OpHandle`](crate::clovis::session::OpHandle);
+//! `Session::after(op, pred)` declares dependency edges (dependents
+//! dispatch at the predecessor's completion frontier, not at a global
+//! barrier); `Session::run` executes the batch and completes at
+//! [`OpGroup::wait_all_from`] the session's start clock. The legacy
+//! vectored entry points (`writev`, `readv`, `migrate_with`,
+//! `repair_with`, `ship_to_object`) are thin wrappers over one-op
+//! sessions, bit-identical to their session-built equivalents
+//! (`tests/prop_session.rs`; `readv` also gained byte-preserving
+//! cross-op read coalescing, which can only tighten timings).
+//!
 //! [`Client::readv`]: crate::clovis::Client::readv
 
 use crate::error::{Result, SageError};
@@ -90,6 +109,9 @@ pub enum OpKind {
     Migrate,
     /// SNS repair of a failed device (scheduler-driven recovery plane).
     Repair,
+    /// Proactive drain of a degrading (still-live) device
+    /// (`RepairAction::ProactiveDrain` executed by the recovery plane).
+    Drain,
 }
 
 /// One asynchronous operation.
@@ -248,6 +270,17 @@ impl OpGroup {
         Ok(t)
     }
 
+    /// [`OpGroup::wait_all`] with a completion floor: the group of an
+    /// operation issued at `now` can never complete before `now`, and
+    /// an EMPTY group completes exactly at `now`. This is what no-op
+    /// paths (empty gateway batches, zero-op [`Session::run`]) rely on
+    /// instead of special-casing emptiness.
+    ///
+    /// [`Session::run`]: crate::clovis::session::Session::run
+    pub fn wait_all_from(&self, now: SimTime) -> Result<SimTime> {
+        Ok(self.wait_all()?.max(now))
+    }
+
     /// Count by state.
     pub fn count(&self, state: OpState) -> usize {
         self.ops.iter().filter(|o| o.state == state).count()
@@ -320,6 +353,23 @@ mod tests {
         assert_eq!(g.wait_all().unwrap(), t);
         assert_eq!(g.sched_ref().wait_all(), t, "frontier == group completion");
         assert_eq!(g.sched_ref().shard_count(), 1);
+    }
+
+    #[test]
+    fn empty_group_wait_all_from_returns_now() {
+        // the pinned no-op semantics: an empty group completes at the
+        // caller's clock, not at 0.0 and not with an error, so gateway
+        // no-op paths and zero-op sessions need no special case
+        let g = OpGroup::new();
+        assert_eq!(g.wait_all().unwrap(), 0.0);
+        assert_eq!(g.wait_all_from(7.25).unwrap(), 7.25);
+        // a non-empty group is unaffected by a floor below its completion
+        let mut g = OpGroup::new();
+        let a = g.add(OpKind::ObjWrite);
+        g.op_mut(a).unwrap().launch(0.0).unwrap();
+        g.op_mut(a).unwrap().complete(4.0).unwrap();
+        assert_eq!(g.wait_all_from(1.0).unwrap(), 4.0);
+        assert_eq!(g.wait_all_from(9.0).unwrap(), 9.0);
     }
 
     #[test]

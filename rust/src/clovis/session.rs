@@ -1,0 +1,963 @@
+//! Clovis sessions: the op-builder face of the access interface
+//! (§3.1/§3.2.2 — *one* asynchronous operation interface for every
+//! operation kind).
+//!
+//! The SAGE papers define Clovis as a single asynchronous op state
+//! machine: applications create op objects, chain dependencies, launch
+//! the batch, and wait — object I/O, key-value access, transactions
+//! and function shipping all flow through the same interface, and the
+//! POSIX/HDF5/S3 gateways plus the HSM/recovery planes are built on
+//! it. [`Session`] is that interface:
+//!
+//! * [`Client::session`](crate::clovis::Client::session) yields a
+//!   builder over ONE scheduler-backed
+//!   [`OpGroup`](crate::clovis::ops::OpGroup);
+//! * every staging method ([`Session::write`], [`Session::read`],
+//!   [`Session::idx_put`], [`Session::tx`], [`Session::ship`],
+//!   [`Session::migrate`], [`Session::repair`], [`Session::drain`], …)
+//!   returns an [`OpHandle`];
+//! * [`Session::after`]`(op, pred)` declares a dependency edge: `op`
+//!   dispatches at `pred`'s completion frontier — NOT at a global
+//!   barrier, so unrelated ops still overlap;
+//! * [`Session::run`] executes the batch on the group's sharded
+//!   per-device scheduler and returns a [`SessionReport`] with per-op
+//!   outputs, per-op completion times, and the group `wait_all` time.
+//!
+//! Because all ops of a session share one set of per-device shards, a
+//! mixed batch — in-storage compute ([`Session::ship`]) next to a
+//! checkpoint write next to a background migration — genuinely
+//! overlaps on the device queues (the paper's headline scenario;
+//! measured by `benches/ablate_session.rs`). A session with a single
+//! op is byte- and time-identical to the matching legacy `Client`
+//! entry point, and a fully `.after`-chained session is identical to
+//! the same calls made sequentially (`tests/prop_session.rs`).
+//!
+//! KVS and DTM ops carry no device I/O in this model (metadata and the
+//! NVRAM log force are not pool devices), but their completion stamps
+//! ride the same group: a transaction op completes one `LOG_FORCE`
+//! after its dispatch frontier, so two independent tx ops in one
+//! session group-commit concurrently instead of serializing through
+//! the client clock.
+
+use crate::clovis::fdmi::FdmiRecord;
+use crate::clovis::fshipping::{self, FunctionKind, ShipResult};
+use crate::clovis::ops::{Extent, OpGroup, OpKind};
+use crate::clovis::Client;
+use crate::error::{Result, SageError};
+use crate::hsm::{Hsm, Migration};
+use crate::mero::dtm::TxId;
+use crate::mero::{IndexId, ObjectId};
+use crate::sim::clock::SimTime;
+
+/// Handle to one staged session op. Redeem against
+/// [`SessionReport::outputs`] / [`SessionReport::completed`] after
+/// [`Session::run`], or feed to [`Session::after`] to chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpHandle(usize);
+
+impl OpHandle {
+    /// Index of this op in the session's staging order (also its index
+    /// into the report's `outputs`/`completed` vectors).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Per-op result returned by [`Session::run`], in staging order.
+#[derive(Debug)]
+pub enum OpOutput {
+    /// Object write completed (completion time in `completed`).
+    Write,
+    /// Vectored read: one buffer per requested extent.
+    Read(Vec<Vec<u8>>),
+    /// In-place read completed (the staged `dst` buffer is filled).
+    ReadInto,
+    /// Index PUT applied.
+    IdxPut,
+    /// Index GET results (None per missing key).
+    IdxGet(Vec<Option<Vec<u8>>>),
+    /// Index DEL results (per-key existence).
+    IdxDel(Vec<bool>),
+    /// Index NEXT results.
+    IdxNext(Vec<Option<(Vec<u8>, Vec<u8>)>>),
+    /// Transaction committed under this id.
+    Tx(TxId),
+    /// Function-shipping outcome.
+    Ship(ShipResult),
+    /// Migration batch completed.
+    Migrate,
+    /// SNS repair completed; bytes rebuilt onto replacement homes.
+    Repair { bytes: u64 },
+    /// Proactive drain completed; bytes moved off the degrading device.
+    Drain { bytes: u64 },
+}
+
+/// Outcome of [`Session::run`]: per-op results plus the group
+/// completion, and the scheduler's dispatch statistics.
+#[derive(Debug)]
+pub struct SessionReport {
+    /// One output per staged op, in staging order (`OpHandle::index`).
+    pub outputs: Vec<OpOutput>,
+    /// Per-op completion times, in staging order.
+    pub completed: Vec<SimTime>,
+    /// Group completion: `OpGroup::wait_all_from(session start)` — the
+    /// max over per-device completion frontiers and op finish times,
+    /// floored at the clock the session was launched at.
+    pub completed_at: SimTime,
+    /// Device accounting calls the batch issued (coalesced runs).
+    pub io_calls: u64,
+    /// Logical unit I/Os the batch dispatched.
+    pub ios: u64,
+    /// `(device, completion frontier)` per shard the batch touched.
+    pub frontiers: Vec<(usize, SimTime)>,
+}
+
+impl SessionReport {
+    /// Borrow the output of one op.
+    pub fn output(&self, h: OpHandle) -> &OpOutput {
+        &self.outputs[h.0]
+    }
+
+    /// Completion time of one op.
+    pub fn completed_at_op(&self, h: OpHandle) -> SimTime {
+        self.completed[h.0]
+    }
+}
+
+/// One staged (not yet executed) operation.
+enum StagedOp<'d> {
+    Write { obj: ObjectId, extents: Vec<(u64, &'d [u8])> },
+    WriteOwned { obj: ObjectId, extents: Vec<(u64, Vec<u8>)> },
+    Read { obj: ObjectId, extents: Vec<Extent> },
+    ReadInto { obj: ObjectId, offset: u64, dst: &'d mut [u8] },
+    IdxPut { idx: IndexId, records: Vec<(Vec<u8>, Vec<u8>)> },
+    IdxGet { idx: IndexId, keys: Vec<Vec<u8>> },
+    IdxDel { idx: IndexId, keys: Vec<Vec<u8>> },
+    IdxNext { idx: IndexId, keys: Vec<Vec<u8>> },
+    Tx { updates: Vec<(Vec<u8>, Vec<u8>)> },
+    Ship { obj: ObjectId, func: FunctionKind },
+    Migrate { hsm: &'d mut Hsm, plan: &'d [Migration] },
+    Repair { objects: Vec<ObjectId>, dev: usize },
+    Drain { objects: Vec<ObjectId>, dev: usize },
+}
+
+impl StagedOp<'_> {
+    fn kind(&self) -> OpKind {
+        match self {
+            StagedOp::Write { .. } | StagedOp::WriteOwned { .. } => OpKind::ObjWrite,
+            StagedOp::Read { .. } | StagedOp::ReadInto { .. } => OpKind::ObjRead,
+            StagedOp::IdxPut { .. } => OpKind::IdxPut,
+            StagedOp::IdxGet { .. } => OpKind::IdxGet,
+            StagedOp::IdxDel { .. } => OpKind::IdxDel,
+            StagedOp::IdxNext { .. } => OpKind::IdxNext,
+            StagedOp::Tx { .. } => OpKind::Tx,
+            StagedOp::Ship { .. } => OpKind::FnShip,
+            StagedOp::Migrate { .. } => OpKind::Migrate,
+            StagedOp::Repair { .. } => OpKind::Repair,
+            StagedOp::Drain { .. } => OpKind::Drain,
+        }
+    }
+}
+
+/// The Clovis op builder: stage ops, chain dependencies, run the batch
+/// on one scheduler-backed op group. See the module docs.
+pub struct Session<'c, 'd> {
+    client: &'c mut Client,
+    staged: Vec<StagedOp<'d>>,
+    /// Predecessor indices per op (forward edges only).
+    deps: Vec<Vec<usize>>,
+}
+
+impl<'c, 'd> Session<'c, 'd> {
+    pub(crate) fn new(client: &'c mut Client) -> Self {
+        Session { client, staged: Vec::new(), deps: Vec::new() }
+    }
+
+    fn stage(&mut self, op: StagedOp<'d>) -> OpHandle {
+        self.staged.push(op);
+        self.deps.push(Vec::new());
+        OpHandle(self.staged.len() - 1)
+    }
+
+    /// Number of staged ops.
+    pub fn len(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// True if no ops are staged ([`Session::run`] then completes at
+    /// the client clock).
+    pub fn is_empty(&self) -> bool {
+        self.staged.is_empty()
+    }
+
+    /// Stage a vectored object write over borrowed extents.
+    /// List-adjacent extents coalesce into one striped op before
+    /// dispatch (bytes identical; merged partial stripes become full
+    /// stripes and skip their RMW envelopes).
+    pub fn write(
+        &mut self,
+        obj: &ObjectId,
+        extents: &'d [(u64, &'d [u8])],
+    ) -> OpHandle {
+        self.stage(StagedOp::Write { obj: *obj, extents: extents.to_vec() })
+    }
+
+    /// Stage a vectored write of owned buffers (§Perf persist-by-move:
+    /// each buffer becomes object block storage without a copy).
+    pub fn write_owned(
+        &mut self,
+        obj: &ObjectId,
+        extents: Vec<(u64, Vec<u8>)>,
+    ) -> OpHandle {
+        self.stage(StagedOp::WriteOwned { obj: *obj, extents })
+    }
+
+    /// Stage a vectored read; the output is one buffer per extent.
+    /// List-adjacent extents coalesce into one striped read before
+    /// dispatch (ROADMAP cross-op read coalescing): the merged buffer
+    /// is sliced back per caller extent, so outputs are byte-identical
+    /// and order-preserving while shared edge units are read once.
+    pub fn read(&mut self, obj: &ObjectId, extents: &[Extent]) -> OpHandle {
+        self.stage(StagedOp::Read { obj: *obj, extents: extents.to_vec() })
+    }
+
+    /// Stage a read of `dst.len()` bytes at `offset` straight into a
+    /// caller buffer (§Perf: no per-read allocation).
+    pub fn read_into(
+        &mut self,
+        obj: &ObjectId,
+        offset: u64,
+        dst: &'d mut [u8],
+    ) -> OpHandle {
+        self.stage(StagedOp::ReadInto { obj: *obj, offset, dst })
+    }
+
+    /// Stage a batched PUT on a KV index.
+    pub fn idx_put(
+        &mut self,
+        idx: IndexId,
+        records: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> OpHandle {
+        self.stage(StagedOp::IdxPut { idx, records })
+    }
+
+    /// Stage a batched GET on a KV index.
+    pub fn idx_get(&mut self, idx: IndexId, keys: Vec<Vec<u8>>) -> OpHandle {
+        self.stage(StagedOp::IdxGet { idx, keys })
+    }
+
+    /// Stage a batched DEL on a KV index.
+    pub fn idx_del(&mut self, idx: IndexId, keys: Vec<Vec<u8>>) -> OpHandle {
+        self.stage(StagedOp::IdxDel { idx, keys })
+    }
+
+    /// Stage a batched NEXT on a KV index.
+    pub fn idx_next(&mut self, idx: IndexId, keys: Vec<Vec<u8>>) -> OpHandle {
+        self.stage(StagedOp::IdxNext { idx, keys })
+    }
+
+    /// Stage a whole transaction (begin + buffered writes + epoch group
+    /// commit) as one op; it completes one log force after its dispatch
+    /// frontier, exactly like the legacy `tx_begin`/`tx_put`/`tx_commit`
+    /// sequence — but independent tx ops of one session group-commit
+    /// concurrently.
+    pub fn tx(&mut self, updates: Vec<(Vec<u8>, Vec<u8>)>) -> OpHandle {
+        self.stage(StagedOp::Tx { updates })
+    }
+
+    /// Stage a function shipment to the storage node holding `obj`
+    /// (§3.2.1 in-storage compute): the node-local object read rides
+    /// the session's shards, so shipped compute shares device queues
+    /// with foreground I/O and recovery traffic.
+    pub fn ship(&mut self, obj: ObjectId, func: FunctionKind) -> OpHandle {
+        self.stage(StagedOp::Ship { obj, func })
+    }
+
+    /// Stage an HSM migration batch (two-phase: reads up front,
+    /// rewrites at each object's read frontier) on the session's
+    /// shards. FDMI `ObjectMigrated` records are published for exactly
+    /// the objects that really moved.
+    pub fn migrate(&mut self, hsm: &'d mut Hsm, plan: &'d [Migration]) -> OpHandle {
+        self.stage(StagedOp::Migrate { hsm, plan })
+    }
+
+    /// Stage an SNS repair of failed device `dev` over `objects`
+    /// (two-phase: survivor reads across all objects, rebuild writes
+    /// at each unit's reconstruction frontier). On completion the
+    /// device returns to service empty and the HA subsystem's
+    /// `repair_done` is stamped with the repair's completion frontier.
+    pub fn repair(&mut self, objects: &[ObjectId], dev: usize) -> OpHandle {
+        self.stage(StagedOp::Repair { objects: objects.to_vec(), dev })
+    }
+
+    /// Stage a proactive drain of DEGRADING (still-live) device `dev`:
+    /// every unit homed on it across `objects` is read off the device
+    /// and rewritten elsewhere at its own read frontier — the
+    /// `RepairAction::ProactiveDrain` executor (no reconstruction
+    /// needed; the device still serves reads). The drain interval is
+    /// stamped into the HA repair log; the device stays in service.
+    pub fn drain(&mut self, objects: &[ObjectId], dev: usize) -> OpHandle {
+        self.stage(StagedOp::Drain { objects: objects.to_vec(), dev })
+    }
+
+    /// Declare a dependency edge: `op` dispatches at `pred`'s
+    /// completion frontier instead of the session start (deps gate
+    /// dispatch, not the whole group — unrelated ops still overlap).
+    /// `pred` must have been staged before `op`.
+    pub fn after(&mut self, op: OpHandle, pred: OpHandle) -> Result<()> {
+        if op.0 >= self.staged.len() || pred.0 >= self.staged.len() {
+            return Err(SageError::Invalid(format!(
+                "after({}, {}): unknown op handle",
+                op.0, pred.0
+            )));
+        }
+        if pred.0 >= op.0 {
+            return Err(SageError::Invalid(format!(
+                "after({}, {}): an op can only depend on earlier-staged ops",
+                op.0, pred.0
+            )));
+        }
+        if !self.deps[op.0].contains(&pred.0) {
+            self.deps[op.0].push(pred.0);
+        }
+        Ok(())
+    }
+
+    /// Launch the batch: every op executes on the group's sharded
+    /// per-device scheduler, dispatching at the max of the session
+    /// start clock and its predecessors' completion frontiers. Returns
+    /// per-op outputs and completion times plus the group `wait_all`
+    /// completion (which also advances the client clock). A zero-op
+    /// session completes at the current clock. On the first op error
+    /// the op is marked FAILED and the error propagates (ops already
+    /// executed keep their effects, exactly like sequential calls).
+    pub fn run(self) -> Result<SessionReport> {
+        let Session { client, staged, deps } = self;
+        let now = client.now;
+        let mut group = OpGroup::new();
+        let ids: Vec<u64> = staged.iter().map(|op| group.add(op.kind())).collect();
+        group.launch_batch(now)?;
+        let mut completed = vec![now; staged.len()];
+        let mut outputs = Vec::with_capacity(staged.len());
+        for (i, op) in staged.into_iter().enumerate() {
+            let at = deps[i].iter().fold(now, |t, &p| t.max(completed[p]));
+            match exec(client, &mut group, op, at) {
+                Ok((out, t)) => {
+                    group.op_mut(ids[i])?.complete(t)?;
+                    completed[i] = t;
+                    outputs.push(out);
+                }
+                Err(e) => {
+                    group.op_mut(ids[i])?.fail(at, &e.to_string())?;
+                    return Err(e);
+                }
+            }
+        }
+        let completed_at = group.wait_all_from(now)?;
+        client.now = client.now.max(completed_at);
+        let sched = group.sched_ref();
+        let frontiers = sched.frontiers();
+        Ok(SessionReport {
+            outputs,
+            completed,
+            completed_at,
+            io_calls: sched.io_calls(),
+            ios: sched.ios(),
+            frontiers,
+        })
+    }
+}
+
+/// Execute one staged op at dispatch time `at` on the group's shards.
+/// Returns the op's output and completion time. Telemetry (ADDB/FDMI)
+/// is batch-amortized per op, with the same records the legacy entry
+/// points emit.
+fn exec(
+    client: &mut Client,
+    group: &mut OpGroup,
+    op: StagedOp<'_>,
+    at: SimTime,
+) -> Result<(OpOutput, SimTime)> {
+    match op {
+        StagedOp::Write { obj, extents } => {
+            if extents.is_empty() {
+                return Ok((OpOutput::Write, at));
+            }
+            let first_off = extents[0].0;
+            let n_ops = extents.len();
+            let io_before = group.sched_ref().io_calls();
+            // cross-op coalescing: list-adjacent extents merge into one
+            // op before striping (fewer RMW envelopes; bytes unchanged)
+            let merged = super::coalesce_extents(&extents);
+            let n_merged = merged.len();
+            let mut total = 0u64;
+            let mut t_op = at;
+            for (off, data) in merged {
+                let len = data.len() as u64;
+                let t = match data {
+                    super::Coalesced::Borrowed(d) => client.store.write_object_with(
+                        obj,
+                        off,
+                        d,
+                        at,
+                        client.exec.as_ref(),
+                        group.sched(),
+                    )?,
+                    super::Coalesced::Owned(v) => client.store.write_object_owned_with(
+                        obj,
+                        off,
+                        v,
+                        at,
+                        client.exec.as_ref(),
+                        group.sched(),
+                    )?,
+                };
+                total += len;
+                t_op = t_op.max(t);
+            }
+            write_telemetry(client, group, obj, first_off, n_ops, n_merged, total, io_before, at);
+            Ok((OpOutput::Write, t_op))
+        }
+
+        StagedOp::WriteOwned { obj, extents } => {
+            if extents.is_empty() {
+                return Ok((OpOutput::Write, at));
+            }
+            let first_off = extents[0].0;
+            let n_ops = extents.len();
+            let io_before = group.sched_ref().io_calls();
+            let merged = super::coalesce_owned_extents(extents);
+            let n_merged = merged.len();
+            let mut total = 0u64;
+            let mut t_op = at;
+            for (off, data) in merged {
+                let len = data.len() as u64;
+                let t = client.store.write_object_owned_with(
+                    obj,
+                    off,
+                    data,
+                    at,
+                    client.exec.as_ref(),
+                    group.sched(),
+                )?;
+                total += len;
+                t_op = t_op.max(t);
+            }
+            write_telemetry(client, group, obj, first_off, n_ops, n_merged, total, io_before, at);
+            Ok((OpOutput::Write, t_op))
+        }
+
+        StagedOp::Read { obj, extents } => {
+            if extents.is_empty() {
+                return Ok((OpOutput::Read(Vec::new()), at));
+            }
+            let io_before = group.sched_ref().io_calls();
+            // cross-op read coalescing (ROADMAP): merge list-adjacent
+            // extents into one striped read, then slice the merged
+            // buffer back into one output per caller extent — shared
+            // edge units are read once, bytes and order are unchanged
+            let mut merged: Vec<(u64, Vec<u64>)> = Vec::new();
+            for e in &extents {
+                let adjacent = merged.last().is_some_and(|(off, lens)| {
+                    let span: u64 = lens.iter().sum();
+                    span > 0 && e.len > 0 && off + span == e.offset
+                });
+                match merged.last_mut() {
+                    Some((_, lens)) if adjacent => lens.push(e.len),
+                    _ => merged.push((e.offset, vec![e.len])),
+                }
+            }
+            let n_merged = merged.len();
+            let mut out: Vec<Vec<u8>> = Vec::with_capacity(extents.len());
+            let mut total = 0u64;
+            let mut t_op = at;
+            for (off, lens) in merged {
+                let span: u64 = lens.iter().sum();
+                let (buf, t) =
+                    client.store.read_object_with(obj, off, span, at, group.sched())?;
+                t_op = t_op.max(t);
+                total += span;
+                if lens.len() == 1 {
+                    out.push(buf);
+                } else {
+                    let mut cursor = 0usize;
+                    for l in lens {
+                        out.push(buf[cursor..cursor + l as usize].to_vec());
+                        cursor += l as usize;
+                    }
+                }
+            }
+            client.addb.record(at, "clovis", "obj_readv_bytes", total as f64);
+            client
+                .addb
+                .record(at, "clovis", "obj_readv_ops", extents.len() as f64);
+            client
+                .addb
+                .record(at, "clovis", "obj_readv_merged_ops", n_merged as f64);
+            client.addb.record(
+                at,
+                "clovis",
+                "obj_readv_io_runs",
+                (group.sched_ref().io_calls() - io_before) as f64,
+            );
+            client.fdmi.emit(FdmiRecord::ObjectRead {
+                obj,
+                offset: extents[0].offset,
+                len: total,
+                at,
+            });
+            Ok((OpOutput::Read(out), t_op))
+        }
+
+        StagedOp::ReadInto { obj, offset, dst } => {
+            let len = dst.len() as u64;
+            let t = client
+                .store
+                .read_object_into_with(obj, offset, dst, at, group.sched())?;
+            client.addb.record(at, "clovis", "obj_read_bytes", len as f64);
+            client
+                .fdmi
+                .emit(FdmiRecord::ObjectRead { obj, offset, len, at });
+            Ok((OpOutput::ReadInto, t))
+        }
+
+        StagedOp::IdxPut { idx, records } => {
+            let n = records.len() as f64;
+            client.store.index_mut(idx)?.put_batch(records);
+            client.addb.record(at, "clovis", "idx_put", n);
+            Ok((OpOutput::IdxPut, at))
+        }
+        StagedOp::IdxGet { idx, keys } => {
+            Ok((OpOutput::IdxGet(client.store.index(idx)?.get_batch(&keys)), at))
+        }
+        StagedOp::IdxDel { idx, keys } => Ok((
+            OpOutput::IdxDel(client.store.index_mut(idx)?.del_batch(&keys)),
+            at,
+        )),
+        StagedOp::IdxNext { idx, keys } => Ok((
+            OpOutput::IdxNext(client.store.index(idx)?.next_batch(&keys)),
+            at,
+        )),
+
+        StagedOp::Tx { updates } => {
+            let tx = client.store.dtm.begin();
+            for (k, v) in updates {
+                client.store.dtm.write(tx, k, v)?;
+            }
+            let t = client.store.dtm.commit(tx, at)?;
+            client.addb.record(t, "dtm", "commit", 1.0);
+            Ok((OpOutput::Tx(tx), t))
+        }
+
+        StagedOp::Ship { obj, func } => {
+            let r = fshipping::ship_to_object_with(client, obj, func, at, group.sched())?;
+            let t = r.t_done;
+            Ok((OpOutput::Ship(r), t))
+        }
+
+        StagedOp::Migrate { hsm, plan } => {
+            if plan.is_empty() {
+                return Ok((OpOutput::Migrate, at));
+            }
+            let io_before = group.sched_ref().io_calls();
+            let bytes_before = hsm.bytes_moved;
+            let r = hsm.migrate_with(&mut client.store, plan, at, group.sched());
+            // objects migrated before a mid-plan failure really moved:
+            // publish their records + telemetry either way, so FDMI
+            // consumers never diverge from the store. `last_migrated`
+            // is the HSM's own record of what completed.
+            if !hsm.last_migrated().is_empty() {
+                client.addb.record(
+                    at,
+                    "hsm",
+                    "migrate_objects",
+                    hsm.last_migrated().len() as f64,
+                );
+                client.addb.record(
+                    at,
+                    "hsm",
+                    "migrate_bytes",
+                    (hsm.bytes_moved - bytes_before) as f64,
+                );
+                client.addb.record(
+                    at,
+                    "hsm",
+                    "migrate_io_runs",
+                    (group.sched_ref().io_calls() - io_before) as f64,
+                );
+            }
+            for m in hsm.last_migrated() {
+                client.fdmi.emit(FdmiRecord::ObjectMigrated {
+                    obj: m.obj,
+                    from_tier: m.from.tier(),
+                    to_tier: m.to.tier(),
+                    at,
+                });
+            }
+            let t = r?;
+            Ok((OpOutput::Migrate, t))
+        }
+
+        StagedOp::Repair { objects, dev } => {
+            let io_before = group.sched_ref().io_calls();
+            let r = crate::mero::sns::repair_with(
+                &mut client.store,
+                &objects,
+                dev,
+                at,
+                group.sched(),
+            );
+            let (bytes, t) = match r {
+                Ok(v) => v,
+                Err(e) => {
+                    // a rebuild that errors out must not leave the
+                    // device marked in-repair, or the HA subsystem
+                    // suppresses every later failure event on it
+                    client.store.ha.repair_aborted(dev);
+                    return Err(e);
+                }
+            };
+            // `repair_with`'s completion already covers every frontier
+            // of the repair's OWN I/O (phase-B rebuild writes end after
+            // the phase-A reads they wait on), so this is exactly the
+            // legacy one-op group's `wait_all` — and in a mixed session
+            // the repair_log stamp stays the repair's own completion,
+            // not the whole session's frontier.
+            client.store.cluster.replace_device(dev);
+            client.store.ha.repair_done(dev, t);
+            client.addb.record(at, "sns", "repair_bytes", bytes as f64);
+            client.addb.record(
+                at,
+                "sns",
+                "repair_io_runs",
+                (group.sched_ref().io_calls() - io_before) as f64,
+            );
+            Ok((OpOutput::Repair { bytes }, t))
+        }
+
+        StagedOp::Drain { objects, dev } => {
+            let io_before = group.sched_ref().io_calls();
+            let r = crate::mero::sns::drain_with(
+                &mut client.store,
+                &objects,
+                dev,
+                at,
+                group.sched(),
+            );
+            let (bytes, t) = match r {
+                Ok(v) => v,
+                Err(e) => {
+                    // a drain that cannot complete (e.g. no spare
+                    // capacity) must re-arm the device in the HA
+                    // subsystem so its next failure event still acts
+                    client.store.ha.repair_aborted(dev);
+                    return Err(e);
+                }
+            };
+            // as with repair, the drain's completion covers its own
+            // frontiers (re-home writes end after their source reads);
+            // the device stays in service (it never failed); the drain
+            // interval lands in the HA repair log like any recovery
+            client.store.ha.repair_done(dev, t);
+            client.addb.record(at, "sns", "drain_bytes", bytes as f64);
+            client.addb.record(
+                at,
+                "sns",
+                "drain_io_runs",
+                (group.sched_ref().io_calls() - io_before) as f64,
+            );
+            Ok((OpOutput::Drain { bytes }, t))
+        }
+    }
+}
+
+/// The shared ADDB/FDMI tail of both write variants: one record set
+/// per op (batch-amortized, same keys as the legacy `writev`).
+#[allow(clippy::too_many_arguments)]
+fn write_telemetry(
+    client: &mut Client,
+    group: &OpGroup,
+    obj: ObjectId,
+    first_off: u64,
+    n_ops: usize,
+    n_merged: usize,
+    total: u64,
+    io_before: u64,
+    at: SimTime,
+) {
+    client.addb.record(at, "clovis", "obj_writev_bytes", total as f64);
+    client.addb.record(at, "clovis", "obj_writev_ops", n_ops as f64);
+    client
+        .addb
+        .record(at, "clovis", "obj_writev_merged_ops", n_merged as f64);
+    client.addb.record(
+        at,
+        "clovis",
+        "obj_writev_io_runs",
+        (group.sched_ref().io_calls() - io_before) as f64,
+    );
+    client.fdmi.emit(FdmiRecord::ObjectWritten {
+        obj,
+        offset: first_off,
+        len: total,
+        at,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+    use crate::sim::device::DeviceKind;
+
+    fn client() -> Client {
+        Client::new_sim(Testbed::sage_prototype())
+    }
+
+    const STRIPE: u64 = 4 * 65536; // default layout stripe width
+
+    #[test]
+    fn zero_op_session_completes_at_now() {
+        let mut c = client();
+        c.now = 11.5;
+        let r = c.session().run().unwrap();
+        assert_eq!(r.completed_at, 11.5);
+        assert_eq!(c.now, 11.5);
+        assert!(r.outputs.is_empty());
+        assert_eq!(r.ios, 0);
+    }
+
+    #[test]
+    fn single_write_session_equals_legacy_writev() {
+        let data = vec![7u8; STRIPE as usize];
+        let extents: Vec<(u64, &[u8])> = vec![(0, &data)];
+        let mut a = client();
+        let oa = a.create_object(4096).unwrap();
+        let ta = a.writev(&oa, &extents).unwrap();
+        let mut b = client();
+        let ob = b.create_object(4096).unwrap();
+        let tb = {
+            let mut s = b.session();
+            s.write(&ob, &extents);
+            s.run().unwrap().completed_at
+        };
+        assert_eq!(ta.to_bits(), tb.to_bits(), "bit-identical completion");
+        assert_eq!(a.now.to_bits(), b.now.to_bits());
+        assert_eq!(
+            a.read_object(&oa, 0, STRIPE).unwrap(),
+            b.read_object(&ob, 0, STRIPE).unwrap()
+        );
+    }
+
+    #[test]
+    fn unchained_ops_overlap_chained_ops_serialize() {
+        let a = vec![1u8; STRIPE as usize];
+        let b = vec![2u8; STRIPE as usize];
+        let run = |chain: bool| {
+            let mut c = client();
+            let o1 = c.create_object(4096).unwrap();
+            let o2 = c.create_object(4096).unwrap();
+            let mut s = c.session();
+            let w1 = s.write_owned(&o1, vec![(0, a.clone())]);
+            let w2 = s.write_owned(&o2, vec![(0, b.clone())]);
+            if chain {
+                s.after(w2, w1).unwrap();
+            }
+            s.run().unwrap().completed_at
+        };
+        let t_par = run(false);
+        let t_chain = run(true);
+        assert!(
+            t_par < t_chain,
+            "independent ops overlap on their shards: {t_par} vs {t_chain}"
+        );
+    }
+
+    #[test]
+    fn after_chain_matches_sequential_legacy_calls() {
+        let data = vec![3u8; 2 * STRIPE as usize];
+        // sequential legacy: write then read, clock advancing between
+        let mut a = client();
+        let oa = a.create_object(4096).unwrap();
+        a.writev(&oa, &[(0, &data)]).unwrap();
+        let back_a = a
+            .readv(&oa, &[Extent::new(0, STRIPE), Extent::new(STRIPE, STRIPE)])
+            .unwrap();
+        // one session, read chained after the write
+        let mut b = client();
+        let ob = b.create_object(4096).unwrap();
+        let (back_b, t_b) = {
+            let mut s = b.session();
+            let w = s.write(&ob, &[(0, &data)]);
+            let r = s.read(&ob, &[Extent::new(0, STRIPE), Extent::new(STRIPE, STRIPE)]);
+            s.after(r, w).unwrap();
+            let mut rep = s.run().unwrap();
+            let OpOutput::Read(bufs) = rep.outputs.swap_remove(r.index()) else {
+                panic!("read output expected");
+            };
+            (bufs, rep.completed_at)
+        };
+        assert_eq!(back_a, back_b, "chained session == sequential bytes");
+        assert_eq!(a.now.to_bits(), t_b.to_bits(), "and bit-identical time");
+        assert_eq!(b.now.to_bits(), t_b.to_bits());
+    }
+
+    #[test]
+    fn after_rejects_forward_and_unknown_edges() {
+        let mut c = client();
+        let idx = c.create_index();
+        let mut s = c.session();
+        let g1 = s.idx_get(idx, vec![b"a".to_vec()]);
+        let g2 = s.idx_get(idx, vec![b"b".to_vec()]);
+        assert!(s.after(g1, g2).is_err(), "dep on later op rejected");
+        assert!(s.after(g1, g1).is_err(), "self-dep rejected");
+        assert!(s.after(OpHandle(99), g1).is_err(), "unknown handle rejected");
+        assert!(s.after(g2, g1).is_ok());
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn mixed_kinds_share_one_group() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let idx = c.create_index();
+        let payload = vec![9u8; STRIPE as usize];
+        let mut s = c.session();
+        let w = s.write_owned(&obj, vec![(0, payload.clone())]);
+        let p = s.idx_put(idx, vec![(b"k".to_vec(), b"v".to_vec())]);
+        let t = s.tx(vec![(b"tk".to_vec(), b"tv".to_vec())]);
+        let g = s.idx_get(idx, vec![b"k".to_vec()]);
+        s.after(g, p).unwrap();
+        let rep = s.run().unwrap();
+        assert!(rep.completed[w.index()] > 0.0);
+        assert!(matches!(rep.output(p), OpOutput::IdxPut));
+        match rep.output(g) {
+            OpOutput::IdxGet(vals) => assert_eq!(vals[0], Some(b"v".to_vec())),
+            other => panic!("unexpected {other:?}"),
+        }
+        match rep.output(t) {
+            OpOutput::Tx(tx) => {
+                assert_eq!(c.store.dtm.get(b"tk"), Some(&b"tv".to_vec()));
+                assert!(tx.0 > 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // the group completed at the max over all ops' completions
+        assert!(rep.completed_at >= rep.completed[w.index()]);
+        assert_eq!(c.read_object(&obj, 0, STRIPE).unwrap(), payload);
+    }
+
+    #[test]
+    fn independent_tx_ops_group_commit_concurrently() {
+        // two tx ops in one session each complete one LOG_FORCE after
+        // dispatch — not one after the other
+        let mut c = client();
+        let mut s = c.session();
+        let t1 = s.tx(vec![(b"a".to_vec(), b"1".to_vec())]);
+        let t2 = s.tx(vec![(b"b".to_vec(), b"2".to_vec())]);
+        let rep = s.run().unwrap();
+        assert_eq!(
+            rep.completed[t1.index()].to_bits(),
+            rep.completed[t2.index()].to_bits(),
+            "independent tx ops overlap"
+        );
+        // versus the chained/legacy shape, which serializes the forces
+        let mut d = client();
+        let mut s = d.session();
+        let u1 = s.tx(vec![(b"a".to_vec(), b"1".to_vec())]);
+        let u2 = s.tx(vec![(b"b".to_vec(), b"2".to_vec())]);
+        s.after(u2, u1).unwrap();
+        let rep2 = s.run().unwrap();
+        assert!(rep2.completed[u2.index()] > rep2.completed[u1.index()]);
+        assert!(rep2.completed_at > rep.completed_at);
+    }
+
+    #[test]
+    fn read_coalescing_is_byte_identical_and_reads_shared_units_once() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data: Vec<u8> = (0..2 * STRIPE).map(|i| (i % 241) as u8).collect();
+        c.write_object(&obj, 0, &data).unwrap();
+        // two adjacent extents that split one 64 KiB unit mid-way:
+        // unmerged they would each read that unit; merged it is one op
+        let exts = [
+            Extent::new(0, STRIPE / 2 + 4096),
+            Extent::new(STRIPE / 2 + 4096, STRIPE / 2 - 4096),
+        ];
+        let mut s = c.session();
+        let h = s.read(&obj, &exts);
+        let mut rep = s.run().unwrap();
+        let OpOutput::Read(bufs) = rep.outputs.swap_remove(h.index()) else {
+            panic!("read output expected");
+        };
+        assert_eq!(bufs.len(), 2, "one buffer per caller extent");
+        assert_eq!(bufs[0], &data[..(STRIPE / 2 + 4096) as usize]);
+        assert_eq!(bufs[1], &data[(STRIPE / 2 + 4096) as usize..STRIPE as usize]);
+        let summary = c.addb.summary();
+        let (_, merged) = summary
+            .iter()
+            .find(|(k, _)| k == "clovis.obj_readv_merged_ops")
+            .map(|(_, v)| *v)
+            .expect("merged-op stat recorded");
+        assert_eq!(merged, 1.0, "adjacent read extents merge into one op");
+    }
+
+    #[test]
+    fn session_error_marks_op_failed_and_propagates() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let mut s = c.session();
+        // unaligned write: the engine rejects it
+        let bad = vec![1u8; 100];
+        let extents: Vec<(u64, &[u8])> = vec![(13, &bad)];
+        s.write(&obj, &extents);
+        assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn ship_session_shares_shards_with_foreground_io() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let chk = c.create_object(4096).unwrap();
+        let data = vec![4u8; STRIPE as usize];
+        c.write_object(&obj, 0, &data).unwrap();
+        let payload = vec![5u8; STRIPE as usize];
+        let mut s = c.session();
+        let sh = s.ship(obj, FunctionKind::IntegrityCheck);
+        s.write_owned(&chk, vec![(0, payload)]);
+        let rep = s.run().unwrap();
+        match rep.output(sh) {
+            OpOutput::Ship(r) => assert!(r.t_done > 0.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(rep.ios > 0, "both kinds dispatched unit I/O on one group");
+        assert!(!rep.frontiers.is_empty());
+        assert_eq!(c.store.object(chk).unwrap().size, STRIPE);
+    }
+
+    #[test]
+    fn migrate_session_moves_and_publishes() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![6u8; STRIPE as usize];
+        c.write_object(&obj, 0, &data).unwrap();
+        let mut hsm = crate::hsm::Hsm::new(crate::hsm::TieringPolicy::HeatWeighted);
+        let plan = vec![Migration {
+            obj,
+            from: DeviceKind::Ssd,
+            to: DeviceKind::Nvram,
+        }];
+        let _ = c.fdmi.drain();
+        let mut s = c.session();
+        let m = s.migrate(&mut hsm, &plan);
+        let rep = s.run().unwrap();
+        assert!(matches!(rep.output(m), OpOutput::Migrate));
+        assert!(c
+            .fdmi
+            .drain()
+            .iter()
+            .any(|r| matches!(r, FdmiRecord::ObjectMigrated { .. })));
+        assert_eq!(c.store.object(obj).unwrap().layout.tier(), DeviceKind::Nvram);
+        assert_eq!(c.read_object(&obj, 0, STRIPE).unwrap(), data);
+    }
+}

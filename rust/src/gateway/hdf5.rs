@@ -8,9 +8,11 @@
 //! KVS; datasets are typed n-dimensional arrays whose raw data lives in
 //! a Mero object (row-major, element-wise little-endian); attributes
 //! are small KV records. Hyperslab reads/writes translate to
-//! block-aligned object I/O.
+//! block-aligned object I/O, executed through the Clovis session API
+//! (ISSUE 4): envelope reads and persist-by-move writes are session
+//! ops on the sharded per-device scheduler.
 
-use crate::clovis::Client;
+use crate::clovis::{Client, Extent};
 use crate::error::{Result, SageError};
 use crate::mero::{IndexId, Layout, ObjectId};
 
@@ -259,15 +261,19 @@ fn parent_of(path: &str) -> String {
     }
 }
 
-/// Byte-granular object write via aligned RMW (shared with POSIX view).
+/// Byte-granular object write via aligned RMW (shared with POSIX
+/// view), executed through the Clovis session API: the envelope read
+/// is one session read op (`readv`), the patched envelope persists by
+/// move through one session write op (`writev_owned` — no payload
+/// copy into block storage).
 fn write_bytes(client: &mut Client, obj: ObjectId, offset: u64, data: &[u8]) -> Result<()> {
     const BS: u64 = 4096;
     let start = offset / BS * BS;
     let end = (offset + data.len() as u64).div_ceil(BS) * BS;
-    let mut buf = client.read_object(&obj, start, end - start)?;
+    let mut buf = read_bytes(client, obj, start, end - start)?;
     let o = (offset - start) as usize;
     buf[o..o + data.len()].copy_from_slice(data);
-    client.write_object(&obj, start, &buf)?;
+    client.writev_owned(&obj, vec![(start, buf)])?;
     Ok(())
 }
 
@@ -275,9 +281,13 @@ fn read_bytes(client: &mut Client, obj: ObjectId, offset: u64, len: u64) -> Resu
     const BS: u64 = 4096;
     let start = offset / BS * BS;
     let end = (offset + len).div_ceil(BS) * BS;
-    let buf = client.read_object(&obj, start, end - start)?;
+    let mut buf = client
+        .readv(&obj, &[Extent::new(start, end - start)])?
+        .swap_remove(0);
     let o = (offset - start) as usize;
-    Ok(buf[o..o + len as usize].to_vec())
+    buf.drain(..o);
+    buf.truncate(len as usize);
+    Ok(buf)
 }
 
 #[cfg(test)]

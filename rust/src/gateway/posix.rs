@@ -10,10 +10,12 @@
 //! (`path -> inode record`), files backed by Mero objects, directories
 //! as key prefixes. Byte-granular file I/O is translated to
 //! block-aligned object I/O here (POSIX's looser alignment is part of
-//! what the gateway provides). Vectored calls ride the sharded op
-//! scheduler end to end: one Clovis op group for the RMW envelope
-//! reads, one for the writes, each dispatched to per-device shards
-//! (`sim::sched`; see ARCHITECTURE.md §Module map).
+//! what the gateway provides). Vectored calls ride the Clovis session
+//! API end to end (ISSUE 4): one session read op for the RMW envelope
+//! reads, then ONE cross-kind session carrying both the data write and
+//! the namespace (inode) KVS update — every op dispatched to the
+//! group's per-device shards (`sim::sched`; see ARCHITECTURE.md
+//! §Module map).
 
 use crate::clovis::{Client, Extent};
 use crate::error::{Result, SageError};
@@ -175,7 +177,9 @@ impl PosixGateway {
             }
         }
         // RMW each merged envelope exactly once, reading them all as
-        // ONE vectored op group (one ADDB/FDMI record for the batch)
+        // ONE session read op (`readv` is a one-op session; one
+        // ADDB/FDMI record for the batch, adjacent envelopes coalesce
+        // into one striped read)
         let read_exts: Vec<Extent> = merged
             .iter()
             .map(|(s, e)| Extent::new(*s, e - s))
@@ -202,12 +206,16 @@ impl PosixGateway {
                 }
             }
         }
-        // one batched, persist-by-move op group for the whole call
-        client.writev_owned(&obj, extents)?;
-        client.store.index_mut(self.ns)?.put(
-            p.into_bytes(),
-            Inode::File { obj, size: new_size }.encode(),
+        // one batched, persist-by-move session for the whole call: the
+        // data write AND the namespace (inode) update are a cross-kind
+        // batch on one scheduler-backed op group (ISSUE 4)
+        let mut s = client.session();
+        s.write_owned(&obj, extents);
+        s.idx_put(
+            self.ns,
+            vec![(p.into_bytes(), Inode::File { obj, size: new_size }.encode())],
         );
+        s.run()?;
         Ok(())
     }
 

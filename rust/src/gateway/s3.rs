@@ -11,7 +11,7 @@
 //! objects a POSIX path or an HDF5 dataset exposes). PUT/GET of whole
 //! values, LIST with prefix, ETags from the object checksum.
 
-use crate::clovis::Client;
+use crate::clovis::{Client, Extent};
 use crate::error::{Result, SageError};
 use crate::mero::{IndexId, ObjectId};
 
@@ -59,6 +59,9 @@ impl S3View {
     }
 
     /// PUT: store `data` as an object and bind it to (bucket, key).
+    /// One cross-kind Clovis session (ISSUE 4): the padded value
+    /// persists by move as an object write op and the key binding is a
+    /// KVS op on the same scheduler-backed group.
     pub fn put_object(
         &self,
         client: &mut Client,
@@ -70,16 +73,15 @@ impl S3View {
         // pad to block multiple for the object write; logical size in meta
         let mut padded = data.to_vec();
         padded.resize(data.len().div_ceil(4096) * 4096, 0);
-        client.write_object(&obj, 0, &padded)?;
         let meta = S3Meta {
             obj,
             size: data.len() as u64,
             etag: crc32fast::hash(data),
         };
-        client
-            .store
-            .index_mut(self.idx)?
-            .put(Self::key(bucket, key), meta.encode());
+        let mut s = client.session();
+        s.write_owned(&obj, vec![(0, padded)]);
+        s.idx_put(self.idx, vec![(Self::key(bucket, key), meta.encode())]);
+        s.run()?;
         Ok(meta)
     }
 
@@ -105,7 +107,7 @@ impl S3View {
         Ok(())
     }
 
-    /// GET: fetch the value bytes.
+    /// GET: fetch the value bytes (one session read op via `readv`).
     pub fn get_object(
         &self,
         client: &mut Client,
@@ -114,7 +116,9 @@ impl S3View {
     ) -> Result<Vec<u8>> {
         let meta = self.head_object(client, bucket, key)?;
         let padded = meta.size.div_ceil(4096) * 4096;
-        let mut data = client.read_object(&meta.obj, 0, padded)?;
+        let mut data = client
+            .readv(&meta.obj, &[Extent::new(0, padded)])?
+            .swap_remove(0);
         data.truncate(meta.size as usize);
         // integrity: the view re-verifies the ETag
         if crc32fast::hash(&data) != meta.etag {

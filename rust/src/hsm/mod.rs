@@ -21,8 +21,11 @@
 //! onto ONE sharded `IoScheduler` — phase A dispatches every source
 //! read up front, phase B rewrites each object at its own read
 //! frontier — so a demotion to a slow SMR tier no longer blocks
-//! promotions to NVRAM. `Client::migrate_with` wraps this in a Clovis
-//! op group and emits `FdmiRecord::ObjectMigrated` per moved object.
+//! promotions to NVRAM. `Client::migrate_with` wraps this in a one-op
+//! Clovis session and emits `FdmiRecord::ObjectMigrated` per moved
+//! object; stage `Session::migrate` next to writes/ships to overlap a
+//! background migration with foreground traffic on shared shards
+//! (ISSUE 4 session API).
 
 use std::collections::HashMap;
 
@@ -119,7 +122,7 @@ impl Hsm {
                 FdmiRecord::ObjectWritten { len, .. }
                 | FdmiRecord::ObjectRead { len, .. } => {
                     let size = store.object(obj).map(|o| o.size).unwrap_or(0);
-                    let e = self.heat.entry(obj).or_insert(Heat {
+                    let e = self.heat.entry(obj).or_insert_with(|| Heat {
                         score: 0.0,
                         last_touch: at,
                         created: at,

@@ -13,9 +13,12 @@
 //!   FDMI), [`hsm`] (tiering), [`pgas`] (MPI-storage-window analog),
 //!   [`streams`] (MPI-stream analog), all running over a simulated
 //!   cluster ([`sim`], [`cluster`]) with deterministic virtual time.
-//!   Object I/O executes on the sharded per-device scheduler
-//!   ([`sim::sched`]): op groups dispatch unit I/Os to home-device
-//!   shards and complete at the max over per-device frontiers.
+//!   Every operation is an op on the sharded per-device scheduler
+//!   ([`sim::sched`]): `Client::session()` ([`clovis::session`])
+//!   stages object I/O, KV access, transactions, function shipping,
+//!   migration and repair on ONE scheduler-backed op group — groups
+//!   dispatch unit I/Os to home-device shards and complete at the max
+//!   over per-device frontiers.
 //! * **L2/L1 (build time)** — JAX graphs + Pallas kernels under
 //!   `python/compile/`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Runtime bridge** — [`runtime`] loads the artifacts once via the

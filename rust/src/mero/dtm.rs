@@ -18,6 +18,14 @@
 //! The ablation baseline [`TwoPhaseLocking`] models the RDBMS-style
 //! alternative the paper argues against: per-key lock RPCs held across
 //!   the transaction, with distributed deadlock avoidance (wound-wait).
+//!
+//! At the Clovis layer a whole transaction (begin + buffered writes +
+//! commit) can be staged as ONE session op (`Session::tx`): the commit
+//! completes one log force after the op's dispatch frontier, so
+//! independent transaction ops of one session group-commit
+//! concurrently instead of serializing through the client clock —
+//! exactly the epoch group-commit story above, surfaced through the
+//! one asynchronous op interface (ISSUE 4).
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 
@@ -260,7 +268,9 @@ impl TwoPhaseLocking {
             _ => {}
         }
         self.locks.insert(key.clone(), tx);
-        self.held.get_mut(&tx).map(|v| v.push(key.clone()));
+        if let Some(held) = self.held.get_mut(&tx) {
+            held.push(key.clone());
+        }
         self.store.insert(key, value);
         Ok(now + LOCK_RPC)
     }

@@ -26,8 +26,12 @@ use crate::sim::clock::SimTime;
 #[derive(Debug, Clone, PartialEq)]
 pub enum RepairAction {
     /// Rebuild all units of this device onto spares (SNS repair).
+    /// Executed by `Client::repair_with` (a recovery-plane session).
     RebuildDevice(DeviceId),
     /// Proactively drain a degrading device before it hard-fails.
+    /// Executed by `Client::drain_with` (a recovery-plane session:
+    /// units are read off the still-live device and re-homed at their
+    /// own read frontiers — no reconstruction needed).
     ProactiveDrain(DeviceId),
     /// Too many correlated events on one node: flag for operator.
     NodeAlert { node: usize, events: usize },
@@ -146,11 +150,21 @@ impl HaSubsystem {
         }
     }
 
+    /// A recovery action that FAILED to complete (e.g. a drain with no
+    /// spare capacity): un-engage the device WITHOUT logging a repair
+    /// interval, so future failure events on it decide fresh actions
+    /// instead of being suppressed by the in-repair check forever.
+    /// Called by the recovery plane's error paths.
+    pub fn repair_aborted(&mut self, dev: DeviceId) {
+        self.in_repair.remove(&dev);
+    }
+
     /// Mean duration of completed recovery actions in virtual time
     /// (0.0 when none have completed) — the "how fast does the cluster
     /// heal" telemetry the §3.2.1 HA narrative asks for. Includes
-    /// proactive drains, which complete near-instantly until a drain
-    /// executor lands (ROADMAP §Perf open item).
+    /// proactive drains, executed by the recovery plane as sessions
+    /// (`Client::drain_with` → `sns::drain_with`, the
+    /// `RepairAction::ProactiveDrain` executor).
     pub fn mean_repair_time(&self) -> SimTime {
         if self.repair_log.is_empty() {
             return 0.0;
@@ -195,6 +209,26 @@ mod tests {
         // the completion stamp landed in the repair log
         assert_eq!(ha.repair_log, vec![(3, 1.0, 2.5)]);
         assert!((ha.mean_repair_time() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aborted_recovery_re_arms_the_device() {
+        // a drain/rebuild that errors out must not leave the device
+        // "in repair" forever — the next failure event decides fresh
+        let mut ha = HaSubsystem::new();
+        for i in 0..3 {
+            ha.observe(ev(i as f64, FailureKind::Transient(5)), |_| Some(0));
+        }
+        assert_eq!(ha.repairing(), vec![5], "drain engaged");
+        ha.repair_aborted(5);
+        assert!(ha.repairing().is_empty());
+        assert!(ha.repair_log.is_empty(), "no interval logged for a failure");
+        let a = ha.observe(ev(4.0, FailureKind::Device(5)), |_| Some(0));
+        assert_eq!(
+            a,
+            RepairAction::RebuildDevice(5),
+            "the hard failure is acted on, not suppressed"
+        );
     }
 
     #[test]

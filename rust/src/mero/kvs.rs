@@ -4,6 +4,14 @@
 //! some order … keys are unique within an index. Clovis provides GET,
 //! PUT, DEL and NEXT operations on indices", each over a *set* of keys
 //! (batched, as in the real API).
+//!
+//! At the Clovis layer every index operation is an op on the session
+//! builder (`Session::idx_put/idx_get/idx_del/idx_next`): results and
+//! completion stamps ride the same scheduler-backed op group as object
+//! I/O, transactions and function shipping, so KV access can be
+//! `.after`-chained with any other operation kind (ISSUE 4; metadata
+//! carries no pool-device I/O in this model — see ROADMAP open items
+//! for the device-backed cost model).
 
 use std::collections::BTreeMap;
 use std::ops::Bound;

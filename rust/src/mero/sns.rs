@@ -47,6 +47,11 @@
 //!   homes and submits the rebuild writes at each unit's
 //!   reconstruction frontier — so writes stream onto target devices
 //!   while survivor reads of later stripes are still in flight.
+//! * **proactive drain** — [`drain_with`] executes the HA subsystem's
+//!   `RepairAction::ProactiveDrain` on the same two-phase shape: every
+//!   unit resident on a degrading (still-live) device is read off it
+//!   in one pass and rewritten elsewhere at its own read frontier — no
+//!   reconstruction, because the source still serves reads.
 //! * **oracle** — `sns_serial` keeps the serial-fold timings
 //!   (`sns_serial::read`, `sns_serial::repair`) as the differential
 //!   baseline; `tests/prop_repair.rs` proves byte-identity and
@@ -255,6 +260,7 @@ fn build_plan(
     Ok(plan)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_raid(
     store: &mut MeroStore,
     id: ObjectId,
@@ -480,6 +486,7 @@ pub(crate) fn persist_extent(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_mirror(
     store: &mut MeroStore,
     id: ObjectId,
@@ -1149,6 +1156,108 @@ pub fn repair_with(
     Ok((rebuilt, t_done))
 }
 
+/// Proactively drain a DEGRADING (still-live) device: move every unit
+/// homed on `dev` across `objects` onto other devices of each
+/// object's tier, as a self-contained op (private scheduler). Unlike
+/// [`repair`] the source device still serves reads, so no parity
+/// reconstruction is needed. Returns (bytes moved, completion time).
+pub fn drain(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    dev: usize,
+    now: SimTime,
+) -> Result<(u64, SimTime)> {
+    let mut sched = IoScheduler::new();
+    drain_with(store, objects, dev, now, &mut sched)
+}
+
+/// [`drain`] dispatching ALL device I/O onto the caller's group
+/// scheduler (scheduler-driven recovery plane; the executor of
+/// `RepairAction::ProactiveDrain`, reusing [`repair_with`]'s
+/// two-phase shape): phase A submits one read per resident unit to
+/// the draining device's shard in ONE pass; phase B allocates a
+/// replacement home outside the unit's stripe and submits the rewrite
+/// at that unit's own read frontier — rewrites stream onto target
+/// devices while later units are still being read off the drain
+/// source. Placements move; logical bytes (block map) and parity
+/// payloads are untouched, so the object reads back identically and
+/// keeps full redundancy once the drain completes.
+pub fn drain_with(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    dev: usize,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<(u64, SimTime)> {
+    if store.cluster.devices[dev].failed {
+        return Err(SageError::Invalid(format!(
+            "drain targets a live device; device {dev} has failed (use repair)"
+        )));
+    }
+    // One unit leaving the draining device: its rewrite waits on its
+    // own read ticket, not on the whole phase.
+    struct Move {
+        id: ObjectId,
+        pu: PlacedUnit,
+        ticket: Ticket,
+    }
+
+    // ---- phase A: read every resident unit off the draining device --
+    let mut moves: Vec<Move> = Vec::new();
+    for &id in objects {
+        let resident: Vec<PlacedUnit> = store
+            .object(id)?
+            .placed_units()
+            .filter(|u| u.device == dev)
+            .copied()
+            .collect();
+        for pu in resident {
+            let ticket = sched.submit(dev, now, pu.size, IoOp::Read, Access::Seq);
+            moves.push(Move { id, pu, ticket });
+        }
+    }
+    if moves.is_empty() {
+        return Ok((0, now));
+    }
+    sched.drain(&mut store.cluster.devices);
+
+    // ---- phase B: re-home each unit at its own read frontier --------
+    let mut bytes = 0u64;
+    for m in moves {
+        let t_read = sched.completion(m.ticket);
+        let tier = store.object(m.id)?.layout.tier();
+        // exclude the stripe's current homes (the drain source among
+        // them), preserving one-device-per-stripe-unit placement
+        let exclude: Vec<usize> = store
+            .object(m.id)?
+            .placed_units()
+            .filter(|u| u.stripe == m.pu.stripe)
+            .map(|u| u.device)
+            .collect();
+        let new_dev =
+            store.pools.allocate(&mut store.cluster, tier, m.pu.size, &exclude)?;
+        // `allocate` relaxes the exclusion when the pool is narrower
+        // than the stripe (matching the write path) — but a drain that
+        // "re-homes" a unit onto the drain source itself makes no
+        // progress while claiming success. Fail loudly instead.
+        if new_dev == dev {
+            store.pools.release(&mut store.cluster, new_dev, m.pu.size);
+            return Err(SageError::NoSpace(format!(
+                "drain of device {dev}: no other {tier:?} device has space"
+            )));
+        }
+        sched.submit(new_dev, t_read, m.pu.size, IoOp::Write, Access::Seq);
+        store.object_mut(m.id)?.place_unit(PlacedUnit {
+            device: new_dev,
+            ..m.pu
+        });
+        store.pools.release(&mut store.cluster, dev, m.pu.size);
+        bytes += m.pu.size;
+    }
+    let t_done = now.max(sched.drain(&mut store.cluster.devices));
+    Ok((bytes, t_done))
+}
+
 // ------------------------------------------------------------ compression
 
 /// Deflate (compressed layouts) via the in-tree run codec. Header =
@@ -1278,6 +1387,118 @@ mod tests {
         s.cluster.fail_device(dev2);
         let (back, _) = s.read_object(id, 0, data.len() as u64, 2.0).unwrap();
         assert_eq!(back, data);
+    }
+
+    #[test]
+    fn drain_moves_every_resident_unit_and_keeps_redundancy() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 2, 21);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 0).unwrap().device;
+        let resident = s
+            .object(id)
+            .unwrap()
+            .placed_units()
+            .filter(|u| u.device == dev)
+            .count();
+        assert!(resident > 0);
+        let used_before = s.cluster.devices[dev].used;
+        let (bytes, t) = drain(&mut s, &[id], dev, 1.0).unwrap();
+        assert_eq!(bytes, resident as u64 * 16384);
+        assert!(t > 1.0, "the drain takes virtual time");
+        assert!(
+            s.object(id).unwrap().placed_units().all(|u| u.device != dev),
+            "no unit left on the drained device"
+        );
+        assert!(
+            s.cluster.devices[dev].used < used_before,
+            "pool space released on the drain source"
+        );
+        // per-stripe placement stays one-device-per-unit
+        for pu in s.object(id).unwrap().placed_units() {
+            let same_dev = s
+                .object(id)
+                .unwrap()
+                .placed_units()
+                .filter(|o| o.stripe == pu.stripe && o.device == pu.device)
+                .count();
+            assert_eq!(same_dev, 1, "stripe units stay on distinct devices");
+        }
+        // bytes unchanged, and redundancy survives the (now-empty)
+        // device hard-failing afterwards
+        s.cluster.fail_device(dev);
+        let (back, _) = s.read_object(id, 0, data.len() as u64, t).unwrap();
+        assert_eq!(back, data);
+        // …and a real failure elsewhere is still reconstructible
+        let other = s.object(id).unwrap().placement(0, 1).unwrap().device;
+        s.cluster.fail_device(other);
+        let (back2, _) = s.read_object(id, 0, data.len() as u64, t + 1.0).unwrap();
+        assert_eq!(back2, data, "parity still covers one loss after drain");
+    }
+
+    #[test]
+    fn drain_with_no_alternative_home_errors_instead_of_faking_progress() {
+        // a tier with ONE device: the allocator's relaxed fallback
+        // would hand the unit straight back to the drain source —
+        // drain must refuse (NoSpace), not report bytes "moved"
+        use crate::cluster::{Cluster, EnclosureCompute};
+        use crate::sim::network::NetworkModel;
+        let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+        c.add_node(
+            vec![crate::sim::device::DeviceProfile::ssd(1 << 30)],
+            EnclosureCompute { cores: 8, flops: 1e10 },
+        );
+        let mut s = MeroStore::new(c);
+        let id = s
+            .create_object(
+                4096,
+                Layout::Raid { data: 1, parity: 0, unit: 16384, tier: DeviceKind::Ssd },
+            )
+            .unwrap();
+        let data = random_bytes(16384, 23);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 0).unwrap().device;
+        let used_before = s.cluster.devices[dev].used;
+        assert!(matches!(
+            drain(&mut s, &[id], dev, 1.0),
+            Err(SageError::NoSpace(_))
+        ));
+        // the failed attempt did not leak pool space or placements
+        assert_eq!(s.cluster.devices[dev].used, used_before);
+        assert_eq!(
+            s.object(id).unwrap().placement(0, 0).unwrap().device,
+            dev,
+            "placement untouched on a refused drain"
+        );
+        let (back, _) = s.read_object(id, 0, data.len() as u64, 2.0).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn drain_rejects_failed_devices_and_empty_drains_are_noops() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384, 22);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let dev = s.object(id).unwrap().placement(0, 0).unwrap().device;
+        // a failed device cannot be drained (that is repair's job)
+        s.cluster.fail_device(dev);
+        assert!(matches!(
+            drain(&mut s, &[id], dev, 1.0),
+            Err(SageError::Invalid(_))
+        ));
+        s.cluster.replace_device(dev);
+        // draining a device that holds nothing completes at `now`
+        let empty = (0..s.cluster.devices.len())
+            .find(|&d| {
+                !s.cluster.devices[d].failed
+                    && s.object(id).unwrap().placed_units().all(|u| u.device != d)
+            })
+            .expect("some device holds no unit of this object");
+        let (bytes, t) = drain(&mut s, &[id], empty, 5.0).unwrap();
+        assert_eq!(bytes, 0);
+        assert_eq!(t, 5.0);
     }
 
     #[test]

@@ -161,6 +161,13 @@ impl IoScheduler {
         self.shards.get(&device).map_or(0.0, |s| s.frontier)
     }
 
+    /// `(device, completion frontier)` for every shard this scheduler
+    /// touched, in device order (diagnostics: per-device frontier
+    /// tables in session reports and the ablation benches).
+    pub fn frontiers(&self) -> Vec<(usize, SimTime)> {
+        self.shards.iter().map(|(&d, s)| (d, s.frontier)).collect()
+    }
+
     /// Number of shards (distinct devices touched).
     pub fn shard_count(&self) -> usize {
         self.shards.len()

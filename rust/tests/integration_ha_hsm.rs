@@ -91,6 +91,62 @@ fn ha_ignores_transient_noise_but_catches_patterns() {
 }
 
 #[test]
+fn decided_proactive_drain_executes_and_preempts_rebuild_work() {
+    // the full ProactiveDrain story: transients accumulate → the HA
+    // subsystem decides a drain → the recovery plane executes it as a
+    // session (Client::drain_with) → when the device finally
+    // hard-fails there is NOTHING left to rebuild from it
+    let mut c = Client::new_sim(Testbed::sage_prototype());
+    let mut objs = Vec::new();
+    let mut datas = Vec::new();
+    for i in 0..6u64 {
+        let o = c.create_object(4096).unwrap();
+        let mut d = vec![0u8; 4 * 65536];
+        SimRng::new(500 + i).fill_bytes(&mut d);
+        c.write_object(&o, 0, &d).unwrap();
+        objs.push(o);
+        datas.push(d);
+    }
+    let dev = c.store.object(objs[0]).unwrap().placement(0, 0).unwrap().device;
+    let mut decided = None;
+    for i in 0..3u32 {
+        let a = c.store.ha.observe(
+            FailureEvent {
+                at: c.now + i as f64,
+                kind: FailureKind::Transient(dev),
+            },
+            |_| Some(0),
+        );
+        if let RepairAction::ProactiveDrain(d) = a {
+            decided = Some(d);
+        }
+    }
+    let d = decided.expect("three transients inside the window decide a drain");
+    assert_eq!(d, dev);
+    let (bytes, t_drain) = c.drain_with(&objs, d).unwrap();
+    assert!(bytes > 0, "resident units moved off the degrading device");
+    assert!(c.store.ha.repairing().is_empty());
+    assert_eq!(c.store.ha.repair_log.len(), 1, "drain stamped in the log");
+    assert!(c.store.ha.mean_repair_time() > 0.0);
+    // the drained device eventually hard-fails: the rebuild finds no
+    // units on it, and every object still reads back intact
+    c.store.cluster.fail_device(d);
+    c.now = c.now.max(t_drain + 10.0);
+    let at = c.now;
+    c.store.ha.observe(
+        FailureEvent { at, kind: FailureKind::Device(d) },
+        |_| Some(0),
+    );
+    let (rebuilt, _) = c.repair_with(&objs, d).unwrap();
+    assert_eq!(rebuilt, 0, "nothing left to rebuild after the drain");
+    assert_eq!(c.store.ha.repair_log.len(), 2, "the rebuild is stamped too");
+    for (o, data) in objs.iter().zip(datas.iter()) {
+        let back = c.read_object(o, 0, data.len() as u64).unwrap();
+        assert_eq!(&back, data, "no data loss across drain + failure");
+    }
+}
+
+#[test]
 fn hsm_policies_differ_in_migration_volume() {
     let tb = Testbed::sage_prototype();
     let mk = || {
