@@ -1,0 +1,356 @@
+//! Ablation: the QoS plane (ISSUE 5 tentpole) — scheduler-level
+//! repair/foreground bandwidth split vs the unthrottled engine, on the
+//! skewed 4+2 pool (seven healthy SSDs plus ONE SMR-class tier-4
+//! straggler admitted to the flash pool, as in `ablate_sched`).
+//!
+//! Workload per cycle: ONE Clovis session staging a whole-device SNS
+//! repair (the rebuild of every object that lost units) FIRST, then a
+//! batch of foreground full-stripe checkpoint writes — unchained, so
+//! everything dispatches at the session clock and contends on shared
+//! per-device shards. Engines differ ONLY in the cluster's
+//! `QosConfig`:
+//!
+//! * **unthrottled** — `QosConfig::unlimited()`: the pre-QoS FIFO;
+//!   foreground queues behind the entire committed rebuild.
+//! * **default split** — `QosConfig::default()`: repair capped at
+//!   0.30 of each device; foreground runs at ≥ 0.70 through the
+//!   rebuild window.
+//!
+//! Reported: foreground p50 and makespan (virtual) with and without
+//! the split, the repair completion of both engines (the price of the
+//! cap), the per-class frontier table of the split run, and wall-clock
+//! cycle medians ± MAD. Asserted in-bench:
+//!
+//! * both engines store byte-identical state and rebuild identical
+//!   byte counts (the split changes WHEN, never WHAT);
+//! * with the default split, foreground virtual makespan under
+//!   concurrent repair IMPROVES vs the unthrottled engine while the
+//!   repair still completes and the device returns to service;
+//! * on every shard repair touched, its observed device-time share
+//!   stays within `repair_share` (the cap bounds repair's share).
+//!
+//! Run: `cargo bench --bench ablate_qos`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_qos`
+//! Rows append to `bench_results/ablate_qos.json`
+//! (fields documented in `bench_results/README.md`).
+
+use sage::bench::{record, Bencher};
+use sage::clovis::addb::Addb;
+use sage::clovis::fdmi::FdmiBus;
+use sage::clovis::{Client, OpOutput};
+use sage::cluster::{Cluster, EnclosureCompute};
+use sage::mero::{Layout, MeroStore, ObjectId};
+use sage::metrics::{Stats, Table};
+use sage::sim::device::{DeviceKind, DeviceProfile};
+use sage::sim::network::NetworkModel;
+use sage::sim::rng::SimRng;
+use sage::sim::sched::{QosConfig, TrafficClass};
+
+const UNIT: u64 = 65536;
+const K: u32 = 4;
+const P: u32 = 2;
+
+fn layout() -> Layout {
+    Layout::Raid { data: K, parity: P, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// The skewed 4+2 pool: seven healthy SSDs plus ONE SMR-class
+/// straggler (tier-4 profile) pooled with the flash devices, carrying
+/// the engine's `QosConfig`.
+fn skewed_cluster(qos: QosConfig) -> Cluster {
+    let mut profiles: Vec<DeviceProfile> =
+        (0..7).map(|_| DeviceProfile::ssd(2 << 40)).collect();
+    let mut straggler = DeviceProfile::smr(2 << 40);
+    straggler.kind = DeviceKind::Ssd; // pooled with the flash devices
+    profiles.push(straggler);
+    let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+    for chunk in profiles.chunks(4) {
+        c.add_node(
+            chunk.to_vec(),
+            EnclosureCompute { cores: 16, flops: 5e10 },
+        );
+    }
+    c.qos = qos;
+    c
+}
+
+fn client(qos: QosConfig) -> Client {
+    Client {
+        store: MeroStore::new(skewed_cluster(qos)),
+        exec: None,
+        addb: Addb::new(4096),
+        fdmi: FdmiBus::new(),
+        now: 0.0,
+    }
+}
+
+/// Median via the in-tree stats substrate (same interpolation the
+/// Bencher reports use).
+fn p50(v: &[f64]) -> f64 {
+    let mut s = Stats::new();
+    for &x in v {
+        s.push(x);
+    }
+    s.median()
+}
+
+struct CycleOutcome {
+    c: Client,
+    repair_objs: Vec<(ObjectId, Vec<u8>)>,
+    fg_objs: Vec<(ObjectId, Vec<u8>)>,
+    failed_dev: usize,
+    bytes_rebuilt: u64,
+    /// Per-foreground-op completion latencies from the session clock.
+    fg_latencies: Vec<f64>,
+    fg_makespan: f64,
+    fg_p50: f64,
+    repair_completion: f64,
+    /// Max over shards of repair's observed device-time share.
+    max_repair_share: f64,
+    io_calls: u64,
+    ios: u64,
+    /// `(device, base, fg frontier, repair frontier, repair share)`.
+    frontier_rows: Vec<(usize, f64, f64, f64, f64)>,
+}
+
+/// One cycle: prewrite the repair population, fail a device, then ONE
+/// session = whole-device repair + `n_fg` foreground full-stripe
+/// checkpoint writes, all dispatching at the session clock.
+fn run_cycle(qos: QosConfig, n_obj: usize, n_fg: usize) -> CycleOutcome {
+    let stripe = K as u64 * UNIT;
+    let mut c = client(qos);
+    let mut rng = SimRng::new(41);
+    let mut repair_objs = Vec::new();
+    for _ in 0..n_obj {
+        let o = c.create_object_with(4096, layout()).unwrap();
+        let mut d = vec![0u8; 2 * stripe as usize];
+        rng.fill_bytes(&mut d);
+        c.write_object(&o, 0, &d).unwrap();
+        repair_objs.push((o, d));
+    }
+    let failed_dev = c
+        .store
+        .object(repair_objs[0].0)
+        .unwrap()
+        .placement(0, 0)
+        .unwrap()
+        .device;
+    c.store.cluster.fail_device(failed_dev);
+    let mut fg_payloads = Vec::new();
+    for _ in 0..n_fg {
+        let o = c.create_object_with(4096, layout()).unwrap();
+        let mut d = vec![0u8; stripe as usize];
+        rng.fill_bytes(&mut d);
+        fg_payloads.push((o, d));
+    }
+    let t0 = c.now;
+    let ids: Vec<ObjectId> = repair_objs.iter().map(|(o, _)| *o).collect();
+    let mut s = c.session();
+    let r = s.repair(&ids, failed_dev);
+    let fg_handles: Vec<_> = fg_payloads
+        .iter()
+        .map(|(o, d)| s.write_owned(o, vec![(0, d.clone())]))
+        .collect();
+    let rep = s.run().unwrap();
+    let bytes_rebuilt = match rep.output(r) {
+        OpOutput::Repair { bytes } => *bytes,
+        other => panic!("repair output expected, got {other:?}"),
+    };
+    let fg_latencies: Vec<f64> = fg_handles
+        .iter()
+        .map(|h| rep.completed[h.index()] - t0)
+        .collect();
+    let fg_makespan = fg_latencies.iter().fold(0.0f64, |m, &t| m.max(t));
+    let fg_p50 = p50(&fg_latencies);
+    let repair_completion = rep.completed[r.index()] - t0;
+    let mut max_repair_share = 0.0f64;
+    let mut frontier_rows = Vec::new();
+    for shard in &rep.qos {
+        let share = shard.observed_share(TrafficClass::Repair);
+        max_repair_share = max_repair_share.max(share);
+        frontier_rows.push((
+            shard.device,
+            shard.base,
+            shard.class_frontier[TrafficClass::Foreground.index()],
+            shard.class_frontier[TrafficClass::Repair.index()],
+            share,
+        ));
+    }
+    CycleOutcome {
+        c,
+        repair_objs,
+        fg_objs: fg_payloads,
+        failed_dev,
+        bytes_rebuilt,
+        fg_latencies,
+        fg_makespan,
+        fg_p50,
+        repair_completion,
+        max_repair_share,
+        io_calls: rep.io_calls,
+        ios: rep.ios,
+        frontier_rows,
+    }
+}
+
+/// Byte oracle: every repair object and checkpoint reads back exactly
+/// what was written.
+fn assert_bytes(out: &mut CycleOutcome, engine: &str) {
+    assert!(
+        !out.c.store.cluster.devices[out.failed_dev].failed,
+        "{engine}: repaired device returned to service"
+    );
+    let objs: Vec<(ObjectId, Vec<u8>)> = out
+        .repair_objs
+        .iter()
+        .chain(out.fg_objs.iter())
+        .cloned()
+        .collect();
+    for (o, want) in objs {
+        let got = out.c.read_object(&o, 0, want.len() as u64).unwrap();
+        assert_eq!(got, want, "{engine}: bytes intact");
+    }
+}
+
+fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let (n_obj, n_fg) = if quick { (6, 4) } else { (12, 8) };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let split = QosConfig::default();
+
+    // ---- virtual time: unthrottled vs default split -------------------
+    let mut fifo = run_cycle(QosConfig::unlimited(), n_obj, n_fg);
+    let mut qos = run_cycle(split, n_obj, n_fg);
+    assert_bytes(&mut fifo, "unthrottled");
+    assert_bytes(&mut qos, "split");
+    assert_eq!(
+        fifo.bytes_rebuilt, qos.bytes_rebuilt,
+        "identical rebuild work under both engines"
+    );
+    assert!(fifo.bytes_rebuilt > 0, "the failed device held units");
+    // the acceptance bar: foreground improves under the split while
+    // the repair still completes…
+    assert!(
+        qos.fg_makespan < fifo.fg_makespan,
+        "split must improve foreground makespan under concurrent repair \
+         ({} vs {})",
+        qos.fg_makespan,
+        fifo.fg_makespan
+    );
+    assert!(
+        qos.repair_completion.is_finite() && qos.repair_completion > 0.0,
+        "repair completes under the cap"
+    );
+    // …and the cap bounds repair's device-time share on every shard
+    assert!(
+        qos.max_repair_share <= split.share(TrafficClass::Repair) + 1e-9,
+        "repair share {} exceeds the {} cap",
+        qos.max_repair_share,
+        split.share(TrafficClass::Repair)
+    );
+    let fg_improvement = fifo.fg_makespan / qos.fg_makespan.max(1e-12);
+    let repair_slowdown =
+        qos.repair_completion / fifo.repair_completion.max(1e-12);
+
+    let mut t = Table::new(
+        &format!(
+            "Repair/foreground QoS split (repair of {n_obj} objects + \
+             {n_fg} checkpoint writes, {K}+{P}, skewed pool)"
+        ),
+        &["engine", "fg p50", "fg makespan", "repair completion"],
+    );
+    t.row(vec![
+        "unthrottled".into(),
+        sage::metrics::fmt_secs(fifo.fg_p50),
+        sage::metrics::fmt_secs(fifo.fg_makespan),
+        sage::metrics::fmt_secs(fifo.repair_completion),
+    ]);
+    t.row(vec![
+        format!("split (repair {:.2})", split.share(TrafficClass::Repair)),
+        sage::metrics::fmt_secs(qos.fg_p50),
+        sage::metrics::fmt_secs(qos.fg_makespan),
+        sage::metrics::fmt_secs(qos.repair_completion),
+    ]);
+    t.row(vec![
+        "fg improvement".into(),
+        format!(
+            "{:.2}x",
+            fifo.fg_p50 / qos.fg_p50.max(1e-12)
+        ),
+        format!("{fg_improvement:.2}x"),
+        format!("{repair_slowdown:.2}x repair"),
+    ]);
+    print!("{}", t.render());
+
+    // ---- the per-class frontier table (split run) ---------------------
+    let mut t = Table::new(
+        "Per-class frontiers (split run; OPERATIONS.md explains the read)",
+        &["device", "base", "fg frontier", "repair frontier", "repair share"],
+    );
+    for &(d, base, fgf, rf, share) in &qos.frontier_rows {
+        t.row(vec![
+            format!("dev{d}"),
+            sage::metrics::fmt_secs(base),
+            sage::metrics::fmt_secs(fgf),
+            sage::metrics::fmt_secs(rf),
+            if share > 0.0 { format!("{share:.3}") } else { "-".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "max repair share {:.3} <= cap {:.2}; fg latencies (split): {:?}\n",
+        qos.max_repair_share,
+        split.share(TrafficClass::Repair),
+        qos.fg_latencies.iter().map(|t| (t * 1e3).round() / 1e3).collect::<Vec<_>>()
+    );
+
+    // ---- wall-clock cycle ---------------------------------------------
+    let m_fifo = Bencher::new("qos_unthrottled")
+        .iters(warm, iters)
+        .wall(|| run_cycle(QosConfig::unlimited(), n_obj, n_fg).fg_makespan);
+    let m_split = Bencher::new("qos_default_split")
+        .iters(warm, iters)
+        .wall(|| run_cycle(split, n_obj, n_fg).fg_makespan);
+
+    let mut t = Table::new(
+        "Wall-clock mixed repair+checkpoint cycle (build + run)",
+        &["engine", "cycle", "ratio"],
+    );
+    t.row(vec![
+        "unthrottled".into(),
+        sage::metrics::fmt_secs(m_fifo.median),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "split".into(),
+        sage::metrics::fmt_secs(m_split.median),
+        format!("{:.2}x", m_fifo.median / m_split.median.max(1e-12)),
+    ]);
+    print!("{}", t.render());
+
+    record("ablate_qos", &[
+        ("k", K as f64),
+        ("p", P as f64),
+        ("n_repair_objects", n_obj as f64),
+        ("n_fg_writes", n_fg as f64),
+        ("iters", iters as f64),
+        ("repair_share_cap", split.share(TrafficClass::Repair)),
+        ("migration_share_cap", split.share(TrafficClass::Migration)),
+        ("bytes_rebuilt", qos.bytes_rebuilt as f64),
+        ("fg_p50_unthrottled_s", fifo.fg_p50),
+        ("fg_p50_split_s", qos.fg_p50),
+        ("fg_makespan_unthrottled_s", fifo.fg_makespan),
+        ("fg_makespan_split_s", qos.fg_makespan),
+        ("fg_improvement", fg_improvement),
+        ("repair_virtual_unthrottled_s", fifo.repair_completion),
+        ("repair_virtual_split_s", qos.repair_completion),
+        ("repair_slowdown", repair_slowdown),
+        ("max_repair_share_observed", qos.max_repair_share),
+        ("session_io_calls", qos.io_calls as f64),
+        ("session_unit_ios", qos.ios as f64),
+        ("unthrottled_cycle_s", m_fifo.median),
+        ("unthrottled_mad_s", m_fifo.mad),
+        ("split_cycle_s", m_split.median),
+        ("split_mad_s", m_split.mad),
+    ]);
+}

@@ -28,9 +28,11 @@ pub mod fshipping;
 pub mod ops;
 pub mod session;
 
+use crate::cluster::failure::{FailureEvent, FailureKind, FailureSchedule};
 use crate::config::Testbed;
 use crate::error::Result;
 use crate::mero::dtm::TxId;
+use crate::mero::ha::RepairAction;
 use crate::mero::{ContainerId, IndexId, Layout, MeroStore, ObjectId};
 use crate::runtime::Executor;
 use crate::sim::clock::SimTime;
@@ -132,6 +134,30 @@ fn unexpected_output(kind: &str, other: &OpOutput) -> crate::error::SageError {
     crate::error::SageError::Invalid(format!(
         "{kind} op yielded unexpected output {other:?}"
     ))
+}
+
+/// Outcome of one failure-feed event consumed by
+/// [`Client::consume_failure_feed`]: the event, the HA subsystem's
+/// decision for it, and — when a recovery session ran — what it moved
+/// and when it completed.
+#[derive(Debug, Clone)]
+pub struct RecoveryOutcome {
+    /// The failure event ingested from the feed.
+    pub event: FailureEvent,
+    /// The HA subsystem's decision (quasi-ordered event-set analysis).
+    pub action: RepairAction,
+    /// Bytes the executed recovery session rebuilt/moved (0 when no
+    /// action ran).
+    pub bytes: u64,
+    /// Completion frontier of the executed recovery session (None when
+    /// the decision required no data movement, or when it failed).
+    pub completed_at: Option<SimTime>,
+    /// Error of a recovery that could NOT complete (e.g. a drain with
+    /// no spare capacity). The event is still consumed and the pass
+    /// continues with the remaining events; the session's error path
+    /// already re-armed the device in the HA subsystem
+    /// (`repair_aborted`), so its next failure event decides fresh.
+    pub error: Option<String>,
 }
 
 /// A Clovis client handle: the entry point of the SAGE storage API.
@@ -400,6 +426,79 @@ impl Client {
             other => return Err(unexpected_output("drain", other)),
         };
         Ok((bytes, report.completed_at))
+    }
+
+    /// Consume every due event of the cluster's failure feed and close
+    /// the loop from detection to recovery with no manual
+    /// intervention: each popped [`FailureEvent`] is routed through
+    /// the HA subsystem's decision rules
+    /// ([`HaSubsystem::observe`](crate::mero::ha::HaSubsystem::observe)),
+    /// and the decided action executes immediately as a recovery-plane
+    /// session — [`RepairAction::RebuildDevice`] via
+    /// [`Client::repair_with`], [`RepairAction::ProactiveDrain`] via
+    /// [`Client::drain_with`] — dispatching as Repair-class traffic
+    /// under the cluster's QoS split, so a consumer pass never starves
+    /// concurrent foreground sessions (§3.2.1 repair throttling).
+    ///
+    /// Hard `FailureKind::Device` events take the device out of
+    /// service before the HA subsystem sees them (the feed is the
+    /// source of truth; no test-side `fail_device` needed). Executed
+    /// recoveries advance the client clock, and newly-due events that
+    /// the advanced clock exposes are consumed in the same pass, so
+    /// one call fully settles the feed up to `self.now`. Returns one
+    /// [`RecoveryOutcome`] per event consumed — a recovery that fails
+    /// (e.g. no spare capacity) surfaces in its outcome's `error`
+    /// field and the pass CONTINUES, so one stuck device never makes
+    /// the consumer drop later events the feed already popped.
+    pub fn consume_failure_feed(
+        &mut self,
+        feed: &mut FailureSchedule,
+        objects: &[ObjectId],
+    ) -> Vec<RecoveryOutcome> {
+        // topology is fixed across the pass: map devices to nodes once
+        let n_devs = self.store.cluster.devices.len();
+        let nodes: Vec<Option<usize>> = (0..n_devs)
+            .map(|d| self.store.cluster.node_of(d))
+            .collect();
+        let mut out = Vec::new();
+        loop {
+            // events due at the client clock; executed recoveries
+            // advance it, so newly-due events surface next iteration
+            let due = feed.due(self.now);
+            if due.is_empty() {
+                break;
+            }
+            for event in due {
+                if let FailureKind::Device(d) = event.kind {
+                    if !self.store.cluster.devices[d].failed {
+                        self.store.cluster.fail_device(d);
+                    }
+                }
+                let action = self.store.ha.observe(event, |d| nodes[d]);
+                let executed = match action {
+                    RepairAction::RebuildDevice(d) => {
+                        Some(self.repair_with(objects, d))
+                    }
+                    RepairAction::ProactiveDrain(d) => {
+                        Some(self.drain_with(objects, d))
+                    }
+                    _ => None,
+                };
+                let (bytes, completed_at, error) = match executed {
+                    Some(Ok((b, t))) => (b, Some(t), None),
+                    Some(Err(e)) => (0, None, Some(e.to_string())),
+                    None => (0, None, None),
+                };
+                out.push(RecoveryOutcome {
+                    event,
+                    action,
+                    bytes,
+                    completed_at,
+                    error,
+                });
+            }
+        }
+        out
     }
 
     // ------------------------------------------------------------ indices

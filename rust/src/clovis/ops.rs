@@ -60,7 +60,7 @@
 
 use crate::error::{Result, SageError};
 use crate::sim::clock::SimTime;
-use crate::sim::sched::IoScheduler;
+use crate::sim::sched::{IoScheduler, QosConfig, TrafficClass};
 
 /// One `(offset, len)` piece of a vectored I/O request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,6 +112,23 @@ pub enum OpKind {
     /// Proactive drain of a degrading (still-live) device
     /// (`RepairAction::ProactiveDrain` executed by the recovery plane).
     Drain,
+}
+
+impl OpKind {
+    /// QoS [`TrafficClass`] ops of this kind dispatch under (§3.2.1
+    /// repair throttling): recovery work (`Repair`/`Drain`) submits as
+    /// [`TrafficClass::Repair`], HSM data movement (`Migrate`) as
+    /// [`TrafficClass::Migration`], everything else — object I/O, KV,
+    /// transactions, function shipping — as
+    /// [`TrafficClass::Foreground`]. `Session::run` stamps the group
+    /// scheduler with this class around each op's dispatch.
+    pub fn traffic_class(self) -> TrafficClass {
+        match self {
+            OpKind::Repair | OpKind::Drain => TrafficClass::Repair,
+            OpKind::Migrate => TrafficClass::Migration,
+            _ => TrafficClass::Foreground,
+        }
+    }
 }
 
 /// One asynchronous operation.
@@ -194,9 +211,23 @@ pub struct OpGroup {
 }
 
 impl OpGroup {
-    /// Empty group.
+    /// Empty group with NO QoS split (pre-QoS FIFO scheduling) — the
+    /// self-contained default.
     pub fn new() -> Self {
         OpGroup::default()
+    }
+
+    /// Empty group whose scheduler enforces `qos` on every shard.
+    /// `Session::run` builds its group with the cluster's configured
+    /// split ([`Cluster::qos`](crate::cluster::Cluster)), so repair,
+    /// drain and migration ops are bandwidth-capped against the
+    /// session's foreground traffic (§3.2.1 repair throttling).
+    pub fn with_qos(qos: QosConfig) -> Self {
+        OpGroup {
+            ops: Vec::new(),
+            next_id: 0,
+            sched: IoScheduler::with_qos(qos),
+        }
     }
 
     /// The group's sharded I/O scheduler: ops executed under this
@@ -370,6 +401,18 @@ mod tests {
         g.op_mut(a).unwrap().complete(4.0).unwrap();
         assert_eq!(g.wait_all_from(1.0).unwrap(), 4.0);
         assert_eq!(g.wait_all_from(9.0).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn op_kinds_map_to_traffic_classes_and_groups_carry_qos() {
+        assert_eq!(OpKind::Repair.traffic_class(), TrafficClass::Repair);
+        assert_eq!(OpKind::Drain.traffic_class(), TrafficClass::Repair);
+        assert_eq!(OpKind::Migrate.traffic_class(), TrafficClass::Migration);
+        assert_eq!(OpKind::ObjWrite.traffic_class(), TrafficClass::Foreground);
+        assert_eq!(OpKind::Tx.traffic_class(), TrafficClass::Foreground);
+        let g = OpGroup::with_qos(QosConfig::default());
+        assert!(g.sched_ref().qos().active());
+        assert!(!OpGroup::new().sched_ref().qos().active(), "pre-QoS default");
     }
 
     #[test]

@@ -32,6 +32,18 @@
 //! entry point, and a fully `.after`-chained session is identical to
 //! the same calls made sequentially (`tests/prop_session.rs`).
 //!
+//! The sharing is QoS-governed (§3.2.1 repair throttling): every op
+//! dispatches under its kind's
+//! [`TrafficClass`](crate::sim::sched::TrafficClass)
+//! ([`Session::repair`]/[`Session::drain`] as `Repair`,
+//! [`Session::migrate`] as `Migration`, everything else `Foreground`),
+//! and the group scheduler enforces the cluster's
+//! [`QosConfig`](crate::sim::sched::QosConfig) bandwidth split per
+//! shard — so a rebuild racing a checkpoint is capped at its
+//! configured share instead of starving the application
+//! (`benches/ablate_qos.rs` measures the foreground win;
+//! [`SessionReport::qos`] carries the per-class frontier table).
+//!
 //! KVS and DTM ops carry no device I/O in this model (metadata and the
 //! NVRAM log force are not pool devices), but their completion stamps
 //! ride the same group: a transaction op completes one `LOG_FORCE`
@@ -48,6 +60,7 @@ use crate::hsm::{Hsm, Migration};
 use crate::mero::dtm::TxId;
 use crate::mero::{IndexId, ObjectId};
 use crate::sim::clock::SimTime;
+use crate::sim::sched::QosShardReport;
 
 /// Handle to one staged session op. Redeem against
 /// [`SessionReport::outputs`] / [`SessionReport::completed`] after
@@ -110,6 +123,15 @@ pub struct SessionReport {
     pub ios: u64,
     /// `(device, completion frontier)` per shard the batch touched.
     pub frontiers: Vec<(usize, SimTime)>,
+    /// The QoS plane's per-class frontier table: one row per shard the
+    /// batch drained work on — per-class busy time, frontiers, and the
+    /// shard's inherited base (OPERATIONS.md §Reading the per-class
+    /// frontier tables). Repair/drain ops dispatch as
+    /// `TrafficClass::Repair`, migrations as
+    /// `TrafficClass::Migration`; the cluster's
+    /// [`QosConfig`](crate::sim::sched::QosConfig) caps their
+    /// per-device share against the session's foreground ops.
+    pub qos: Vec<QosShardReport>,
 }
 
 impl SessionReport {
@@ -334,14 +356,22 @@ impl<'c, 'd> Session<'c, 'd> {
     pub fn run(self) -> Result<SessionReport> {
         let Session { client, staged, deps } = self;
         let now = client.now;
-        let mut group = OpGroup::new();
+        // the group scheduler enforces the cluster's QoS split: repair
+        // and migration ops are bandwidth-capped per shard against the
+        // session's foreground traffic (§3.2.1 repair throttling)
+        let mut group = OpGroup::with_qos(client.store.cluster.qos);
         let ids: Vec<u64> = staged.iter().map(|op| group.add(op.kind())).collect();
         group.launch_batch(now)?;
         let mut completed = vec![now; staged.len()];
         let mut outputs = Vec::with_capacity(staged.len());
         for (i, op) in staged.into_iter().enumerate() {
             let at = deps[i].iter().fold(now, |t, &p| t.max(completed[p]));
-            match exec(client, &mut group, op, at) {
+            // every submission of this op carries the op kind's class
+            let class = op.kind().traffic_class();
+            let prev = group.sched().set_class(class);
+            let result = exec(client, &mut group, op, at);
+            group.sched().set_class(prev);
+            match result {
                 Ok((out, t)) => {
                     group.op_mut(ids[i])?.complete(t)?;
                     completed[i] = t;
@@ -357,6 +387,7 @@ impl<'c, 'd> Session<'c, 'd> {
         client.now = client.now.max(completed_at);
         let sched = group.sched_ref();
         let frontiers = sched.frontiers();
+        let qos = sched.qos_report();
         Ok(SessionReport {
             outputs,
             completed,
@@ -364,6 +395,7 @@ impl<'c, 'd> Session<'c, 'd> {
             io_calls: sched.io_calls(),
             ios: sched.ios(),
             frontiers,
+            qos,
         })
     }
 }
@@ -933,6 +965,44 @@ mod tests {
         assert!(rep.ios > 0, "both kinds dispatched unit I/O on one group");
         assert!(!rep.frontiers.is_empty());
         assert_eq!(c.store.object(chk).unwrap().size, STRIPE);
+    }
+
+    #[test]
+    fn mixed_session_tags_classes_in_the_qos_frontier_table() {
+        use crate::sim::device::DeviceKind as DK;
+        use crate::sim::sched::TrafficClass;
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![2u8; 2 * STRIPE as usize];
+        c.write_object(&obj, 0, &data).unwrap();
+        let dev = c.store.object(obj).unwrap().placement(0, 0).unwrap().device;
+        c.store.cluster.fail_device(dev);
+        let fresh = c.create_object(4096).unwrap();
+        let mut s = c.session();
+        s.repair(&[obj], dev);
+        s.write_owned(&fresh, vec![(0, vec![3u8; STRIPE as usize])]);
+        let rep = s.run().unwrap();
+        assert!(!rep.qos.is_empty(), "drained shards report class state");
+        let repair_busy: f64 = rep
+            .qos
+            .iter()
+            .map(|r| r.class_busy[TrafficClass::Repair.index()])
+            .sum();
+        let fg_busy: f64 = rep
+            .qos
+            .iter()
+            .map(|r| r.class_busy[TrafficClass::Foreground.index()])
+            .sum();
+        assert!(repair_busy > 0.0, "repair traffic tagged Repair");
+        assert!(fg_busy > 0.0, "the write stays Foreground");
+        // the cap held on every shard repair touched
+        let cap = c.store.cluster.qos.share(TrafficClass::Repair);
+        for r in &rep.qos {
+            assert!(r.observed_share(TrafficClass::Repair) <= cap + 1e-9);
+        }
+        // and the repaired data survives on the original tier
+        assert_eq!(c.store.object(obj).unwrap().layout.tier(), DK::Ssd);
+        assert_eq!(c.read_object(&obj, 0, data.len() as u64).unwrap(), data);
     }
 
     #[test]

@@ -5,6 +5,15 @@
 //! virtual time — either scripted (tests) or sampled from an exponential
 //! inter-arrival model scaled by component count (the paper's
 //! observation that failure rate scales with the number of units).
+//!
+//! The schedule is the **failure feed** of the recovery plane:
+//! `Client::consume_failure_feed` (clovis) pops [`FailureSchedule::due`]
+//! events, routes each through the HA subsystem's decision rules
+//! (`mero::ha`), and executes the decided action — SNS repair or
+//! proactive drain — as a Repair-class recovery session, with no
+//! manual intervention. Drivers poll [`FailureSchedule::next_at`] to
+//! decide how far to advance the clock between consumer passes, and
+//! re-arm repaired devices with [`FailureSchedule::inject`].
 
 use crate::cluster::DeviceId;
 use crate::sim::clock::SimTime;
@@ -110,6 +119,13 @@ impl FailureSchedule {
     /// Remaining event count.
     pub fn remaining(&self) -> usize {
         self.events.len() - self.cursor
+    }
+
+    /// Virtual time of the next pending event (None when exhausted) —
+    /// what a recovery-plane driver polls to decide how far to advance
+    /// before the next `Client::consume_failure_feed` pass.
+    pub fn next_at(&self) -> Option<SimTime> {
+        self.events.get(self.cursor).map(|e| e.at)
     }
 }
 

@@ -8,6 +8,7 @@ pub mod failure;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, Device, DeviceProfile, IoOp};
 use crate::sim::network::NetworkModel;
+use crate::sim::sched::QosConfig;
 
 /// Index of a storage node.
 pub type NodeId = usize;
@@ -37,12 +38,23 @@ pub struct Cluster {
     pub nodes: Vec<StorageNode>,
     pub devices: Vec<Device>,
     pub net: NetworkModel,
+    /// The repair/foreground bandwidth split every Clovis op group
+    /// built on this cluster enforces (§3.2.1 repair throttling; see
+    /// `sim::sched` and OPERATIONS.md §QoS tuning). Defaults to the
+    /// sane split (repair 0.30, migration 0.20); set to
+    /// [`QosConfig::unlimited`] to restore the pre-QoS FIFO schedule.
+    pub qos: QosConfig,
 }
 
 impl Cluster {
-    /// Empty cluster over a given network.
+    /// Empty cluster over a given network, with the default QoS split.
     pub fn new(net: NetworkModel) -> Self {
-        Cluster { nodes: Vec::new(), devices: Vec::new(), net }
+        Cluster {
+            nodes: Vec::new(),
+            devices: Vec::new(),
+            net,
+            qos: QosConfig::default(),
+        }
     }
 
     /// Add a node with the given device profiles and compute capability;

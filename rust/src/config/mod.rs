@@ -16,6 +16,7 @@ use crate::cluster::{Cluster, EnclosureCompute};
 use crate::error::Result;
 use crate::sim::device::{DeviceKind, DeviceProfile};
 use crate::sim::network::NetworkModel;
+use crate::sim::sched::QosConfig;
 use crate::util::toml::TomlDoc;
 
 /// A named testbed: DRAM + device inventory + network.
@@ -36,6 +37,10 @@ pub struct Testbed {
     pub net: NetworkModel,
     /// In-storage compute per enclosure (SAGE prototype).
     pub enclosure_flops: f64,
+    /// Repair/foreground bandwidth split (§3.2.1 repair throttling),
+    /// carried onto the built cluster and enforced by every Clovis op
+    /// group. Overridable from TOML (`[qos] repair_share = 0.5`).
+    pub qos: QosConfig,
 }
 
 impl Testbed {
@@ -54,6 +59,7 @@ impl Testbed {
             ],
             net: NetworkModel::loopback(),
             enclosure_flops: 2e10,
+            qos: QosConfig::default(),
         }
     }
 
@@ -71,6 +77,7 @@ impl Testbed {
                 .collect(),
             net: NetworkModel::tengig(),
             enclosure_flops: 5e10,
+            qos: QosConfig::default(),
         }
     }
 
@@ -99,6 +106,7 @@ impl Testbed {
                 .collect(),
             net: NetworkModel::aries(),
             enclosure_flops: 1e11,
+            qos: QosConfig::default(),
         }
     }
 
@@ -131,6 +139,7 @@ impl Testbed {
             storage,
             net: NetworkModel::fdr_infiniband(),
             enclosure_flops: 5e10,
+            qos: QosConfig::default(),
         }
     }
 
@@ -161,6 +170,11 @@ impl Testbed {
             doc.get_i64("", "compute_nodes", tb.compute_nodes as i64) as usize;
         tb.cores_per_node =
             doc.get_i64("", "cores_per_node", tb.cores_per_node as i64) as usize;
+        // optional QoS split overrides: [qos] repair_share/migration_share
+        tb.qos.repair_share =
+            doc.get_f64("qos", "repair_share", tb.qos.repair_share);
+        tb.qos.migration_share =
+            doc.get_f64("qos", "migration_share", tb.qos.migration_share);
         // optional extra tier sections: [tier.<kind>] count=, capacity=
         for kind in ["nvram", "ssd", "hdd", "smr"] {
             let sec = format!("tier.{kind}");
@@ -181,9 +195,11 @@ impl Testbed {
     }
 
     /// Materialize the cluster: one storage node per 4 devices
-    /// (enclosure granularity), each with in-storage compute.
+    /// (enclosure granularity), each with in-storage compute, carrying
+    /// this testbed's QoS split.
     pub fn build_cluster(&self) -> Cluster {
         let mut c = Cluster::new(self.net.clone());
+        c.qos = self.qos;
         for chunk in self.storage.chunks(4) {
             c.add_node(
                 chunk.to_vec(),
@@ -263,6 +279,26 @@ mod tests {
                 .count(),
             2
         );
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn qos_split_defaults_and_toml_override_reach_the_cluster() {
+        // presets carry the sane split onto the built cluster
+        let c = Testbed::sage_prototype().build_cluster();
+        assert_eq!(c.qos, QosConfig::default());
+        assert!(c.qos.active());
+        // TOML can retune (or disable) the split
+        let tmp = std::env::temp_dir().join("sage_tb_qos_test.toml");
+        std::fs::write(
+            &tmp,
+            "base = \"sage_prototype\"\n\n[qos]\nrepair_share = 1.0\nmigration_share = 0.5\n",
+        )
+        .unwrap();
+        let tb = Testbed::from_toml(&tmp).unwrap();
+        assert_eq!(tb.qos.repair_share, 1.0);
+        assert_eq!(tb.qos.migration_share, 0.5);
+        assert!(tb.build_cluster().qos.active(), "migration still capped");
         std::fs::remove_file(&tmp).ok();
     }
 }

@@ -36,7 +36,7 @@ use crate::mero::object::ObjectId;
 use crate::mero::MeroStore;
 use crate::sim::clock::SimTime;
 use crate::sim::device::DeviceKind;
-use crate::sim::sched::IoScheduler;
+use crate::sim::sched::{IoScheduler, TrafficClass};
 
 /// Per-object usage heat with exponential decay.
 #[derive(Debug, Clone)]
@@ -250,7 +250,25 @@ impl Hsm {
     /// overlap: rewriting each object as soon as its read returns
     /// would queue later sources' reads behind earlier rewrites and
     /// re-serialize the fold.
+    ///
+    /// All migration I/O dispatches as [`TrafficClass::Migration`]
+    /// (§3.2.1 repair throttling): a QoS-carrying scheduler — every
+    /// Clovis session's — caps tiering traffic at its configured share
+    /// of each device so data movement never starves foreground I/O.
+    /// The private scheduler of [`Hsm::migrate`] enforces no split.
     pub fn migrate_with(
+        &mut self,
+        store: &mut MeroStore,
+        plan: &[Migration],
+        now: SimTime,
+        sched: &mut IoScheduler,
+    ) -> Result<SimTime> {
+        sched.with_class(TrafficClass::Migration, |sched| {
+            self.migrate_with_inner(store, plan, now, sched)
+        })
+    }
+
+    fn migrate_with_inner(
         &mut self,
         store: &mut MeroStore,
         plan: &[Migration],

@@ -18,7 +18,12 @@
 //!   stages object I/O, KV access, transactions, function shipping,
 //!   migration and repair on ONE scheduler-backed op group — groups
 //!   dispatch unit I/Os to home-device shards and complete at the max
-//!   over per-device frontiers.
+//!   over per-device frontiers. Submissions carry a QoS
+//!   [`TrafficClass`](sim::sched::TrafficClass), and shards enforce
+//!   the cluster's repair/foreground bandwidth split
+//!   ([`QosConfig`](sim::sched::QosConfig), §3.2.1 repair throttling)
+//!   so recovery traffic never starves applications — `OPERATIONS.md`
+//!   at the repo root is the operator's handbook for tuning it.
 //! * **L2/L1 (build time)** — JAX graphs + Pallas kernels under
 //!   `python/compile/`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **Runtime bridge** — [`runtime`] loads the artifacts once via the

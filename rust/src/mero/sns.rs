@@ -62,6 +62,17 @@
 //! (`plan_reconstruct`), which separates *what to read and which bytes
 //! come back* from *when the reads complete*.
 //!
+//! Recovery traffic is also **QoS-classed** (ISSUE 5; §3.2.1 repair
+//! throttling): [`repair_with`] and [`drain_with`] stamp every
+//! submission [`TrafficClass::Repair`], and the degraded read path
+//! tags its survivor reads likewise — so when the caller's scheduler
+//! carries a bandwidth split (`sim::sched::QosConfig`, as every Clovis
+//! session's does), rebuild traffic is capped at its configured share
+//! of each device instead of starving foreground I/O. The private
+//! schedulers of the self-contained entry points enforce no split, so
+//! the oracles and the `prop_repair`/`ablate_repair` comparisons keep
+//! their pre-QoS timings bit-exactly.
+//!
 //! ## §Perf: the zero-copy batched write/read engine
 //!
 //! The hot path avoids per-stripe and per-unit map traffic and buffer
@@ -97,7 +108,7 @@ use crate::mero::MeroStore;
 use crate::runtime::Executor;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, DeviceKind, IoOp};
-use crate::sim::sched::{IoScheduler, Ticket};
+use crate::sim::sched::{IoScheduler, Ticket, TrafficClass};
 
 /// Real bytes (borrowed or owned) or a phantom length (time/placement
 /// accounting only). [`Payload::Owned`] enables persist-by-move: the
@@ -876,11 +887,15 @@ fn read_raid_into_with(
                 )));
             }
             let sp = plan_reconstruct(store, id, stripe, u, g)?;
-            let tickets = sp
-                .devices
-                .iter()
-                .map(|&d| sched.submit(d, now, g.unit, IoOp::Read, Access::Seq))
-                .collect();
+            // reconstruction traffic is Repair-class (§3.2.1 repair
+            // throttling): a QoS-carrying scheduler caps the survivor
+            // reads' share; healthy-unit reads above stay Foreground
+            let tickets = sched.with_class(TrafficClass::Repair, |s| {
+                sp.devices
+                    .iter()
+                    .map(|&d| s.submit(d, now, g.unit, IoOp::Read, Access::Seq))
+                    .collect()
+            });
             rebuilds.push(Rebuild {
                 dst_range: (ov_start - offset) as usize
                     ..(ov_end - offset) as usize,
@@ -1046,7 +1061,24 @@ pub fn repair(
 /// survivor only delays the stripes that queue on it. Bytes and
 /// placements are identical to the `sns_serial::repair` serial-fold
 /// oracle (`tests/prop_repair.rs`); completion is never later.
+///
+/// All of the rebuild's I/O — survivor reads and replacement writes —
+/// dispatches as [`TrafficClass::Repair`], so a scheduler carrying a
+/// QoS split caps its per-device share against foreground traffic
+/// (§3.2.1 repair throttling; `IoScheduler::new` enforces no split).
 pub fn repair_with(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    failed_dev: usize,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<(u64, SimTime)> {
+    sched.with_class(TrafficClass::Repair, |sched| {
+        repair_with_inner(store, objects, failed_dev, now, sched)
+    })
+}
+
+fn repair_with_inner(
     store: &mut MeroStore,
     objects: &[ObjectId],
     failed_dev: usize,
@@ -1182,7 +1214,23 @@ pub fn drain(
 /// source. Placements move; logical bytes (block map) and parity
 /// payloads are untouched, so the object reads back identically and
 /// keeps full redundancy once the drain completes.
+///
+/// Like [`repair_with`], every unit moved dispatches as
+/// [`TrafficClass::Repair`] — a QoS-carrying scheduler caps the
+/// drain's per-device share against foreground traffic.
 pub fn drain_with(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    dev: usize,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<(u64, SimTime)> {
+    sched.with_class(TrafficClass::Repair, |sched| {
+        drain_with_inner(store, objects, dev, now, sched)
+    })
+}
+
+fn drain_with_inner(
     store: &mut MeroStore,
     objects: &[ObjectId],
     dev: usize,

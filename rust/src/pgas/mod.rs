@@ -15,6 +15,24 @@
 //! Two OS constants — per-page fault and dirty-tracking costs — model
 //! the mmap software overhead that separates storage windows from pure
 //! DRAM windows on cached workloads (the ~10% of Fig 3a).
+//!
+//! Module map (ARCHITECTURE.md §Module map rows `pgas/`):
+//!
+//! * this module — the windows themselves: [`PgasSim`] rank hosting,
+//!   PUT/GET/accumulate in virtual time, `win_sync` flush semantics,
+//!   per-node page caches (`sim::cache`), and the Fig 3 measurement
+//!   surface (`benches/fig3_stream.rs`, `examples/fig3_stream.rs`);
+//! * [`mpiio`] — the MPI-I/O comparison layer the paper evaluates
+//!   against (collective file writes over the same storage targets).
+//!
+//! PGAS windows model the §3.2.4 programming-model work and sit
+//! BESIDE the Clovis object path: window storage targets are simulated
+//! devices, not Mero objects, so rank-parallel window traffic and the
+//! object store contend only when an application drives both (e.g.
+//! `apps/ipic3d`). The broader stack — object I/O on the sharded
+//! scheduler, the recovery plane, the QoS split between foreground
+//! and rebuild traffic — is mapped in ARCHITECTURE.md (§Sharded
+//! scheduler, §Recovery plane, §QoS plane) at the repo root.
 
 pub mod mpiio;
 

@@ -234,6 +234,21 @@ impl Device {
         end
     }
 
+    /// Account a run whose schedule was computed by a QoS-aware
+    /// scheduler lane (`sim::sched` per-class frontiers): bytes are
+    /// recorded and the queue tail advances to `end` if later, but no
+    /// FIFO queueing is imposed here — the scheduler's class frontiers
+    /// own the start-time decision. Later schedulers observing
+    /// `busy_until` still queue behind everything committed.
+    pub fn commit_run(&mut self, end: SimTime, count: u64, size: u64, op: IoOp) {
+        debug_assert!(!self.failed, "I/O run to failed device");
+        self.busy_until = self.busy_until.max(end);
+        match op {
+            IoOp::Read => self.bytes_read += count * size,
+            IoOp::Write => self.bytes_written += count * size,
+        }
+    }
+
     /// Remaining capacity.
     pub fn free(&self) -> u64 {
         self.profile.capacity.saturating_sub(self.used)

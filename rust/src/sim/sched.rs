@@ -1,6 +1,8 @@
 //! Sharded asynchronous op execution: per-device submission queues
 //! with completion frontiers (the ISSUE 2 tentpole; ARCHITECTURE.md
-//! §Sharded scheduler).
+//! §Sharded scheduler), plus the **QoS plane** — per-class bandwidth
+//! splits between foreground and recovery traffic (the ISSUE 5
+//! tentpole; ARCHITECTURE.md §QoS plane, OPERATIONS.md §QoS tuning).
 //!
 //! SAGE absorbs Exascale I/O by letting many devices service one
 //! logical operation concurrently (§3.1–§3.2 of the paper: multi-tier
@@ -17,13 +19,53 @@
 //! the differential oracle; `tests/prop_sched.rs` checks sharded
 //! completion <= serial completion on every sampled geometry).
 //!
-//! §Perf: submissions to one shard that share a timestamp, size and
-//! access pattern coalesce into a **device-contiguous run**, accounted
-//! with ONE [`Device::io_run`] call instead of one [`Device::io`] call
-//! per unit — the ROADMAP "batch the virtual-time device accounting"
-//! item. Coalescing never changes virtual time: a run of `n` equal
-//! I/Os queued back-to-back completes exactly when `n` chained `io()`
-//! calls would.
+//! §Perf: submissions to one shard that share a timestamp, size,
+//! access pattern and [`TrafficClass`] coalesce into a
+//! **device-contiguous run**, accounted with ONE [`Device::io_run`]
+//! call instead of one [`Device::io`] call per unit — the ROADMAP
+//! "batch the virtual-time device accounting" item. Coalescing never
+//! changes virtual time: a run of `n` equal I/Os queued back-to-back
+//! completes exactly when `n` chained `io()` calls would.
+//!
+//! ## The QoS plane (§3.2.1 repair throttling)
+//!
+//! The recovery plane (SNS repair, proactive drains, HSM migration,
+//! degraded-read reconstruction) shares these shards with foreground
+//! op groups. §3.2.1 calls out repair throttling as essential once
+//! rebuild traffic competes with applications, so every submission
+//! carries a [`TrafficClass`] and each shard enforces a configurable
+//! bandwidth split ([`QosConfig`]) as **interleaved run scheduling
+//! with per-class frontiers**:
+//!
+//! * every shard keeps one completion frontier per class, all seeded
+//!   from the device's queue tail at the scheduler's first touch (the
+//!   *base*);
+//! * a **capped** class (`share < 1.0`, e.g. Repair at the default
+//!   0.30) yields to already-committed foreground work and then
+//!   proceeds at `share` of the device rate — its runs are stretched
+//!   `1/share`× in virtual time on its own frontier, which is exactly
+//!   the static throttle real systems apply to rebuild traffic;
+//! * **foreground** (and any class left uncapped) runs at full device
+//!   rate, reduced to `1 − Σ(shares)` until every committed
+//!   capped-class frontier on the shard is behind it (frontiers, not
+//!   busy intervals, are what shards track — a deliberately
+//!   conservative approximation that stays deterministic and can only
+//!   under-serve foreground relative to the fluid model, never beat
+//!   FIFO's worst case) — so a checkpoint racing a rebuild proceeds
+//!   at 70% speed instead of queueing behind the whole rebuild;
+//! * with NO capped backlog the math degenerates to the single-FIFO
+//!   pre-QoS schedule **bit-exactly**, and a config with every share
+//!   at 1.0 ([`QosConfig::unlimited`], the [`IoScheduler::new`]
+//!   default) takes the preserved pre-QoS path outright — both pinned
+//!   by `tests/prop_qos.rs`.
+//!
+//! The split never changes *what* is stored or read — only *when*
+//! completions land (byte-equivalence, determinism and the cap bound
+//! are property-tested in `tests/prop_qos.rs`; the foreground win is
+//! measured by `benches/ablate_qos.rs`). Shares are observable per
+//! shard through [`IoScheduler::qos_report`] /
+//! [`QosShardReport::observed_share`] — the per-class frontier tables
+//! OPERATIONS.md teaches operators to read.
 
 use std::collections::BTreeMap;
 
@@ -34,30 +76,193 @@ use super::device::{Access, Device, IoOp};
 /// [`IoScheduler::completion`] after the next [`IoScheduler::drain`].
 pub type Ticket = usize;
 
+/// Number of traffic classes (the length of per-class state arrays).
+pub const N_CLASSES: usize = 3;
+
+/// Foreground rate floor under pathological configs (both background
+/// classes capped so high that `1 − Σ(shares)` would go non-positive).
+const MIN_FOREGROUND_RATE: f64 = 0.05;
+
+/// QoS traffic class a submission dispatches under (§3.2.1 repair
+/// throttling). Application and gateway I/O is [`Foreground`]; SNS
+/// repair, proactive drains and degraded-read reconstruction submit as
+/// [`Repair`]; HSM data movement submits as [`Migration`]. The class
+/// is scheduler state ([`IoScheduler::set_class`]) so deep call chains
+/// (stripe writes inside a repair) inherit it without threading a
+/// parameter through every layer.
+///
+/// [`Foreground`]: TrafficClass::Foreground
+/// [`Repair`]: TrafficClass::Repair
+/// [`Migration`]: TrafficClass::Migration
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TrafficClass {
+    /// Application/gateway I/O — always runs at full device rate,
+    /// reduced only while committed capped backlog overlaps it.
+    Foreground,
+    /// Rebuild traffic: SNS repair, proactive drains, degraded-read
+    /// survivor reads. Capped at [`QosConfig::repair_share`].
+    Repair,
+    /// HSM tiering traffic. Capped at [`QosConfig::migration_share`].
+    Migration,
+}
+
+impl TrafficClass {
+    /// Every class, in per-class state-array order.
+    pub const ALL: [TrafficClass; N_CLASSES] =
+        [TrafficClass::Foreground, TrafficClass::Repair, TrafficClass::Migration];
+
+    /// Index into per-class state arrays (`[_; N_CLASSES]`).
+    pub fn index(self) -> usize {
+        match self {
+            TrafficClass::Foreground => 0,
+            TrafficClass::Repair => 1,
+            TrafficClass::Migration => 2,
+        }
+    }
+
+    /// Human-readable label (frontier tables, bench output).
+    pub fn label(self) -> &'static str {
+        match self {
+            TrafficClass::Foreground => "foreground",
+            TrafficClass::Repair => "repair",
+            TrafficClass::Migration => "migration",
+        }
+    }
+}
+
+/// Per-class bandwidth split a scheduler enforces on every shard
+/// (§3.2.1 repair throttling; OPERATIONS.md §QoS tuning has the
+/// operator's guide). A share of `1.0` leaves that class uncapped (it
+/// rides the foreground lane); a share below `1.0` caps the class at
+/// that fraction of per-device throughput while it is backlogged.
+///
+/// `Default` is the **sane split** every Clovis session inherits from
+/// [`Cluster::qos`](crate::cluster::Cluster): repair at 0.30,
+/// migration at 0.20 — foreground keeps at least half of every device
+/// even with both background classes saturated. Zero background
+/// traffic makes the split free (bit-identical to
+/// [`QosConfig::unlimited`]); setting every share to 1.0 reproduces
+/// the pre-QoS FIFO frontiers exactly (`tests/prop_qos.rs` pins both).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosConfig {
+    /// Fraction of per-device throughput [`TrafficClass::Repair`] may
+    /// use whenever it runs (clamped to `[0.01, 1.0]`). This is a
+    /// STATIC throttle: the cap applies even with no foreground
+    /// contention — an idle-foreground rebuild (or a degraded read's
+    /// reconstruction) deliberately leaves `1 − share` headroom so
+    /// latency-sensitive work always finds the device responsive.
+    pub repair_share: f64,
+    /// Fraction for [`TrafficClass::Migration`] (clamped likewise;
+    /// same static-throttle semantics).
+    pub migration_share: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig { repair_share: 0.30, migration_share: 0.20 }
+    }
+}
+
+impl QosConfig {
+    /// No split at all: every class at full rate on one FIFO queue —
+    /// the pre-QoS semantics, and what [`IoScheduler::new`] uses so
+    /// self-contained store operations and the differential oracles
+    /// stay bit-identical to their pre-QoS selves.
+    pub fn unlimited() -> Self {
+        QosConfig { repair_share: 1.0, migration_share: 1.0 }
+    }
+
+    /// Effective share of `class` (foreground is always 1.0;
+    /// background shares are clamped to `[0.01, 1.0]`).
+    pub fn share(&self, class: TrafficClass) -> f64 {
+        match class {
+            TrafficClass::Foreground => 1.0,
+            TrafficClass::Repair => self.repair_share.clamp(0.01, 1.0),
+            TrafficClass::Migration => self.migration_share.clamp(0.01, 1.0),
+        }
+    }
+
+    /// True when any class is capped — i.e. the per-class-frontier
+    /// schedule is in effect. When false the scheduler takes the
+    /// preserved pre-QoS FIFO path (bit-exact).
+    pub fn active(&self) -> bool {
+        TrafficClass::ALL.iter().any(|&c| self.share(c) < 1.0)
+    }
+}
+
 /// A device-contiguous run: consecutive submissions to one shard with
-/// identical timestamp/size/op/access, accounted as one `io_run` call.
+/// identical timestamp/size/op/access/class, accounted as one device
+/// call.
 #[derive(Debug)]
 struct Run {
     submit_at: SimTime,
     size: u64,
     op: IoOp,
     access: Access,
+    class: TrafficClass,
     tickets: Vec<Ticket>,
 }
 
-/// One device's slice of the scheduler: pending runs + the virtual
-/// time up to which the device's queue has been driven.
+/// One device's slice of the scheduler: pending runs, the overall
+/// frontier, and the QoS plane's per-class state.
 #[derive(Debug, Default)]
 struct Shard {
     pending: Vec<Run>,
+    /// Virtual time up to which the device's queue has been driven
+    /// (max over all classes).
     frontier: SimTime,
+    /// Device `busy_until` captured before this scheduler's first
+    /// commit on the shard — external work (earlier sessions) ends
+    /// here; per-class frontiers are seeded from it.
+    base: Option<SimTime>,
+    /// Per-class completion frontiers (valid once `base` is set).
+    class_frontier: [SimTime; N_CLASSES],
+    /// Per-class accumulated device service time (REAL device seconds
+    /// of work, not stretched wall span) — the numerator of
+    /// [`QosShardReport::observed_share`].
+    class_busy: [f64; N_CLASSES],
+}
+
+/// Per-shard QoS diagnostics: the per-class frontier table
+/// (OPERATIONS.md §Reading the frontier tables). One row per shard
+/// the scheduler has **drained** work on.
+#[derive(Debug, Clone)]
+pub struct QosShardReport {
+    /// Device id of the shard.
+    pub device: usize,
+    /// Queue tail the shard inherited from earlier schedulers.
+    pub base: SimTime,
+    /// Overall completion frontier (max over classes).
+    pub frontier: SimTime,
+    /// Real device seconds of work each class consumed.
+    pub class_busy: [f64; N_CLASSES],
+    /// Per-class completion frontiers.
+    pub class_frontier: [SimTime; N_CLASSES],
+}
+
+impl QosShardReport {
+    /// Observed device-time share of `class` over its active window
+    /// `[base, class frontier]` — what the [`QosConfig`] cap bounds
+    /// from above for capped classes (`tests/prop_qos.rs`). 0.0 when
+    /// the class never ran on this shard.
+    pub fn observed_share(&self, class: TrafficClass) -> f64 {
+        let i = class.index();
+        let window = self.class_frontier[i] - self.base;
+        if window <= 0.0 || self.class_busy[i] <= 0.0 {
+            return 0.0;
+        }
+        self.class_busy[i] / window
+    }
 }
 
 /// The sharded op-execution scheduler. One instance serves one op
 /// group (or one self-contained store operation): submissions queue on
 /// per-device shards, [`IoScheduler::drain`] executes them against the
 /// devices, [`IoScheduler::wait_all`] is the group completion.
-#[derive(Debug, Default)]
+/// [`IoScheduler::new`] enforces no split ([`QosConfig::unlimited`]);
+/// Clovis op groups are built with [`IoScheduler::with_qos`] carrying
+/// the cluster's [`QosConfig`].
+#[derive(Debug)]
 pub struct IoScheduler {
     /// Per-device shards, keyed by device id (deterministic order).
     shards: BTreeMap<usize, Shard>,
@@ -67,19 +272,81 @@ pub struct IoScheduler {
     n_runs: u64,
     /// Logical I/Os submitted.
     n_ios: u64,
+    /// The bandwidth split this scheduler enforces.
+    qos: QosConfig,
+    /// Class stamped on new submissions ([`IoScheduler::set_class`]).
+    class: TrafficClass,
+}
+
+impl Default for IoScheduler {
+    fn default() -> Self {
+        IoScheduler::with_qos(QosConfig::unlimited())
+    }
 }
 
 impl IoScheduler {
-    /// Empty scheduler.
+    /// Empty scheduler with NO bandwidth split — the pre-QoS
+    /// semantics, used by self-contained store operations and the
+    /// serial oracles.
     pub fn new() -> Self {
         IoScheduler::default()
     }
 
+    /// Empty scheduler enforcing `qos` on every shard. Clovis op
+    /// groups pass the cluster's configured split here
+    /// ([`OpGroup::with_qos`](crate::clovis::ops::OpGroup::with_qos)).
+    pub fn with_qos(qos: QosConfig) -> Self {
+        IoScheduler {
+            shards: BTreeMap::new(),
+            completions: Vec::new(),
+            n_runs: 0,
+            n_ios: 0,
+            qos,
+            class: TrafficClass::Foreground,
+        }
+    }
+
+    /// The split this scheduler enforces.
+    pub fn qos(&self) -> QosConfig {
+        self.qos
+    }
+
+    /// Set the [`TrafficClass`] stamped on subsequent submissions;
+    /// returns the previous class so call chains can save/restore
+    /// (prefer [`IoScheduler::with_class`], which restores
+    /// structurally).
+    pub fn set_class(&mut self, class: TrafficClass) -> TrafficClass {
+        std::mem::replace(&mut self.class, class)
+    }
+
+    /// Run `f` with submissions stamped `class`, restoring the
+    /// previous class on exit — the one scoping primitive the
+    /// recovery-plane entry points (`sns::repair_with`/`drain_with`,
+    /// `Hsm::migrate_with`, degraded-read reconstruction) wrap their
+    /// dispatch in, so the restore can never be skipped by an early
+    /// return inside `f`.
+    pub fn with_class<T>(
+        &mut self,
+        class: TrafficClass,
+        f: impl FnOnce(&mut Self) -> T,
+    ) -> T {
+        let prev = std::mem::replace(&mut self.class, class);
+        let out = f(self);
+        self.class = prev;
+        out
+    }
+
+    /// Class currently stamped on submissions.
+    pub fn current_class(&self) -> TrafficClass {
+        self.class
+    }
+
     /// Queue one unit I/O on `device`'s shard at virtual time
-    /// `submit_at`. Returns a [`Ticket`] redeemable for the completion
-    /// time after the next [`IoScheduler::drain`]. Consecutive
-    /// submissions to the same shard with identical parameters
-    /// coalesce into one device-contiguous run (§Perf).
+    /// `submit_at`, under the current [`TrafficClass`]. Returns a
+    /// [`Ticket`] redeemable for the completion time after the next
+    /// [`IoScheduler::drain`]. Consecutive submissions to the same
+    /// shard with identical parameters coalesce into one
+    /// device-contiguous run (§Perf).
     pub fn submit(
         &mut self,
         device: usize,
@@ -92,12 +359,14 @@ impl IoScheduler {
         // placeholder until drained; never observed by correct callers
         self.completions.push(submit_at);
         self.n_ios += 1;
+        let class = self.class;
         let shard = self.shards.entry(device).or_default();
         if let Some(run) = shard.pending.last_mut() {
             if run.submit_at == submit_at
                 && run.size == size
                 && run.op == op
                 && run.access == access
+                && run.class == class
             {
                 run.tickets.push(ticket);
                 return ticket;
@@ -108,6 +377,7 @@ impl IoScheduler {
             size,
             op,
             access,
+            class,
             tickets: vec![ticket],
         });
         ticket
@@ -119,23 +389,96 @@ impl IoScheduler {
     /// pending). Callable repeatedly: later phases (e.g. stripe writes
     /// that depend on RMW reads) submit and drain again; frontiers
     /// accumulate across drains.
+    ///
+    /// With an inactive [`QosConfig`] every run chains on the device's
+    /// single FIFO queue ([`Device::io_run`]) — the pre-QoS schedule,
+    /// bit-exact. With a split active, runs execute on per-class
+    /// frontier lanes: capped classes yield to committed foreground
+    /// work and stretch `1/share`×; the foreground lane runs at
+    /// `1 − Σ(shares)` until every committed capped-class frontier is
+    /// behind it, and at full rate after (see the module docs).
     pub fn drain(&mut self, devices: &mut [Device]) -> SimTime {
+        let qos = self.qos;
+        let throttled = qos.active();
+        let fg = TrafficClass::Foreground.index();
         let mut batch_done = 0.0f64;
         for (&dev, shard) in self.shards.iter_mut() {
-            for run in shard.pending.drain(..) {
+            for run in std::mem::take(&mut shard.pending) {
                 let d = &mut devices[dev];
-                let svc = d.profile.service_time(run.size, run.op, run.access);
-                let start = run.submit_at.max(d.busy_until);
-                let end = d.io_run(
-                    run.submit_at,
-                    run.tickets.len() as u64,
-                    run.size,
-                    run.op,
-                    run.access,
-                );
-                for (i, &t) in run.tickets.iter().enumerate() {
-                    self.completions[t] = start + (i + 1) as f64 * svc;
+                if shard.base.is_none() {
+                    // first commit on this shard: external work ends at
+                    // the device's current queue tail; every class
+                    // starts from there
+                    shard.base = Some(d.busy_until);
+                    shard.class_frontier = [d.busy_until; N_CLASSES];
                 }
+                let svc = d.profile.service_time(run.size, run.op, run.access);
+                let n = run.tickets.len();
+                let work = n as f64 * svc;
+                let ci = run.class.index();
+                let end;
+                if !throttled {
+                    // pre-QoS path: one FIFO queue per device
+                    let start = run.submit_at.max(d.busy_until);
+                    end = d.io_run(
+                        run.submit_at,
+                        n as u64,
+                        run.size,
+                        run.op,
+                        run.access,
+                    );
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc;
+                    }
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else if qos.share(run.class) < 1.0 {
+                    // capped lane: yield to committed foreground, then
+                    // proceed at `share` of the device rate (virtual-
+                    // time stretch on the class's own frontier)
+                    let share = qos.share(run.class);
+                    let start = run
+                        .submit_at
+                        .max(shard.class_frontier[ci])
+                        .max(shard.class_frontier[fg]);
+                    let svc_eff = svc / share;
+                    end = start + n as f64 * svc_eff;
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc_eff;
+                    }
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else {
+                    // foreground lane (uncapped classes ride it): full
+                    // rate, reduced only over committed capped backlog
+                    let start = run
+                        .submit_at
+                        .max(shard.class_frontier[ci])
+                        .max(shard.class_frontier[fg]);
+                    let (e, contended) =
+                        contended_end(&shard.class_frontier, qos, start, work);
+                    end = e;
+                    if contended {
+                        // spread ticket completions across the slowed
+                        // span (queueing order preserved; the division
+                        // first so the last ticket lands exactly on
+                        // `end`)
+                        let span = end - start;
+                        for (i, &t) in run.tickets.iter().enumerate() {
+                            self.completions[t] =
+                                start + span * ((i + 1) as f64 / n as f64);
+                        }
+                    } else {
+                        // uncontended: the exact pre-QoS arithmetic, so
+                        // zero-background workloads are bit-identical
+                        for (i, &t) in run.tickets.iter().enumerate() {
+                            self.completions[t] = start + (i + 1) as f64 * svc;
+                        }
+                    }
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                    shard.class_frontier[fg] = shard.class_frontier[fg].max(end);
+                }
+                shard.class_busy[ci] += work;
                 shard.frontier = shard.frontier.max(end);
                 self.n_runs += 1;
                 batch_done = batch_done.max(end);
@@ -161,11 +504,37 @@ impl IoScheduler {
         self.shards.get(&device).map_or(0.0, |s| s.frontier)
     }
 
+    /// Completion frontier of one class on one device's shard (0.0 if
+    /// the shard is untouched).
+    pub fn class_frontier(&self, device: usize, class: TrafficClass) -> SimTime {
+        self.shards
+            .get(&device)
+            .map_or(0.0, |s| s.class_frontier[class.index()])
+    }
+
     /// `(device, completion frontier)` for every shard this scheduler
     /// touched, in device order (diagnostics: per-device frontier
     /// tables in session reports and the ablation benches).
     pub fn frontiers(&self) -> Vec<(usize, SimTime)> {
         self.shards.iter().map(|(&d, s)| (d, s.frontier)).collect()
+    }
+
+    /// The per-class frontier table: one [`QosShardReport`] per shard
+    /// this scheduler has drained work on, in device order. See
+    /// OPERATIONS.md §Reading the per-class frontier tables.
+    pub fn qos_report(&self) -> Vec<QosShardReport> {
+        self.shards
+            .iter()
+            .filter_map(|(&d, s)| {
+                s.base.map(|base| QosShardReport {
+                    device: d,
+                    base,
+                    frontier: s.frontier,
+                    class_busy: s.class_busy,
+                    class_frontier: s.class_frontier,
+                })
+            })
+            .collect()
     }
 
     /// Number of shards (distinct devices touched).
@@ -190,6 +559,58 @@ impl IoScheduler {
             .values()
             .map(|s| s.pending.iter().map(|r| r.tickets.len()).sum::<usize>())
             .sum()
+    }
+}
+
+/// Completion of a foreground-lane run of `work` device-seconds
+/// starting at `start`, given the committed capped-class frontiers:
+/// piecewise-constant integration at rate `1 − Σ(shares of capped
+/// classes whose frontier is still ahead)`, floored at
+/// [`MIN_FOREGROUND_RATE`]. Returns `(end, contended)`; when no capped
+/// backlog overlaps, `end == start + work` computed with the exact
+/// pre-QoS arithmetic (`contended == false`).
+fn contended_end(
+    frontiers: &[SimTime; N_CLASSES],
+    qos: QosConfig,
+    start: SimTime,
+    work: f64,
+) -> (SimTime, bool) {
+    // at most N_CLASSES-1 capped classes: fixed buffer, no allocation
+    // in the drain hot loop
+    let mut caps = [(0.0f64, 0.0f64); N_CLASSES];
+    let mut n_caps = 0;
+    for class in TrafficClass::ALL {
+        let share = qos.share(class);
+        if share < 1.0 && frontiers[class.index()] > start {
+            caps[n_caps] = (frontiers[class.index()], share);
+            n_caps += 1;
+        }
+    }
+    if n_caps == 0 {
+        return (start + work, false);
+    }
+    let caps = &caps[..n_caps];
+    let mut t = start;
+    let mut remaining = work;
+    loop {
+        let mut rate = 1.0f64;
+        let mut next = f64::INFINITY;
+        for &(f, s) in caps {
+            if f > t {
+                rate -= s;
+                next = next.min(f);
+            }
+        }
+        let rate = rate.max(MIN_FOREGROUND_RATE);
+        if next.is_finite() {
+            let slice = (next - t) * rate;
+            if slice < remaining {
+                remaining -= slice;
+                t = next;
+                continue;
+            }
+        }
+        return (t + remaining / rate, true);
     }
 }
 
@@ -313,8 +734,10 @@ mod tests {
     fn execution_is_deterministic() {
         let run = || {
             let mut devs = vec![ssd(), smr(), ssd()];
-            let mut sched = IoScheduler::new();
+            let mut sched = IoScheduler::with_qos(QosConfig::default());
             for i in 0..30u64 {
+                let class = TrafficClass::ALL[(i % 3) as usize];
+                sched.set_class(class);
                 sched.submit(
                     (i % 3) as usize,
                     (i / 3) as f64 * 1e-4,
@@ -327,5 +750,201 @@ mod tests {
             sched.wait_all()
         };
         assert_eq!(run().to_bits(), run().to_bits());
+    }
+
+    // ------------------------------------------------------ QoS plane
+
+    #[test]
+    fn class_change_breaks_run_coalescing() {
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::new();
+        sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.set_class(TrafficClass::Repair);
+        sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        assert_eq!(sched.ios(), 2);
+        assert_eq!(sched.io_calls(), 2, "classes never share a run");
+    }
+
+    #[test]
+    fn all_shares_at_one_take_the_pre_qos_path_bit_exactly() {
+        let run = |qos: QosConfig| {
+            let mut devs = vec![ssd(), smr()];
+            let mut sched = IoScheduler::with_qos(qos);
+            let mut tickets = Vec::new();
+            for i in 0..12u64 {
+                let class = TrafficClass::ALL[(i % 3) as usize];
+                sched.set_class(class);
+                tickets.push(sched.submit(
+                    (i % 2) as usize,
+                    i as f64 * 1e-5,
+                    8192,
+                    IoOp::Write,
+                    Access::Seq,
+                ));
+            }
+            sched.drain(&mut devs);
+            let mut bits: Vec<u64> =
+                tickets.iter().map(|&t| sched.completion(t).to_bits()).collect();
+            bits.push(sched.wait_all().to_bits());
+            bits
+        };
+        let cap_one = QosConfig { repair_share: 1.0, migration_share: 1.0 };
+        assert!(!cap_one.active());
+        assert_eq!(run(cap_one), run(QosConfig::unlimited()));
+    }
+
+    #[test]
+    fn zero_background_split_is_bit_identical_to_unthrottled() {
+        let run = |qos: QosConfig| {
+            let mut devs = vec![ssd(), ssd(), smr()];
+            let mut sched = IoScheduler::with_qos(qos);
+            let mut tickets = Vec::new();
+            for i in 0..15u64 {
+                tickets.push(sched.submit(
+                    (i % 3) as usize,
+                    (i / 3) as f64 * 1e-4,
+                    4096 * (1 + i % 3),
+                    if i % 2 == 0 { IoOp::Read } else { IoOp::Write },
+                    Access::Seq,
+                ));
+            }
+            sched.drain(&mut devs);
+            // a second phase exercises frontier accumulation too
+            let t = sched.wait_all();
+            sched.submit(0, t, 1 << 16, IoOp::Write, Access::Seq);
+            sched.drain(&mut devs);
+            let mut bits: Vec<u64> =
+                tickets.iter().map(|&t| sched.completion(t).to_bits()).collect();
+            bits.push(sched.wait_all().to_bits());
+            bits
+        };
+        assert!(QosConfig::default().active());
+        assert_eq!(run(QosConfig::default()), run(QosConfig::unlimited()));
+    }
+
+    #[test]
+    fn capped_class_is_stretched_and_yields_to_foreground() {
+        let qos = QosConfig::default(); // repair at 0.30
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::with_qos(qos);
+        // foreground commits first
+        let f = sched.submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        let t_fg = sched.completion(f);
+        // repair submitted at 0 still waits for the committed
+        // foreground frontier, then runs at 0.30 of the device rate
+        sched.set_class(TrafficClass::Repair);
+        let r = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        sched.drain(&mut devs);
+        let svc = devs[0].profile.service_time(1 << 20, IoOp::Read, Access::Seq);
+        let want = t_fg + svc / 0.30;
+        assert!((sched.completion(r) - want).abs() < 1e-9, "stretched 1/share");
+        assert_eq!(
+            sched.class_frontier(0, TrafficClass::Repair),
+            sched.completion(r)
+        );
+        assert_eq!(sched.class_frontier(0, TrafficClass::Foreground), t_fg);
+    }
+
+    #[test]
+    fn foreground_slows_over_committed_repair_backlog_but_beats_fifo() {
+        let qos = QosConfig::default();
+        let svc_w = ssd().profile.service_time(1 << 20, IoOp::Write, Access::Seq);
+        // throttled engine: repair committed first, then foreground
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::with_qos(qos);
+        sched.set_class(TrafficClass::Repair);
+        sched.submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        let t_repair = sched.wait_all(); // svc_w / 0.30
+        sched.set_class(TrafficClass::Foreground);
+        let f = sched.submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        // foreground overlaps the repair window at rate 0.70; the whole
+        // write fits inside it (repair window is svc/0.3 long)
+        let want = svc_w / 0.70;
+        assert!(
+            (sched.completion(f) - want).abs() < 1e-9,
+            "got {}, want {want}",
+            sched.completion(f)
+        );
+        // FIFO (unthrottled) would have queued it behind the repair
+        let mut devs2 = vec![ssd()];
+        let mut fifo = IoScheduler::new();
+        fifo.set_class(TrafficClass::Repair);
+        fifo.submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        fifo.drain(&mut devs2);
+        fifo.set_class(TrafficClass::Foreground);
+        let f2 = fifo.submit(0, 0.0, 1 << 20, IoOp::Write, Access::Seq);
+        fifo.drain(&mut devs2);
+        assert!(
+            sched.completion(f) < fifo.completion(f2),
+            "the split protects foreground from the rebuild backlog"
+        );
+        // while the repair frontier is where the stretch put it
+        assert!((t_repair - svc_w / 0.30).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observed_share_is_bounded_by_the_cap() {
+        let qos = QosConfig::default();
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::with_qos(qos);
+        sched.set_class(TrafficClass::Repair);
+        for i in 0..6 {
+            sched.submit(0, i as f64 * 1e-3, 1 << 18, IoOp::Read, Access::Seq);
+            sched.drain(&mut devs);
+        }
+        let report = sched.qos_report();
+        assert_eq!(report.len(), 1);
+        let share = report[0].observed_share(TrafficClass::Repair);
+        assert!(share > 0.0);
+        assert!(
+            share <= qos.share(TrafficClass::Repair) + 1e-9,
+            "observed {share} exceeds the cap"
+        );
+        // repair-only progress: nothing deadlocks on an idle-foreground
+        // shard, the frontier just stretches
+        assert!(report[0].frontier > 0.0);
+        assert_eq!(sched.pending(), 0);
+    }
+
+    #[test]
+    fn migration_and_repair_hold_independent_capped_lanes() {
+        let qos = QosConfig::default();
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::with_qos(qos);
+        sched.set_class(TrafficClass::Repair);
+        let r = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        sched.set_class(TrafficClass::Migration);
+        let m = sched.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        sched.drain(&mut devs);
+        let svc = devs[0].profile.service_time(1 << 20, IoOp::Read, Access::Seq);
+        // each capped class stretches on its OWN frontier (no foreground
+        // committed): repair 1/0.30, migration 1/0.20 — they overlap
+        assert!((sched.completion(r) - svc / 0.30).abs() < 1e-9);
+        assert!((sched.completion(m) - svc / 0.20).abs() < 1e-9);
+        let rep = &sched.qos_report()[0];
+        assert!(rep.observed_share(TrafficClass::Repair) <= 0.30 + 1e-9);
+        assert!(rep.observed_share(TrafficClass::Migration) <= 0.20 + 1e-9);
+    }
+
+    #[test]
+    fn base_captures_external_queue_tail_once() {
+        // work committed by an EARLIER scheduler (a previous session)
+        // floors every class frontier; our own commits do not re-floor
+        let mut devs = vec![ssd()];
+        devs[0].io(0.0, 1 << 20, IoOp::Write, Access::Seq);
+        let external = devs[0].busy_until;
+        let mut sched = IoScheduler::with_qos(QosConfig::default());
+        sched.set_class(TrafficClass::Repair);
+        let r = sched.submit(0, 0.0, 1 << 18, IoOp::Read, Access::Seq);
+        sched.drain(&mut devs);
+        assert!(sched.completion(r) > external, "queues behind external work");
+        let rep = &sched.qos_report()[0];
+        assert_eq!(rep.base, external);
+        // the device queue tail advanced to our stretched frontier
+        assert_eq!(devs[0].busy_until, sched.wait_all());
     }
 }

@@ -15,6 +15,22 @@
 //! of in-flight bursts per consumer; a producer blocks only when its
 //! consumer's queue is full. This overlap is exactly why the streaming
 //! model wins at scale over collective I/O ([`collective`] baseline).
+//!
+//! Module map (ARCHITECTURE.md §Module map rows `streams/`):
+//!
+//! * this module — [`StreamSim`]: producer/consumer rank clocks,
+//!   bounded in-flight queues, attached computation, and the Fig 7
+//!   measurement surface (`benches/fig7_streams.rs`,
+//!   `examples/ipic3d_streams.rs` drive it with the iPIC3D particle
+//!   workload from `apps/ipic3d`);
+//! * [`collective`] — the collective-I/O baseline the paper compares
+//!   streaming against (every rank synchronizes, then writes).
+//!
+//! Consumer-side file I/O costs device time on the simulated storage
+//! targets, so stream post-processing contends with the rest of the
+//! stack exactly as §3.2.4 intends; ARCHITECTURE.md (§Sharded
+//! scheduler, §QoS plane) maps how that device time is scheduled and
+//! split against recovery traffic.
 
 pub mod collective;
 

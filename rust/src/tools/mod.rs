@@ -7,6 +7,17 @@
 //!   Flink plays in the SAGE project): a small dataflow engine whose
 //!   sources are Clovis objects and whose pipelines push computation
 //!   into storage via function shipping where possible.
+//!
+//! Module map (ARCHITECTURE.md §Module map rows `tools/`): both tools
+//! are FDMI/Clovis *consumers*, not core-path code — RTHMS ingests the
+//! telemetry feed (`clovis::fdmi`) to build its recommendations, and
+//! analytics pipelines execute through `clovis::fshipping` sessions,
+//! so their reads ride the same sharded scheduler (and QoS split —
+//! ARCHITECTURE.md §QoS plane) as every other foreground op. The
+//! recommendations RTHMS emits are the manual counterpart of the
+//! HSM's automated heat-driven planning (`crate::hsm`); OPERATIONS.md
+//! describes how operators combine the two with the recovery plane's
+//! decision flow.
 
 pub mod analytics;
 pub mod rthms;

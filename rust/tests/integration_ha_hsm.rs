@@ -147,6 +147,81 @@ fn decided_proactive_drain_executes_and_preempts_rebuild_work() {
 }
 
 #[test]
+fn failure_feed_consumer_recovers_without_test_side_calls() {
+    // the closed loop (ISSUE 5 satellite): events flow from the
+    // failure feed through the HA decision rules into recovery-plane
+    // sessions — the test never calls drain_with/repair_with (or even
+    // fail_device) itself
+    let mut c = Client::new_sim(Testbed::sage_prototype());
+    let mut objs = Vec::new();
+    let mut datas = Vec::new();
+    for i in 0..5u64 {
+        let o = c.create_object(4096).unwrap();
+        let mut d = vec![0u8; 2 * 4 * 65536];
+        SimRng::new(900 + i).fill_bytes(&mut d);
+        c.write_object(&o, 0, &d).unwrap();
+        objs.push(o);
+        datas.push(d);
+    }
+    let dev = c.store.object(objs[0]).unwrap().placement(0, 0).unwrap().device;
+    let t0 = c.now;
+    // a degrading device: three transients inside the HA window
+    let mut feed = FailureSchedule::scripted(vec![
+        FailureEvent { at: t0 + 1.0, kind: FailureKind::Transient(dev) },
+        FailureEvent { at: t0 + 2.0, kind: FailureKind::Transient(dev) },
+        FailureEvent { at: t0 + 3.0, kind: FailureKind::Transient(dev) },
+    ]);
+    assert_eq!(feed.next_at(), Some(t0 + 1.0));
+    c.now = t0 + 5.0;
+    let outcomes = c.consume_failure_feed(&mut feed, &objs);
+    assert_eq!(outcomes.len(), 3);
+    assert!(outcomes.iter().all(|o| o.error.is_none()), "no failed recovery");
+    let drained = outcomes
+        .iter()
+        .find(|o| matches!(o.action, RepairAction::ProactiveDrain(d) if d == dev))
+        .expect("the third transient decides a proactive drain");
+    assert!(drained.bytes > 0, "the consumer executed the drain itself");
+    assert!(drained.completed_at.unwrap() > t0 + 3.0);
+    assert!(
+        c.store
+            .object(objs[0])
+            .unwrap()
+            .placed_units()
+            .all(|u| u.device != dev),
+        "units moved off the degrading device"
+    );
+    assert!(!c.store.cluster.devices[dev].failed, "device stays in service");
+    assert_eq!(c.store.ha.repair_log.len(), 1, "drain stamped in the log");
+
+    // later, a HARD failure arrives on the feed: the consumer takes
+    // the device out of service AND rebuilds it, again with no
+    // test-side call
+    let dev2 = c.store.object(objs[1]).unwrap().placement(0, 1).unwrap().device;
+    feed.inject(FailureEvent {
+        at: c.now + 10.0,
+        kind: FailureKind::Device(dev2),
+    });
+    c.now += 20.0;
+    let outcomes = c.consume_failure_feed(&mut feed, &objs);
+    assert_eq!(outcomes.len(), 1);
+    assert!(outcomes[0].error.is_none());
+    assert!(matches!(
+        outcomes[0].action,
+        RepairAction::RebuildDevice(d) if d == dev2
+    ));
+    assert!(outcomes[0].bytes > 0, "units rebuilt off the failed device");
+    assert!(!c.store.cluster.devices[dev2].failed, "device replaced");
+    assert_eq!(c.store.ha.repair_log.len(), 2);
+    assert_eq!(feed.remaining(), 0);
+    assert_eq!(feed.next_at(), None);
+    // no data loss through the whole automated cycle
+    for (o, d) in objs.iter().zip(datas.iter()) {
+        let back = c.read_object(o, 0, d.len() as u64).unwrap();
+        assert_eq!(&back, d, "object intact after feed-driven recovery");
+    }
+}
+
+#[test]
 fn hsm_policies_differ_in_migration_volume() {
     let tb = Testbed::sage_prototype();
     let mk = || {

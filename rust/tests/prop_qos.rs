@@ -1,0 +1,408 @@
+//! Property tests for the QoS plane (ISSUE 5): the scheduler-level
+//! repair/foreground bandwidth split must change *when* completions
+//! land — never *what* is stored — and must honor its contracts on
+//! every sampled geometry:
+//!
+//! 1. **Byte/placement equivalence** — a mixed session (device repair
+//!    staged next to foreground writes) stores byte- and
+//!    placement-identical state under the default split and under the
+//!    unthrottled engine.
+//! 2. **Determinism** — repeated split runs produce bit-identical
+//!    completion times.
+//! 3. **Cap respected** — on every shard repair touched, its observed
+//!    device-time share never exceeds `QosConfig::repair_share`.
+//! 4. **Foreground no-slower / repair no-faster** — under concurrent
+//!    repair, the split never worsens a HEALTHY foreground op's
+//!    completion vs the unthrottled engine, and never lets repair
+//!    finish earlier than unthrottled (the throttle is real).
+//! 5. **Edge cases** — zero background traffic is bit-identical to
+//!    unthrottled; a repair-only workload on an idle-foreground
+//!    cluster completes (no deadlock) with identical bytes; caps of
+//!    1.0 reproduce the pre-QoS frontiers exactly.
+//! 6. **Degraded reads are Repair-classed by design** (the ISSUE 5
+//!    spec): a foreground read that must reconstruct through parity
+//!    pays the repair cap — bytes identical, completion never earlier
+//!    than unthrottled, reconstruction traffic visible on the Repair
+//!    lane (OPERATIONS.md documents the operational consequence).
+
+use sage::clovis::Client;
+use sage::config::Testbed;
+use sage::mero::{Layout, ObjectId};
+use sage::proptest::prop_check;
+use sage::sim::device::DeviceKind;
+use sage::sim::sched::{QosConfig, QosShardReport, TrafficClass};
+
+const BS: u64 = 4096;
+const UNIT: u64 = 16384;
+
+fn layout(k: u32, p: u32) -> Layout {
+    Layout::Raid { data: k, parity: p, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// Deterministic payload for extent (idx, len_blocks).
+fn bytes_for(idx: u64, len_blocks: u64) -> Vec<u8> {
+    (0..len_blocks * BS)
+        .map(|j| ((idx * 173 + len_blocks * 57 + j) % 251) as u8)
+        .collect()
+}
+
+fn gen_extents(r: &mut sage::sim::rng::SimRng) -> Vec<(u64, u64)> {
+    let n = 1 + r.gen_range(4) as usize;
+    (0..n)
+        .map(|_| (r.gen_range(32), 1 + r.gen_range(10)))
+        .collect()
+}
+
+/// Total logical span of an extent list, in bytes.
+fn span(extents: &[(u64, u64)]) -> u64 {
+    extents.iter().map(|(i, l)| (i + l) * BS).max().unwrap_or(0)
+}
+
+/// (stripe, unit, device) placement triples, in deterministic order.
+fn placements(c: &Client, obj: ObjectId) -> Vec<(u64, u32, usize)> {
+    c.store
+        .object(obj)
+        .unwrap()
+        .placed_units()
+        .map(|u| (u.stripe, u.unit, u.device))
+        .collect()
+}
+
+/// One mixed run: device repair staged FIRST on a session, foreground
+/// writes after it (unchained — both dispatch at the session clock and
+/// contend on shared shards). Returns everything the properties probe.
+struct MixedOutcome {
+    client: Client,
+    repair_objs: Vec<(ObjectId, Vec<u8>)>,
+    fg_obj: ObjectId,
+    fg_span: u64,
+    repair_completed: f64,
+    fg_completed: f64,
+    completed_bits: Vec<u64>,
+    frontier_bits: Vec<(usize, u64)>,
+    qos_table: Vec<QosShardReport>,
+    bytes_rebuilt: u64,
+}
+
+fn run_mixed(
+    qos: QosConfig,
+    extents: &[(u64, u64)],
+    k: u32,
+    p: u32,
+) -> MixedOutcome {
+    let mut c = Client::new_sim(Testbed::sage_prototype());
+    c.store.cluster.qos = qos;
+    let mut repair_objs = Vec::new();
+    for i in 0..4u64 {
+        let o = c.create_object_with(BS, layout(k, p)).unwrap();
+        let data = bytes_for(i, 2 * k as u64 * UNIT / BS);
+        c.write_object(&o, 0, &data).unwrap();
+        repair_objs.push((o, data));
+    }
+    let dev = c
+        .store
+        .object(repair_objs[0].0)
+        .unwrap()
+        .placement(0, 0)
+        .unwrap()
+        .device;
+    c.store.cluster.fail_device(dev);
+    let fg_obj = c.create_object_with(BS, layout(k, p)).unwrap();
+    let fg_datas: Vec<Vec<u8>> = extents
+        .iter()
+        .map(|(i, l)| bytes_for(100 + i, *l))
+        .collect();
+    let fg_refs: Vec<(u64, &[u8])> = extents
+        .iter()
+        .zip(fg_datas.iter())
+        .map(|((i, _), d)| (i * BS, d.as_slice()))
+        .collect();
+    let ids: Vec<ObjectId> = repair_objs.iter().map(|(o, _)| *o).collect();
+    let mut s = c.session();
+    let r = s.repair(&ids, dev);
+    let w = s.write(&fg_obj, &fg_refs);
+    let rep = s.run().unwrap();
+    let bytes_rebuilt = match rep.output(r) {
+        sage::clovis::OpOutput::Repair { bytes } => *bytes,
+        other => panic!("repair output expected, got {other:?}"),
+    };
+    let completed_bits: Vec<u64> =
+        rep.completed.iter().map(|t| t.to_bits()).collect();
+    let frontier_bits: Vec<(usize, u64)> =
+        rep.frontiers.iter().map(|&(d, f)| (d, f.to_bits())).collect();
+    MixedOutcome {
+        repair_completed: rep.completed[r.index()],
+        fg_completed: rep.completed[w.index()],
+        completed_bits,
+        frontier_bits,
+        qos_table: rep.qos,
+        bytes_rebuilt,
+        fg_span: span(extents),
+        fg_obj,
+        repair_objs,
+        client: c,
+    }
+}
+
+/// Read back every object of a mixed run (repair set + foreground
+/// object) for cross-engine comparison.
+fn stored_bytes(out: &mut MixedOutcome) -> Vec<Vec<u8>> {
+    let mut all = Vec::new();
+    let objs: Vec<(ObjectId, u64)> = out
+        .repair_objs
+        .iter()
+        .map(|(o, d)| (*o, d.len() as u64))
+        .chain(std::iter::once((out.fg_obj, out.fg_span)))
+        .collect();
+    for (o, len) in objs {
+        all.push(out.client.read_object(&o, 0, len).unwrap());
+    }
+    all
+}
+
+#[test]
+fn prop_split_preserves_bytes_and_placements() {
+    for (k, p) in [(4u32, 1u32), (4, 2), (3, 2)] {
+        prop_check(
+            &format!("qos-bytes-{k}+{p}"),
+            10,
+            gen_extents,
+            |extents: &Vec<(u64, u64)>| {
+                let mut split = run_mixed(QosConfig::default(), extents, k, p);
+                let mut fifo = run_mixed(QosConfig::unlimited(), extents, k, p);
+                if split.bytes_rebuilt != fifo.bytes_rebuilt {
+                    return false;
+                }
+                if stored_bytes(&mut split) != stored_bytes(&mut fifo) {
+                    return false;
+                }
+                // the repair data still matches the originally written
+                // payloads (not just cross-engine agreement)
+                for (o, want) in split.repair_objs.clone() {
+                    let got = split
+                        .client
+                        .read_object(&o, 0, want.len() as u64)
+                        .unwrap();
+                    if got != want {
+                        return false;
+                    }
+                }
+                let objs: Vec<ObjectId> = split
+                    .repair_objs
+                    .iter()
+                    .map(|(o, _)| *o)
+                    .chain(std::iter::once(split.fg_obj))
+                    .collect();
+                objs.iter().all(|&o| {
+                    placements(&split.client, o) == placements(&fifo.client, o)
+                })
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_split_is_deterministic() {
+    prop_check(
+        "qos-determinism",
+        8,
+        gen_extents,
+        |extents: &Vec<(u64, u64)>| {
+            let a = run_mixed(QosConfig::default(), extents, 4, 2);
+            let b = run_mixed(QosConfig::default(), extents, 4, 2);
+            a.completed_bits == b.completed_bits
+                && a.frontier_bits == b.frontier_bits
+        },
+    );
+}
+
+#[test]
+fn prop_repair_share_cap_respected_on_every_shard() {
+    for (k, p) in [(4u32, 1u32), (4, 2), (3, 2)] {
+        prop_check(
+            &format!("qos-cap-{k}+{p}"),
+            10,
+            gen_extents,
+            |extents: &Vec<(u64, u64)>| {
+                let qos = QosConfig::default();
+                let cap = qos.share(TrafficClass::Repair);
+                let out = run_mixed(qos, extents, k, p);
+                let mut saw_repair = false;
+                for shard in &out.qos_table {
+                    let share = shard.observed_share(TrafficClass::Repair);
+                    if share > cap + 1e-9 {
+                        return false;
+                    }
+                    saw_repair |= share > 0.0;
+                }
+                saw_repair // the workload really exercised the cap
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_split_never_slows_foreground_and_never_speeds_repair() {
+    for (k, p) in [(4u32, 1u32), (4, 2)] {
+        prop_check(
+            &format!("qos-ordering-{k}+{p}"),
+            10,
+            gen_extents,
+            |extents: &Vec<(u64, u64)>| {
+                let split = run_mixed(QosConfig::default(), extents, k, p);
+                let fifo = run_mixed(QosConfig::unlimited(), extents, k, p);
+                // the split exists to protect foreground from rebuild
+                // backlog: the write op can only complete earlier
+                if split.fg_completed > fifo.fg_completed * (1.0 + 1e-9) + 1e-12
+                {
+                    return false;
+                }
+                // and the throttle is real: capped repair never beats
+                // the unthrottled engine
+                fifo.repair_completed
+                    <= split.repair_completed * (1.0 + 1e-9) + 1e-12
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_zero_background_split_is_bit_identical() {
+    // foreground-only sessions: the split is free — bit-identical
+    // completion times to the unthrottled engine
+    prop_check(
+        "qos-zero-background",
+        10,
+        gen_extents,
+        |extents: &Vec<(u64, u64)>| {
+            let run = |qos: QosConfig| {
+                let mut c = Client::new_sim(Testbed::sage_prototype());
+                c.store.cluster.qos = qos;
+                let obj = c.create_object_with(BS, layout(4, 1)).unwrap();
+                let datas: Vec<Vec<u8>> = extents
+                    .iter()
+                    .map(|(i, l)| bytes_for(*i, *l))
+                    .collect();
+                let refs: Vec<(u64, &[u8])> = extents
+                    .iter()
+                    .zip(datas.iter())
+                    .map(|((i, _), d)| (i * BS, d.as_slice()))
+                    .collect();
+                let total = span(extents);
+                let mut s = c.session();
+                let w = s.write(&obj, &refs);
+                let r = s.read(
+                    &obj,
+                    &[sage::clovis::Extent::new(0, total)],
+                );
+                s.after(r, w).unwrap();
+                let rep = s.run().unwrap();
+                let mut bits: Vec<u64> =
+                    rep.completed.iter().map(|t| t.to_bits()).collect();
+                bits.push(rep.completed_at.to_bits());
+                bits
+            };
+            run(QosConfig::default()) == run(QosConfig::unlimited())
+        },
+    );
+}
+
+#[test]
+fn repair_only_workload_completes_without_deadlock() {
+    // an idle-foreground cluster: the cap stretches the rebuild but
+    // never starves it — same bytes, a later (or equal) frontier, and
+    // the device returns to service
+    let run = |qos: QosConfig| {
+        let mut c = Client::new_sim(Testbed::sage_prototype());
+        c.store.cluster.qos = qos;
+        let mut objs = Vec::new();
+        for i in 0..3u64 {
+            let o = c.create_object_with(BS, layout(4, 2)).unwrap();
+            let data = bytes_for(i, 2 * 4 * UNIT / BS);
+            c.write_object(&o, 0, &data).unwrap();
+            objs.push((o, data));
+        }
+        let dev =
+            c.store.object(objs[0].0).unwrap().placement(0, 0).unwrap().device;
+        c.store.cluster.fail_device(dev);
+        let ids: Vec<ObjectId> = objs.iter().map(|(o, _)| *o).collect();
+        let (bytes, t) = c.repair_with(&ids, dev).unwrap();
+        (c, objs, dev, bytes, t)
+    };
+    let (mut c_split, objs, dev, bytes_split, t_split) =
+        run(QosConfig::default());
+    let (_c_fifo, _, _, bytes_fifo, t_fifo) = run(QosConfig::unlimited());
+    assert!(bytes_split > 0);
+    assert_eq!(bytes_split, bytes_fifo, "same units rebuilt");
+    assert!(t_split.is_finite() && t_split > 0.0, "no deadlock");
+    assert!(
+        t_split >= t_fifo * (1.0 - 1e-9),
+        "the static throttle cannot beat the unthrottled rebuild"
+    );
+    assert!(!c_split.store.cluster.devices[dev].failed, "device replaced");
+    for (o, want) in objs {
+        let got = c_split.read_object(&o, 0, want.len() as u64).unwrap();
+        assert_eq!(got, want, "bytes intact after the throttled rebuild");
+    }
+}
+
+#[test]
+fn degraded_read_reconstruction_is_repair_classed_and_throttled() {
+    // the pinned ISSUE 5 semantics: survivor reads of a degraded
+    // foreground read dispatch as Repair, so reconstruction pays the
+    // cap even with no rebuild running — bytes untouched, and the
+    // share stays within the cap on every shard
+    let run = |qos: QosConfig| {
+        let mut c = Client::new_sim(Testbed::sage_prototype());
+        c.store.cluster.qos = qos;
+        let obj = c.create_object_with(BS, layout(4, 2)).unwrap();
+        let data = bytes_for(9, 2 * 4 * UNIT / BS);
+        c.write_object(&obj, 0, &data).unwrap();
+        let dev = c.store.object(obj).unwrap().placement(0, 1).unwrap().device;
+        c.store.cluster.fail_device(dev);
+        let mut s = c.session();
+        let h = s.read(&obj, &[sage::clovis::Extent::new(0, data.len() as u64)]);
+        let mut rep = s.run().unwrap();
+        let bufs = match rep.outputs.swap_remove(h.index()) {
+            sage::clovis::OpOutput::Read(b) => b,
+            other => panic!("read output expected, got {other:?}"),
+        };
+        (bufs, data, rep.completed_at, rep.qos)
+    };
+    let (bytes_split, want, t_split, table) = run(QosConfig::default());
+    let (bytes_fifo, _, t_fifo, _) = run(QosConfig::unlimited());
+    assert_eq!(bytes_split[0], want, "reconstruction restores the bytes");
+    assert_eq!(bytes_split, bytes_fifo, "the cap never changes bytes");
+    assert!(
+        t_split >= t_fifo * (1.0 - 1e-9),
+        "throttled reconstruction cannot beat the unthrottled engine"
+    );
+    let repair_busy: f64 = table
+        .iter()
+        .map(|r| r.class_busy[TrafficClass::Repair.index()])
+        .sum();
+    assert!(repair_busy > 0.0, "survivor reads ride the Repair lane");
+    let cap = QosConfig::default().share(TrafficClass::Repair);
+    for shard in &table {
+        assert!(shard.observed_share(TrafficClass::Repair) <= cap + 1e-9);
+    }
+}
+
+#[test]
+fn cap_of_one_reproduces_pre_qos_frontiers_exactly() {
+    // raising every share to 1.0 IS the unthrottled engine — the whole
+    // mixed workload (repair + foreground writes) lands on the same
+    // bits, frontiers included
+    let extents: Vec<(u64, u64)> = vec![(0, 8), (16, 4), (3, 6)];
+    let cap_one = QosConfig { repair_share: 1.0, migration_share: 1.0 };
+    let a = run_mixed(cap_one, &extents, 4, 2);
+    let b = run_mixed(QosConfig::unlimited(), &extents, 4, 2);
+    assert_eq!(a.completed_bits, b.completed_bits);
+    assert_eq!(a.frontier_bits, b.frontier_bits);
+    assert_eq!(a.bytes_rebuilt, b.bytes_rebuilt);
+    assert_eq!(
+        a.repair_completed.to_bits(),
+        b.repair_completed.to_bits(),
+        "cap = 1.0 is bit-identical, not merely close"
+    );
+}
