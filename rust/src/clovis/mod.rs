@@ -136,10 +136,62 @@ fn unexpected_output(kind: &str, other: &OpOutput) -> crate::error::SageError {
     ))
 }
 
+/// First retry backoff for isolated transient I/O errors, in virtual
+/// seconds; each further attempt doubles it. Pure bookkeeping on the
+/// [`RecoveryVerdict::TransientRetried`] verdict — the client clock
+/// never advances for a retry, so the accounting cannot perturb
+/// recovery schedules (no-storm runs stay bit-exact).
+pub const TRANSIENT_RETRY_BACKOFF: SimTime = 0.001;
+
+/// How a consumed failure event was ultimately resolved — the typed
+/// verdict the storm-hardened [`Client::consume_failure_feed`] attaches
+/// to every [`RecoveryOutcome`], so drivers (the soak harness,
+/// `tools::soak`) account for every event without string-matching
+/// errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecoveryVerdict {
+    /// No data movement was needed (below HA thresholds, or an
+    /// operator-facing `NodeAlert`).
+    NoAction,
+    /// The decided recovery session ran to completion.
+    Recovered,
+    /// An isolated transient I/O error resolved by bounded retry — no
+    /// recovery session runs. `attempts` is 1, or 2 when the transient
+    /// struck inside an in-flight recovery's window (the bound: retry
+    /// never loops); `resolved_at` sums the doubling backoffs from
+    /// [`TRANSIENT_RETRY_BACKOFF`] onto the event time.
+    TransientRetried { attempts: u32, resolved_at: SimTime },
+    /// This outcome's recovery was RETRACTED: its device re-failed at
+    /// `refailed_at`, inside the session's in-flight window. The HA
+    /// stamp was reopened and aborted
+    /// ([`HaSubsystem::repair_aborted`](crate::mero::ha::HaSubsystem::repair_aborted)
+    /// — `repairs_aborted` counts it), and the re-failure's own
+    /// outcome carries the restarted repair, so the repair log never
+    /// double-counts the device.
+    AbortedByRefailure { refailed_at: SimTime },
+    /// A decided proactive drain found its source already hard-failed
+    /// (storm preemption) and ESCALATED to a full SNS repair under the
+    /// same HA engagement — one repair-log entry, no double-count.
+    EscalatedToRepair,
+    /// A hard failure absorbed by an earlier escalated repair of the
+    /// same pass: the device was already rebuilt by the escalation, so
+    /// no second session runs and the device is not re-failed.
+    AbsorbedByEscalation,
+    /// The concurrent failure set exceeded pool parity tolerance:
+    /// these objects hold stripes that can no longer be reconstructed.
+    /// Surfaced as data, never a panic and never silent corruption —
+    /// reads of the named objects keep erroring `Unavailable`, all
+    /// other objects stay intact.
+    DataLoss { objects: Vec<ObjectId> },
+    /// Recovery could not complete for another reason (e.g. no spare
+    /// capacity); see [`RecoveryOutcome::error`].
+    Failed,
+}
+
 /// Outcome of one failure-feed event consumed by
 /// [`Client::consume_failure_feed`]: the event, the HA subsystem's
-/// decision for it, and — when a recovery session ran — what it moved
-/// and when it completed.
+/// decision for it, the typed [`RecoveryVerdict`], and — when a
+/// recovery session ran — what it moved and when it completed.
 #[derive(Debug, Clone)]
 pub struct RecoveryOutcome {
     /// The failure event ingested from the feed.
@@ -147,7 +199,8 @@ pub struct RecoveryOutcome {
     /// The HA subsystem's decision (quasi-ordered event-set analysis).
     pub action: RepairAction,
     /// Bytes the executed recovery session rebuilt/moved (0 when no
-    /// action ran).
+    /// action ran). An [`RecoveryVerdict::AbortedByRefailure`] outcome
+    /// keeps the bytes its session dispatched before the retraction.
     pub bytes: u64,
     /// Completion frontier of the executed recovery session (None when
     /// the decision required no data movement, or when it failed).
@@ -158,6 +211,21 @@ pub struct RecoveryOutcome {
     /// already re-armed the device in the HA subsystem
     /// (`repair_aborted`), so its next failure event decides fresh.
     pub error: Option<String>,
+    /// Typed resolution; see [`RecoveryVerdict`].
+    pub verdict: RecoveryVerdict,
+}
+
+/// Per-pass memory of the last recovery launched per device: the
+/// consumer detects OVERLAP (a later event whose `at` falls inside an
+/// earlier session's in-flight window) by comparing against this.
+struct LastRecovery {
+    /// Index of the outcome that launched the session.
+    outcome: usize,
+    /// The session's completion frontier.
+    completed_at: SimTime,
+    /// True when the session was a drain escalated to repair (its
+    /// device was rebuilt; a stale hard event for it is absorbed).
+    escalated: bool,
 }
 
 /// A Clovis client handle: the entry point of the SAGE storage API.
@@ -450,6 +518,42 @@ impl Client {
     /// (e.g. no spare capacity) surfaces in its outcome's `error`
     /// field and the pass CONTINUES, so one stuck device never makes
     /// the consumer drop later events the feed already popped.
+    ///
+    /// ## Storm hardening
+    ///
+    /// The consumer is hardened for OVERLAPPING failures (correlated
+    /// storms, `FailureSchedule::storm`):
+    ///
+    /// * **batch-concurrent strikes** — every hard failure of a due
+    ///   batch takes effect before any recovery of the batch runs, so
+    ///   a storm's members are genuinely down together and parity
+    ///   arithmetic sees the true concurrent set. A batch with at most
+    ///   one hard failure behaves exactly like the pre-storm consumer,
+    ///   bit-exactly (`tests/prop_storm.rs`).
+    /// * **re-failure mid-repair** — a device re-failing inside its
+    ///   Repair-class session's in-flight window retracts that
+    ///   session's HA stamp (reopen + [`repair_aborted`], counted in
+    ///   `repairs_aborted`), marks the old outcome
+    ///   [`RecoveryVerdict::AbortedByRefailure`], and restarts repair
+    ///   accounting under the re-failure's own outcome.
+    /// * **drain preemption** — a decided proactive drain whose source
+    ///   already hard-failed escalates to a full SNS repair under the
+    ///   SAME engagement ([`RecoveryVerdict::EscalatedToRepair`]); the
+    ///   source's own hard event is then absorbed
+    ///   ([`RecoveryVerdict::AbsorbedByEscalation`]) — one repair-log
+    ///   entry, never a double-count.
+    /// * **beyond-parity storms** — a storm exceeding pool parity
+    ///   tolerance surfaces a typed
+    ///   [`RecoveryVerdict::DataLoss`] naming the objects whose
+    ///   stripes are no longer reconstructible
+    ///   (`MeroStore::unrecoverable_objects`) — never a panic, never
+    ///   silent corruption.
+    /// * **transient retry accounting** — an isolated transient
+    ///   resolves as [`RecoveryVerdict::TransientRetried`] with
+    ///   bounded attempts and a backoff-summed `resolved_at`; the
+    ///   client clock never advances for a retry.
+    ///
+    /// [`repair_aborted`]: crate::mero::ha::HaSubsystem::repair_aborted
     pub fn consume_failure_feed(
         &mut self,
         feed: &mut FailureSchedule,
@@ -460,7 +564,9 @@ impl Client {
         let nodes: Vec<Option<usize>> = (0..n_devs)
             .map(|d| self.store.cluster.node_of(d))
             .collect();
-        let mut out = Vec::new();
+        let mut last: std::collections::HashMap<usize, LastRecovery> =
+            std::collections::HashMap::new();
+        let mut out: Vec<RecoveryOutcome> = Vec::new();
         loop {
             // events due at the client clock; executed recoveries
             // advance it, so newly-due events surface next iteration
@@ -468,37 +574,194 @@ impl Client {
             if due.is_empty() {
                 break;
             }
-            for event in due {
+            // failures strike at their own timestamps, BEFORE any
+            // recovery of this batch runs: a correlated storm is
+            // genuinely concurrent, so parity arithmetic sees every
+            // member down. The one exception is a re-failure already
+            // absorbed by an escalated repair — that device was
+            // rebuilt, and the stale event refers to hardware that no
+            // longer holds data.
+            for event in &due {
                 if let FailureKind::Device(d) = event.kind {
-                    if !self.store.cluster.devices[d].failed {
+                    let absorbed = last.get(&d).is_some_and(|l| {
+                        l.escalated && event.at <= l.completed_at
+                    });
+                    if !absorbed && !self.store.cluster.devices[d].failed {
                         self.store.cluster.fail_device(d);
                     }
                 }
-                let action = self.store.ha.observe(event, |d| nodes[d]);
-                let executed = match action {
-                    RepairAction::RebuildDevice(d) => {
-                        Some(self.repair_with(objects, d))
+            }
+            for event in due {
+                self.consume_event(event, objects, &nodes, &mut last, &mut out);
+            }
+        }
+        out
+    }
+
+    /// One event of a consumer pass: overlap handling, HA decision,
+    /// recovery execution, verdict. See [`Client::consume_failure_feed`].
+    fn consume_event(
+        &mut self,
+        event: FailureEvent,
+        objects: &[ObjectId],
+        nodes: &[Option<usize>],
+        last: &mut std::collections::HashMap<usize, LastRecovery>,
+        out: &mut Vec<RecoveryOutcome>,
+    ) {
+        if let FailureKind::Device(d) = event.kind {
+            if let Some(l) = last.get(&d) {
+                if event.at <= l.completed_at && l.escalated {
+                    // the escalated repair already rebuilt this device;
+                    // the stale hard event is absorbed — no second
+                    // session, no re-fail, no HA churn
+                    out.push(RecoveryOutcome {
+                        event,
+                        action: RepairAction::None,
+                        bytes: 0,
+                        completed_at: None,
+                        error: None,
+                        verdict: RecoveryVerdict::AbsorbedByEscalation,
+                    });
+                    return;
+                }
+                if event.at <= l.completed_at {
+                    // the device re-failed while its recovery session
+                    // was in flight: retract the stamp (reopen the log
+                    // entry, then abort the re-engaged repair — the
+                    // abort counter records the restart), take the
+                    // replacement out of service, and let this event's
+                    // own observe decide a fresh rebuild
+                    let prev = last.remove(&d).unwrap();
+                    self.store.ha.reopen_last(d);
+                    self.store.ha.repair_aborted(d);
+                    if !self.store.cluster.devices[d].failed {
+                        self.store.cluster.fail_device(d);
                     }
-                    RepairAction::ProactiveDrain(d) => {
-                        Some(self.drain_with(objects, d))
-                    }
-                    _ => None,
-                };
-                let (bytes, completed_at, error) = match executed {
-                    Some(Ok((b, t))) => (b, Some(t), None),
-                    Some(Err(e)) => (0, None, Some(e.to_string())),
-                    None => (0, None, None),
-                };
+                    out[prev.outcome].verdict =
+                        RecoveryVerdict::AbortedByRefailure {
+                            refailed_at: event.at,
+                        };
+                }
+            }
+        }
+
+        let action = self.store.ha.observe(event, |d| nodes[d]);
+        let executed = match action {
+            RepairAction::RebuildDevice(d) => {
+                Some((d, self.repair_with(objects, d), false))
+            }
+            RepairAction::ProactiveDrain(d) => {
+                if self.store.cluster.devices[d].failed {
+                    // storm preemption: the drain source hard-failed
+                    // before the drain could run — escalate to a full
+                    // SNS repair under the SAME engagement (the repair
+                    // closes the engagement observe() opened, so the
+                    // log carries exactly one entry for this device)
+                    Some((d, self.repair_with(objects, d), true))
+                } else {
+                    Some((d, self.drain_with(objects, d), false))
+                }
+            }
+            _ => None,
+        };
+        match executed {
+            Some((d, Ok((bytes, t)), escalated)) => {
+                last.insert(
+                    d,
+                    LastRecovery { outcome: out.len(), completed_at: t, escalated },
+                );
                 out.push(RecoveryOutcome {
                     event,
                     action,
                     bytes,
-                    completed_at,
-                    error,
+                    completed_at: Some(t),
+                    error: None,
+                    verdict: if escalated {
+                        RecoveryVerdict::EscalatedToRepair
+                    } else {
+                        RecoveryVerdict::Recovered
+                    },
+                });
+            }
+            Some((_, Err(e), _)) => {
+                // typed data-loss verdict: when the concurrent failure
+                // set exceeded pool parity tolerance, NAME the objects
+                // that are no longer reconstructible — never a panic,
+                // never silent corruption
+                let lost = self.store.unrecoverable_objects(objects);
+                let verdict = if lost.is_empty() {
+                    RecoveryVerdict::Failed
+                } else {
+                    RecoveryVerdict::DataLoss { objects: lost }
+                };
+                out.push(RecoveryOutcome {
+                    event,
+                    action,
+                    bytes: 0,
+                    completed_at: None,
+                    error: Some(e.to_string()),
+                    verdict,
+                });
+            }
+            None => {
+                // below thresholds: bounded transient retry accounting
+                let verdict = match event.kind {
+                    FailureKind::Transient(d)
+                        if action == RepairAction::None =>
+                    {
+                        let attempts = if last
+                            .get(&d)
+                            .is_some_and(|l| event.at <= l.completed_at)
+                        {
+                            2
+                        } else {
+                            1
+                        };
+                        RecoveryVerdict::TransientRetried {
+                            attempts,
+                            resolved_at: event.at
+                                + TRANSIENT_RETRY_BACKOFF
+                                    * ((1u64 << attempts) - 1) as f64,
+                        }
+                    }
+                    _ => RecoveryVerdict::NoAction,
+                };
+                out.push(RecoveryOutcome {
+                    event,
+                    action,
+                    bytes: 0,
+                    completed_at: None,
+                    error: None,
+                    verdict,
                 });
             }
         }
-        out
+    }
+
+    /// Grow a pool under load (elastic membership): attach a fresh
+    /// device with `profile` to `node`, register it with the tier
+    /// pools (`PoolSet::register` — allocations see the capacity
+    /// immediately), and rebalance `objects` onto it as ONE
+    /// Migration-class session ([`Session::rebalance`], the inverse of
+    /// a drain). Returns (new device id, bytes moved, completion time)
+    /// and advances the client clock. Objects the rebalance plan does
+    /// not touch keep their placements bit-for-bit
+    /// (`tests/prop_storm.rs`).
+    pub fn expand_pool(
+        &mut self,
+        node: crate::cluster::NodeId,
+        profile: crate::sim::device::DeviceProfile,
+        objects: &[ObjectId],
+    ) -> Result<(crate::cluster::DeviceId, u64, SimTime)> {
+        let dev = self.store.attach_device(node, profile)?;
+        let mut s = self.session();
+        let h = s.rebalance(objects, dev);
+        let report = s.run()?;
+        let bytes = match report.output(h) {
+            OpOutput::Rebalance { bytes } => *bytes,
+            other => return Err(unexpected_output("rebalance", other)),
+        };
+        Ok((dev, bytes, report.completed_at))
     }
 
     // ------------------------------------------------------------ indices
@@ -984,6 +1247,202 @@ mod tests {
         c.store.cluster.fail_device(dev);
         let back = c.read_object(&obj, 0, data.len() as u64).unwrap();
         assert_eq!(back, data, "bytes survive the drained device's failure");
+    }
+
+    #[test]
+    fn feed_consumer_aborts_and_restarts_on_refailure_mid_repair() {
+        use crate::cluster::failure::{FailureEvent, FailureKind};
+        let mut c = client();
+        let mut objs = Vec::new();
+        let mut datas = Vec::new();
+        for i in 0..4u64 {
+            let o = c.create_object(4096).unwrap();
+            let mut d = vec![0u8; 2 * 4 * 65536];
+            crate::sim::rng::SimRng::new(700 + i).fill_bytes(&mut d);
+            c.write_object(&o, 0, &d).unwrap();
+            objs.push(o);
+            datas.push(d);
+        }
+        let dev = c.store.object(objs[0]).unwrap().placement(0, 0).unwrap().device;
+        // the device fails, then RE-fails inside the repair's in-flight
+        // window (the repair dispatched at c.now completes well after
+        // 1.5), then a transient lands in the restarted repair's window
+        let mut feed = FailureSchedule::scripted(vec![
+            FailureEvent { at: 1.0, kind: FailureKind::Device(dev) },
+            FailureEvent { at: 1.5, kind: FailureKind::Device(dev) },
+            FailureEvent { at: 1.8, kind: FailureKind::Transient(dev) },
+        ]);
+        c.now = 2.0;
+        let outcomes = c.consume_failure_feed(&mut feed, &objs);
+        assert_eq!(outcomes.len(), 3);
+        assert_eq!(
+            outcomes[0].verdict,
+            RecoveryVerdict::AbortedByRefailure { refailed_at: 1.5 },
+            "the first repair's stamp was retracted"
+        );
+        assert_eq!(outcomes[1].verdict, RecoveryVerdict::Recovered);
+        assert_eq!(
+            outcomes[2].verdict,
+            RecoveryVerdict::TransientRetried {
+                attempts: 2,
+                resolved_at: 1.8 + 3.0 * TRANSIENT_RETRY_BACKOFF,
+            },
+            "a transient inside the in-flight window retries twice"
+        );
+        assert_eq!(c.store.ha.repairs_aborted, 1, "the restart was counted");
+        assert_eq!(c.store.ha.repairs_started, 2);
+        assert_eq!(
+            c.store.ha.repair_log.len(),
+            1,
+            "exactly one completed repair survives — no double-count"
+        );
+        assert!(c.store.ha.repairing().is_empty());
+        assert!(!c.store.cluster.devices[dev].failed, "device back in service");
+        for (o, d) in objs.iter().zip(datas.iter()) {
+            assert_eq!(&c.read_object(o, 0, d.len() as u64).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn feed_consumer_escalates_preempted_drain_and_absorbs_the_hard_event() {
+        use crate::cluster::failure::{FailureEvent, FailureKind};
+        let mut c = client();
+        let mut objs = Vec::new();
+        let mut datas = Vec::new();
+        for i in 0..4u64 {
+            let o = c.create_object(4096).unwrap();
+            let mut d = vec![0u8; 2 * 4 * 65536];
+            crate::sim::rng::SimRng::new(800 + i).fill_bytes(&mut d);
+            c.write_object(&o, 0, &d).unwrap();
+            objs.push(o);
+            datas.push(d);
+        }
+        let dev = c.store.object(objs[0]).unwrap().placement(0, 0).unwrap().device;
+        // three transients decide a drain at 1.2 — but the device
+        // hard-fails at 1.3, in the SAME due batch, so the strike is
+        // applied before the drain runs: the drain must escalate to a
+        // repair, and the hard event must be absorbed by it
+        let mut feed = FailureSchedule::scripted(vec![
+            FailureEvent { at: 1.0, kind: FailureKind::Transient(dev) },
+            FailureEvent { at: 1.1, kind: FailureKind::Transient(dev) },
+            FailureEvent { at: 1.2, kind: FailureKind::Transient(dev) },
+            FailureEvent { at: 1.3, kind: FailureKind::Device(dev) },
+        ]);
+        c.now = 2.0;
+        let outcomes = c.consume_failure_feed(&mut feed, &objs);
+        assert_eq!(outcomes.len(), 4);
+        assert!(matches!(
+            outcomes[0].verdict,
+            RecoveryVerdict::TransientRetried { attempts: 1, .. }
+        ));
+        assert_eq!(outcomes[2].verdict, RecoveryVerdict::EscalatedToRepair);
+        assert!(
+            outcomes[2].bytes > 0,
+            "the escalated repair rebuilt the failed drain source"
+        );
+        assert_eq!(
+            outcomes[3].verdict,
+            RecoveryVerdict::AbsorbedByEscalation,
+            "the source's own hard event runs no second session"
+        );
+        assert_eq!(outcomes[3].action, RepairAction::None);
+        assert_eq!(c.store.ha.repair_log.len(), 1, "ONE engagement, no double-count");
+        assert_eq!(c.store.ha.repairs_started, 1);
+        assert_eq!(c.store.ha.repairs_aborted, 0);
+        assert!(!c.store.cluster.devices[dev].failed, "device back in service");
+        for (o, d) in objs.iter().zip(datas.iter()) {
+            assert_eq!(&c.read_object(o, 0, d.len() as u64).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn storm_beyond_parity_surfaces_typed_data_loss_not_a_panic() {
+        use crate::cluster::failure::FailureSchedule;
+        use crate::error::SageError;
+        let mut c = client();
+        let ssd_obj = c.create_object(4096).unwrap();
+        let ssd_data = vec![6u8; 2 * 4 * 65536];
+        c.write_object(&ssd_obj, 0, &ssd_data).unwrap();
+        let hdd_obj = c
+            .create_object_with(
+                4096,
+                crate::mero::Layout::Raid {
+                    data: 4,
+                    parity: 1,
+                    unit: 65536,
+                    tier: DeviceKind::Hdd,
+                },
+            )
+            .unwrap();
+        let hdd_data = vec![7u8; 2 * 4 * 65536];
+        c.write_object(&hdd_obj, 0, &hdd_data).unwrap();
+        let objs = vec![ssd_obj, hdd_obj];
+        // a whole-tier storm: every SSD hard-fails within half a second
+        // — far beyond the 4+1 layout's single-loss parity tolerance
+        let ssds = c
+            .store
+            .cluster
+            .devices_where(|d| d.profile.kind == DeviceKind::Ssd);
+        let mut rng = crate::sim::rng::SimRng::new(77);
+        let mut feed = FailureSchedule::storm(&ssds, 1.0, 0.5, &mut rng);
+        c.now = 2.0;
+        let outcomes = c.consume_failure_feed(&mut feed, &objs);
+        assert_eq!(outcomes.len(), ssds.len());
+        let losses: Vec<_> = outcomes
+            .iter()
+            .filter_map(|o| match &o.verdict {
+                RecoveryVerdict::DataLoss { objects } => Some(objects),
+                _ => None,
+            })
+            .collect();
+        assert!(!losses.is_empty(), "the verdict is typed data loss");
+        for lost in &losses {
+            assert!(lost.contains(&ssd_obj), "the striped victim is named");
+            assert!(!lost.contains(&hdd_obj), "the other tier is not");
+        }
+        assert!(
+            outcomes.iter().all(|o| o.verdict != RecoveryVerdict::Recovered),
+            "nothing pretended to recover past parity tolerance"
+        );
+        // reads of the victim keep erroring — no silent corruption…
+        assert!(matches!(
+            c.read_object(&ssd_obj, 0, ssd_data.len() as u64),
+            Err(SageError::Unavailable(_))
+        ));
+        // …and the unaffected tier is untouched
+        assert_eq!(
+            c.read_object(&hdd_obj, 0, hdd_data.len() as u64).unwrap(),
+            hdd_data
+        );
+    }
+
+    #[test]
+    fn expand_pool_attaches_rebalances_and_preserves_bytes() {
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![5u8; 4 * 4 * 65536];
+        c.write_object(&obj, 0, &data).unwrap();
+        let src = c.store.object(obj).unwrap().placement(0, 0).unwrap().device;
+        let prof = c.store.cluster.devices[src].profile.clone();
+        let (dev, bytes, t) = c.expand_pool(1, prof, &[obj]).unwrap();
+        assert!(bytes > 0, "the newcomer attracted units");
+        assert!(t > 0.0);
+        assert!(
+            c.store.pools.devices(DeviceKind::Ssd).contains(&dev),
+            "the device joined its tier pool"
+        );
+        assert!(
+            c.store
+                .object(obj)
+                .unwrap()
+                .placed_units()
+                .any(|u| u.device == dev),
+            "placements moved onto the new capacity"
+        );
+        assert_eq!(c.read_object(&obj, 0, data.len() as u64).unwrap(), data);
+        // attaching to a nonsense node is a typed error
+        let prof2 = c.store.cluster.devices[src].profile.clone();
+        assert!(c.expand_pool(usize::MAX, prof2, &[obj]).is_err());
     }
 
     #[test]

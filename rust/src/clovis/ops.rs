@@ -112,12 +112,16 @@ pub enum OpKind {
     /// Proactive drain of a degrading (still-live) device
     /// (`RepairAction::ProactiveDrain` executed by the recovery plane).
     Drain,
+    /// Rebalance onto freshly-attached pool capacity (elastic pool
+    /// membership — the inverse of a drain).
+    Rebalance,
 }
 
 impl OpKind {
     /// QoS [`TrafficClass`] ops of this kind dispatch under (§3.2.1
     /// repair throttling): recovery work (`Repair`/`Drain`) submits as
-    /// [`TrafficClass::Repair`], HSM data movement (`Migrate`) as
+    /// [`TrafficClass::Repair`], background data movement
+    /// (`Migrate`/`Rebalance`) as
     /// [`TrafficClass::Migration`], everything else — object I/O, KV,
     /// transactions, function shipping — as
     /// [`TrafficClass::Foreground`]. `Session::run` stamps the group
@@ -125,7 +129,7 @@ impl OpKind {
     pub fn traffic_class(self) -> TrafficClass {
         match self {
             OpKind::Repair | OpKind::Drain => TrafficClass::Repair,
-            OpKind::Migrate => TrafficClass::Migration,
+            OpKind::Migrate | OpKind::Rebalance => TrafficClass::Migration,
             _ => TrafficClass::Foreground,
         }
     }
@@ -408,6 +412,7 @@ mod tests {
         assert_eq!(OpKind::Repair.traffic_class(), TrafficClass::Repair);
         assert_eq!(OpKind::Drain.traffic_class(), TrafficClass::Repair);
         assert_eq!(OpKind::Migrate.traffic_class(), TrafficClass::Migration);
+        assert_eq!(OpKind::Rebalance.traffic_class(), TrafficClass::Migration);
         assert_eq!(OpKind::ObjWrite.traffic_class(), TrafficClass::Foreground);
         assert_eq!(OpKind::Tx.traffic_class(), TrafficClass::Foreground);
         let g = OpGroup::with_qos(QosConfig::default());

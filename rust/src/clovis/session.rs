@@ -103,6 +103,9 @@ pub enum OpOutput {
     Repair { bytes: u64 },
     /// Proactive drain completed; bytes moved off the degrading device.
     Drain { bytes: u64 },
+    /// Rebalance completed; bytes moved onto the freshly-attached
+    /// device (elastic pool membership).
+    Rebalance { bytes: u64 },
 }
 
 /// Outcome of [`Session::run`]: per-op results plus the group
@@ -161,6 +164,7 @@ enum StagedOp<'d> {
     Migrate { hsm: &'d mut Hsm, plan: &'d [Migration] },
     Repair { objects: Vec<ObjectId>, dev: usize },
     Drain { objects: Vec<ObjectId>, dev: usize },
+    Rebalance { objects: Vec<ObjectId>, dev: usize },
 }
 
 impl StagedOp<'_> {
@@ -177,6 +181,7 @@ impl StagedOp<'_> {
             StagedOp::Migrate { .. } => OpKind::Migrate,
             StagedOp::Repair { .. } => OpKind::Repair,
             StagedOp::Drain { .. } => OpKind::Drain,
+            StagedOp::Rebalance { .. } => OpKind::Rebalance,
         }
     }
 }
@@ -320,6 +325,16 @@ impl<'c, 'd> Session<'c, 'd> {
     /// stamped into the HA repair log; the device stays in service.
     pub fn drain(&mut self, objects: &[ObjectId], dev: usize) -> OpHandle {
         self.stage(StagedOp::Drain { objects: objects.to_vec(), dev })
+    }
+
+    /// Stage a rebalance onto freshly-attached device `dev` (elastic
+    /// pool membership — the inverse of [`Session::drain`]): units of
+    /// `objects` move onto the newcomer while each move improves the
+    /// pool's balance, as Migration-class traffic capped against the
+    /// session's foreground ops. Placements of untouched objects are
+    /// unchanged.
+    pub fn rebalance(&mut self, objects: &[ObjectId], dev: usize) -> OpHandle {
+        self.stage(StagedOp::Rebalance { objects: objects.to_vec(), dev })
     }
 
     /// Declare a dependency edge: `op` dispatches at `pred`'s
@@ -700,6 +715,28 @@ fn exec(
             );
             Ok((OpOutput::Drain { bytes }, t))
         }
+
+        StagedOp::Rebalance { objects, dev } => {
+            let io_before = group.sched_ref().io_calls();
+            // no HA engagement to unwind on error: a rebalance either
+            // fails up front (failed target, unknown object) before
+            // state changes, or completes — so errors just propagate
+            let (bytes, t) = crate::mero::sns::rebalance_onto_with(
+                &mut client.store,
+                &objects,
+                dev,
+                at,
+                group.sched(),
+            )?;
+            client.addb.record(at, "sns", "rebalance_bytes", bytes as f64);
+            client.addb.record(
+                at,
+                "sns",
+                "rebalance_io_runs",
+                (group.sched_ref().io_calls() - io_before) as f64,
+            );
+            Ok((OpOutput::Rebalance { bytes }, t))
+        }
     }
 }
 
@@ -1003,6 +1040,37 @@ mod tests {
         // and the repaired data survives on the original tier
         assert_eq!(c.store.object(obj).unwrap().layout.tier(), DK::Ssd);
         assert_eq!(c.read_object(&obj, 0, data.len() as u64).unwrap(), data);
+    }
+
+    #[test]
+    fn rebalance_session_is_migration_class_and_preserves_bytes() {
+        use crate::sim::sched::TrafficClass;
+        let mut c = client();
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![8u8; 4 * STRIPE as usize];
+        c.write_object(&obj, 0, &data).unwrap();
+        let src = c.store.object(obj).unwrap().placement(0, 0).unwrap().device;
+        let prof = c.store.cluster.devices[src].profile.clone();
+        let dev = c.store.attach_device(1, prof).unwrap();
+        let mut s = c.session();
+        let h = s.rebalance(&[obj], dev);
+        let rep = s.run().unwrap();
+        let OpOutput::Rebalance { bytes } = rep.output(h) else {
+            panic!("rebalance output expected");
+        };
+        assert!(*bytes > 0, "fresh capacity attracted units");
+        let mig_busy: f64 = rep
+            .qos
+            .iter()
+            .map(|r| r.class_busy[TrafficClass::Migration.index()])
+            .sum();
+        assert!(mig_busy > 0.0, "rebalance traffic tagged Migration");
+        assert_eq!(c.read_object(&obj, 0, data.len() as u64).unwrap(), data);
+        // staging on a failed target surfaces the engine's error
+        c.store.cluster.fail_device(dev);
+        let mut s = c.session();
+        s.rebalance(&[obj], dev);
+        assert!(s.run().is_err());
     }
 
     #[test]

@@ -14,6 +14,14 @@
 //! manual intervention. Drivers poll [`FailureSchedule::next_at`] to
 //! decide how far to advance the clock between consumer passes, and
 //! re-arm repaired devices with [`FailureSchedule::inject`].
+//!
+//! Beyond independent sampling, the schedule generates CORRELATED
+//! failures over the cluster's failure topology
+//! (`cluster::FailureDomain`): [`FailureSchedule::storm`] bursts hard
+//! failures across one domain within a short window, and
+//! [`FailureSchedule::sampled_with_storms`] overlays such bursts on the
+//! independent background — both deterministic under [`SimRng`], so a
+//! storm soak replays bit-identically from its seed.
 
 use crate::cluster::DeviceId;
 use crate::sim::clock::SimTime;
@@ -51,13 +59,18 @@ pub struct FailureEvent {
 pub struct FailureSchedule {
     events: Vec<FailureEvent>,
     cursor: usize,
+    /// Highest `now` any [`FailureSchedule::due`] pass has polled —
+    /// the schedule's notion of the present. [`FailureSchedule::inject`]
+    /// clamps below-watermark events up to it so nothing ever fires
+    /// with a stale `at` in the past.
+    watermark: SimTime,
 }
 
 impl FailureSchedule {
     /// Scripted schedule (events need not be pre-sorted).
     pub fn scripted(mut events: Vec<FailureEvent>) -> Self {
         events.sort_by(|a, b| a.at.total_cmp(&b.at));
-        FailureSchedule { events, cursor: 0 }
+        FailureSchedule { events, cursor: 0, watermark: 0.0 }
     }
 
     /// Sample a schedule: each of `devices` fails independently with
@@ -90,12 +103,88 @@ impl FailureSchedule {
         Self::scripted(events)
     }
 
+    /// Correlated burst: EVERY device of one failure domain hard-fails
+    /// at a uniform offset within `[start, start + window)` — the
+    /// simulated shape of a PDU trip or rack cooling loss
+    /// (`cluster::FailureDomain` enumerates domain members via
+    /// `Cluster::domain_devices`). Deterministic under `rng`: the same
+    /// seed yields bit-identical event times.
+    pub fn storm(
+        devices: &[DeviceId],
+        start: SimTime,
+        window: SimTime,
+        rng: &mut SimRng,
+    ) -> Self {
+        let window = window.max(0.0);
+        let events = devices
+            .iter()
+            .map(|&d| FailureEvent {
+                at: start + rng.gen_f64() * window,
+                kind: FailureKind::Device(d),
+            })
+            .collect();
+        Self::scripted(events)
+    }
+
+    /// Mixed sampler: the independent background of
+    /// [`FailureSchedule::sampled`] overlaid with `storms` correlated
+    /// bursts. Each burst picks one domain from `domains` (a list of
+    /// device groups, e.g. `Cluster::domain_devices` per enclosure)
+    /// and strikes it [`FailureSchedule::storm`]-style at a uniform
+    /// start within the horizon. Deterministic under `rng`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sampled_with_storms(
+        devices: &[DeviceId],
+        mtbf: f64,
+        horizon: SimTime,
+        transient_ratio: f64,
+        domains: &[Vec<DeviceId>],
+        storms: usize,
+        storm_window: SimTime,
+        rng: &mut SimRng,
+    ) -> Self {
+        let mut all =
+            Self::sampled(devices, mtbf, horizon, transient_ratio, rng);
+        for _ in 0..storms {
+            if domains.is_empty() {
+                break;
+            }
+            let domain = &domains[rng.gen_index(domains.len())];
+            let start =
+                rng.gen_f64() * (horizon - storm_window).max(0.0);
+            all.merge(Self::storm(domain, start, storm_window, rng));
+        }
+        all
+    }
+
+    /// Fold `other`'s pending events into this schedule, keeping time
+    /// order (already-popped events of either side are dropped). Used
+    /// to overlay a storm on a live feed mid-run.
+    pub fn merge(&mut self, other: FailureSchedule) {
+        let mut rest: Vec<FailureEvent> =
+            self.events.split_off(self.cursor);
+        rest.extend(other.events.into_iter().skip(other.cursor));
+        // same stale-`at` rule as `inject`: nothing lands in the past
+        for e in &mut rest {
+            e.at = e.at.max(self.watermark);
+        }
+        rest.sort_by(|a, b| a.at.total_cmp(&b.at));
+        self.events.extend(rest);
+    }
+
     /// Insert a future event, keeping time order. Used by the recovery
     /// plane: once SNS repair rebuilds a device and `replace_device`
     /// returns it to service, the device rejoins the failure
     /// population — callers re-arm it by injecting its next sampled
     /// failure after the repair completion time.
+    ///
+    /// An event at or before the schedule's watermark (the highest
+    /// `now` any [`FailureSchedule::due`] pass has seen) would
+    /// otherwise land at the cursor and fire on the next pass with a
+    /// stale `at` in the past; such events are clamped up to the
+    /// watermark, so they still fire — at the present, not before it.
     pub fn inject(&mut self, ev: FailureEvent) {
+        let ev = FailureEvent { at: ev.at.max(self.watermark), ..ev };
         let pos = self.events[self.cursor..]
             .iter()
             .position(|e| e.at > ev.at)
@@ -107,13 +196,42 @@ impl FailureSchedule {
     /// Pop all events with `at <= now`.
     pub fn due(&mut self, now: SimTime) -> Vec<FailureEvent> {
         let mut out = Vec::new();
-        while self.cursor < self.events.len()
-            && self.events[self.cursor].at <= now
-        {
-            out.push(self.events[self.cursor]);
-            self.cursor += 1;
+        while let Some(ev) = self.pop_next(now) {
+            out.push(ev);
         }
         out
+    }
+
+    /// Pop at most ONE due event (`at <= now`), advancing the
+    /// watermark. The storm-hardened consumer drains events one at a
+    /// time so escalations decided mid-batch stay in time order.
+    pub fn pop_next(&mut self, now: SimTime) -> Option<FailureEvent> {
+        self.watermark = self.watermark.max(now);
+        if self.cursor < self.events.len()
+            && self.events[self.cursor].at <= now
+        {
+            let ev = self.events[self.cursor];
+            self.cursor += 1;
+            return Some(ev);
+        }
+        None
+    }
+
+    /// The events [`FailureSchedule::due`] would pop at `now`, without
+    /// consuming them or moving the watermark — drivers (the soak
+    /// harness) size a batch before handing it to the consumer.
+    pub fn peek_due(&self, now: SimTime) -> &[FailureEvent] {
+        let mut end = self.cursor;
+        while end < self.events.len() && self.events[end].at <= now {
+            end += 1;
+        }
+        &self.events[self.cursor..end]
+    }
+
+    /// Highest `now` any [`FailureSchedule::due`] /
+    /// [`FailureSchedule::pop_next`] pass has polled.
+    pub fn watermark(&self) -> SimTime {
+        self.watermark
     }
 
     /// Remaining event count.
@@ -170,6 +288,96 @@ mod tests {
         let s = FailureSchedule::sampled(&devs, 1000.0, 100.0, 0.5, &mut rng);
         // expected ~100 * 100/1000 = ~10 first-arrivals within horizon
         assert!(s.remaining() > 2 && s.remaining() < 40, "{}", s.remaining());
+    }
+
+    #[test]
+    fn inject_clamps_stale_events_to_watermark() {
+        let mut s = FailureSchedule::scripted(vec![
+            FailureEvent { at: 1.0, kind: FailureKind::Transient(0) },
+            FailureEvent { at: 9.0, kind: FailureKind::Device(1) },
+        ]);
+        assert_eq!(s.due(5.0).len(), 1);
+        assert_eq!(s.watermark(), 5.0);
+        // an event dated BEFORE the last polled time must not fire
+        // with its stale `at`: it is clamped up to the watermark
+        s.inject(FailureEvent { at: 1.5, kind: FailureKind::Device(7) });
+        let d = s.due(5.0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind.device(), 7);
+        assert_eq!(d[0].at, 5.0, "stale at clamped to injection-time now");
+        // future injections are untouched
+        s.inject(FailureEvent { at: 7.0, kind: FailureKind::Device(8) });
+        let d = s.due(10.0);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].at, 7.0);
+        assert_eq!(d[1].at, 9.0);
+    }
+
+    #[test]
+    fn storm_bursts_whole_domain_within_window() {
+        let mut rng = SimRng::new(11);
+        let domain = vec![3, 4, 5, 6];
+        let s = FailureSchedule::storm(&domain, 100.0, 2.0, &mut rng);
+        assert_eq!(s.remaining(), domain.len());
+        let mut seen: Vec<DeviceId> = Vec::new();
+        let mut t_prev = 0.0f64;
+        for ev in s.clone().due(f64::INFINITY) {
+            assert!(matches!(ev.kind, FailureKind::Device(_)), "hard only");
+            assert!((100.0..102.0).contains(&ev.at), "at {}", ev.at);
+            assert!(ev.at >= t_prev, "time-ordered");
+            t_prev = ev.at;
+            seen.push(ev.kind.device());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, domain, "every domain member struck once");
+    }
+
+    #[test]
+    fn storm_and_mixed_sampler_are_deterministic() {
+        let bits = |s: &FailureSchedule| -> Vec<(u64, FailureKind)> {
+            s.clone()
+                .due(f64::INFINITY)
+                .iter()
+                .map(|e| (e.at.to_bits(), e.kind))
+                .collect()
+        };
+        let a = FailureSchedule::storm(&[0, 1, 2], 5.0, 1.0, &mut SimRng::new(9));
+        let b = FailureSchedule::storm(&[0, 1, 2], 5.0, 1.0, &mut SimRng::new(9));
+        assert_eq!(bits(&a), bits(&b), "storm bit-identical under one seed");
+
+        let devs: Vec<DeviceId> = (0..12).collect();
+        let domains = vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]];
+        let mk = |seed| {
+            FailureSchedule::sampled_with_storms(
+                &devs, 5000.0, 1000.0, 0.4, &domains, 2, 3.0,
+                &mut SimRng::new(seed),
+            )
+        };
+        let (a, b) = (mk(33), mk(33));
+        assert_eq!(bits(&a), bits(&b), "mixed sampler bit-identical");
+        // the storms actually landed on top of the background
+        assert!(a.remaining() >= 6, "{} events", a.remaining());
+        assert_ne!(bits(&a), bits(&mk(34)), "seeds differ");
+    }
+
+    #[test]
+    fn merge_interleaves_and_peek_matches_due() {
+        let mut s = FailureSchedule::scripted(vec![
+            FailureEvent { at: 2.0, kind: FailureKind::Transient(0) },
+            FailureEvent { at: 8.0, kind: FailureKind::Device(1) },
+        ]);
+        assert_eq!(s.due(3.0).len(), 1);
+        s.merge(FailureSchedule::scripted(vec![
+            FailureEvent { at: 1.0, kind: FailureKind::Device(5) }, // stale
+            FailureEvent { at: 6.0, kind: FailureKind::Device(6) },
+        ]));
+        let peeked: Vec<DeviceId> =
+            s.peek_due(8.0).iter().map(|e| e.kind.device()).collect();
+        assert_eq!(s.remaining(), 3);
+        let popped: Vec<DeviceId> =
+            s.due(8.0).iter().map(|e| e.kind.device()).collect();
+        assert_eq!(peeked, popped);
+        assert_eq!(popped, vec![5, 6, 1], "stale event clamped, order kept");
     }
 
     #[test]

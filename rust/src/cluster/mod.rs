@@ -2,6 +2,18 @@
 //! inventory, and the interconnect (§3.1: enclosures with embedded x86
 //! compute joined by FDR InfiniBand; compute capability increases for
 //! faster tiers).
+//!
+//! ## Failure topology
+//!
+//! §3.2.1 expects "several hardware failures per second at Exascale",
+//! and production failures are spatially CORRELATED: a PDU trip or
+//! cooling loss takes out every device under one domain at once. The
+//! cluster therefore carries a three-level failure topology — device →
+//! enclosure (one [`StorageNode`]) → rack (a group of enclosures,
+//! [`StorageNode::rack`]) — and [`Cluster::domain_devices`] enumerates
+//! the blast radius of a [`FailureDomain`]. The correlated generators
+//! in [`failure`] ([`failure::FailureSchedule::storm`] and the mixed
+//! storm+background sampler) draw their targets from these domains.
 
 pub mod failure;
 
@@ -14,6 +26,24 @@ use crate::sim::sched::QosConfig;
 pub type NodeId = usize;
 /// Index of a device in the cluster inventory.
 pub type DeviceId = usize;
+/// Index of a rack (the failure domain above the enclosure).
+pub type RackId = usize;
+
+/// Enclosures per rack under the default assignment of
+/// [`Cluster::add_node`] (rack = node id / this).
+pub const ENCLOSURES_PER_RACK: usize = 2;
+
+/// One level of the cluster's failure topology: the set of devices a
+/// correlated failure strikes together.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureDomain {
+    /// A single device (the uncorrelated case).
+    Device(DeviceId),
+    /// Every device of one enclosure/node (backplane, PSU).
+    Enclosure(NodeId),
+    /// Every device of every enclosure in one rack (PDU, cooling).
+    Rack(RackId),
+}
 
 /// In-enclosure compute capability (standard x86 embedded parts; used
 /// to cost function-shipped computations on storage nodes).
@@ -30,6 +60,10 @@ pub struct StorageNode {
     pub id: NodeId,
     pub devices: Vec<DeviceId>,
     pub compute: EnclosureCompute,
+    /// Rack this enclosure sits in ([`Cluster::add_node`] assigns
+    /// `id / ENCLOSURES_PER_RACK`; [`Cluster::add_node_in_rack`] takes
+    /// it explicitly).
+    pub rack: RackId,
 }
 
 /// The simulated SAGE cluster.
@@ -58,18 +92,31 @@ impl Cluster {
     }
 
     /// Add a node with the given device profiles and compute capability;
-    /// returns its id. Per §3.1, faster tiers get more compute.
+    /// returns its id. Per §3.1, faster tiers get more compute. Racks
+    /// group consecutive enclosures [`ENCLOSURES_PER_RACK`] at a time.
     pub fn add_node(
         &mut self,
         profiles: Vec<DeviceProfile>,
         compute: EnclosureCompute,
+    ) -> NodeId {
+        let rack = self.nodes.len() / ENCLOSURES_PER_RACK;
+        self.add_node_in_rack(profiles, compute, rack)
+    }
+
+    /// [`Cluster::add_node`] with an explicit rack assignment (testbeds
+    /// modelling a concrete machine-room layout).
+    pub fn add_node_in_rack(
+        &mut self,
+        profiles: Vec<DeviceProfile>,
+        compute: EnclosureCompute,
+        rack: RackId,
     ) -> NodeId {
         let id = self.nodes.len();
         let mut dev_ids = Vec::with_capacity(profiles.len());
         for p in profiles {
             dev_ids.push(self.add_device(p));
         }
-        self.nodes.push(StorageNode { id, devices: dev_ids, compute });
+        self.nodes.push(StorageNode { id, devices: dev_ids, compute, rack });
         id
     }
 
@@ -80,12 +127,60 @@ impl Cluster {
         id
     }
 
+    /// Attach a device to an EXISTING enclosure at runtime (elastic
+    /// capacity under load); returns its id. The pool layer must also
+    /// learn about it — `MeroStore::attach_device` does both.
+    pub fn attach_device(
+        &mut self,
+        node: NodeId,
+        profile: DeviceProfile,
+    ) -> DeviceId {
+        let id = self.add_device(profile);
+        self.nodes[node].devices.push(id);
+        id
+    }
+
     /// Node owning `dev`, if any.
     pub fn node_of(&self, dev: DeviceId) -> Option<NodeId> {
         self.nodes
             .iter()
             .find(|n| n.devices.contains(&dev))
             .map(|n| n.id)
+    }
+
+    /// Rack holding `dev`, if it belongs to any enclosure.
+    pub fn rack_of(&self, dev: DeviceId) -> Option<RackId> {
+        self.node_of(dev).map(|n| self.nodes[n].rack)
+    }
+
+    /// Number of racks (highest rack id + 1; 0 for an empty cluster).
+    pub fn racks(&self) -> usize {
+        self.nodes.iter().map(|n| n.rack + 1).max().unwrap_or(0)
+    }
+
+    /// Every device under `domain` — the blast radius of a correlated
+    /// failure there. Includes already-failed devices; callers filter.
+    pub fn domain_devices(&self, domain: FailureDomain) -> Vec<DeviceId> {
+        match domain {
+            FailureDomain::Device(d) => {
+                if d < self.devices.len() {
+                    vec![d]
+                } else {
+                    Vec::new()
+                }
+            }
+            FailureDomain::Enclosure(n) => self
+                .nodes
+                .get(n)
+                .map(|node| node.devices.clone())
+                .unwrap_or_default(),
+            FailureDomain::Rack(r) => self
+                .nodes
+                .iter()
+                .filter(|n| n.rack == r)
+                .flat_map(|n| n.devices.iter().copied())
+                .collect(),
+        }
     }
 
     /// Submit an I/O to `dev` at `now`; returns completion time.
@@ -175,5 +270,45 @@ mod tests {
     fn faster_node_computes_faster() {
         let c = mini();
         assert!(c.compute_time(0, 1e9) < c.compute_time(1, 1e9));
+    }
+
+    #[test]
+    fn failure_domains_nest_device_enclosure_rack() {
+        let mut c = mini();
+        // a third node lands in rack 1 under the default grouping
+        c.add_node(
+            vec![DeviceProfile::smr(1 << 40)],
+            EnclosureCompute { cores: 4, flops: 1e10 },
+        );
+        assert_eq!(c.nodes[0].rack, 0);
+        assert_eq!(c.nodes[1].rack, 0);
+        assert_eq!(c.nodes[2].rack, 1);
+        assert_eq!(c.racks(), 2);
+        assert_eq!(c.rack_of(0), Some(0));
+        assert_eq!(c.rack_of(3), Some(1));
+        assert_eq!(c.domain_devices(FailureDomain::Device(1)), vec![1]);
+        assert_eq!(c.domain_devices(FailureDomain::Enclosure(0)), vec![0, 1]);
+        assert_eq!(c.domain_devices(FailureDomain::Rack(0)), vec![0, 1, 2]);
+        assert_eq!(c.domain_devices(FailureDomain::Rack(1)), vec![3]);
+        // out-of-range domains are empty, not panics
+        assert!(c.domain_devices(FailureDomain::Device(99)).is_empty());
+        assert!(c.domain_devices(FailureDomain::Enclosure(99)).is_empty());
+        assert!(c.domain_devices(FailureDomain::Rack(99)).is_empty());
+    }
+
+    #[test]
+    fn explicit_rack_assignment_and_attach() {
+        let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+        let n0 = c.add_node_in_rack(
+            vec![DeviceProfile::ssd(1 << 34)],
+            EnclosureCompute { cores: 16, flops: 5e10 },
+            7,
+        );
+        assert_eq!(c.nodes[n0].rack, 7);
+        assert_eq!(c.racks(), 8);
+        let d = c.attach_device(n0, DeviceProfile::ssd(1 << 34));
+        assert_eq!(c.node_of(d), Some(n0));
+        assert_eq!(c.rack_of(d), Some(7));
+        assert_eq!(c.domain_devices(FailureDomain::Enclosure(n0)).len(), 2);
     }
 }

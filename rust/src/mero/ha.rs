@@ -61,6 +61,11 @@ pub struct HaSubsystem {
     pub repairs_started: u64,
     pub drains_started: u64,
     pub alerts: u64,
+    /// Recoveries retracted before completing: error paths AND
+    /// abort-and-restart when a device re-fails while its recovery
+    /// session is in flight (storm overlap; see
+    /// [`HaSubsystem::reopen_last`]).
+    pub repairs_aborted: u64,
 }
 
 impl Default for HaSubsystem {
@@ -82,6 +87,7 @@ impl HaSubsystem {
             repairs_started: 0,
             drains_started: 0,
             alerts: 0,
+            repairs_aborted: 0,
         }
     }
 
@@ -151,12 +157,33 @@ impl HaSubsystem {
     }
 
     /// A recovery action that FAILED to complete (e.g. a drain with no
-    /// spare capacity): un-engage the device WITHOUT logging a repair
-    /// interval, so future failure events on it decide fresh actions
-    /// instead of being suppressed by the in-repair check forever.
-    /// Called by the recovery plane's error paths.
+    /// spare capacity) or was preempted by a re-failure: un-engage the
+    /// device WITHOUT logging a repair interval, so future failure
+    /// events on it decide fresh actions instead of being suppressed
+    /// by the in-repair check forever. Called by the recovery plane's
+    /// error paths and its storm-overlap handling.
     pub fn repair_aborted(&mut self, dev: DeviceId) {
-        self.in_repair.remove(&dev);
+        if self.in_repair.remove(&dev).is_some() {
+            self.repairs_aborted += 1;
+        }
+    }
+
+    /// Retract the most recent LOGGED recovery of `dev` and re-engage
+    /// the device as in-flight from that recovery's original
+    /// engagement time. The storm-hardened feed consumer calls this
+    /// when a device RE-FAILS at a virtual time before its previous
+    /// recovery's completion stamp: that recovery never really
+    /// finished, so its interval must not count — the consumer retracts
+    /// it here, then aborts the re-engaged attempt
+    /// ([`HaSubsystem::repair_aborted`]) and lets the re-failure event
+    /// decide a fresh repair. Returns the retracted
+    /// `(engaged_at, completed_at)` interval, or `None` when `dev` has
+    /// no logged recovery (nothing to retract).
+    pub fn reopen_last(&mut self, dev: DeviceId) -> Option<(SimTime, SimTime)> {
+        let idx = self.repair_log.iter().rposition(|(d, _, _)| *d == dev)?;
+        let (_, engaged_at, completed_at) = self.repair_log.remove(idx);
+        self.in_repair.insert(dev, engaged_at);
+        Some((engaged_at, completed_at))
     }
 
     /// Mean duration of completed recovery actions in virtual time
@@ -229,6 +256,33 @@ mod tests {
             RepairAction::RebuildDevice(5),
             "the hard failure is acted on, not suppressed"
         );
+    }
+
+    #[test]
+    fn reopen_last_retracts_the_stamp_and_reengages() {
+        let mut ha = HaSubsystem::new();
+        assert_eq!(ha.observe(ev(1.0, FailureKind::Device(3)), |_| Some(0)),
+            RepairAction::RebuildDevice(3));
+        ha.repair_done(3, 10.0);
+        // the device re-fails at t=5.0 < completion 10.0: the consumer
+        // retracts the stamp and aborts the re-engaged attempt
+        assert_eq!(ha.reopen_last(3), Some((1.0, 10.0)));
+        assert!(ha.repair_log.is_empty(), "interval retracted");
+        assert_eq!(ha.repairing(), vec![3], "re-engaged as in-flight");
+        ha.repair_aborted(3);
+        assert_eq!(ha.repairs_aborted, 1);
+        assert!(ha.repairing().is_empty());
+        // the re-failure decides a FRESH repair, counted again
+        assert_eq!(ha.observe(ev(5.0, FailureKind::Device(3)), |_| Some(0)),
+            RepairAction::RebuildDevice(3));
+        assert_eq!(ha.repairs_started, 2);
+        ha.repair_done(3, 12.0);
+        assert_eq!(ha.repair_log, vec![(3, 5.0, 12.0)], "one interval, not two");
+        // nothing to retract on a device with no logged recovery
+        assert_eq!(ha.reopen_last(99), None);
+        // aborting an unengaged device is a no-op, not a double count
+        ha.repair_aborted(99);
+        assert_eq!(ha.repairs_aborted, 1);
     }
 
     #[test]

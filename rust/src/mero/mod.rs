@@ -78,6 +78,82 @@ impl MeroStore {
         id
     }
 
+    /// Elastic pool membership: attach a fresh device to enclosure
+    /// `node` and register it with its tier's pool, all under load —
+    /// allocations (foreground writes, repairs, drains) see the new
+    /// capacity immediately; existing placements are untouched until a
+    /// Migration-class rebalance session moves units onto it
+    /// (`sns::rebalance_onto_with`, the inverse of `sns::drain_with`).
+    /// Returns the new device's id.
+    pub fn attach_device(
+        &mut self,
+        node: crate::cluster::NodeId,
+        profile: crate::sim::device::DeviceProfile,
+    ) -> Result<crate::cluster::DeviceId> {
+        if node >= self.cluster.nodes.len() {
+            return Err(SageError::Invalid(format!(
+                "attach_device: no node {node}"
+            )));
+        }
+        let dev = self.cluster.attach_device(node, profile);
+        self.pools.register(&self.cluster, dev);
+        Ok(dev)
+    }
+
+    /// Objects whose redundancy no longer covers their device losses:
+    /// a RAID stripe with more than one data unit on failed devices
+    /// (XOR parity reconstructs at most one), or with fewer live units
+    /// than `data`; a mirror with every replica failed. This is the
+    /// same arithmetic `sns::plan_reconstruct` errors with — the
+    /// recovery plane uses it to turn a beyond-parity storm into a
+    /// typed data-loss verdict (`clovis::RecoveryVerdict::DataLoss`)
+    /// instead of a panic or silent corruption.
+    pub fn unrecoverable_objects(&self, objects: &[ObjectId]) -> Vec<ObjectId> {
+        let mut out = Vec::new();
+        for &id in objects {
+            let Ok(obj) = self.object(id) else { continue };
+            let lost = match obj.layout.at_offset(0) {
+                Layout::Raid { data, .. } => {
+                    let data = *data;
+                    // per stripe: (data units on failed devices, live units)
+                    let mut per_stripe: HashMap<u64, (u32, u32)> =
+                        HashMap::new();
+                    for pu in obj.placed_units() {
+                        let e = per_stripe.entry(pu.stripe).or_insert((0, 0));
+                        if self.cluster.devices[pu.device].failed {
+                            if pu.unit < data {
+                                e.0 += 1;
+                            }
+                        } else {
+                            e.1 += 1;
+                        }
+                    }
+                    per_stripe
+                        .values()
+                        .any(|&(lost_data, alive)| {
+                            lost_data > 1 || (lost_data > 0 && alive < data)
+                        })
+                }
+                Layout::Mirror { .. } => {
+                    let mut placed = false;
+                    let mut all_failed = true;
+                    for pu in obj.placed_units() {
+                        placed = true;
+                        if !self.cluster.devices[pu.device].failed {
+                            all_failed = false;
+                        }
+                    }
+                    placed && all_failed
+                }
+                _ => false,
+            };
+            if lost {
+                out.push(id);
+            }
+        }
+        out
+    }
+
     // ----------------------------------------------------------- objects
 
     /// Create an object with the given block size (must be a power of
@@ -350,6 +426,66 @@ mod tests {
         s.delete_object(id).unwrap();
         assert!(s.object(id).is_err());
         assert!(s.delete_object(id).is_err());
+    }
+
+    #[test]
+    fn attach_device_registers_with_pools() {
+        use crate::sim::device::DeviceProfile;
+        let mut s = store();
+        let before = s.pools.devices(DeviceKind::Ssd).len();
+        let d = s.attach_device(0, DeviceProfile::ssd(1 << 34)).unwrap();
+        assert_eq!(s.pools.devices(DeviceKind::Ssd).len(), before + 1);
+        assert_eq!(s.cluster.node_of(d), Some(0));
+        assert!(matches!(
+            s.attach_device(99, DeviceProfile::ssd(1 << 34)),
+            Err(SageError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn unrecoverable_objects_applies_parity_arithmetic() {
+        use crate::mero::object::PlacedUnit;
+        let mut s = store();
+        let id = s.create_object(4096, Layout::default()).unwrap();
+        // hand-place one 4+1 stripe: unit 0 on device 0, the rest on 1
+        for (unit, device) in [(0, 0), (1, 1), (2, 1), (3, 1), (4, 1)] {
+            s.object_mut(id).unwrap().place_unit(PlacedUnit {
+                stripe: 0,
+                unit,
+                device,
+                size: 65536,
+                is_parity: unit == 4,
+            });
+        }
+        assert!(s.unrecoverable_objects(&[id]).is_empty(), "healthy");
+        s.cluster.fail_device(0);
+        // one data unit lost, 4 live units >= data=4: reconstructable
+        assert!(s.unrecoverable_objects(&[id]).is_empty());
+        s.cluster.fail_device(1);
+        // beyond XOR tolerance now
+        assert_eq!(s.unrecoverable_objects(&[id]), vec![id]);
+        // mirrors: lost only when EVERY replica is on a failed device
+        s.cluster.replace_device(0);
+        let m = s
+            .create_object(
+                4096,
+                Layout::Mirror { copies: 2, tier: DeviceKind::Hdd },
+            )
+            .unwrap();
+        for (unit, device) in [(0, 0), (1, 1)] {
+            s.object_mut(m).unwrap().place_unit(PlacedUnit {
+                stripe: 0,
+                unit,
+                device,
+                size: 4096,
+                is_parity: false,
+            });
+        }
+        assert!(s.unrecoverable_objects(&[m]).is_empty(), "one replica lives");
+        s.cluster.fail_device(0);
+        assert_eq!(s.unrecoverable_objects(&[m]), vec![m]);
+        // unknown ids are skipped, not errors
+        assert!(s.unrecoverable_objects(&[ObjectId(999)]).is_empty());
     }
 
     #[test]

@@ -35,6 +35,27 @@ impl PoolSet {
         set
     }
 
+    /// Register a newly-attached device into its kind's pool (elastic
+    /// membership under load): allocations — foreground writes,
+    /// repairs, drains — see the new capacity immediately. Existing
+    /// placements are untouched until a Migration-class rebalance
+    /// session moves units onto it (`sns::rebalance_onto_with`, the
+    /// inverse of `sns::drain_with`). Idempotent; DRAM is never
+    /// pooled.
+    pub fn register(&mut self, cluster: &Cluster, dev: DeviceId) {
+        let kind = cluster.devices[dev].profile.kind;
+        if kind == DeviceKind::Dram {
+            return;
+        }
+        let pool = self
+            .pools
+            .entry(kind.tier())
+            .or_insert_with(|| (kind, Vec::new()));
+        if !pool.1.contains(&dev) {
+            pool.1.push(dev);
+        }
+    }
+
     /// Devices of a tier (by kind), failed ones filtered by the caller.
     pub fn devices(&self, kind: DeviceKind) -> &[DeviceId] {
         self.pools
@@ -163,6 +184,32 @@ mod tests {
         // least-utilized: a third unexcluded allocation balances
         let d3 = p.allocate(&mut c, DeviceKind::Ssd, 1 << 19, &[]).unwrap();
         assert!(d3 == d1 || d3 == d2);
+    }
+
+    #[test]
+    fn register_grows_the_pool_under_load() {
+        let mut c = cluster();
+        let mut p = PoolSet::from_cluster(&c);
+        assert_eq!(p.devices(DeviceKind::Ssd).len(), 2);
+        let d = c.attach_device(0, DeviceProfile::ssd(1 << 30));
+        p.register(&c, d);
+        assert_eq!(p.devices(DeviceKind::Ssd).len(), 3);
+        // idempotent
+        p.register(&c, d);
+        assert_eq!(p.devices(DeviceKind::Ssd).len(), 3);
+        // the empty newcomer is least-utilized → next allocation lands on it
+        c.devices[p.devices(DeviceKind::Ssd)[0]].used = 1 << 20;
+        c.devices[p.devices(DeviceKind::Ssd)[1]].used = 1 << 20;
+        let got = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[]).unwrap();
+        assert_eq!(got, d);
+        // a kind absent so far creates its pool
+        let smr = c.attach_device(0, DeviceProfile::smr(1 << 40));
+        p.register(&c, smr);
+        assert_eq!(p.devices(DeviceKind::Smr), &[smr]);
+        // DRAM never pools
+        let dram = c.attach_device(0, DeviceProfile::dram(1 << 30, 1e11));
+        p.register(&c, dram);
+        assert!(p.devices(DeviceKind::Dram).is_empty());
     }
 
     #[test]

@@ -1306,6 +1306,149 @@ fn drain_with_inner(
     Ok((bytes, t_done))
 }
 
+/// Rebalance onto a newly-attached device as a self-contained op
+/// (private scheduler). See [`rebalance_onto_with`].
+pub fn rebalance_onto(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    dev: usize,
+    now: SimTime,
+) -> Result<(u64, SimTime)> {
+    let mut sched = IoScheduler::new();
+    rebalance_onto_with(store, objects, dev, now, &mut sched)
+}
+
+/// Rebalance onto a newly-attached device: the INVERSE of
+/// [`drain_with`], completing the elastic-pool story — after
+/// `MeroStore::attach_device` registers fresh capacity, this moves
+/// existing placements onto it so the pool's load levels out instead
+/// of only new writes landing there.
+///
+/// Two-phase like a drain, with source and target swapped: phase A
+/// walks `objects` in caller order and plans one move per eligible
+/// unit — eligible when the unit's tier matches `dev`'s kind, its
+/// stripe has no unit on `dev` yet (one-device-per-stripe-unit is
+/// preserved), its source device is live, and moving it still leaves
+/// the source more utilized than the target (each move must improve
+/// balance, so the plan terminates at the pool mean) — submitting the
+/// source read in ONE pass. Phase B rewrites each planned unit on
+/// `dev` at its own read frontier and re-points its placement.
+///
+/// Placements of every object the plan does not touch are unchanged —
+/// placement equivalence, pinned by `tests/prop_storm.rs`. Logical
+/// bytes (block map) and parity payloads never move, so objects read
+/// back identically.
+///
+/// Every I/O dispatches as [`TrafficClass::Migration`] — a rebalance
+/// is background data movement, capped by the QoS split's
+/// `migration_share` against foreground traffic (the Clovis session
+/// stages it as a Migration-class op).
+pub fn rebalance_onto_with(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    dev: usize,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<(u64, SimTime)> {
+    sched.with_class(TrafficClass::Migration, |sched| {
+        rebalance_onto_inner(store, objects, dev, now, sched)
+    })
+}
+
+fn rebalance_onto_inner(
+    store: &mut MeroStore,
+    objects: &[ObjectId],
+    dev: usize,
+    now: SimTime,
+    sched: &mut IoScheduler,
+) -> Result<(u64, SimTime)> {
+    if store.cluster.devices[dev].failed {
+        return Err(SageError::Invalid(format!(
+            "rebalance targets a live device; device {dev} has failed"
+        )));
+    }
+    let kind = store.cluster.devices[dev].profile.kind;
+    let cap = store.cluster.devices[dev].profile.capacity.max(1);
+
+    // One unit moving onto the new device: its rewrite waits on its
+    // own source-read ticket, not on the whole phase.
+    struct Move {
+        id: ObjectId,
+        pu: PlacedUnit,
+        ticket: Ticket,
+    }
+
+    // ---- phase A: plan against projected utilizations and submit the
+    // source reads in one pass ----
+    let mut dst_used = store.cluster.devices[dev].used;
+    let mut src_used: std::collections::HashMap<usize, u64> =
+        std::collections::HashMap::new();
+    let mut moves: Vec<Move> = Vec::new();
+    for &id in objects {
+        if store.object(id)?.layout.tier() != kind {
+            continue;
+        }
+        let units: Vec<PlacedUnit> =
+            store.object(id)?.placed_units().copied().collect();
+        let mut stripes_on_dev: std::collections::HashSet<u64> = units
+            .iter()
+            .filter(|u| u.device == dev)
+            .map(|u| u.stripe)
+            .collect();
+        for pu in units {
+            if pu.device == dev || stripes_on_dev.contains(&pu.stripe) {
+                continue;
+            }
+            let src = &store.cluster.devices[pu.device];
+            if src.failed {
+                continue; // failed sources are repair's job
+            }
+            if dst_used + pu.size > cap {
+                break; // target full: the plan is done
+            }
+            let su = *src_used
+                .entry(pu.device)
+                .or_insert(src.used);
+            // each move must improve balance: after it, the target is
+            // still no fuller than the source was — the plan converges
+            // to the pool mean and never overshoots
+            let dst_after = (dst_used + pu.size) as f64 / cap as f64;
+            let src_before = su as f64 / src.profile.capacity.max(1) as f64;
+            if dst_after >= src_before {
+                continue;
+            }
+            let ticket =
+                sched.submit(pu.device, now, pu.size, IoOp::Read, Access::Seq);
+            dst_used += pu.size;
+            *src_used.get_mut(&pu.device).unwrap() =
+                su.saturating_sub(pu.size);
+            stripes_on_dev.insert(pu.stripe);
+            moves.push(Move { id, pu, ticket });
+        }
+    }
+    if moves.is_empty() {
+        return Ok((0, now));
+    }
+    sched.drain(&mut store.cluster.devices);
+
+    // ---- phase B: rewrite each unit on the new device at its own
+    // read frontier ----
+    let mut bytes = 0u64;
+    for m in moves {
+        let t_read = sched.completion(m.ticket);
+        sched.submit(dev, t_read, m.pu.size, IoOp::Write, Access::Seq);
+        store.cluster.devices[dev].used += m.pu.size;
+        store.object_mut(m.id)?.place_unit(PlacedUnit {
+            device: dev,
+            ..m.pu
+        });
+        store.pools.release(&mut store.cluster, m.pu.device, m.pu.size);
+        bytes += m.pu.size;
+    }
+    let t_done = now.max(sched.drain(&mut store.cluster.devices));
+    Ok((bytes, t_done))
+}
+
 // ------------------------------------------------------------ compression
 
 /// Deflate (compressed layouts) via the in-tree run codec. Header =
@@ -1547,6 +1690,73 @@ mod tests {
         let (bytes, t) = drain(&mut s, &[id], empty, 5.0).unwrap();
         assert_eq!(bytes, 0);
         assert_eq!(t, 5.0);
+    }
+
+    #[test]
+    fn rebalance_moves_units_onto_fresh_capacity() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let other = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 4, 31);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let odata = random_bytes(4 * 16384, 32);
+        s.write_object(other, 0, &odata, 0.0, None).unwrap();
+        let before_other: Vec<PlacedUnit> =
+            s.object(other).unwrap().placed_units().copied().collect();
+        let src = s.object(id).unwrap().placement(0, 0).unwrap().device;
+        let prof = s.cluster.devices[src].profile.clone();
+        let dev = s.attach_device(1, prof).unwrap();
+        let (bytes, t) = rebalance_onto(&mut s, &[id], dev, 1.0).unwrap();
+        assert!(bytes >= 16384, "fresh capacity attracts at least one unit");
+        assert_eq!(bytes % 16384, 0);
+        assert!(t > 1.0, "the rebalance takes virtual time");
+        assert_eq!(s.cluster.devices[dev].used, bytes);
+        // per-stripe placement stays one-device-per-unit
+        for pu in s.object(id).unwrap().placed_units() {
+            let same = s
+                .object(id)
+                .unwrap()
+                .placed_units()
+                .filter(|o| o.stripe == pu.stripe && o.device == pu.device)
+                .count();
+            assert_eq!(same, 1, "stripe units stay on distinct devices");
+        }
+        // bytes unchanged…
+        let (back, _) = s.read_object(id, 0, data.len() as u64, t).unwrap();
+        assert_eq!(back, data);
+        // …and redundancy holds: the newcomer itself can fail
+        s.cluster.fail_device(dev);
+        let (back2, _) =
+            s.read_object(id, 0, data.len() as u64, t + 1.0).unwrap();
+        assert_eq!(back2, data, "parity covers losing the new device");
+        // placement equivalence for the object the plan never touched
+        let after_other: Vec<PlacedUnit> =
+            s.object(other).unwrap().placed_units().copied().collect();
+        assert_eq!(before_other, after_other, "untouched object unmoved");
+    }
+
+    #[test]
+    fn rebalance_rejects_failed_target_and_converges_to_noop() {
+        let mut s = store();
+        let id = raid_obj(&mut s, 4, 1);
+        let data = random_bytes(4 * 16384 * 4, 33);
+        s.write_object(id, 0, &data, 0.0, None).unwrap();
+        let src = s.object(id).unwrap().placement(0, 0).unwrap().device;
+        let prof = s.cluster.devices[src].profile.clone();
+        let dev = s.attach_device(2, prof).unwrap();
+        s.cluster.fail_device(dev);
+        assert!(matches!(
+            rebalance_onto(&mut s, &[id], dev, 1.0),
+            Err(SageError::Invalid(_))
+        ));
+        s.cluster.replace_device(dev);
+        let (bytes, t) = rebalance_onto(&mut s, &[id], dev, 1.0).unwrap();
+        assert!(bytes > 0);
+        // the plan runs to its balance fixpoint: an immediate second
+        // pass has nothing left to move
+        let (again, t2) = rebalance_onto(&mut s, &[id], dev, t).unwrap();
+        assert_eq!(again, 0);
+        assert_eq!(t2, t);
     }
 
     #[test]

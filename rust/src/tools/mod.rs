@@ -7,6 +7,10 @@
 //!   Flink plays in the SAGE project): a small dataflow engine whose
 //!   sources are Clovis objects and whose pipelines push computation
 //!   into storage via function shipping where possible.
+//! * [`soak`] — the long-horizon failure-storm soak harness: hours of
+//!   virtual time of continuous traffic, correlated storms, and
+//!   elastic pool membership, with durability invariants checked
+//!   in-harness (driven by `sage soak` and `benches/soak_storm.rs`).
 //!
 //! Module map (ARCHITECTURE.md §Module map rows `tools/`): both tools
 //! are FDMI/Clovis *consumers*, not core-path code — RTHMS ingests the
@@ -21,3 +25,4 @@
 
 pub mod analytics;
 pub mod rthms;
+pub mod soak;
