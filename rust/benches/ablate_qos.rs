@@ -35,11 +35,9 @@
 //! (fields documented in `bench_results/README.md`).
 
 use sage::bench::{record, Bencher};
-use sage::clovis::addb::Addb;
-use sage::clovis::fdmi::FdmiBus;
 use sage::clovis::{Client, OpOutput};
 use sage::cluster::{Cluster, EnclosureCompute};
-use sage::mero::{Layout, MeroStore, ObjectId};
+use sage::mero::{Layout, ObjectId};
 use sage::metrics::{Stats, Table};
 use sage::sim::device::{DeviceKind, DeviceProfile};
 use sage::sim::network::NetworkModel;
@@ -75,13 +73,7 @@ fn skewed_cluster(qos: QosConfig) -> Cluster {
 }
 
 fn client(qos: QosConfig) -> Client {
-    Client {
-        store: MeroStore::new(skewed_cluster(qos)),
-        exec: None,
-        addb: Addb::new(4096),
-        fdmi: FdmiBus::new(),
-        now: 0.0,
-    }
+    Client::from_cluster(skewed_cluster(qos))
 }
 
 /// Median via the in-tree stats substrate (same interpolation the

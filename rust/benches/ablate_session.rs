@@ -36,12 +36,10 @@
 //! Rows append to `bench_results/ablate_session.json`.
 
 use sage::bench::{record, Bencher};
-use sage::clovis::addb::Addb;
-use sage::clovis::fdmi::FdmiBus;
 use sage::clovis::{Client, FunctionKind};
 use sage::cluster::{Cluster, EnclosureCompute};
 use sage::hsm::{Hsm, Migration, TieringPolicy};
-use sage::mero::{Layout, MeroStore, ObjectId};
+use sage::mero::{Layout, ObjectId};
 use sage::metrics::Table;
 use sage::sim::device::{DeviceKind, DeviceProfile};
 use sage::sim::network::NetworkModel;
@@ -88,13 +86,7 @@ fn straggler_dev(c: &Cluster) -> usize {
 }
 
 fn client() -> Client {
-    Client {
-        store: MeroStore::new(mixed_cluster()),
-        exec: None,
-        addb: Addb::new(4096),
-        fdmi: FdmiBus::new(),
-        now: 0.0,
-    }
+    Client::from_cluster(mixed_cluster())
 }
 
 struct Prepared {

@@ -1,0 +1,221 @@
+//! Ablation: the multi-tenant plane (ISSUE 7 tentpole) — weighted
+//! per-tenant lanes on the ONE cluster-wide scheduler vs the same
+//! merged workload on the inactive plane (every session as
+//! `DEFAULT_TENANT`, FIFO contention), on the skewed 4+1 pool (seven
+//! healthy SSDs plus ONE SMR-class tier-4 straggler admitted to the
+//! flash pool, as in `ablate_sched`/`ablate_qos`).
+//!
+//! Workload: `tools::tenants` — N tenants with skewed weights, open
+//! Poisson arrivals merged deterministically, heavy-tailed Zipf
+//! request sizes, every request a session dispatched at its arrival
+//! instant so sessions overlap in virtual time and contend shard by
+//! shard. A closed-arrival (think-time) run of the same plane rides
+//! along for the record. Reported: per-tenant p50/p99/p999 completion
+//! latency with the plane on and off, Jain fairness of
+//! weight-normalized throughput, makespans, and wall-clock cycle
+//! medians ± MAD. Asserted in-bench:
+//!
+//! * both engines land byte-identical state (`bytes_crc`,
+//!   read-back-verified inside the generator) — tenancy changes WHEN,
+//!   never WHAT;
+//! * on every shard every tenant's observed device-time share stays
+//!   within its [`TenantShares::share`] bound, and the lanes really
+//!   ran (shares observed > 0).
+//!
+//! Run: `cargo bench --bench ablate_tenants`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_tenants`
+//! Rows append to `bench_results/ablate_tenants.json`
+//! (fields documented in `bench_results/README.md`).
+
+use sage::bench::{record, Bencher};
+use sage::clovis::Client;
+use sage::cluster::{Cluster, EnclosureCompute};
+use sage::metrics::Table;
+use sage::sim::device::{DeviceKind, DeviceProfile};
+use sage::sim::network::NetworkModel;
+use sage::sim::sched::{TenantShares, DEFAULT_TENANT};
+use sage::tools::tenants::{run_with, ArrivalModel, TenantsConfig, TenantsReport};
+
+/// The skewed pool: seven healthy SSDs plus ONE SMR-class straggler
+/// (tier-4 profile) pooled with the flash devices — the geometry where
+/// a queue-blind policy lets one hot tenant camp on the slow shard.
+fn skewed_cluster() -> Cluster {
+    let mut profiles: Vec<DeviceProfile> =
+        (0..7).map(|_| DeviceProfile::ssd(2 << 40)).collect();
+    let mut straggler = DeviceProfile::smr(2 << 40);
+    straggler.kind = DeviceKind::Ssd; // pooled with the flash devices
+    profiles.push(straggler);
+    let mut c = Cluster::new(NetworkModel::fdr_infiniband());
+    for chunk in profiles.chunks(4) {
+        c.add_node(
+            chunk.to_vec(),
+            EnclosureCompute { cores: 16, flops: 5e10 },
+        );
+    }
+    c
+}
+
+fn client() -> Client {
+    Client::from_cluster(skewed_cluster())
+}
+
+fn cfg(quick: bool, seed: u64, tenancy: bool) -> TenantsConfig {
+    let mut c = if quick {
+        TenantsConfig::quick(seed)
+    } else {
+        TenantsConfig::full(seed)
+    };
+    c.tenancy = tenancy;
+    c
+}
+
+/// The admission table the generator installs for `weights` — used to
+/// recompute each tenant's share bound for the in-bench assert.
+fn shares_of(weights: &[f64]) -> TenantShares {
+    let mut s = TenantShares::single();
+    s.set_weight(DEFAULT_TENANT, weights[0]);
+    for &w in &weights[1..] {
+        s.register(w);
+    }
+    s
+}
+
+fn fmt_ms(s: f64) -> String {
+    format!("{:.1}ms", s * 1e3)
+}
+
+fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let (warm, iters) = if quick { (1, 3) } else { (2, 8) };
+    let seed = 42u64;
+
+    // ---- virtual time: plane on vs plane off (same merged arrivals) ---
+    let on_cfg = cfg(quick, seed, true);
+    let on: TenantsReport = run_with(client(), &on_cfg).unwrap();
+    let off: TenantsReport = run_with(client(), &cfg(quick, seed, false)).unwrap();
+
+    // tenancy changes WHEN, never WHAT: the generator read-back-verified
+    // every object in both runs, and the final-byte digests agree
+    assert_eq!(on.requests, off.requests, "same merged arrival stream");
+    assert_eq!(on.total_bytes, off.total_bytes);
+    assert_eq!(
+        on.bytes_crc, off.bytes_crc,
+        "plane on/off must land byte-identical state"
+    );
+
+    // the weighted share bound holds on every shard of every session
+    let shares = shares_of(&on_cfg.weights);
+    for t in &on.per_tenant {
+        assert!(
+            t.max_observed_share > 0.0,
+            "tenant {} lanes really ran",
+            t.tenant
+        );
+        assert!(
+            t.max_observed_share <= shares.share(t.tenant) + 1e-9,
+            "tenant {} observed share {} exceeds its {} bound",
+            t.tenant,
+            t.max_observed_share,
+            shares.share(t.tenant)
+        );
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Multi-tenant plane on skewed pool ({} tenants x {} open-arrival \
+             requests, heavy-tailed sizes)",
+            on_cfg.weights.len(),
+            on_cfg.requests_per_tenant
+        ),
+        &["tenant", "weight", "p50 on", "p99 on", "p999 on", "p99 off", "max share", "bound"],
+    );
+    for (a, b) in on.per_tenant.iter().zip(off.per_tenant.iter()) {
+        t.row(vec![
+            a.tenant.to_string(),
+            format!("{:.1}", a.weight),
+            fmt_ms(a.p50),
+            fmt_ms(a.p99),
+            fmt_ms(a.p999),
+            fmt_ms(b.p99),
+            format!("{:.3}", a.max_observed_share),
+            format!("{:.3}", shares.share(a.tenant)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "jain (bytes/weight): {:.4} on vs {:.4} off; makespan {} on vs {} off\n",
+        on.jain,
+        off.jain,
+        sage::metrics::fmt_secs(on.makespan),
+        sage::metrics::fmt_secs(off.makespan)
+    );
+
+    // ---- closed arrivals ride along: self-throttled demand ------------
+    let mut closed_cfg = cfg(quick, seed, true);
+    closed_cfg.arrival = ArrivalModel::Closed { think: 0.3 };
+    let closed = run_with(client(), &closed_cfg).unwrap();
+    assert_eq!(closed.requests, on.requests, "same request budget");
+    println!(
+        "closed model: jain {:.4}, p99 heaviest {} / lightest {}\n",
+        closed.jain,
+        fmt_ms(closed.per_tenant.first().unwrap().p99),
+        fmt_ms(closed.per_tenant.last().unwrap().p99)
+    );
+
+    // ---- wall-clock cycle ---------------------------------------------
+    let m_on = Bencher::new("tenants_plane_on")
+        .iters(warm, iters)
+        .wall(|| run_with(client(), &cfg(quick, seed, true)).unwrap().makespan);
+    let m_off = Bencher::new("tenants_plane_off")
+        .iters(warm, iters)
+        .wall(|| run_with(client(), &cfg(quick, seed, false)).unwrap().makespan);
+
+    let mut t = Table::new(
+        "Wall-clock generator cycle (population + merge + sessions + verify)",
+        &["engine", "cycle", "ratio"],
+    );
+    t.row(vec![
+        "plane off".into(),
+        sage::metrics::fmt_secs(m_off.median),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "plane on".into(),
+        sage::metrics::fmt_secs(m_on.median),
+        format!("{:.2}x", m_on.median / m_off.median.max(1e-12)),
+    ]);
+    print!("{}", t.render());
+
+    let heavy_on = &on.per_tenant[0];
+    let light_on = on.per_tenant.last().unwrap();
+    let heavy_off = &off.per_tenant[0];
+    let light_off = off.per_tenant.last().unwrap();
+    record("ablate_tenants", &[
+        ("n_tenants", on_cfg.weights.len() as f64),
+        ("requests_per_tenant", on_cfg.requests_per_tenant as f64),
+        ("requests_total", on.requests as f64),
+        ("total_bytes", on.total_bytes as f64),
+        ("iters", iters as f64),
+        ("jain_on", on.jain),
+        ("jain_off", off.jain),
+        ("jain_closed", closed.jain),
+        ("makespan_on_s", on.makespan),
+        ("makespan_off_s", off.makespan),
+        ("heavy_p50_on_s", heavy_on.p50),
+        ("heavy_p99_on_s", heavy_on.p99),
+        ("heavy_p999_on_s", heavy_on.p999),
+        ("heavy_p99_off_s", heavy_off.p99),
+        ("light_p50_on_s", light_on.p50),
+        ("light_p99_on_s", light_on.p99),
+        ("light_p999_on_s", light_on.p999),
+        ("light_p99_off_s", light_off.p99),
+        ("heavy_max_share", heavy_on.max_observed_share),
+        ("heavy_share_bound", shares.share(heavy_on.tenant)),
+        ("light_max_share", light_on.max_observed_share),
+        ("light_share_bound", shares.share(light_on.tenant)),
+        ("on_cycle_s", m_on.median),
+        ("on_mad_s", m_on.mad),
+        ("off_cycle_s", m_off.median),
+        ("off_mad_s", m_off.mad),
+    ]);
+}

@@ -12,6 +12,11 @@
 //!
 //! Results are appended to `bench_results/<name>.json` so the perf pass
 //! can diff before/after.
+//!
+//! [`testkit`] holds the shared geometry/payload builders the
+//! differential property suites (`rust/tests/prop_*.rs`) sample from.
+
+pub mod testkit;
 
 use std::time::Instant;
 

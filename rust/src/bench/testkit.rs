@@ -1,0 +1,171 @@
+//! Shared geometry/payload builders for the differential test plane
+//! (ISSUE 7 satellite): the sampled pool geometries and deterministic
+//! payload generators that were duplicated across `prop_sched`,
+//! `prop_qos`, `prop_repair` and `prop_storm` live here once.
+//!
+//! A [`Geometry`] names one extent-list sampling family: how many
+//! extents a case draws, the block-index/length bounds, and the payload
+//! multipliers that make every extent's bytes a pure function of its
+//! coordinates. Each suite keeps its historical family (the constants
+//! below) so the generated case sequences — and therefore the pinned
+//! schedules — are unchanged by the extraction.
+//!
+//! Everything here is deterministic: same [`SimRng`] seed, same cases,
+//! same payloads, same clients.
+
+use crate::clovis::Client;
+use crate::config::Testbed;
+use crate::mero::{Layout, ObjectId};
+use crate::sim::device::DeviceKind;
+use crate::sim::rng::SimRng;
+
+/// Block size every property suite creates objects with.
+pub const BS: u64 = 4096;
+/// Stripe unit every property suite lays objects out with.
+pub const UNIT: u64 = 16384;
+
+/// One extent-list sampling family: `n = 1 + gen_range(max_extra)`
+/// extents of `(gen_range(max_index), 1 + gen_range(max_len))`
+/// (block index, length in blocks), with payload byte `j` of extent
+/// `(idx, lenb)` equal to `(idx*mul_idx + lenb*mul_len + j) % 251`.
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    /// `n = 1 + gen_range(max_extra)` extents per case.
+    pub max_extra: u64,
+    /// Extent start index is drawn from `[0, max_index)` blocks.
+    pub max_index: u64,
+    /// Extent length is `1 + gen_range(max_len)` blocks.
+    pub max_len: u64,
+    /// Payload multiplier on the extent index.
+    pub mul_idx: u64,
+    /// Payload multiplier on the extent length.
+    pub mul_len: u64,
+}
+
+impl Geometry {
+    /// The `prop_sched` family (ISSUE 2 suite).
+    pub const SCHED: Geometry =
+        Geometry { max_extra: 6, max_index: 64, max_len: 16, mul_idx: 137, mul_len: 29 };
+    /// The `prop_qos` family (ISSUE 5 suite).
+    pub const QOS: Geometry =
+        Geometry { max_extra: 4, max_index: 32, max_len: 10, mul_idx: 173, mul_len: 57 };
+    /// The `prop_repair` family (ISSUE 3 suite).
+    pub const REPAIR: Geometry =
+        Geometry { max_extra: 5, max_index: 48, max_len: 12, mul_idx: 151, mul_len: 43 };
+    /// The `prop_tenant` family (ISSUE 7 suite).
+    pub const TENANT: Geometry =
+        Geometry { max_extra: 4, max_index: 40, max_len: 12, mul_idx: 163, mul_len: 31 };
+
+    /// Sample one extent list `(block index, length in blocks)`.
+    pub fn gen_extents(&self, r: &mut SimRng) -> Vec<(u64, u64)> {
+        let n = 1 + r.gen_range(self.max_extra) as usize;
+        (0..n)
+            .map(|_| (r.gen_range(self.max_index), 1 + r.gen_range(self.max_len)))
+            .collect()
+    }
+
+    /// Deterministic payload for extent `(idx, len_blocks)`.
+    pub fn bytes_for(&self, idx: u64, len_blocks: u64) -> Vec<u8> {
+        (0..len_blocks * BS)
+            .map(|j| {
+                ((idx * self.mul_idx + len_blocks * self.mul_len + j) % 251) as u8
+            })
+            .collect()
+    }
+}
+
+/// Total logical span of an extent list, in bytes.
+pub fn span(extents: &[(u64, u64)]) -> u64 {
+    extents.iter().map(|(i, l)| (i + l) * BS).max().unwrap_or(0)
+}
+
+/// The RAID layout every suite stripes with: `k+p` on the SSD tier at
+/// [`UNIT`] granularity.
+pub fn raid(k: u32, p: u32) -> Layout {
+    Layout::Raid { data: k, parity: p, unit: UNIT, tier: DeviceKind::Ssd }
+}
+
+/// A fresh simulated client on the SAGE prototype rack — the cluster
+/// every property suite runs against.
+pub fn sage_client() -> Client {
+    Client::new_sim(Testbed::sage_prototype())
+}
+
+/// Client with `n` small striped objects (default SSD 4+1 layout) and
+/// RNG-filled payloads; returns the ids alongside their bytes.
+pub fn populated(n: usize, seed: u64) -> (Client, Vec<(ObjectId, Vec<u8>)>) {
+    let mut c = sage_client();
+    let mut rng = SimRng::new(seed);
+    let mut objs = Vec::new();
+    for _ in 0..n {
+        let id = c.create_object(BS).unwrap();
+        let d = payload(&mut rng, 4 * 65536);
+        c.write_object(&id, 0, &d).unwrap();
+        objs.push((id, d));
+    }
+    (c, objs)
+}
+
+/// An RNG-filled payload of `len` bytes.
+pub fn payload(rng: &mut SimRng, len: usize) -> Vec<u8> {
+    let mut d = vec![0u8; len];
+    rng.fill_bytes(&mut d);
+    d
+}
+
+/// `(stripe, unit, device)` placement triples of an object, in
+/// deterministic order — the cross-engine placement oracle.
+pub fn placements(c: &Client, obj: ObjectId) -> Vec<(u64, u32, usize)> {
+    c.store
+        .object(obj)
+        .unwrap()
+        .placed_units()
+        .map(|u| (u.stripe, u.unit, u.device))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometries_are_deterministic_and_in_bounds() {
+        for geo in [Geometry::SCHED, Geometry::QOS, Geometry::REPAIR, Geometry::TENANT] {
+            let a = geo.gen_extents(&mut SimRng::new(7));
+            let b = geo.gen_extents(&mut SimRng::new(7));
+            assert_eq!(a, b);
+            assert!(!a.is_empty());
+            assert!(a.len() as u64 <= 1 + geo.max_extra);
+            for (i, l) in a {
+                assert!(i < geo.max_index);
+                assert!((1..=geo.max_len + 1).contains(&l));
+            }
+            assert_eq!(geo.bytes_for(3, 2), geo.bytes_for(3, 2));
+            assert_eq!(geo.bytes_for(3, 2).len() as u64, 2 * BS);
+        }
+    }
+
+    #[test]
+    fn span_and_payload_builders() {
+        assert_eq!(span(&[]), 0);
+        assert_eq!(span(&[(2, 3), (1, 1)]), 5 * BS);
+        let mut r = SimRng::new(11);
+        let p = payload(&mut r, 64);
+        assert_eq!(p.len(), 64);
+        let mut r2 = SimRng::new(11);
+        assert_eq!(p, payload(&mut r2, 64));
+    }
+
+    #[test]
+    fn populated_clients_are_reproducible() {
+        let (mut a, objs_a) = populated(2, 42);
+        let (_b, objs_b) = populated(2, 42);
+        assert_eq!(objs_a.len(), 2);
+        for ((ia, da), (_ib, db)) in objs_a.iter().zip(objs_b.iter()) {
+            assert_eq!(da, db);
+            let got = a.read_object(ia, 0, da.len() as u64).unwrap();
+            assert_eq!(&got, da);
+            assert_eq!(placements(&a, *ia).len(), placements(&a, *ia).len());
+        }
+    }
+}

@@ -29,14 +29,16 @@ pub mod ops;
 pub mod session;
 
 use crate::cluster::failure::{FailureEvent, FailureKind, FailureSchedule};
+use crate::cluster::Cluster;
 use crate::config::Testbed;
-use crate::error::Result;
+use crate::error::{Result, SageError};
 use crate::mero::dtm::TxId;
 use crate::mero::ha::RepairAction;
 use crate::mero::{ContainerId, IndexId, Layout, MeroStore, ObjectId};
 use crate::runtime::Executor;
 use crate::sim::clock::SimTime;
 use crate::sim::device::DeviceKind;
+use crate::sim::sched::{IoScheduler, TenantId};
 
 pub use fshipping::{FnOutput, FunctionKind, ShipResult};
 pub use ops::Extent;
@@ -240,17 +242,32 @@ pub struct Client {
     /// parallel workloads keep their own `RankClocks` and use the
     /// `*_at` variants).
     pub now: SimTime,
+    /// The ONE cluster-wide per-device scheduler (ISSUE 7): every
+    /// session adopts it for the duration of its run (opening a fresh
+    /// scheduling epoch) and hands it back, so concurrent sessions
+    /// contend on shared device shards instead of each owning a
+    /// private scheduler. Its QoS split and tenant table are re-synced
+    /// from [`Cluster::qos`]/[`Cluster::tenants`] at every adoption.
+    pub sched: IoScheduler,
 }
 
 impl Client {
     /// Client over a simulated testbed, no kernel offload.
     pub fn new_sim(testbed: Testbed) -> Client {
+        Client::from_cluster(testbed.build_cluster())
+    }
+
+    /// Client over an explicitly-built [`Cluster`] (what
+    /// [`Client::new_sim`] delegates to; benches and tests that craft
+    /// bespoke pool geometries use this directly).
+    pub fn from_cluster(cluster: Cluster) -> Client {
         Client {
-            store: MeroStore::new(testbed.build_cluster()),
+            store: MeroStore::new(cluster),
             exec: None,
             addb: addb::Addb::new(4096),
             fdmi: fdmi::FdmiBus::new(),
             now: 0.0,
+            sched: IoScheduler::new(),
         }
     }
 
@@ -354,9 +371,38 @@ impl Client {
     // overlap mixed kinds on shared device shards.
 
     /// The Clovis op builder: every operation kind staged as an op on
-    /// ONE scheduler-backed group — see [`session::Session`].
+    /// ONE scheduler-backed group — see [`session::Session`]. Runs as
+    /// [`DEFAULT_TENANT`](crate::sim::sched::DEFAULT_TENANT) (always
+    /// admitted).
     pub fn session<'c, 'd>(&'c mut self) -> Session<'c, 'd> {
         Session::new(self)
+    }
+
+    /// Admit a new tenant with `weight` onto the cluster's tenant
+    /// table and return its id (ISSUE 7 multi-tenant plane). With two
+    /// or more registered tenants every shard schedules `(tenant,
+    /// class)` frontier lanes at `weight/Σweights` of the device rate
+    /// — see [`TenantShares`](crate::sim::sched::TenantShares) and
+    /// OPERATIONS.md §Tenant shares.
+    pub fn register_tenant(&mut self, weight: f64) -> TenantId {
+        self.store.cluster.tenants.register(weight)
+    }
+
+    /// [`Client::session`] dispatching as `tenant` — the admission
+    /// control point of the multi-tenant plane: unregistered ids are
+    /// refused here, at the Clovis layer, so the scheduler below never
+    /// sees a tenant the cluster didn't admit.
+    pub fn session_as<'c, 'd>(
+        &'c mut self,
+        tenant: TenantId,
+    ) -> Result<Session<'c, 'd>> {
+        if !self.store.cluster.tenants.is_registered(tenant) {
+            return Err(SageError::Invalid(format!(
+                "tenant {tenant} is not registered (admission control; \
+                 register_tenant first)"
+            )));
+        }
+        Ok(Session::for_tenant(self, tenant))
     }
 
     /// Vectored write over borrowed extents: one session op, launched
@@ -915,6 +961,26 @@ mod tests {
 
     fn client() -> Client {
         Client::new_sim(Testbed::sage_prototype())
+    }
+
+    #[test]
+    fn tenant_admission_control_gates_session_as() {
+        let mut c = client();
+        // the default tenant is always admitted
+        assert!(c.session_as(crate::sim::sched::DEFAULT_TENANT).is_ok());
+        // an unregistered id is refused at the Clovis layer
+        assert!(matches!(c.session_as(7), Err(SageError::Invalid(_))));
+        // registration admits it; ids are dense and deterministic
+        let t = c.register_tenant(2.0);
+        assert_eq!(t, 1);
+        assert!(c.session_as(t).is_ok());
+        assert!(c.store.cluster.tenants.active());
+        // a refused session leaves the client fully usable (the
+        // shared scheduler was never taken)
+        let obj = c.create_object(4096).unwrap();
+        let data = vec![5u8; 4 * 65536];
+        c.write_object(&obj, 0, &data).unwrap();
+        assert_eq!(c.read_object(&obj, 0, data.len() as u64).unwrap(), data);
     }
 
     #[test]

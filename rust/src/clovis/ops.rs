@@ -234,6 +234,29 @@ impl OpGroup {
         }
     }
 
+    /// Group over an **adopted** scheduler — the ISSUE 7 multi-tenant
+    /// path. `Session::run` takes the cluster-wide scheduler out of
+    /// the client, and the group opens a fresh scheduling epoch on it
+    /// at the session clock `now`: shards idle at `now` behave exactly
+    /// like a fresh private scheduler (bit-exact), busy shards
+    /// contend, and [`OpGroup::wait_all`] / `frontiers()` /
+    /// `qos_report()` scope to this group's own submissions (other
+    /// groups' completions are invisible — see
+    /// `sim::sched::IoScheduler::begin_epoch`). Hand the scheduler
+    /// back with [`OpGroup::release`] when the group is done.
+    pub fn adopt(sched: IoScheduler, now: SimTime) -> Self {
+        let mut g = OpGroup { ops: Vec::new(), next_id: 0, sched };
+        g.sched.begin_epoch(now);
+        g
+    }
+
+    /// Give the adopted scheduler back (to be stored on the client for
+    /// the next session). Consumes the group: its ops are done, the
+    /// scheduler's shard state lives on cluster-wide.
+    pub fn release(self) -> IoScheduler {
+        self.sched
+    }
+
     /// The group's sharded I/O scheduler: ops executed under this
     /// group dispatch their unit I/Os here (one submission pass to
     /// home-device shards; see `sim::sched`).
@@ -424,6 +447,47 @@ mod tests {
     fn extent_accessors() {
         let e = Extent::new(4096, 8192);
         assert_eq!(e.end(), 12288);
+    }
+
+    #[test]
+    fn groups_sharing_one_scheduler_do_not_see_each_others_completions() {
+        // the ISSUE 7 satellite fix: before epochs, a second group
+        // draining the SAME scheduler inherited the first group's
+        // frontiers — wait_all_from(now) returned the OTHER group's
+        // completion and its frontier table listed foreign shards.
+        use crate::sim::device::{Access, Device, DeviceProfile, IoOp};
+        let mut devs = vec![
+            Device::new(DeviceProfile::smr(1 << 30)),
+            Device::new(DeviceProfile::ssd(1 << 30)),
+        ];
+        // group 1 adopts the shared scheduler and parks a LONG write
+        // on the smr shard
+        let mut g1 = OpGroup::adopt(IoScheduler::new(), 0.0);
+        let a = g1.add(OpKind::ObjWrite);
+        g1.op_mut(a).unwrap().launch(0.0).unwrap();
+        g1.sched().submit(0, 0.0, 1 << 22, IoOp::Write, Access::Seq);
+        let t_long = g1.sched().drain(&mut devs);
+        g1.op_mut(a).unwrap().complete(t_long).unwrap();
+        assert_eq!(g1.wait_all_from(0.0).unwrap(), t_long);
+        // group 2 adopts the SAME scheduler concurrently (epoch opens
+        // at time 0, while the smr shard is still busy) and touches
+        // only the ssd shard
+        let mut g2 = OpGroup::adopt(g1.release(), 0.0);
+        let b = g2.add(OpKind::ObjWrite);
+        g2.op_mut(b).unwrap().launch(0.0).unwrap();
+        g2.sched().submit(1, 0.0, 4096, IoOp::Write, Access::Seq);
+        let t_short = g2.sched().drain(&mut devs);
+        g2.op_mut(b).unwrap().complete(t_short).unwrap();
+        assert!(t_short < t_long);
+        // the pinned fix: group 2 waits on ITS submissions only, and
+        // its frontier table does not list group 1's smr shard
+        assert_eq!(g2.wait_all_from(0.0).unwrap(), t_short);
+        assert_eq!(g2.sched_ref().frontiers(), vec![(1, t_short)]);
+        assert!(g2
+            .sched_ref()
+            .qos_report()
+            .iter()
+            .all(|r| r.device == 1));
     }
 
     #[test]

@@ -60,7 +60,7 @@ use crate::hsm::{Hsm, Migration};
 use crate::mero::dtm::TxId;
 use crate::mero::{IndexId, ObjectId};
 use crate::sim::clock::SimTime;
-use crate::sim::sched::QosShardReport;
+use crate::sim::sched::{QosShardReport, TenantId, TenantShardReport, DEFAULT_TENANT};
 
 /// Handle to one staged session op. Redeem against
 /// [`SessionReport::outputs`] / [`SessionReport::completed`] after
@@ -135,6 +135,12 @@ pub struct SessionReport {
     /// [`QosConfig`](crate::sim::sched::QosConfig) caps their
     /// per-device share against the session's foreground ops.
     pub qos: Vec<QosShardReport>,
+    /// The multi-tenant plane's per-tenant frontier table: one row per
+    /// shard with `(tenant, class)` lanes drained during this session
+    /// (OPERATIONS.md §Reading the per-tenant frontier tables). Empty
+    /// unless two or more tenants are registered on the cluster
+    /// ([`Client::register_tenant`](crate::clovis::Client::register_tenant)).
+    pub tenants: Vec<TenantShardReport>,
 }
 
 impl SessionReport {
@@ -193,11 +199,24 @@ pub struct Session<'c, 'd> {
     staged: Vec<StagedOp<'d>>,
     /// Predecessor indices per op (forward edges only).
     deps: Vec<Vec<usize>>,
+    /// Tenant every submission of this session is stamped with
+    /// (ISSUE 7 multi-tenant plane; admission-checked by
+    /// [`Client::session_as`](crate::clovis::Client::session_as)).
+    tenant: TenantId,
 }
 
 impl<'c, 'd> Session<'c, 'd> {
     pub(crate) fn new(client: &'c mut Client) -> Self {
-        Session { client, staged: Vec::new(), deps: Vec::new() }
+        Session::for_tenant(client, DEFAULT_TENANT)
+    }
+
+    pub(crate) fn for_tenant(client: &'c mut Client, tenant: TenantId) -> Self {
+        Session { client, staged: Vec::new(), deps: Vec::new(), tenant }
+    }
+
+    /// Tenant this session dispatches as.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
     }
 
     fn stage(&mut self, op: StagedOp<'d>) -> OpHandle {
@@ -369,49 +388,96 @@ impl<'c, 'd> Session<'c, 'd> {
     /// the op is marked FAILED and the error propagates (ops already
     /// executed keep their effects, exactly like sequential calls).
     pub fn run(self) -> Result<SessionReport> {
-        let Session { client, staged, deps } = self;
+        let Session { client, staged, deps, tenant } = self;
         let now = client.now;
-        // the group scheduler enforces the cluster's QoS split: repair
-        // and migration ops are bandwidth-capped per shard against the
-        // session's foreground traffic (§3.2.1 repair throttling)
-        let mut group = OpGroup::with_qos(client.store.cluster.qos);
+        // ISSUE 7: adopt the ONE cluster-wide scheduler. Take it out
+        // of the client (no aliasing against `client.store` during
+        // exec), sync the cluster's QoS split and tenant table (config
+        // edits between sessions take effect exactly as they did with
+        // private per-group schedulers), stamp this session's tenant,
+        // and open a fresh scheduling epoch at the session clock —
+        // shards idle at `now` behave like a fresh private scheduler
+        // (bit-exact), busy shards contend. The scheduler is handed
+        // back to the client on EVERY path below, error included.
+        let mut sched = std::mem::take(&mut client.sched);
+        sched.set_qos(client.store.cluster.qos);
+        sched.set_tenants(client.store.cluster.tenants.clone());
+        sched.set_tenant(tenant);
+        let mut group = OpGroup::adopt(sched, now);
         let ids: Vec<u64> = staged.iter().map(|op| group.add(op.kind())).collect();
-        group.launch_batch(now)?;
         let mut completed = vec![now; staged.len()];
         let mut outputs = Vec::with_capacity(staged.len());
-        for (i, op) in staged.into_iter().enumerate() {
-            let at = deps[i].iter().fold(now, |t, &p| t.max(completed[p]));
-            // every submission of this op carries the op kind's class
-            let class = op.kind().traffic_class();
-            let prev = group.sched().set_class(class);
-            let result = exec(client, &mut group, op, at);
-            group.sched().set_class(prev);
-            match result {
-                Ok((out, t)) => {
-                    group.op_mut(ids[i])?.complete(t)?;
-                    completed[i] = t;
-                    outputs.push(out);
-                }
-                Err(e) => {
-                    group.op_mut(ids[i])?.fail(at, &e.to_string())?;
-                    return Err(e);
+        let mut failure = group.launch_batch(now).err();
+        if failure.is_none() {
+            for (i, op) in staged.into_iter().enumerate() {
+                let at = deps[i].iter().fold(now, |t, &p| t.max(completed[p]));
+                // every submission of this op carries the op kind's class
+                let class = op.kind().traffic_class();
+                let prev = group.sched().set_class(class);
+                let result = exec(client, &mut group, op, at);
+                group.sched().set_class(prev);
+                let step = match result {
+                    Ok((out, t)) => group
+                        .op_mut(ids[i])
+                        .and_then(|o| o.complete(t))
+                        .map(|()| (out, t)),
+                    Err(e) => {
+                        // best-effort FAILED stamp; the op error wins
+                        let _ = group
+                            .op_mut(ids[i])
+                            .and_then(|o| o.fail(at, &e.to_string()));
+                        Err(e)
+                    }
+                };
+                match step {
+                    Ok((out, t)) => {
+                        completed[i] = t;
+                        outputs.push(out);
+                    }
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
                 }
             }
         }
-        let completed_at = group.wait_all_from(now)?;
-        client.now = client.now.max(completed_at);
-        let sched = group.sched_ref();
-        let frontiers = sched.frontiers();
-        let qos = sched.qos_report();
-        Ok(SessionReport {
-            outputs,
-            completed,
-            completed_at,
-            io_calls: sched.io_calls(),
-            ios: sched.ios(),
-            frontiers,
-            qos,
-        })
+        let outcome = match failure {
+            None => group.wait_all_from(now),
+            Some(e) => Err(e),
+        };
+        match outcome {
+            Ok(completed_at) => {
+                client.now = client.now.max(completed_at);
+                let sched = group.sched_ref();
+                let frontiers = sched.frontiers();
+                let qos = sched.qos_report();
+                let tenants = sched.tenant_report();
+                // epoch-scoped counters: per-session stats on the
+                // shared instance, same values the private scheduler
+                // reported before
+                let io_calls = sched.epoch_io_calls();
+                let ios = sched.epoch_ios();
+                client.sched = group.release();
+                Ok(SessionReport {
+                    outputs,
+                    completed,
+                    completed_at,
+                    io_calls,
+                    ios,
+                    frontiers,
+                    qos,
+                    tenants,
+                })
+            }
+            Err(e) => {
+                // ops already executed keep their effects, exactly
+                // like sequential calls — and the cluster scheduler
+                // (with whatever frontiers this session committed)
+                // survives for the next session
+                client.sched = group.release();
+                Err(e)
+            }
+        }
     }
 }
 
@@ -1071,6 +1137,45 @@ mod tests {
         let mut s = c.session();
         s.rebalance(&[obj], dev);
         assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn tenant_sessions_report_per_tenant_lanes() {
+        let mut c = client();
+        let t2 = c.register_tenant(1.0); // activates the tenant plane
+        let o1 = c.create_object(4096).unwrap();
+        let o2 = c.create_object(4096).unwrap();
+        let mut s = c.session(); // default tenant
+        s.write_owned(&o1, vec![(0, vec![1u8; STRIPE as usize])]);
+        let r1 = s.run().unwrap();
+        assert!(!r1.tenants.is_empty(), "active plane reports tenant lanes");
+        assert!(r1
+            .tenants
+            .iter()
+            .flat_map(|r| r.lanes.iter())
+            .all(|l| l.tenant == crate::sim::sched::DEFAULT_TENANT));
+        // the second tenant's session reports ITS lanes only (the
+        // earlier session's shards re-seeded: back-to-back, not
+        // contending)
+        let mut s = c.session_as(t2).unwrap();
+        assert_eq!(s.tenant(), t2);
+        s.write_owned(&o2, vec![(0, vec![2u8; STRIPE as usize])]);
+        let r2 = s.run().unwrap();
+        assert!(!r2.tenants.is_empty());
+        assert!(r2
+            .tenants
+            .iter()
+            .flat_map(|r| r.lanes.iter())
+            .all(|l| l.tenant == t2));
+        // bytes land regardless of lane accounting
+        assert_eq!(
+            c.read_object(&o1, 0, STRIPE).unwrap(),
+            vec![1u8; STRIPE as usize]
+        );
+        assert_eq!(
+            c.read_object(&o2, 0, STRIPE).unwrap(),
+            vec![2u8; STRIPE as usize]
+        );
     }
 
     #[test]

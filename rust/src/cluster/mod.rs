@@ -20,7 +20,7 @@ pub mod failure;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{Access, Device, DeviceProfile, IoOp};
 use crate::sim::network::NetworkModel;
-use crate::sim::sched::QosConfig;
+use crate::sim::sched::{QosConfig, TenantShares};
 
 /// Index of a storage node.
 pub type NodeId = usize;
@@ -78,16 +78,24 @@ pub struct Cluster {
     /// sane split (repair 0.30, migration 0.20); set to
     /// [`QosConfig::unlimited`] to restore the pre-QoS FIFO schedule.
     pub qos: QosConfig,
+    /// The weighted per-tenant fair-share table (ISSUE 7 multi-tenant
+    /// plane; see `sim::sched::TenantShares` and OPERATIONS.md
+    /// §Tenant shares). Starts single-tenant (plane inactive —
+    /// schedules bit-identical to per-class QoS);
+    /// `Client::register_tenant` admits more.
+    pub tenants: TenantShares,
 }
 
 impl Cluster {
-    /// Empty cluster over a given network, with the default QoS split.
+    /// Empty cluster over a given network, with the default QoS split
+    /// and a single-tenant table.
     pub fn new(net: NetworkModel) -> Self {
         Cluster {
             nodes: Vec::new(),
             devices: Vec::new(),
             net,
             qos: QosConfig::default(),
+            tenants: TenantShares::single(),
         }
     }
 

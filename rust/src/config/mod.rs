@@ -16,7 +16,7 @@ use crate::cluster::{Cluster, EnclosureCompute};
 use crate::error::Result;
 use crate::sim::device::{DeviceKind, DeviceProfile};
 use crate::sim::network::NetworkModel;
-use crate::sim::sched::QosConfig;
+use crate::sim::sched::{QosConfig, TenantShares, DEFAULT_TENANT};
 use crate::util::toml::TomlDoc;
 
 /// A named testbed: DRAM + device inventory + network.
@@ -41,6 +41,13 @@ pub struct Testbed {
     /// carried onto the built cluster and enforced by every Clovis op
     /// group. Overridable from TOML (`[qos] repair_share = 0.5`).
     pub qos: QosConfig,
+    /// Tenant weights pre-registered on the built cluster (ISSUE 7
+    /// multi-tenant plane). Empty (every preset) = single-tenant: the
+    /// plane stays inactive until `Client::register_tenant`. From
+    /// TOML: `[tenants] weights = [3.0, 1.0]` — the first entry is
+    /// the default tenant's weight, each further entry registers a
+    /// new tenant.
+    pub tenant_weights: Vec<f64>,
 }
 
 impl Testbed {
@@ -60,6 +67,7 @@ impl Testbed {
             net: NetworkModel::loopback(),
             enclosure_flops: 2e10,
             qos: QosConfig::default(),
+            tenant_weights: Vec::new(),
         }
     }
 
@@ -78,6 +86,7 @@ impl Testbed {
             net: NetworkModel::tengig(),
             enclosure_flops: 5e10,
             qos: QosConfig::default(),
+            tenant_weights: Vec::new(),
         }
     }
 
@@ -107,6 +116,7 @@ impl Testbed {
             net: NetworkModel::aries(),
             enclosure_flops: 1e11,
             qos: QosConfig::default(),
+            tenant_weights: Vec::new(),
         }
     }
 
@@ -140,6 +150,7 @@ impl Testbed {
             net: NetworkModel::fdr_infiniband(),
             enclosure_flops: 5e10,
             qos: QosConfig::default(),
+            tenant_weights: Vec::new(),
         }
     }
 
@@ -175,6 +186,13 @@ impl Testbed {
             doc.get_f64("qos", "repair_share", tb.qos.repair_share);
         tb.qos.migration_share =
             doc.get_f64("qos", "migration_share", tb.qos.migration_share);
+        // optional tenant plane: [tenants] weights = [3.0, 1.0]
+        if let Some(crate::util::toml::TomlValue::Arr(items)) =
+            doc.get("tenants", "weights")
+        {
+            tb.tenant_weights =
+                items.iter().filter_map(|v| v.as_f64()).collect();
+        }
         // optional extra tier sections: [tier.<kind>] count=, capacity=
         for kind in ["nvram", "ssd", "hdd", "smr"] {
             let sec = format!("tier.{kind}");
@@ -200,6 +218,14 @@ impl Testbed {
     pub fn build_cluster(&self) -> Cluster {
         let mut c = Cluster::new(self.net.clone());
         c.qos = self.qos;
+        if let Some((first, rest)) = self.tenant_weights.split_first() {
+            let mut shares = TenantShares::single();
+            shares.set_weight(DEFAULT_TENANT, *first);
+            for &w in rest {
+                shares.register(w);
+            }
+            c.tenants = shares;
+        }
         for chunk in self.storage.chunks(4) {
             c.add_node(
                 chunk.to_vec(),
@@ -279,6 +305,29 @@ mod tests {
                 .count(),
             2
         );
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn tenant_weights_from_toml_reach_the_cluster() {
+        // presets stay single-tenant (plane inactive, schedules
+        // bit-identical to the per-class QoS plane)
+        let c = Testbed::sage_prototype().build_cluster();
+        assert!(!c.tenants.active());
+        // [tenants] weights pre-register a shared cluster's tenants
+        let tmp = std::env::temp_dir().join("sage_tb_tenants_test.toml");
+        std::fs::write(
+            &tmp,
+            "base = \"sage_prototype\"\n\n[tenants]\nweights = [3.0, 1.0]\n",
+        )
+        .unwrap();
+        let tb = Testbed::from_toml(&tmp).unwrap();
+        assert_eq!(tb.tenant_weights, vec![3.0, 1.0]);
+        let c = tb.build_cluster();
+        assert!(c.tenants.active());
+        assert_eq!(c.tenants.len(), 2);
+        assert!((c.tenants.share(0) - 0.75).abs() < 1e-12);
+        assert!((c.tenants.share(1) - 0.25).abs() < 1e-12);
         std::fs::remove_file(&tmp).ok();
     }
 

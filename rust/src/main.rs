@@ -45,6 +45,7 @@ fn run(args: &Args) -> Result<()> {
         Some("fig7") => fig7(args),
         Some("addb") => addb(args),
         Some("soak") => soak(args),
+        Some("tenants") => tenants(args),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -66,6 +67,8 @@ COMMANDS:
   fig7    iPIC3D streams vs collective   [--steps N] [--max-procs P]
   addb    run a workload, print the ADDB report
   soak    long-horizon failure-storm soak       [--quick] [--seed N]
+  tenants N-tenant contention on the shared scheduler
+          [--quick] [--seed N] [--closed] [--no-tenancy]
 
 Common options: --testbed <name>, --csv (machine-readable output)
 ";
@@ -366,6 +369,56 @@ fn soak(args: &Args) -> Result<()> {
     }
     print_table(args, &t);
     println!("[soak] all durability invariants held");
+    Ok(())
+}
+
+fn tenants(args: &Args) -> Result<()> {
+    use sage::tools::tenants::{run as run_tenants, ArrivalModel, TenantsConfig};
+    let seed = args.get::<u64>("seed", 42);
+    let mut cfg = if args.flag("quick") {
+        TenantsConfig::quick(seed)
+    } else {
+        TenantsConfig::full(seed)
+    };
+    if args.flag("closed") {
+        cfg.arrival = ArrivalModel::Closed { think: 0.3 };
+    }
+    if args.flag("no-tenancy") {
+        cfg.tenancy = false; // the FIFO baseline, same arrivals
+    }
+    println!(
+        "[tenants] {} tenants x {} requests, {:?} arrivals, tenancy {}, \
+         seed {seed} — byte/share invariants checked in-harness",
+        cfg.weights.len(),
+        cfg.requests_per_tenant,
+        cfg.arrival,
+        if cfg.tenancy { "on" } else { "off" },
+    );
+    let r = run_tenants(&cfg)?;
+    let mut t = Table::new(
+        "Multi-tenant contention (latencies in virtual seconds)",
+        &["tenant", "weight", "requests", "bytes", "p50", "p99", "p999", "max share"],
+    );
+    for pt in &r.per_tenant {
+        t.row(vec![
+            pt.tenant.to_string(),
+            format!("{:.1}", pt.weight),
+            pt.requests.to_string(),
+            sage::util::bytes::fmt_size(pt.bytes),
+            format!("{:.4}", pt.p50),
+            format!("{:.4}", pt.p99),
+            format!("{:.4}", pt.p999),
+            format!("{:.3}", pt.max_observed_share),
+        ]);
+    }
+    print_table(args, &t);
+    println!(
+        "[tenants] jain fairness {:.4}, makespan {}, {} total, crc {:08x}",
+        r.jain,
+        sage::metrics::fmt_secs(r.makespan),
+        sage::util::bytes::fmt_size(r.total_bytes),
+        r.bytes_crc
+    );
     Ok(())
 }
 

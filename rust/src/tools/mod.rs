@@ -11,6 +11,11 @@
 //!   virtual time of continuous traffic, correlated storms, and
 //!   elastic pool membership, with durability invariants checked
 //!   in-harness (driven by `sage soak` and `benches/soak_storm.rs`).
+//! * [`tenants`] — the multi-tenant workload generator: N contending
+//!   tenants on the one cluster-wide scheduler, open/closed arrival
+//!   models, heavy-tailed sizes, per-tenant tail latency and Jain
+//!   fairness (driven by `sage tenants` and
+//!   `benches/ablate_tenants.rs`).
 //!
 //! Module map (ARCHITECTURE.md §Module map rows `tools/`): both tools
 //! are FDMI/Clovis *consumers*, not core-path code — RTHMS ingests the
@@ -26,3 +31,4 @@
 pub mod analytics;
 pub mod rthms;
 pub mod soak;
+pub mod tenants;

@@ -25,47 +25,26 @@
 //!    than unthrottled, reconstruction traffic visible on the Repair
 //!    lane (OPERATIONS.md documents the operational consequence).
 
+use sage::bench::testkit::{self, placements, span, Geometry, BS, UNIT};
 use sage::clovis::Client;
-use sage::config::Testbed;
 use sage::mero::{Layout, ObjectId};
 use sage::proptest::prop_check;
-use sage::sim::device::DeviceKind;
 use sage::sim::sched::{QosConfig, QosShardReport, TrafficClass};
 
-const BS: u64 = 4096;
-const UNIT: u64 = 16384;
+/// This suite's historical sampling family (see `bench::testkit`).
+const GEO: Geometry = Geometry::QOS;
 
 fn layout(k: u32, p: u32) -> Layout {
-    Layout::Raid { data: k, parity: p, unit: UNIT, tier: DeviceKind::Ssd }
+    testkit::raid(k, p)
 }
 
 /// Deterministic payload for extent (idx, len_blocks).
 fn bytes_for(idx: u64, len_blocks: u64) -> Vec<u8> {
-    (0..len_blocks * BS)
-        .map(|j| ((idx * 173 + len_blocks * 57 + j) % 251) as u8)
-        .collect()
+    GEO.bytes_for(idx, len_blocks)
 }
 
 fn gen_extents(r: &mut sage::sim::rng::SimRng) -> Vec<(u64, u64)> {
-    let n = 1 + r.gen_range(4) as usize;
-    (0..n)
-        .map(|_| (r.gen_range(32), 1 + r.gen_range(10)))
-        .collect()
-}
-
-/// Total logical span of an extent list, in bytes.
-fn span(extents: &[(u64, u64)]) -> u64 {
-    extents.iter().map(|(i, l)| (i + l) * BS).max().unwrap_or(0)
-}
-
-/// (stripe, unit, device) placement triples, in deterministic order.
-fn placements(c: &Client, obj: ObjectId) -> Vec<(u64, u32, usize)> {
-    c.store
-        .object(obj)
-        .unwrap()
-        .placed_units()
-        .map(|u| (u.stripe, u.unit, u.device))
-        .collect()
+    GEO.gen_extents(r)
 }
 
 /// One mixed run: device repair staged FIRST on a session, foreground
@@ -90,7 +69,7 @@ fn run_mixed(
     k: u32,
     p: u32,
 ) -> MixedOutcome {
-    let mut c = Client::new_sim(Testbed::sage_prototype());
+    let mut c = testkit::sage_client();
     c.store.cluster.qos = qos;
     let mut repair_objs = Vec::new();
     for i in 0..4u64 {
@@ -276,7 +255,7 @@ fn prop_zero_background_split_is_bit_identical() {
         gen_extents,
         |extents: &Vec<(u64, u64)>| {
             let run = |qos: QosConfig| {
-                let mut c = Client::new_sim(Testbed::sage_prototype());
+                let mut c = testkit::sage_client();
                 c.store.cluster.qos = qos;
                 let obj = c.create_object_with(BS, layout(4, 1)).unwrap();
                 let datas: Vec<Vec<u8>> = extents
@@ -313,7 +292,7 @@ fn repair_only_workload_completes_without_deadlock() {
     // never starves it — same bytes, a later (or equal) frontier, and
     // the device returns to service
     let run = |qos: QosConfig| {
-        let mut c = Client::new_sim(Testbed::sage_prototype());
+        let mut c = testkit::sage_client();
         c.store.cluster.qos = qos;
         let mut objs = Vec::new();
         for i in 0..3u64 {
@@ -353,7 +332,7 @@ fn degraded_read_reconstruction_is_repair_classed_and_throttled() {
     // cap even with no rebuild running — bytes untouched, and the
     // share stays within the cap on every shard
     let run = |qos: QosConfig| {
-        let mut c = Client::new_sim(Testbed::sage_prototype());
+        let mut c = testkit::sage_client();
         c.store.cluster.qos = qos;
         let obj = c.create_object_with(BS, layout(4, 2)).unwrap();
         let data = bytes_for(9, 2 * 4 * UNIT / BS);

@@ -13,36 +13,27 @@
 //!    preserves bytes exactly and completes no later than the
 //!    one-migration-at-a-time serial fold.
 
+use sage::bench::testkit::{self, span, Geometry, BS};
 use sage::config::Testbed;
 use sage::hsm::{Hsm, Migration, TieringPolicy};
 use sage::mero::{sns, sns_serial, Layout, MeroStore, ObjectId};
 use sage::proptest::prop_check;
 use sage::sim::device::DeviceKind;
 
-const BS: u64 = 4096;
-const UNIT: u64 = 16384;
+/// This suite's historical sampling family (see `bench::testkit`).
+const GEO: Geometry = Geometry::REPAIR;
 
 fn layout(k: u32, p: u32) -> Layout {
-    Layout::Raid { data: k, parity: p, unit: UNIT, tier: DeviceKind::Ssd }
+    testkit::raid(k, p)
 }
 
 /// Deterministic payload for extent (idx, len_blocks).
 fn bytes_for(idx: u64, len_blocks: u64) -> Vec<u8> {
-    (0..len_blocks * BS)
-        .map(|j| ((idx * 151 + len_blocks * 43 + j) % 251) as u8)
-        .collect()
-}
-
-/// Total logical span of an extent list, in bytes.
-fn span(extents: &[(u64, u64)]) -> u64 {
-    extents.iter().map(|(i, l)| (i + l) * BS).max().unwrap_or(0)
+    GEO.bytes_for(idx, len_blocks)
 }
 
 fn gen_extents(r: &mut sage::sim::rng::SimRng) -> Vec<(u64, u64)> {
-    let n = 1 + r.gen_range(5) as usize;
-    (0..n)
-        .map(|_| (r.gen_range(48), 1 + r.gen_range(12)))
-        .collect()
+    GEO.gen_extents(r)
 }
 
 /// Two stores with the extents applied through each engine — identical

@@ -11,36 +11,26 @@
 //!    EVERY sampled geometry (a slow device only delays the stripes
 //!    that touch it; the fold delays everything behind it).
 
+use sage::bench::testkit::{self, span, Geometry, BS};
 use sage::clovis::{Client, Extent};
 use sage::config::Testbed;
 use sage::mero::{sns_serial, Layout, MeroStore, ObjectId};
 use sage::proptest::prop_check;
-use sage::sim::device::DeviceKind;
 
-const BS: u64 = 4096;
-const UNIT: u64 = 16384;
+/// This suite's historical sampling family (see `bench::testkit`).
+const GEO: Geometry = Geometry::SCHED;
 
 fn layout(k: u32, p: u32) -> Layout {
-    Layout::Raid { data: k, parity: p, unit: UNIT, tier: DeviceKind::Ssd }
+    testkit::raid(k, p)
 }
 
 /// Deterministic payload for extent (idx, len_blocks).
 fn bytes_for(idx: u64, len_blocks: u64) -> Vec<u8> {
-    (0..len_blocks * BS)
-        .map(|j| ((idx * 137 + len_blocks * 29 + j) % 251) as u8)
-        .collect()
-}
-
-/// Total logical span of an extent list, in bytes.
-fn span(extents: &[(u64, u64)]) -> u64 {
-    extents.iter().map(|(i, l)| (i + l) * BS).max().unwrap_or(0)
+    GEO.bytes_for(idx, len_blocks)
 }
 
 fn gen_extents(r: &mut sage::sim::rng::SimRng) -> Vec<(u64, u64)> {
-    let n = 1 + r.gen_range(6) as usize;
-    (0..n)
-        .map(|_| (r.gen_range(64), 1 + r.gen_range(16)))
-        .collect()
+    GEO.gen_extents(r)
 }
 
 /// Serial-fold store with the extents applied as one chained batch.
@@ -73,7 +63,7 @@ fn sharded_client(
     p: u32,
     extents: &[(u64, u64)],
 ) -> (Client, ObjectId, f64) {
-    let mut c = Client::new_sim(Testbed::sage_prototype());
+    let mut c = testkit::sage_client();
     let obj = c.create_object_with(BS, layout(k, p)).unwrap();
     let datas: Vec<Vec<u8>> = extents
         .iter()

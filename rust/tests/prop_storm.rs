@@ -19,9 +19,9 @@
 //!    touch keeps its placement map exactly; a second rebalance is a
 //!    no-op (the plan converges).
 
+use sage::bench::testkit::populated;
 use sage::clovis::{Client, RecoveryVerdict};
 use sage::cluster::failure::{FailureEvent, FailureKind, FailureSchedule};
-use sage::config::Testbed;
 use sage::mero::ha::RepairAction;
 use sage::mero::ObjectId;
 use sage::proptest::prop_check;
@@ -47,22 +47,6 @@ fn decode(codes: &[EventCode], ssds: &[usize], base: f64, spread: f64) -> Vec<Fa
             FailureEvent { at: base + (ms % 5000) as f64 / 5000.0 * spread, kind }
         })
         .collect()
-}
-
-/// Client with `n` small striped objects (default SSD 4+1 layout) and
-/// deterministic payloads; returns ids alongside.
-fn populated(n: usize, seed: u64) -> (Client, Vec<(ObjectId, Vec<u8>)>) {
-    let mut c = Client::new_sim(Testbed::sage_prototype());
-    let mut rng = SimRng::new(seed);
-    let mut objs = Vec::new();
-    for _ in 0..n {
-        let id = c.create_object(4096).unwrap();
-        let mut d = vec![0u8; 4 * 65536];
-        rng.fill_bytes(&mut d);
-        c.write_object(&id, 0, &d).unwrap();
-        objs.push((id, d));
-    }
-    (c, objs)
 }
 
 fn gen_codes(r: &mut SimRng) -> Vec<EventCode> {

@@ -1,0 +1,368 @@
+//! Property tests for the multi-tenant concurrency plane (ISSUE 7):
+//! ONE cluster-wide scheduler shared by every session, N contending
+//! tenants on weighted fair shares.
+//!
+//! 1. **Private-scheduler equivalence** — a single tenant running
+//!    sessions on the shared scheduler reproduces the pre-PR
+//!    private-scheduler schedules bit-exactly: same bytes, same
+//!    placements, completion times and frontiers equal via
+//!    `f64::to_bits`. The oracle resets `Client::sched` to a fresh
+//!    instance before every session — exactly the one-group-one-
+//!    scheduler world this PR replaced.
+//! 2. **N-tenant determinism** — repeated contended multi-tenant runs
+//!    produce bit-identical completions and per-tenant frontier
+//!    tables.
+//! 3. **Weighted share bound** — on every shard, each tenant's
+//!    observed device-time share never exceeds its
+//!    `TenantShares::share` weight fraction.
+//! 4. **No starvation** — under arbitrarily skewed weights every
+//!    tenant's session completes at a finite time and its frontier
+//!    advances past the shard base wherever it ran.
+
+use sage::bench::testkit::{self, span, Geometry, BS, UNIT};
+use sage::clovis::{Client, OpOutput};
+use sage::mero::ObjectId;
+use sage::proptest::prop_check;
+use sage::sim::rng::SimRng;
+use sage::sim::sched::{IoScheduler, TenantId, DEFAULT_TENANT};
+
+/// This suite's sampling family (see `bench::testkit`).
+const GEO: Geometry = Geometry::TENANT;
+
+fn gen_extents(r: &mut SimRng) -> Vec<(u64, u64)> {
+    GEO.gen_extents(r)
+}
+
+/// 2–3 session batches per case, each its own sampled extent list.
+fn gen_batches(r: &mut SimRng) -> Vec<Vec<(u64, u64)>> {
+    let n = 2 + r.gen_index(2);
+    (0..n).map(|_| GEO.gen_extents(r)).collect()
+}
+
+/// Run one session per batch (write chained to a read-back) and
+/// fingerprint every schedule-visible time as bits. With `reset` the
+/// client's shared scheduler is replaced by a fresh instance before
+/// each session — the pre-PR private-scheduler oracle.
+fn run_sessions(
+    reset: bool,
+    batches: &[Vec<(u64, u64)>],
+) -> (Client, Vec<ObjectId>, Vec<u64>) {
+    let mut c = testkit::sage_client();
+    let mut objs = Vec::new();
+    let mut bits = Vec::new();
+    for (si, extents) in batches.iter().enumerate() {
+        if reset {
+            c.sched = IoScheduler::new();
+        }
+        let obj = c.create_object_with(BS, testkit::raid(4, 2)).unwrap();
+        let datas: Vec<Vec<u8>> = extents
+            .iter()
+            .map(|(i, l)| GEO.bytes_for(i + 10 * si as u64, *l))
+            .collect();
+        let refs: Vec<(u64, &[u8])> = extents
+            .iter()
+            .zip(datas.iter())
+            .map(|((i, _), d)| (i * BS, d.as_slice()))
+            .collect();
+        let total = span(extents);
+        let mut s = c.session();
+        let w = s.write(&obj, &refs);
+        let r = s.read(&obj, &[sage::clovis::Extent::new(0, total)]);
+        s.after(r, w).unwrap();
+        let rep = s.run().unwrap();
+        bits.extend(rep.completed.iter().map(|t| t.to_bits()));
+        bits.push(rep.completed_at.to_bits());
+        for &(d, f) in &rep.frontiers {
+            bits.push(d as u64);
+            bits.push(f.to_bits());
+        }
+        bits.push(c.now.to_bits());
+        objs.push(obj);
+    }
+    (c, objs, bits)
+}
+
+#[test]
+fn prop_single_tenant_shared_scheduler_matches_private_oracle() {
+    // the tentpole pin: hoisting the scheduler to the client must not
+    // move a single completion for sequential single-tenant sessions
+    prop_check(
+        "tenant-private-oracle",
+        12,
+        gen_batches,
+        |batches: &Vec<Vec<(u64, u64)>>| {
+            if batches.iter().any(|b| span(b) == 0) {
+                return true;
+            }
+            let (mut shared, objs_s, bits_s) = run_sessions(false, batches);
+            let (mut oracle, objs_o, bits_o) = run_sessions(true, batches);
+            if bits_s != bits_o {
+                return false;
+            }
+            // same placements and same stored bytes, object by object
+            for (a, b) in objs_s.iter().zip(objs_o.iter()) {
+                if testkit::placements(&shared, *a)
+                    != testkit::placements(&oracle, *b)
+                {
+                    return false;
+                }
+            }
+            for ((a, b), extents) in
+                objs_s.iter().zip(objs_o.iter()).zip(batches.iter())
+            {
+                let total = span(extents);
+                let x = shared.read_object(a, 0, total).unwrap();
+                let y = oracle.read_object(b, 0, total).unwrap();
+                if x != y {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn shared_scheduler_mixed_repair_session_matches_private_oracle_bit_exactly() {
+    // the cap-template workload from prop_qos (repair staged next to a
+    // foreground write, default split active), shared vs private
+    let run = |reset: bool| {
+        let mut c = testkit::sage_client();
+        let mut objs = Vec::new();
+        for i in 0..3u64 {
+            if reset {
+                c.sched = IoScheduler::new();
+            }
+            let o = c.create_object_with(BS, testkit::raid(4, 2)).unwrap();
+            let data = GEO.bytes_for(i, 2 * 4 * UNIT / BS);
+            let mut s = c.session();
+            s.write(&o, &[(0, data.as_slice())]);
+            s.run().unwrap();
+            objs.push((o, data));
+        }
+        let dev =
+            c.store.object(objs[0].0).unwrap().placement(0, 0).unwrap().device;
+        c.store.cluster.fail_device(dev);
+        if reset {
+            c.sched = IoScheduler::new();
+        }
+        let ids: Vec<ObjectId> = objs.iter().map(|(o, _)| *o).collect();
+        let fg = c.create_object_with(BS, testkit::raid(4, 2)).unwrap();
+        let fg_data = GEO.bytes_for(99, 8);
+        let mut s = c.session();
+        let r = s.repair(&ids, dev);
+        let w = s.write(&fg, &[(0, fg_data.as_slice())]);
+        let rep = s.run().unwrap();
+        let rebuilt = match rep.output(r) {
+            OpOutput::Repair { bytes } => *bytes,
+            other => panic!("repair output expected, got {other:?}"),
+        };
+        let mut bits: Vec<u64> =
+            rep.completed.iter().map(|t| t.to_bits()).collect();
+        bits.push(rep.completed[w.index()].to_bits());
+        bits.push(rep.completed_at.to_bits());
+        for &(d, f) in &rep.frontiers {
+            bits.push(d as u64);
+            bits.push(f.to_bits());
+        }
+        let mut reads = vec![c.read_object(&fg, 0, fg_data.len() as u64).unwrap()];
+        for (o, data) in &objs {
+            reads.push(c.read_object(o, 0, data.len() as u64).unwrap());
+        }
+        (rebuilt, bits, reads)
+    };
+    let (rebuilt_s, bits_s, reads_s) = run(false);
+    let (rebuilt_o, bits_o, reads_o) = run(true);
+    assert!(rebuilt_s > 0, "the failed device held units");
+    assert_eq!(rebuilt_s, rebuilt_o, "identical rebuild work");
+    assert_eq!(bits_s, bits_o, "bit-identical mixed-session schedule");
+    assert_eq!(reads_s, reads_o, "byte-identical stores");
+}
+
+/// One contended multi-tenant round: every tenant writes its own
+/// object through a session dispatched at the SAME virtual instant
+/// (the clock is rewound between sessions), so the sessions overlap
+/// on the shared scheduler's busy shards instead of re-seeding.
+struct TenantRun {
+    tenant: TenantId,
+    obj: ObjectId,
+    datas: Vec<Vec<u8>>,
+    completed_bits: Vec<u64>,
+    completed_at: f64,
+    tenants_table: Vec<sage::sim::sched::TenantShardReport>,
+}
+
+fn contend(
+    c: &mut Client,
+    tenants: &[TenantId],
+    extents: &[(u64, u64)],
+) -> Vec<TenantRun> {
+    let t0 = c.now;
+    let mut runs = Vec::new();
+    for &tid in tenants {
+        c.now = t0;
+        let obj = c.create_object_with(BS, testkit::raid(4, 1)).unwrap();
+        let datas: Vec<Vec<u8>> = extents
+            .iter()
+            .map(|(i, l)| GEO.bytes_for(i + 1000 * tid as u64, *l))
+            .collect();
+        let refs: Vec<(u64, &[u8])> = extents
+            .iter()
+            .zip(datas.iter())
+            .map(|((i, _), d)| (i * BS, d.as_slice()))
+            .collect();
+        let mut s = c.session_as(tid).unwrap();
+        s.write(&obj, &refs);
+        let rep = s.run().unwrap();
+        runs.push(TenantRun {
+            tenant: tid,
+            obj,
+            datas,
+            completed_bits: rep.completed.iter().map(|t| t.to_bits()).collect(),
+            completed_at: rep.completed_at,
+            tenants_table: rep.tenants,
+        });
+    }
+    runs
+}
+
+/// Check a tenant's object against its write set (later extents win on
+/// overlap; holes are left unchecked).
+fn bytes_intact(c: &mut Client, run: &TenantRun, extents: &[(u64, u64)]) -> bool {
+    let total = span(extents);
+    let mut expect: Vec<Option<u8>> = vec![None; total as usize];
+    for ((i, _), d) in extents.iter().zip(run.datas.iter()) {
+        let off = (i * BS) as usize;
+        for (e, &b) in expect[off..off + d.len()].iter_mut().zip(d.iter()) {
+            *e = Some(b);
+        }
+    }
+    let got = c.read_object(&run.obj, 0, total).unwrap();
+    got.iter()
+        .zip(expect.iter())
+        .all(|(g, e)| match e {
+            Some(w) => g == w,
+            None => true,
+        })
+}
+
+#[test]
+fn prop_n_tenant_schedules_are_bit_deterministic() {
+    prop_check(
+        "tenant-n-determinism",
+        8,
+        |r| (gen_extents(r), (1 + r.gen_range(8), 1 + r.gen_range(8))),
+        |case: &(Vec<(u64, u64)>, (u64, u64))| {
+            let (extents, (wa, wb)) = case;
+            let run = || {
+                let mut c = testkit::sage_client();
+                c.store
+                    .cluster
+                    .tenants
+                    .set_weight(DEFAULT_TENANT, *wa as f64);
+                let t2 = c.register_tenant(*wb as f64);
+                let runs = contend(&mut c, &[DEFAULT_TENANT, t2], extents);
+                let mut bits = Vec::new();
+                for run in &runs {
+                    bits.extend(run.completed_bits.iter().copied());
+                    bits.push(run.completed_at.to_bits());
+                    for shard in &run.tenants_table {
+                        bits.push(shard.device as u64);
+                        bits.push(shard.base.to_bits());
+                        for lane in &shard.lanes {
+                            bits.push(lane.tenant as u64);
+                            bits.push(lane.busy.to_bits());
+                            bits.push(lane.frontier.to_bits());
+                        }
+                    }
+                }
+                bits
+            };
+            run() == run()
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_share_bound_holds_on_every_shard() {
+    prop_check(
+        "tenant-share-bound",
+        10,
+        |r| (gen_extents(r), (1 + r.gen_range(8), 1 + r.gen_range(8))),
+        |case: &(Vec<(u64, u64)>, (u64, u64))| {
+            let (extents, (wa, wb)) = case;
+            let mut c = testkit::sage_client();
+            c.store.cluster.tenants.set_weight(DEFAULT_TENANT, *wa as f64);
+            let t2 = c.register_tenant(*wb as f64);
+            let runs = contend(&mut c, &[DEFAULT_TENANT, t2], extents);
+            // on every shard either tenant touched, its observed
+            // device-time share stays within its weight fraction
+            let caps = [
+                (DEFAULT_TENANT, c.store.cluster.tenants.share(DEFAULT_TENANT)),
+                (t2, c.store.cluster.tenants.share(t2)),
+            ];
+            for shard in c.sched.tenant_report_all() {
+                for &(t, cap) in &caps {
+                    if shard.observed_share(t) > cap + 1e-9 {
+                        return false;
+                    }
+                }
+            }
+            // the split never touches bytes
+            let mut ok = true;
+            for run in &runs {
+                ok &= bytes_intact(&mut c, run, extents);
+            }
+            ok
+        },
+    );
+}
+
+#[test]
+fn prop_no_tenant_starves_under_skewed_weights() {
+    prop_check(
+        "tenant-no-starvation",
+        10,
+        |r| {
+            let n = 2 + r.gen_index(2);
+            let weights: Vec<u64> =
+                (0..n).map(|_| 1 + r.gen_range(16)).collect();
+            (GEO.gen_extents(r), weights)
+        },
+        |case: &(Vec<(u64, u64)>, Vec<u64>)| {
+            let (extents, weights) = case;
+            if weights.len() < 2 {
+                return true; // shrunk below the multi-tenant regime
+            }
+            let mut c = testkit::sage_client();
+            c.store
+                .cluster
+                .tenants
+                .set_weight(DEFAULT_TENANT, weights[0] as f64);
+            let mut tenants = vec![DEFAULT_TENANT];
+            for &w in &weights[1..] {
+                tenants.push(c.register_tenant(w as f64));
+            }
+            let runs = contend(&mut c, &tenants, extents);
+            for run in &runs {
+                // finite completion: the weighted lanes never block on
+                // another tenant's lane, so no session can hang
+                if !run.completed_at.is_finite() || run.completed_at <= 0.0 {
+                    return false;
+                }
+                // and the tenant made real progress wherever it ran
+                let advanced = run.tenants_table.iter().any(|shard| {
+                    shard.tenant_frontier(run.tenant) > shard.base
+                });
+                if !advanced {
+                    return false;
+                }
+            }
+            let mut ok = true;
+            for run in &runs {
+                ok &= bytes_intact(&mut c, run, extents);
+            }
+            ok
+        },
+    );
+}

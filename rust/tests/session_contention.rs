@@ -1,0 +1,195 @@
+//! Integration test (ISSUE 7 satellite): a foreground writer session
+//! and a repair session CONTENDING on the same shards of the ONE
+//! cluster-wide scheduler.
+//!
+//! Two clients start from identical pre-state (population + one failed
+//! device). The *serial* client runs the repair session to completion
+//! and only then the foreground write. The *contended* client runs the
+//! same repair, then rewinds its clock to the repair's start so the
+//! foreground session dispatches INTO the rebuild window — overlapping
+//! epochs on busy shards. Pinned:
+//!
+//! * the interleaving really differs — the contended foreground lands
+//!   strictly earlier than the serial one (it rides the ≥ 70 %
+//!   foreground share through the rebuild instead of queueing behind
+//!   the whole committed backlog), and its frontier table is not the
+//!   serial one;
+//! * bytes are identical everywhere — contention changes WHEN, never
+//!   WHAT;
+//! * the QoS split still bounds repair on the shared scheduler: every
+//!   shard's observed repair share stays within `repair_share`;
+//! * the legacy `repair_with` wrapper rides the same shared scheduler:
+//!   bit-identical repair completion to the explicit session.
+
+use sage::bench::testkit::{self, Geometry, BS, UNIT};
+use sage::clovis::{Client, OpOutput};
+use sage::mero::ObjectId;
+use sage::sim::sched::{QosConfig, TrafficClass};
+
+const GEO: Geometry = Geometry::TENANT;
+
+/// Identical pre-state: 4 populated objects, first unit's device
+/// failed. Returns the client, the population, and the failed device.
+fn prestate() -> (Client, Vec<(ObjectId, Vec<u8>)>, usize) {
+    let mut c = testkit::sage_client();
+    let mut objs = Vec::new();
+    for i in 0..4u64 {
+        let o = c.create_object_with(BS, testkit::raid(4, 2)).unwrap();
+        let data = GEO.bytes_for(i, 3 * 4 * UNIT / BS);
+        c.write_object(&o, 0, &data).unwrap();
+        objs.push((o, data));
+    }
+    let dev =
+        c.store.object(objs[0].0).unwrap().placement(0, 0).unwrap().device;
+    c.store.cluster.fail_device(dev);
+    (c, objs, dev)
+}
+
+struct Outcome {
+    c: Client,
+    objs: Vec<(ObjectId, Vec<u8>)>,
+    fg_obj: ObjectId,
+    fg_data: Vec<u8>,
+    bytes_rebuilt: u64,
+    repair_t: f64,
+    /// Foreground completion relative to its own dispatch instant.
+    fg_rel: f64,
+    /// Foreground completion in absolute virtual time.
+    fg_abs: f64,
+    fg_frontier_bits: Vec<(usize, u64)>,
+    max_repair_share: f64,
+}
+
+/// Run repair then a foreground full-stripe write. `contend` rewinds
+/// the clock so the write dispatches at the repair's start instead of
+/// after its completion.
+fn run(contend: bool) -> Outcome {
+    let (mut c, objs, dev) = prestate();
+    let t0 = c.now;
+    let ids: Vec<ObjectId> = objs.iter().map(|(o, _)| *o).collect();
+    let mut s = c.session();
+    let r = s.repair(&ids, dev);
+    let rep = s.run().unwrap();
+    let bytes_rebuilt = match rep.output(r) {
+        OpOutput::Repair { bytes } => *bytes,
+        other => panic!("repair output expected, got {other:?}"),
+    };
+    let repair_t = rep.completed[r.index()];
+    let mut max_repair_share = 0.0f64;
+    for shard in &rep.qos {
+        max_repair_share =
+            max_repair_share.max(shard.observed_share(TrafficClass::Repair));
+    }
+    if contend {
+        c.now = t0; // dispatch the writer INTO the rebuild window
+    }
+    let t_fg0 = c.now;
+    let fg_obj = c.create_object_with(BS, testkit::raid(4, 2)).unwrap();
+    let fg_data = GEO.bytes_for(50, 2 * 4 * UNIT / BS);
+    let mut s = c.session();
+    let w = s.write(&fg_obj, &[(0, fg_data.as_slice())]);
+    let rep = s.run().unwrap();
+    Outcome {
+        fg_rel: rep.completed[w.index()] - t_fg0,
+        fg_abs: rep.completed[w.index()],
+        fg_frontier_bits: rep
+            .frontiers
+            .iter()
+            .map(|&(d, f)| (d, f.to_bits()))
+            .collect(),
+        c,
+        objs,
+        fg_obj,
+        fg_data,
+        bytes_rebuilt,
+        repair_t,
+        max_repair_share,
+    }
+}
+
+#[test]
+fn contended_foreground_overlaps_the_rebuild_and_bytes_survive() {
+    let mut serial = run(false);
+    let mut contended = run(true);
+
+    // identical pre-state produced identical repairs
+    assert!(serial.bytes_rebuilt > 0, "the failed device held units");
+    assert_eq!(serial.bytes_rebuilt, contended.bytes_rebuilt);
+    assert_eq!(serial.repair_t.to_bits(), contended.repair_t.to_bits());
+
+    // the interleaving differs: dispatched into the rebuild window the
+    // writer completes later than an uncontended write would relative
+    // to its dispatch — but strictly earlier in absolute virtual time
+    // than queueing behind the whole rebuild
+    assert_ne!(
+        serial.fg_frontier_bits, contended.fg_frontier_bits,
+        "overlapped epochs must not reproduce the serial frontiers"
+    );
+    assert!(
+        contended.fg_rel >= serial.fg_rel * (1.0 - 1e-9),
+        "contention cannot beat an idle pool ({} vs {})",
+        contended.fg_rel,
+        serial.fg_rel
+    );
+    assert!(
+        contended.fg_abs < serial.fg_abs,
+        "the split lets the writer ride through the rebuild window \
+         ({} vs {} serialized)",
+        contended.fg_abs,
+        serial.fg_abs
+    );
+
+    // the cap still bounds repair on the shared scheduler
+    let cap = QosConfig::default().share(TrafficClass::Repair);
+    assert!(serial.max_repair_share > 0.0, "repair really ran");
+    assert!(serial.max_repair_share <= cap + 1e-9);
+    assert!(contended.max_repair_share <= cap + 1e-9);
+
+    // contention changes WHEN, never WHAT
+    for out in [&mut serial, &mut contended] {
+        let fg_obj = out.fg_obj;
+        let fg_want = out.fg_data.clone();
+        let got = out.c.read_object(&fg_obj, 0, fg_want.len() as u64).unwrap();
+        assert_eq!(got, fg_want, "foreground bytes intact");
+        for (o, want) in out.objs.clone() {
+            let got = out.c.read_object(&o, 0, want.len() as u64).unwrap();
+            assert_eq!(got, want, "repaired bytes intact");
+        }
+    }
+    let a: Vec<Vec<u8>> = serial
+        .objs
+        .iter()
+        .map(|(o, d)| serial.c.read_object(o, 0, d.len() as u64).unwrap())
+        .collect();
+    let b: Vec<Vec<u8>> = contended
+        .objs
+        .iter()
+        .map(|(o, d)| contended.c.read_object(o, 0, d.len() as u64).unwrap())
+        .collect();
+    assert_eq!(a, b, "cross-client byte identity");
+}
+
+#[test]
+fn legacy_repair_with_rides_the_shared_scheduler_bit_exactly() {
+    // the wrapper and an explicit one-op session must be the same
+    // schedule on the same shared scheduler
+    let (mut c1, _objs1, dev1) = prestate();
+    let ids1: Vec<ObjectId> = _objs1.iter().map(|(o, _)| *o).collect();
+    let mut s = c1.session();
+    let r = s.repair(&ids1, dev1);
+    let rep = s.run().unwrap();
+    let t_session = rep.completed[r.index()];
+    let bytes_session = match rep.output(r) {
+        OpOutput::Repair { bytes } => *bytes,
+        other => panic!("repair output expected, got {other:?}"),
+    };
+
+    let (mut c2, _objs2, dev2) = prestate();
+    let ids2: Vec<ObjectId> = _objs2.iter().map(|(o, _)| *o).collect();
+    assert_eq!(dev1, dev2, "identical pre-state");
+    let (bytes_legacy, t_legacy) = c2.repair_with(&ids2, dev2).unwrap();
+
+    assert_eq!(bytes_session, bytes_legacy);
+    assert_eq!(t_session.to_bits(), t_legacy.to_bits());
+    assert_eq!(c1.now.to_bits(), c2.now.to_bits());
+}
