@@ -1,0 +1,310 @@
+//! Sim-core hot-path ablation (§Perf, ISSUE 8): the dense
+//! representation overhaul — sorted-run object maps, Vec-indexed
+//! scheduler shards, sorted lane tables, recycled ticket storage —
+//! measured against the preserved BTreeMap scheduler core
+//! (`sage::sim::sched_oracle::OracleScheduler`), with bit-identity
+//! asserted IN the bench:
+//!
+//! * **soak double-run** — the overhauled sim core must still produce
+//!   a bit-identical [`SoakReport`] for one config run twice (the
+//!   soak's own determinism oracle, now running on the dense paths);
+//! * **scheduler differential** — one deterministic submission stream
+//!   replays through the dense `IoScheduler` and the preserved
+//!   `OracleScheduler`; every completion, epoch frontier and final
+//!   device `busy_until` must agree to the bit;
+//! * **speedup** — the same replay is wall-clocked on both cores
+//!   (median ± MAD); in full mode the bench asserts
+//!   `speedup >= 1` — the dense tables must never be slower than the
+//!   BTreeMap core they replaced. Quick mode records the ratio
+//!   without asserting (CI-noise tolerance on a small stream).
+//!
+//! Reported: soak cycle wall median ± MAD, the soak's phase timers
+//! ([`SoakDiag`]), replay medians for both cores and the speedup.
+//!
+//! Run: `cargo bench --bench ablate_simcore`
+//! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_simcore`
+//! Rows append to `bench_results/ablate_simcore.json`
+//! (fields documented in `bench_results/README.md`).
+
+use sage::bench::{record, Bencher};
+use sage::metrics::Table;
+use sage::sim::device::{Access, Device, DeviceProfile, IoOp};
+use sage::sim::rng::SimRng;
+use sage::sim::sched::{QosConfig, TenantShares, TrafficClass};
+use sage::sim::sched_oracle::OracleScheduler;
+use sage::sim::IoScheduler;
+use sage::tools::soak::{run, SoakConfig};
+
+/// Virtual seconds between replay epochs.
+const EPOCH_GAP: f64 = 10.0;
+
+/// One replayed submission (pre-generated so workload generation
+/// stays outside the measured closures).
+#[derive(Clone, Copy)]
+struct Sub {
+    device: usize,
+    at: f64,
+    size: u64,
+    op: IoOp,
+    access: Access,
+    class: TrafficClass,
+    tenant: usize,
+}
+
+/// Deterministic submission stream: `n_epochs` epochs of `per_epoch`
+/// ops spread over `n_devices` devices, mixing classes, tenants,
+/// sizes and access patterns so the QoS, tenancy and coalescing paths
+/// all run.
+fn gen_workload(
+    n_devices: usize,
+    n_epochs: usize,
+    per_epoch: usize,
+    seed: u64,
+) -> Vec<Vec<Sub>> {
+    let mut rng = SimRng::new(seed);
+    let mut epochs = Vec::with_capacity(n_epochs);
+    for e in 0..n_epochs {
+        let now = e as f64 * EPOCH_GAP;
+        let mut subs = Vec::with_capacity(per_epoch);
+        for _ in 0..per_epoch {
+            subs.push(Sub {
+                device: rng.gen_index(n_devices),
+                at: now + rng.gen_f64(),
+                size: 4096u64 << rng.gen_index(5),
+                op: if rng.gen_f64() < 0.5 { IoOp::Read } else { IoOp::Write },
+                access: if rng.gen_f64() < 0.7 {
+                    Access::Seq
+                } else {
+                    Access::Random
+                },
+                class: TrafficClass::ALL[rng.gen_index(3)],
+                tenant: rng.gen_index(3),
+            });
+        }
+        epochs.push(subs);
+    }
+    epochs
+}
+
+fn mk_devices(n: usize) -> Vec<Device> {
+    (0..n)
+        .map(|i| {
+            Device::new(if i % 2 == 0 {
+                DeviceProfile::ssd(1 << 40)
+            } else {
+                DeviceProfile::hdd(1 << 40)
+            })
+        })
+        .collect()
+}
+
+fn mk_tenants() -> TenantShares {
+    let mut t = TenantShares::single();
+    t.register(2.0);
+    t.register(1.0);
+    t
+}
+
+fn mk_qos() -> QosConfig {
+    QosConfig { repair_share: 0.4, migration_share: 0.25 }
+}
+
+/// Replay the stream through the dense `IoScheduler`; returns the sum
+/// of per-epoch `wait_all` frontiers (black-boxed by the bencher).
+fn replay_dense(epochs: &[Vec<Sub>], n_devices: usize) -> f64 {
+    let mut devices = mk_devices(n_devices);
+    let mut sched = IoScheduler::with_qos(mk_qos());
+    sched.set_tenants(mk_tenants());
+    let mut acc = 0.0;
+    let mut frontier_buf = Vec::new();
+    for (e, subs) in epochs.iter().enumerate() {
+        sched.begin_epoch(e as f64 * EPOCH_GAP);
+        for s in subs {
+            sched.set_class(s.class);
+            sched.set_tenant(s.tenant);
+            sched.submit(s.device, s.at, s.size, s.op, s.access);
+        }
+        sched.drain(&mut devices);
+        acc += sched.wait_all();
+        // the allocation-free report path the session layer hits
+        sched.frontiers_into(&mut frontier_buf);
+        acc += frontier_buf.len() as f64;
+    }
+    acc
+}
+
+/// Same replay through the preserved BTreeMap core.
+fn replay_oracle(epochs: &[Vec<Sub>], n_devices: usize) -> f64 {
+    let mut devices = mk_devices(n_devices);
+    let mut sched = OracleScheduler::with_qos(mk_qos());
+    sched.set_tenants(mk_tenants());
+    let mut acc = 0.0;
+    for (e, subs) in epochs.iter().enumerate() {
+        sched.begin_epoch(e as f64 * EPOCH_GAP);
+        for s in subs {
+            sched.set_class(s.class);
+            sched.set_tenant(s.tenant);
+            sched.submit(s.device, s.at, s.size, s.op, s.access);
+        }
+        sched.drain(&mut devices);
+        acc += sched.wait_all();
+        acc += sched.frontiers().len() as f64;
+    }
+    acc
+}
+
+/// Replay once through BOTH cores side by side and assert every
+/// observable agrees to the bit: per-ticket completions, per-epoch
+/// frontier tables, `wait_all`, and final device `busy_until`.
+fn assert_cores_bit_identical(epochs: &[Vec<Sub>], n_devices: usize) {
+    let mut dev_a = mk_devices(n_devices);
+    let mut dev_b = mk_devices(n_devices);
+    let mut dense = IoScheduler::with_qos(mk_qos());
+    dense.set_tenants(mk_tenants());
+    let mut oracle = OracleScheduler::with_qos(mk_qos());
+    oracle.set_tenants(mk_tenants());
+    let mut frontier_buf = Vec::new();
+    for (e, subs) in epochs.iter().enumerate() {
+        let now = e as f64 * EPOCH_GAP;
+        dense.begin_epoch(now);
+        oracle.begin_epoch(now);
+        let mut ta = Vec::with_capacity(subs.len());
+        let mut tb = Vec::with_capacity(subs.len());
+        for s in subs {
+            dense.set_class(s.class);
+            dense.set_tenant(s.tenant);
+            oracle.set_class(s.class);
+            oracle.set_tenant(s.tenant);
+            ta.push(dense.submit(s.device, s.at, s.size, s.op, s.access));
+            tb.push(oracle.submit(s.device, s.at, s.size, s.op, s.access));
+        }
+        dense.drain(&mut dev_a);
+        oracle.drain(&mut dev_b);
+        for (&x, &y) in ta.iter().zip(&tb) {
+            assert_eq!(
+                dense.completion(x).to_bits(),
+                oracle.completion(y).to_bits(),
+                "epoch {e}: completion diverged"
+            );
+        }
+        assert_eq!(
+            dense.wait_all().to_bits(),
+            oracle.wait_all().to_bits(),
+            "epoch {e}: wait_all diverged"
+        );
+        dense.frontiers_into(&mut frontier_buf);
+        let of = oracle.frontiers();
+        assert_eq!(frontier_buf.len(), of.len(), "epoch {e}: shard count");
+        for (a, b) in frontier_buf.iter().zip(&of) {
+            assert_eq!(a.0, b.0, "epoch {e}: frontier device order");
+            assert_eq!(
+                a.1.to_bits(),
+                b.1.to_bits(),
+                "epoch {e}: frontier diverged (device {})",
+                a.0
+            );
+        }
+    }
+    for (i, (a, b)) in dev_a.iter().zip(&dev_b).enumerate() {
+        assert_eq!(
+            a.busy_until.to_bits(),
+            b.busy_until.to_bits(),
+            "device {i}: busy_until diverged"
+        );
+    }
+}
+
+fn main() {
+    let quick = std::env::var("SAGE_BENCH_QUICK").is_ok();
+    let (n_devices, n_epochs, per_epoch) =
+        if quick { (16, 8, 2_000) } else { (64, 32, 8_000 ) };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 7) };
+
+    // ---- oracle 1: the soak on the dense sim core is still a pure
+    // function of its config (double-run, bit-identical report)
+    let soak_cfg = if quick { SoakConfig::quick(42) } else { SoakConfig::full(42) };
+    let a = run(&soak_cfg).expect("soak run");
+    let b = run(&soak_cfg).expect("soak rerun");
+    assert_eq!(a, b, "dense sim core: same config, bit-identical SoakReport");
+    assert!(a.events_consumed > 0 && a.recovered > 0, "the soak exercised recovery");
+
+    // ---- oracle 2: dense scheduler vs preserved BTreeMap core
+    let epochs = gen_workload(n_devices, n_epochs, per_epoch, 4242);
+    assert_cores_bit_identical(&epochs, n_devices);
+
+    // ---- wall clock: the soak cycle (quick shape in both modes so
+    // the measured loop is homogeneous; full mode already ran the
+    // full profile above for the equality oracle)
+    let wall_cfg = SoakConfig::quick(42);
+    let soak_m = Bencher::new("ablate_simcore/soak_quick_cycle")
+        .iters(warm, iters)
+        .wall(|| run(&wall_cfg).expect("soak wall cycle").events_consumed);
+
+    // ---- wall clock: the scheduler inner loop on both cores
+    let dense_m = Bencher::new("ablate_simcore/replay_dense")
+        .iters(warm, iters)
+        .wall(|| replay_dense(&epochs, n_devices));
+    let oracle_m = Bencher::new("ablate_simcore/replay_btree_oracle")
+        .iters(warm, iters)
+        .wall(|| replay_oracle(&epochs, n_devices));
+    let speedup = oracle_m.median / dense_m.median.max(1e-12);
+    if !quick {
+        assert!(
+            speedup >= 1.0,
+            "dense scheduler core regressed below the BTreeMap oracle: \
+             dense {:.6}s vs oracle {:.6}s (speedup {speedup:.3})",
+            dense_m.median,
+            oracle_m.median
+        );
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Sim-core ablation ({} devices, {} epochs × {} ops, {})",
+            n_devices,
+            n_epochs,
+            per_epoch,
+            if quick { "quick" } else { "full" }
+        ),
+        &["metric", "value"],
+    );
+    for (k, v) in [
+        ("soak cycle p50", sage::metrics::fmt_secs(soak_m.median)),
+        ("soak cycle MAD", sage::metrics::fmt_secs(soak_m.mad)),
+        ("soak wall total", sage::metrics::fmt_secs(a.diag.wall_total_s)),
+        ("  traffic phase", sage::metrics::fmt_secs(a.diag.wall_traffic_s)),
+        ("  consume phase", sage::metrics::fmt_secs(a.diag.wall_consume_s)),
+        ("  verify phase", sage::metrics::fmt_secs(a.diag.wall_verify_s)),
+        ("replay dense p50", sage::metrics::fmt_secs(dense_m.median)),
+        ("replay oracle p50", sage::metrics::fmt_secs(oracle_m.median)),
+        ("speedup (oracle/dense)", format!("{speedup:.3}x")),
+    ] {
+        t.row(vec![k.into(), v]);
+    }
+    print!("{}", t.render());
+    println!(
+        "bit-identity: SoakReport double-run OK, {} scheduler epochs \
+         dense==oracle to the bit\n",
+        n_epochs
+    );
+
+    record("ablate_simcore", &[
+        ("quick", if quick { 1.0 } else { 0.0 }),
+        ("n_devices", n_devices as f64),
+        ("n_epochs", n_epochs as f64),
+        ("per_epoch", per_epoch as f64),
+        ("soak_events_consumed", a.events_consumed as f64),
+        ("soak_cycle_s", soak_m.median),
+        ("soak_cycle_mad_s", soak_m.mad),
+        ("soak_wall_total_s", a.diag.wall_total_s),
+        ("soak_wall_traffic_s", a.diag.wall_traffic_s),
+        ("soak_wall_consume_s", a.diag.wall_consume_s),
+        ("soak_wall_verify_s", a.diag.wall_verify_s),
+        ("soak_allocs", a.diag.allocs as f64),
+        ("replay_dense_s", dense_m.median),
+        ("replay_dense_mad_s", dense_m.mad),
+        ("replay_oracle_s", oracle_m.median),
+        ("replay_oracle_mad_s", oracle_m.mad),
+        ("speedup", speedup),
+    ]);
+}

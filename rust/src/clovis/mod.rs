@@ -230,6 +230,19 @@ struct LastRecovery {
     escalated: bool,
 }
 
+/// §Perf (ISSUE 8): scratch recycled across
+/// [`Client::consume_failure_feed`] passes — the device→node map, the
+/// due-event batch and the per-device overlap table would otherwise
+/// reallocate on every pass (one pass per soak tick). Taken out of
+/// the client for the pass (`mem::take`) and put back afterwards, so
+/// `consume_event` can borrow its fields disjointly from `&mut self`.
+#[derive(Default)]
+struct PassScratch {
+    nodes: Vec<Option<usize>>,
+    due: Vec<FailureEvent>,
+    last: std::collections::HashMap<usize, LastRecovery>,
+}
+
 /// A Clovis client handle: the entry point of the SAGE storage API.
 pub struct Client {
     pub store: MeroStore,
@@ -249,6 +262,8 @@ pub struct Client {
     /// private scheduler. Its QoS split and tenant table are re-synced
     /// from [`Cluster::qos`]/[`Cluster::tenants`] at every adoption.
     pub sched: IoScheduler,
+    /// Recycled consumer-pass scratch (see [`PassScratch`]).
+    feed_scratch: PassScratch,
 }
 
 impl Client {
@@ -268,6 +283,7 @@ impl Client {
             fdmi: fdmi::FdmiBus::new(),
             now: 0.0,
             sched: IoScheduler::new(),
+            feed_scratch: PassScratch::default(),
         }
     }
 
@@ -605,19 +621,25 @@ impl Client {
         feed: &mut FailureSchedule,
         objects: &[ObjectId],
     ) -> Vec<RecoveryOutcome> {
+        // §Perf (ISSUE 8): the pass scratch is taken out of the
+        // client, reused for the whole pass (and across passes), and
+        // put back — a long soak runs one pass per tick and
+        // reallocating the node map / batch buffer / overlap table
+        // every tick was measurable churn.
+        let mut scratch = std::mem::take(&mut self.feed_scratch);
         // topology is fixed across the pass: map devices to nodes once
         let n_devs = self.store.cluster.devices.len();
-        let nodes: Vec<Option<usize>> = (0..n_devs)
-            .map(|d| self.store.cluster.node_of(d))
-            .collect();
-        let mut last: std::collections::HashMap<usize, LastRecovery> =
-            std::collections::HashMap::new();
+        scratch.nodes.clear();
+        scratch
+            .nodes
+            .extend((0..n_devs).map(|d| self.store.cluster.node_of(d)));
+        scratch.last.clear();
         let mut out: Vec<RecoveryOutcome> = Vec::new();
         loop {
             // events due at the client clock; executed recoveries
             // advance it, so newly-due events surface next iteration
-            let due = feed.due(self.now);
-            if due.is_empty() {
+            feed.due_into(self.now, &mut scratch.due);
+            if scratch.due.is_empty() {
                 break;
             }
             // failures strike at their own timestamps, BEFORE any
@@ -627,9 +649,9 @@ impl Client {
             // absorbed by an escalated repair — that device was
             // rebuilt, and the stale event refers to hardware that no
             // longer holds data.
-            for event in &due {
+            for event in &scratch.due {
                 if let FailureKind::Device(d) = event.kind {
-                    let absorbed = last.get(&d).is_some_and(|l| {
+                    let absorbed = scratch.last.get(&d).is_some_and(|l| {
                         l.escalated && event.at <= l.completed_at
                     });
                     if !absorbed && !self.store.cluster.devices[d].failed {
@@ -637,10 +659,17 @@ impl Client {
                     }
                 }
             }
-            for event in due {
-                self.consume_event(event, objects, &nodes, &mut last, &mut out);
+            for event in scratch.due.drain(..) {
+                self.consume_event(
+                    event,
+                    objects,
+                    &scratch.nodes,
+                    &mut scratch.last,
+                    &mut out,
+                );
             }
         }
+        self.feed_scratch = scratch;
         out
     }
 

@@ -196,10 +196,20 @@ impl FailureSchedule {
     /// Pop all events with `at <= now`.
     pub fn due(&mut self, now: SimTime) -> Vec<FailureEvent> {
         let mut out = Vec::new();
+        self.due_into(now, &mut out);
+        out
+    }
+
+    /// [`FailureSchedule::due`] into a caller-owned buffer (cleared
+    /// first). §Perf (ISSUE 8): the storm-hardened consumer polls the
+    /// feed once per loop iteration — recycling one batch buffer
+    /// across iterations keeps a long soak from allocating a fresh
+    /// Vec per poll.
+    pub fn due_into(&mut self, now: SimTime, out: &mut Vec<FailureEvent>) {
+        out.clear();
         while let Some(ev) = self.pop_next(now) {
             out.push(ev);
         }
-        out
     }
 
     /// Pop at most ONE due event (`at <= now`), advancing the

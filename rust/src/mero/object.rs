@@ -19,8 +19,20 @@
 //! the range and bulk-copy each overlap ([`Mobject::read_range_into`]),
 //! zero-filling sparse gaps. Parity units are `Arc`-shared so
 //! multi-parity layouts store one payload, not `p` deep clones.
+//!
+//! ## Dense sorted-run storage (ISSUE 8 §Perf)
+//!
+//! The segment, placement and unit-view maps are **sorted Vecs**
+//! (binary-search lookup, `partition_point` range scans), not
+//! BTreeMaps: at soak scale the per-entry node allocations and pointer
+//! chases dominated the sim core's wall-clock time. Writes land in
+//! increasing (stripe, unit) / block order on the hot path, so inserts
+//! are amortized O(1) appends; overwrite splits mutate runs in place
+//! (the head keeps the original buffer, only a mid-split tail bumps
+//! the `Arc` refcount — reads never do). Lookup results, iteration
+//! order and `Arc` sharing are bit-compatible with the BTreeMap
+//! layout, pinned by this module's tests and every `prop_*` suite.
 
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::cluster::DeviceId;
@@ -74,15 +86,18 @@ pub struct Mobject {
     pub id: ObjectId,
     pub block_size: u64,
     pub layout: Layout,
-    /// Sparse, disjoint block segments keyed by first block index.
-    /// Only blocks written through the *real* path exist here.
-    blocks: BTreeMap<u64, Segment>,
-    /// SNS unit placements, keyed by (stripe, unit).
-    placements: BTreeMap<(u64, u32), PlacedUnit>,
-    /// Unit payloads for SNS (parity units included), keyed likewise.
-    /// Present only for real writes; stored as views so one per-write
-    /// parity buffer serves every parity unit of every stripe.
-    unit_data: BTreeMap<(u64, u32), UnitView>,
+    /// Sparse, disjoint block segments: `(first block idx, run)` pairs
+    /// sorted by first index (dense sorted-run storage, §Perf). Only
+    /// blocks written through the *real* path exist here.
+    blocks: Vec<(u64, Segment)>,
+    /// SNS unit placements, sorted by (stripe, unit) — the order
+    /// `ensure_placement` creates them in, so inserts append.
+    placements: Vec<PlacedUnit>,
+    /// Unit payloads for SNS (parity units included), sorted by
+    /// (stripe, unit). Present only for real writes; stored as views
+    /// so one per-write parity buffer serves every parity unit of
+    /// every stripe.
+    unit_data: Vec<((u64, u32), UnitView)>,
     /// Logical extent high-water mark in bytes.
     pub size: u64,
 }
@@ -94,9 +109,9 @@ impl Mobject {
             id,
             block_size,
             layout,
-            blocks: BTreeMap::new(),
-            placements: BTreeMap::new(),
-            unit_data: BTreeMap::new(),
+            blocks: Vec::new(),
+            placements: Vec::new(),
+            unit_data: Vec::new(),
             size: 0,
         }
     }
@@ -114,60 +129,60 @@ impl Mobject {
 
     /// Remove block coverage of `[a, b)`, splitting boundary segments.
     /// Head/tail pieces keep views into their original buffers — no
-    /// payload copies.
+    /// payload copies, and boundary runs are mutated **in place**
+    /// (truncate / re-key) instead of remove+reinsert (§Perf).
     fn carve(&mut self, a: u64, b: u64) {
         let bs = self.block_size as usize;
-        // left neighbor extending into [a, b)
-        let left = self
-            .blocks
-            .range(..a)
-            .next_back()
-            .map(|(&k, s)| (k, s.n));
-        if let Some((k, n)) = left {
-            let seg_end = k + n;
+        // first run with key >= a
+        let lo = self.blocks.partition_point(|(k, _)| *k < a);
+        // left neighbor extending into [a, b): shrink it to the head
+        // in place; if it reached past b, split off a tail view at b
+        if lo > 0 {
+            let (k, seg_end) = {
+                let (k, seg) = &self.blocks[lo - 1];
+                (*k, *k + seg.n)
+            };
             if seg_end > a {
-                let seg = self.blocks.remove(&k).unwrap();
                 let head_n = a - k;
-                self.blocks.insert(
-                    k,
-                    Segment {
-                        buf: seg.buf.clone(),
-                        off: seg.off,
-                        n: head_n,
-                        crcs: seg.crcs[..head_n as usize].to_vec(),
-                    },
-                );
-                if seg_end > b {
-                    let skip = (b - k) as usize;
-                    self.blocks.insert(
-                        b,
+                let tail = {
+                    let seg = &mut self.blocks[lo - 1].1;
+                    let tail = (seg_end > b).then(|| {
+                        let skip = (b - k) as usize;
                         Segment {
-                            buf: seg.buf,
+                            buf: seg.buf.clone(),
                             off: seg.off + skip * bs,
                             n: seg_end - b,
                             crcs: seg.crcs[skip..].to_vec(),
-                        },
-                    );
+                        }
+                    });
+                    seg.n = head_n;
+                    seg.crcs.truncate(head_n as usize);
+                    tail
+                };
+                if let Some(tail) = tail {
+                    // the neighbor covered all of [a, b), so no run
+                    // starts inside the range: the tail slots in right
+                    // after the head
+                    self.blocks.insert(lo, (b, tail));
+                    return;
                 }
             }
         }
-        // segments starting inside [a, b)
-        let keys: Vec<u64> = self.blocks.range(a..b).map(|(&k, _)| k).collect();
-        for k in keys {
-            let seg = self.blocks.remove(&k).unwrap();
-            let seg_end = k + seg.n;
+        // runs starting inside [a, b): drop them; the last may extend
+        // past b — re-key it to b in place as the tail
+        let mut hi = self.blocks.partition_point(|(k, _)| *k < b);
+        if lo < hi {
+            let (k, seg) = &mut self.blocks[hi - 1];
+            let seg_end = *k + seg.n;
             if seg_end > b {
-                let skip = (b - k) as usize;
-                self.blocks.insert(
-                    b,
-                    Segment {
-                        buf: seg.buf,
-                        off: seg.off + skip * bs,
-                        n: seg_end - b,
-                        crcs: seg.crcs[skip..].to_vec(),
-                    },
-                );
+                let skip = (b - *k) as usize;
+                *k = b;
+                seg.off += skip * bs;
+                seg.n = seg_end - b;
+                seg.crcs.drain(..skip);
+                hi -= 1;
             }
+            self.blocks.drain(lo..hi);
         }
     }
 
@@ -191,17 +206,32 @@ impl Mobject {
         self.carve(first_idx, first_idx + n);
         let crcs: Vec<u32> =
             data.chunks_exact(bs).map(crc32fast::hash).collect();
+        // carve cleared [first_idx, first_idx+n): a fresh sorted
+        // insert, an O(1) append for sequential writes
+        let pos = self.blocks.partition_point(|(k, _)| *k < first_idx);
         self.blocks
-            .insert(first_idx, Segment { buf: data, off: 0, n, crcs });
+            .insert(pos, (first_idx, Segment { buf: data, off: 0, n, crcs }));
         self.size = self.size.max((first_idx + n) * self.block_size);
+    }
+
+    /// Index into `blocks` of the run covering `idx` (binary search).
+    fn seg_pos(&self, idx: u64) -> Option<usize> {
+        match self.blocks.binary_search_by(|(k, _)| k.cmp(&idx)) {
+            Ok(i) => Some(i),
+            Err(0) => None,
+            Err(i) => {
+                let (k, seg) = &self.blocks[i - 1];
+                (idx < k + seg.n).then_some(i - 1)
+            }
+        }
     }
 
     /// Locate the segment covering `idx`: (first block idx, segment).
     fn segment_of(&self, idx: u64) -> Option<(u64, &Segment)> {
-        match self.blocks.range(..=idx).next_back() {
-            Some((&k, seg)) if idx < k + seg.n => Some((k, seg)),
-            _ => None,
-        }
+        self.seg_pos(idx).map(|i| {
+            let (k, seg) = &self.blocks[i];
+            (*k, seg)
+        })
     }
 
     /// Fetch a block; zero-filled if never written (sparse semantics).
@@ -229,13 +259,12 @@ impl Mobject {
         last: u64,
     ) -> impl Iterator<Item = (u64, &[u8])> {
         let bs = self.block_size as usize;
-        let start_key = match self.blocks.range(..=first).next_back() {
-            Some((&k, seg)) if k + seg.n > first => k,
-            _ => first,
-        };
-        self.blocks
-            .range(start_key..=last)
-            .flat_map(move |(&k, seg)| {
+        let start = self.scan_start(first);
+        self.blocks[start..]
+            .iter()
+            .take_while(move |(k, _)| *k <= last)
+            .flat_map(move |(k, seg)| {
+                let k = *k;
                 (0..seg.n).filter_map(move |i| {
                     let idx = k + i;
                     if idx < first || idx > last {
@@ -245,6 +274,20 @@ impl Mobject {
                     Some((idx, &seg.buf[start..start + bs]))
                 })
             })
+    }
+
+    /// Index of the first run a scan over blocks `>= first` must
+    /// visit: the run covering `first` when one does, else the first
+    /// run starting at or after it.
+    fn scan_start(&self, first: u64) -> usize {
+        let mut start = self.blocks.partition_point(|(k, _)| *k < first);
+        if start > 0 {
+            let (k, seg) = &self.blocks[start - 1];
+            if k + seg.n > first {
+                start -= 1;
+            }
+        }
+        start
     }
 
     /// Fill `dst` with the logical bytes at `offset`: every byte of
@@ -259,12 +302,13 @@ impl Mobject {
         }
         let first = offset / bs;
         let last = (offset + len - 1) / bs;
-        let start_key = match self.blocks.range(..=first).next_back() {
-            Some((&k, seg)) if k + seg.n > first => k,
-            _ => first,
-        };
+        let start = self.scan_start(first);
         let mut cursor = 0usize; // next byte of dst not yet written
-        for (&k, seg) in self.blocks.range(start_key..=last) {
+        for (k, seg) in self.blocks[start..]
+            .iter()
+            .take_while(|(k, _)| *k <= last)
+        {
+            let k = *k;
             let byte_start = (k * bs).max(offset);
             let byte_end = ((k + seg.n) * bs).min(offset + len);
             if byte_start >= byte_end {
@@ -319,25 +363,47 @@ impl Mobject {
         let mut own = own;
         own[byte] ^= 0xFF;
         self.carve(idx, idx + 1);
+        let pos = self.blocks.partition_point(|(k, _)| *k < idx);
         self.blocks.insert(
-            idx,
-            Segment { buf: Arc::new(own), off: 0, n: 1, crcs: vec![old_crc] },
+            pos,
+            (
+                idx,
+                Segment {
+                    buf: Arc::new(own),
+                    off: 0,
+                    n: 1,
+                    crcs: vec![old_crc],
+                },
+            ),
         );
     }
 
-    /// Record an SNS unit placement.
+    /// Record an SNS unit placement. Placements are kept sorted by
+    /// (stripe, unit) — the order `ensure_placement` creates them in,
+    /// so the common case is an O(1) append; re-placing an existing
+    /// unit overwrites it in place.
     pub fn place_unit(&mut self, u: PlacedUnit) {
-        self.placements.insert((u.stripe, u.unit), u);
+        let key = (u.stripe, u.unit);
+        match self
+            .placements
+            .binary_search_by(|p| (p.stripe, p.unit).cmp(&key))
+        {
+            Ok(i) => self.placements[i] = u,
+            Err(i) => self.placements.insert(i, u),
+        }
     }
 
-    /// Placement of (stripe, unit) if recorded.
+    /// Placement of (stripe, unit) if recorded (binary search).
     pub fn placement(&self, stripe: u64, unit: u32) -> Option<&PlacedUnit> {
-        self.placements.get(&(stripe, unit))
+        self.placements
+            .binary_search_by(|p| (p.stripe, p.unit).cmp(&(stripe, unit)))
+            .ok()
+            .map(|i| &self.placements[i])
     }
 
-    /// All placed units.
+    /// All placed units, in (stripe, unit) order.
     pub fn placed_units(&self) -> impl Iterator<Item = &PlacedUnit> {
-        self.placements.values()
+        self.placements.iter()
     }
 
     /// Store an SNS unit payload (real path). Accepts an owned `Vec`
@@ -346,7 +412,17 @@ impl Mobject {
     pub fn put_unit<T: Into<Arc<Vec<u8>>>>(&mut self, stripe: u64, unit: u32, data: T) {
         let buf: Arc<Vec<u8>> = data.into();
         let len = buf.len();
-        self.unit_data.insert((stripe, unit), UnitView { buf, off: 0, len });
+        self.set_unit_view(stripe, unit, UnitView { buf, off: 0, len });
+    }
+
+    /// Sorted insert-or-replace into the unit-view table (the common
+    /// case — units written in (stripe, unit) order — appends).
+    fn set_unit_view(&mut self, stripe: u64, unit: u32, view: UnitView) {
+        let key = (stripe, unit);
+        match self.unit_data.binary_search_by(|(k, _)| k.cmp(&key)) {
+            Ok(i) => self.unit_data[i].1 = view,
+            Err(i) => self.unit_data.insert(i, (key, view)),
+        }
     }
 
     /// Store an SNS unit payload as a VIEW into a shared buffer
@@ -362,24 +438,34 @@ impl Mobject {
         len: usize,
     ) {
         debug_assert!(off + len <= buf.len(), "unit view out of bounds");
-        self.unit_data.insert((stripe, unit), UnitView { buf, off, len });
+        self.set_unit_view(stripe, unit, UnitView { buf, off, len });
     }
 
-    /// Fetch an SNS unit payload.
+    /// Fetch an SNS unit payload (binary search, borrowed — the read
+    /// path never bumps the buffer's refcount).
     pub fn get_unit(&self, stripe: u64, unit: u32) -> Option<&[u8]> {
         self.unit_data
-            .get(&(stripe, unit))
-            .map(|v| &v.buf[v.off..v.off + v.len])
+            .binary_search_by(|(k, _)| k.cmp(&(stripe, unit)))
+            .ok()
+            .map(|i| {
+                let v = &self.unit_data[i].1;
+                &v.buf[v.off..v.off + v.len]
+            })
     }
 
     /// Drop a unit payload (e.g. the device holding it failed).
     pub fn drop_unit(&mut self, stripe: u64, unit: u32) {
-        self.unit_data.remove(&(stripe, unit));
+        if let Ok(i) = self
+            .unit_data
+            .binary_search_by(|(k, _)| k.cmp(&(stripe, unit)))
+        {
+            self.unit_data.remove(i);
+        }
     }
 
     /// Number of materialized (real) blocks.
     pub fn real_blocks(&self) -> usize {
-        self.blocks.values().map(|s| s.n as usize).sum()
+        self.blocks.iter().map(|(_, s)| s.n as usize).sum()
     }
 
     /// Drop all placements and unit payloads (HSM re-tiering: the next
@@ -550,6 +636,85 @@ mod tests {
         assert_eq!(o.block_ref(0).unwrap()[0], 3);
         assert_eq!(o.block_ref(1).unwrap()[0], 3 ^ 0xFF);
         assert_eq!(o.real_blocks(), 3);
+    }
+
+    #[test]
+    fn placements_sort_regardless_of_insert_order() {
+        // dense sorted-Vec placements must iterate in (stripe, unit)
+        // order no matter the insertion order (old BTreeMap semantics)
+        let mut o = obj();
+        let mk = |stripe, unit| PlacedUnit {
+            stripe,
+            unit,
+            device: (stripe * 3 + unit as u64) as DeviceId,
+            size: 1024,
+            is_parity: false,
+        };
+        for (s, u) in [(2, 1), (0, 0), (2, 0), (1, 2), (0, 1)] {
+            o.place_unit(mk(s, u));
+        }
+        let order: Vec<(u64, u32)> =
+            o.placed_units().map(|p| (p.stripe, p.unit)).collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (1, 2), (2, 0), (2, 1)]);
+        // re-placing overwrites in place, no duplicate rows
+        let moved = PlacedUnit { device: 9, ..mk(1, 2) };
+        o.place_unit(moved);
+        assert_eq!(o.placed_units().count(), 5);
+        assert_eq!(o.placement(1, 2), Some(&moved));
+    }
+
+    #[test]
+    fn unit_views_sort_and_replace_regardless_of_insert_order() {
+        let mut o = obj();
+        o.put_unit(3, 0, vec![3u8; 8]);
+        o.put_unit(0, 1, vec![1u8; 8]);
+        o.put_unit(0, 0, vec![0u8; 8]);
+        assert_eq!(o.get_unit(0, 0).unwrap()[0], 0);
+        assert_eq!(o.get_unit(0, 1).unwrap()[0], 1);
+        assert_eq!(o.get_unit(3, 0).unwrap()[0], 3);
+        // rewrite replaces the view rather than stacking a duplicate
+        o.put_unit(0, 1, vec![7u8; 4]);
+        assert_eq!(o.get_unit(0, 1), Some(&[7u8, 7, 7, 7][..]));
+        o.drop_unit(0, 0);
+        assert!(o.get_unit(0, 0).is_none());
+        assert!(o.get_unit(0, 1).is_some());
+    }
+
+    #[test]
+    fn out_of_order_block_writes_keep_sorted_runs() {
+        // writes landing out of block order still read back in order
+        let mut o = obj();
+        o.put_block(9, vec![9u8; 4096]);
+        o.put_block(1, vec![1u8; 4096]);
+        o.put_blocks(4, Arc::new(vec![4u8; 2 * 4096]));
+        let seen: Vec<u64> = o.blocks_in(0, 20).map(|(i, _)| i).collect();
+        assert_eq!(seen, vec![1, 4, 5, 9]);
+        assert_eq!(o.real_blocks(), 4);
+        for (i, v) in [(1u64, 1u8), (4, 4), (5, 4), (9, 9)] {
+            assert_eq!(o.block_ref(i).unwrap()[0], v);
+            assert!(o.verify_block(i).is_ok());
+        }
+    }
+
+    #[test]
+    fn carve_three_way_overlap_patterns() {
+        // overwrite straddling two runs exercises both the left-
+        // neighbor shrink and the in-range tail re-key paths
+        let mut o = obj();
+        o.put_blocks(0, Arc::new(vec![1u8; 3 * 4096])); // [0,3)
+        o.put_blocks(4, Arc::new(vec![2u8; 3 * 4096])); // [4,7)
+        o.put_blocks(2, Arc::new(vec![9u8; 3 * 4096])); // [2,5)
+        let vals: Vec<u8> =
+            (0..7).map(|i| o.block_ref(i).unwrap()[0]).collect();
+        assert_eq!(vals, vec![1, 1, 9, 9, 9, 2, 2]);
+        assert_eq!(o.real_blocks(), 7);
+        for i in 0..7 {
+            assert!(o.verify_block(i).is_ok(), "block {i}");
+        }
+        // exact-cover overwrite of a whole run leaves no stale tail
+        o.put_blocks(4, Arc::new(vec![5u8; 4096]));
+        assert_eq!(o.block_ref(4).unwrap()[0], 5);
+        assert_eq!(o.real_blocks(), 7);
     }
 
     #[test]

@@ -945,18 +945,27 @@ pub(crate) fn plan_reconstruct(
     lost: u32,
     g: RaidGeom,
 ) -> Result<SurvivorPlan> {
-    let mut survivors: Vec<Vec<u8>> = Vec::new();
-    let mut have_all_payloads = store.object(id)?.real_blocks() > 0;
+    let obj = store.object(id)?;
+    let mut have_all_payloads = obj.real_blocks() > 0;
     let mut alive = 0;
     let mut lost_data_units = 1; // `lost` itself is a data unit
     let mut devices = Vec::new();
     let sbase = stripe * g.stripe_width();
+    // §Perf (ISSUE 8): survivors fold into ONE accumulator as the loop
+    // walks the stripe instead of materializing a `Vec<Vec<u8>>` — one
+    // `acc` allocation, one reusable `scratch` for data units, and
+    // parity units XOR straight from the borrowed unit view (no
+    // `to_vec`). XOR is commutative, so the payload is bit-identical
+    // to the old collect-then-`cpu_parity` shape.
+    let take = g.data as usize; // k survivors suffice for XOR codes
+    let mut folded = 0usize;
+    let mut acc: Vec<u8> = Vec::new();
+    let mut scratch: Vec<u8> = Vec::new();
     for u in 0..g.units_per_stripe() {
         if u == lost {
             continue;
         }
-        let pu = *store
-            .object(id)?
+        let pu = *obj
             .placement(stripe, u)
             .ok_or_else(|| SageError::Unavailable("missing placement".into()))?;
         if store.cluster.devices[pu.device].failed {
@@ -972,12 +981,33 @@ pub(crate) fn plan_reconstruct(
         }
         if u < g.data {
             // surviving data unit: logical bytes from the block map
-            let obj = store.object(id)?;
-            survivors.push(read_logical(obj, sbase + u as u64 * g.unit, g.unit));
+            if folded < take {
+                if folded == 0 {
+                    acc = read_logical(obj, sbase + u as u64 * g.unit, g.unit);
+                } else {
+                    scratch.resize(g.unit as usize, 0);
+                    read_logical_into(
+                        obj,
+                        sbase + u as u64 * g.unit,
+                        &mut scratch,
+                    );
+                    cpu_parity_slices_into(&[&scratch[..]], &mut acc);
+                }
+                folded += 1;
+            }
         } else {
-            // parity unit payload
-            match store.object(id)?.get_unit(stripe, u) {
-                Some(b) => survivors.push(b.to_vec()),
+            // parity unit payload (a missing view voids the payload
+            // even past `take`, matching the old collect semantics)
+            match obj.get_unit(stripe, u) {
+                Some(b) if folded < take => {
+                    if folded == 0 {
+                        acc = b.to_vec();
+                    } else {
+                        cpu_parity_slices_into(&[b], &mut acc);
+                    }
+                    folded += 1;
+                }
+                Some(_) => {}
                 None => have_all_payloads = false,
             }
         }
@@ -991,12 +1021,7 @@ pub(crate) fn plan_reconstruct(
     }
     // XOR of the K surviving units (data+parity, minus duplicates beyond
     // the first parity — single-parity reconstruction uses k units).
-    let payload = if have_all_payloads && !survivors.is_empty() {
-        let take = g.data as usize; // k survivors suffice for XOR codes
-        Some(cpu_parity(&survivors[..take.min(survivors.len())]))
-    } else {
-        None
-    };
+    let payload = (have_all_payloads && folded > 0).then_some(acc);
     Ok(SurvivorPlan { devices, payload })
 }
 
@@ -1132,12 +1157,20 @@ fn repair_with_inner(
                 let obj = store.object(id)?;
                 let payload = if obj.real_blocks() > 0 {
                     let sbase = pu.stripe * g.stripe_width();
-                    let datas: Vec<Vec<u8>> = (0..g.data)
-                        .map(|u| {
-                            read_logical(obj, sbase + u as u64 * g.unit, g.unit)
-                        })
-                        .collect();
-                    Some(cpu_parity(&datas))
+                    // §Perf (ISSUE 8): fold the stripe's data units
+                    // into one accumulator (one scratch buffer, no
+                    // per-unit Vec churn)
+                    let mut acc = read_logical(obj, sbase, g.unit);
+                    let mut scratch = vec![0u8; g.unit as usize];
+                    for u in 1..g.data {
+                        read_logical_into(
+                            obj,
+                            sbase + u as u64 * g.unit,
+                            &mut scratch,
+                        );
+                        cpu_parity_slices_into(&[&scratch[..]], &mut acc);
+                    }
+                    Some(acc)
                 } else {
                     None
                 };

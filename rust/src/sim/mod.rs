@@ -16,6 +16,7 @@ pub mod device;
 pub mod network;
 pub mod rng;
 pub mod sched;
+pub mod sched_oracle;
 
 pub use cache::PageCache;
 pub use clock::{RankClocks, SimTime};

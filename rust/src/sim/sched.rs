@@ -98,6 +98,34 @@
 //!   per-class path. Shares are observable per shard through
 //!   [`IoScheduler::tenant_report`] /
 //!   [`TenantShardReport::observed_share`].
+//!
+//! ## §Perf: dense tables (ISSUE 8 sim-core overhaul)
+//!
+//! At soak scale (`SoakConfig::full`: thousands of objects, millions of
+//! submissions) the per-submission `BTreeMap` walks and per-run `Vec`
+//! allocations dominated wall-clock time, so the scheduler's interior
+//! is **dense**:
+//!
+//! * `shards` is a `Vec<Shard>` indexed directly by device id (device
+//!   ids are dense: `Cluster` stores devices in a `Vec`), with a sorted
+//!   `touched` list preserving the old BTreeMap's device-order
+//!   iteration for drains and reports — results are bit-identical and
+//!   insert-order independent (pinned by the tests below against
+//!   [`sched_oracle`](crate::sim::sched_oracle), the preserved
+//!   BTreeMap implementation);
+//! * per-shard tenant lanes are a sorted `Vec` keyed by
+//!   `(tenant, class)` with binary-search lookup — same deterministic
+//!   report order, no per-lane node allocations;
+//! * ticket storage recycles: drained runs return their `tickets` Vecs
+//!   to a pool `submit` reuses, `pending` queues keep their capacity
+//!   across drains, and [`IoScheduler::begin_epoch`] truncates the
+//!   redeemed `completions` table (tickets never cross an epoch — the
+//!   `begin_epoch` pending==0 contract) — so a long soak reaches a
+//!   steady state with no per-session allocation in `submit`/`drain`;
+//! * [`IoScheduler::frontiers_into`] / [`IoScheduler::qos_report_into`]
+//!   / [`IoScheduler::tenant_report_into`] fill caller-owned buffers so
+//!   hot diagnostic loops (benches, the soak) reuse capacity instead of
+//!   allocating a fresh report per session.
 
 use std::collections::BTreeMap;
 
@@ -357,6 +385,11 @@ struct TenantLane {
 /// frontier, and the QoS plane's per-class state.
 #[derive(Debug, Default)]
 struct Shard {
+    /// True once this shard has seen a submission. Dense `shards`
+    /// storage allocates default slots for every device id below the
+    /// highest touched one; only used shards appear in `touched` (and
+    /// therefore in drains and reports).
+    used: bool,
     pending: Vec<Run>,
     /// Virtual time up to which the device's queue has been driven
     /// (max over all classes).
@@ -381,9 +414,39 @@ struct Shard {
     /// [`IoScheduler::wait_all`] folds, so one group never waits on
     /// another group's completions.
     epoch_frontier: SimTime,
-    /// Per-`(tenant, class index)` frontier lanes (populated only
-    /// while [`TenantShares::active`]; deterministic order).
-    lanes: BTreeMap<(TenantId, usize), TenantLane>,
+    /// Per-`(tenant, class index)` frontier lanes, kept sorted by key
+    /// (populated only while [`TenantShares::active`]; binary-search
+    /// lookup, same deterministic order the old BTreeMap iterated in).
+    lanes: Vec<((TenantId, usize), TenantLane)>,
+}
+
+impl Shard {
+    /// Binary-search lookup in the sorted `(tenant, class)` lane table.
+    fn lane(&self, key: (TenantId, usize)) -> Option<&TenantLane> {
+        self.lanes
+            .binary_search_by(|(k, _)| k.cmp(&key))
+            .ok()
+            .map(|i| &self.lanes[i].1)
+    }
+
+    /// The lane for `key`, inserted at its sorted position on first
+    /// touch (frontier seeded from `lane_base`) — the dense
+    /// replacement for the old `BTreeMap::entry(..).or_insert(..)`.
+    fn lane_entry(
+        &mut self,
+        key: (TenantId, usize),
+        lane_base: SimTime,
+    ) -> &mut TenantLane {
+        let i = match self.lanes.binary_search_by(|(k, _)| k.cmp(&key)) {
+            Ok(i) => i,
+            Err(i) => {
+                let lane = TenantLane { frontier: lane_base, busy: 0.0 };
+                self.lanes.insert(i, (key, lane));
+                i
+            }
+        };
+        &mut self.lanes[i].1
+    }
 }
 
 /// Per-shard QoS diagnostics: the per-class frontier table
@@ -492,9 +555,20 @@ impl TenantShardReport {
 /// the cluster's [`QosConfig`].
 #[derive(Debug)]
 pub struct IoScheduler {
-    /// Per-device shards, keyed by device id (deterministic order).
-    shards: BTreeMap<usize, Shard>,
-    /// Completion time per ticket (valid after the draining pass).
+    /// Per-device shards, indexed directly by device id (dense; slots
+    /// below the highest touched id exist but stay `used == false`
+    /// until a submission lands on them).
+    shards: Vec<Shard>,
+    /// Device ids with a used shard, kept sorted — drains and reports
+    /// iterate in device order, exactly like the old BTreeMap keys.
+    touched: Vec<usize>,
+    /// Recycled `Run::tickets` storage: drained runs park their empty
+    /// Vecs here and [`IoScheduler::submit`] reuses them, so a
+    /// steady-state soak stops allocating per run (§Perf).
+    ticket_pool: Vec<Vec<Ticket>>,
+    /// Completion time per ticket (valid after the draining pass;
+    /// truncated by [`IoScheduler::begin_epoch`] — tickets are scoped
+    /// to their epoch).
     completions: Vec<SimTime>,
     /// Device accounting calls issued (one per device-contiguous run).
     n_runs: u64,
@@ -541,7 +615,9 @@ impl IoScheduler {
     /// ([`OpGroup::with_qos`](crate::clovis::ops::OpGroup::with_qos)).
     pub fn with_qos(qos: QosConfig) -> Self {
         IoScheduler {
-            shards: BTreeMap::new(),
+            shards: Vec::new(),
+            touched: Vec::new(),
+            ticket_pool: Vec::new(),
             completions: Vec::new(),
             n_runs: 0,
             n_ios: 0,
@@ -624,6 +700,12 @@ impl IoScheduler {
             0,
             "begin_epoch with another group's submissions pending"
         );
+        // tickets are redeemed within their epoch (the pending==0
+        // contract above): recycle the completion table's storage
+        // instead of growing it for the lifetime of the scheduler —
+        // exactly what a fresh private scheduler's empty table gave
+        // pre-ISSUE-7 sessions
+        self.completions.clear();
         self.epoch += 1;
         self.epoch_start = now;
         self.epoch_runs0 = self.n_runs;
@@ -700,7 +782,16 @@ impl IoScheduler {
         self.n_ios += 1;
         let class = self.class;
         let tenant = self.tenant;
-        let shard = self.shards.entry(device).or_default();
+        if device >= self.shards.len() {
+            self.shards.resize_with(device + 1, Shard::default);
+        }
+        let shard = &mut self.shards[device];
+        if !shard.used {
+            shard.used = true;
+            if let Err(pos) = self.touched.binary_search(&device) {
+                self.touched.insert(pos, device);
+            }
+        }
         if let Some(run) = shard.pending.last_mut() {
             if run.submit_at == submit_at
                 && run.size == size
@@ -713,6 +804,8 @@ impl IoScheduler {
                 return ticket;
             }
         }
+        let mut tickets = self.ticket_pool.pop().unwrap_or_default();
+        tickets.push(ticket);
         shard.pending.push(Run {
             submit_at,
             size,
@@ -720,7 +813,7 @@ impl IoScheduler {
             access,
             class,
             tenant,
-            tickets: vec![ticket],
+            tickets,
         });
         ticket
     }
@@ -747,8 +840,16 @@ impl IoScheduler {
         let epoch_start = self.epoch_start;
         let fg = TrafficClass::Foreground.index();
         let mut batch_done = 0.0f64;
-        for (&dev, shard) in self.shards.iter_mut() {
-            for run in std::mem::take(&mut shard.pending) {
+        for &dev in &self.touched {
+            let shard = &mut self.shards[dev];
+            if shard.pending.is_empty() {
+                continue;
+            }
+            // take the queue so each completed run can recycle its
+            // ticket storage into the pool; the queue Vec itself (and
+            // its capacity) returns to the shard afterwards
+            let mut pending = std::mem::take(&mut shard.pending);
+            for run in pending.drain(..) {
                 let d = &mut devices[dev];
                 if shard.epoch != epoch {
                     // first commit under a NEW epoch: a shard idle at
@@ -793,16 +894,12 @@ impl IoScheduler {
                     let lane_base = shard.base.unwrap_or(d.busy_until);
                     let fg_floor = if ci != fg && qos.share(run.class) < 1.0 {
                         shard
-                            .lanes
-                            .get(&(run.tenant, fg))
+                            .lane((run.tenant, fg))
                             .map_or(lane_base, |l| l.frontier)
                     } else {
                         lane_base
                     };
-                    let lane = shard
-                        .lanes
-                        .entry((run.tenant, ci))
-                        .or_insert(TenantLane { frontier: lane_base, busy: 0.0 });
+                    let lane = shard.lane_entry((run.tenant, ci), lane_base);
                     let start = run.submit_at.max(lane.frontier).max(fg_floor);
                     let svc_eff = svc / share;
                     end = start + n as f64 * svc_eff;
@@ -879,7 +976,12 @@ impl IoScheduler {
                 shard.epoch_frontier = shard.epoch_frontier.max(end);
                 self.n_runs += 1;
                 batch_done = batch_done.max(end);
+                // recycle the run's ticket storage for future submits
+                let mut tickets = run.tickets;
+                tickets.clear();
+                self.ticket_pool.push(tickets);
             }
+            shard.pending = pending;
         }
         batch_done
     }
@@ -897,22 +999,23 @@ impl IoScheduler {
     /// group's completions (un-epoched schedulers keep every shard in
     /// epoch 0, so this is the plain max-over-frontiers as before).
     pub fn wait_all(&self) -> SimTime {
-        self.shards
-            .values()
+        self.touched
+            .iter()
+            .map(|&d| &self.shards[d])
             .filter(|s| s.epoch == self.epoch)
             .fold(0.0, |t, s| t.max(s.epoch_frontier))
     }
 
     /// Completion frontier of one device's shard (0.0 if untouched).
     pub fn frontier(&self, device: usize) -> SimTime {
-        self.shards.get(&device).map_or(0.0, |s| s.frontier)
+        self.shards.get(device).map_or(0.0, |s| s.frontier)
     }
 
     /// Completion frontier of one class on one device's shard (0.0 if
     /// the shard is untouched).
     pub fn class_frontier(&self, device: usize, class: TrafficClass) -> SimTime {
         self.shards
-            .get(&device)
+            .get(device)
             .map_or(0.0, |s| s.class_frontier[class.index()])
     }
 
@@ -923,11 +1026,22 @@ impl IoScheduler {
     /// free of another group's shards on the shared scheduler;
     /// un-epoched schedulers report every shard, as before.
     pub fn frontiers(&self) -> Vec<(usize, SimTime)> {
-        self.shards
-            .iter()
-            .filter(|(_, s)| s.epoch == self.epoch)
-            .map(|(&d, s)| (d, s.epoch_frontier))
-            .collect()
+        let mut out = Vec::new();
+        self.frontiers_into(&mut out);
+        out
+    }
+
+    /// [`IoScheduler::frontiers`] into a caller-owned buffer (cleared
+    /// first) — allocation-free once `out`'s capacity has grown to the
+    /// shard count, for hot diagnostic loops (§Perf).
+    pub fn frontiers_into(&self, out: &mut Vec<(usize, SimTime)>) {
+        out.clear();
+        for &d in &self.touched {
+            let s = &self.shards[d];
+            if s.epoch == self.epoch {
+                out.push((d, s.epoch_frontier));
+            }
+        }
     }
 
     /// The per-class frontier table: one [`QosShardReport`] per shard
@@ -937,19 +1051,31 @@ impl IoScheduler {
     /// lane history — `class_busy` accumulates until the shard next
     /// re-seeds idle.)
     pub fn qos_report(&self) -> Vec<QosShardReport> {
-        self.shards
-            .iter()
-            .filter(|(_, s)| s.epoch == self.epoch)
-            .filter_map(|(&d, s)| {
-                s.base.map(|base| QosShardReport {
+        let mut out = Vec::new();
+        self.qos_report_into(&mut out);
+        out
+    }
+
+    /// [`IoScheduler::qos_report`] into a caller-owned buffer (cleared
+    /// first) — allocation-free once `out`'s capacity has grown to the
+    /// shard count (§Perf).
+    pub fn qos_report_into(&self, out: &mut Vec<QosShardReport>) {
+        out.clear();
+        for &d in &self.touched {
+            let s = &self.shards[d];
+            if s.epoch != self.epoch {
+                continue;
+            }
+            if let Some(base) = s.base {
+                out.push(QosShardReport {
                     device: d,
                     base,
                     frontier: s.frontier,
                     class_busy: s.class_busy,
                     class_frontier: s.class_frontier,
-                })
-            })
-            .collect()
+                });
+            }
+        }
     }
 
     /// The per-tenant frontier table: one [`TenantShardReport`] per
@@ -957,32 +1083,48 @@ impl IoScheduler {
     /// device order — empty while the tenant plane is inactive. See
     /// OPERATIONS.md §Reading the per-tenant frontier tables.
     pub fn tenant_report(&self) -> Vec<TenantShardReport> {
-        self.shards
-            .iter()
-            .filter(|(_, s)| s.epoch == self.epoch && !s.lanes.is_empty())
-            .filter_map(Self::tenant_row)
-            .collect()
+        let mut out = Vec::new();
+        self.tenant_report_into(&mut out);
+        out
+    }
+
+    /// [`IoScheduler::tenant_report`] into a caller-owned buffer
+    /// (cleared first); the outer Vec's capacity is reused — per-row
+    /// lane Vecs still allocate, but rows only exist while the tenant
+    /// plane is active (§Perf).
+    pub fn tenant_report_into(&self, out: &mut Vec<TenantShardReport>) {
+        out.clear();
+        for &d in &self.touched {
+            let s = &self.shards[d];
+            if s.epoch != self.epoch || s.lanes.is_empty() {
+                continue;
+            }
+            if let Some(row) = Self::tenant_row(d, s) {
+                out.push(row);
+            }
+        }
     }
 
     /// [`IoScheduler::tenant_report`] without the epoch scope: every
     /// shard with live tenant lanes, across all sessions — the
     /// cluster-operator view (`sage tenants`, `ablate_tenants`).
     pub fn tenant_report_all(&self) -> Vec<TenantShardReport> {
-        self.shards
+        self.touched
             .iter()
+            .map(|&d| (d, &self.shards[d]))
             .filter(|(_, s)| !s.lanes.is_empty())
-            .filter_map(Self::tenant_row)
+            .filter_map(|(d, s)| Self::tenant_row(d, s))
             .collect()
     }
 
-    fn tenant_row((&d, s): (&usize, &Shard)) -> Option<TenantShardReport> {
+    fn tenant_row(d: usize, s: &Shard) -> Option<TenantShardReport> {
         s.base.map(|base| TenantShardReport {
             device: d,
             base,
             lanes: s
                 .lanes
                 .iter()
-                .map(|(&(tenant, ci), l)| TenantLaneReport {
+                .map(|&((tenant, ci), l)| TenantLaneReport {
                     tenant,
                     class: TrafficClass::ALL[ci],
                     busy: l.busy,
@@ -994,7 +1136,7 @@ impl IoScheduler {
 
     /// Number of shards (distinct devices touched).
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.touched.len()
     }
 
     /// Device accounting calls issued so far — one per
@@ -1010,9 +1152,15 @@ impl IoScheduler {
 
     /// Submitted-but-not-yet-drained I/Os.
     pub fn pending(&self) -> usize {
-        self.shards
-            .values()
-            .map(|s| s.pending.iter().map(|r| r.tickets.len()).sum::<usize>())
+        self.touched
+            .iter()
+            .map(|&d| {
+                self.shards[d]
+                    .pending
+                    .iter()
+                    .map(|r| r.tickets.len())
+                    .sum::<usize>()
+            })
             .sum()
     }
 }
@@ -1024,7 +1172,7 @@ impl IoScheduler {
 /// [`MIN_FOREGROUND_RATE`]. Returns `(end, contended)`; when no capped
 /// backlog overlaps, `end == start + work` computed with the exact
 /// pre-QoS arithmetic (`contended == false`).
-fn contended_end(
+pub(crate) fn contended_end(
     frontiers: &[SimTime; N_CLASSES],
     qos: QosConfig,
     start: SimTime,
@@ -1656,6 +1804,158 @@ mod tests {
             sched2.completion(u).to_bits(),
             "same physics either way round: FIFO tail is the floor"
         );
+    }
+
+    // ------------------------------------- dense tables (ISSUE 8)
+
+    #[test]
+    fn dense_shard_table_matches_the_btree_oracle_bit_exactly() {
+        // one submission stream replayed through the dense scheduler
+        // and the preserved BTreeMap oracle: completions, wait_all and
+        // frontier rows must agree to the bit, across classes, epochs
+        // and a deliberately non-monotonic device order
+        use crate::sim::sched_oracle::OracleScheduler;
+        let mut devs_a = vec![ssd(), smr(), ssd(), smr(), ssd()];
+        let mut devs_b = vec![ssd(), smr(), ssd(), smr(), ssd()];
+        let mut dense = IoScheduler::with_qos(QosConfig::default());
+        let mut oracle = OracleScheduler::with_qos(QosConfig::default());
+        let order = [4usize, 1, 3, 0, 2, 4, 0, 1, 2, 3];
+        let mut now = 0.0;
+        for epoch in 0..3u64 {
+            dense.begin_epoch(now);
+            oracle.begin_epoch(now);
+            let mut ta = Vec::new();
+            let mut tb = Vec::new();
+            for (i, &dev) in order.iter().enumerate() {
+                let class = TrafficClass::ALL[(i + epoch as usize) % 3];
+                dense.set_class(class);
+                oracle.set_class(class);
+                let at = now + (i / 2) as f64 * 1e-4;
+                let size = 4096 * (1 + (i as u64) % 4);
+                let op = if i % 2 == 0 { IoOp::Read } else { IoOp::Write };
+                ta.push(dense.submit(dev, at, size, op, Access::Seq));
+                tb.push(oracle.submit(dev, at, size, op, Access::Seq));
+            }
+            dense.drain(&mut devs_a);
+            oracle.drain(&mut devs_b);
+            for (&a, &b) in ta.iter().zip(&tb) {
+                assert_eq!(
+                    dense.completion(a).to_bits(),
+                    oracle.completion(b).to_bits()
+                );
+            }
+            assert_eq!(dense.wait_all().to_bits(), oracle.wait_all().to_bits());
+            let fa = dense.frontiers();
+            let fb = oracle.frontiers();
+            assert_eq!(fa.len(), fb.len());
+            for (x, y) in fa.iter().zip(&fb) {
+                assert_eq!(x.0, y.0, "device order preserved");
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+            now = dense.wait_all();
+        }
+        for (a, b) in devs_a.iter().zip(&devs_b) {
+            assert_eq!(a.busy_until.to_bits(), b.busy_until.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_device_ids_only_report_touched_shards() {
+        // touching device 5 allocates dense slots 0..=5, but untouched
+        // slots never appear in reports or counts
+        let mut devs: Vec<Device> = (0..6).map(|_| ssd()).collect();
+        let mut sched = IoScheduler::new();
+        let t = sched.submit(5, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        assert_eq!(sched.shard_count(), 1);
+        assert_eq!(sched.frontiers(), vec![(5, sched.completion(t))]);
+        assert_eq!(sched.qos_report().len(), 1);
+        for d in 0..5 {
+            assert_eq!(sched.frontier(d), 0.0, "device {d} untouched");
+        }
+        // a later submission to a lower id lands in device order
+        sched.submit(2, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        let rows: Vec<usize> = sched.frontiers().iter().map(|f| f.0).collect();
+        assert_eq!(rows, vec![2, 5], "sorted by device, not by insertion");
+    }
+
+    #[test]
+    fn ticket_storage_recycles_across_epochs() {
+        // begin_epoch truncates the redeemed completion table: ticket
+        // ids restart from 0 each epoch (what per-session private
+        // schedulers did pre-ISSUE-7) instead of growing for the life
+        // of the cluster scheduler
+        let mut devs = vec![ssd()];
+        let mut sched = IoScheduler::new();
+        sched.begin_epoch(0.0);
+        let t0 = sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        assert_eq!(t0, 0);
+        sched.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        sched.drain(&mut devs);
+        let t_end = sched.wait_all();
+        sched.begin_epoch(t_end);
+        let t1 = sched.submit(0, t_end, 4096, IoOp::Write, Access::Seq);
+        assert_eq!(t1, 0, "completion table recycled at epoch open");
+        sched.drain(&mut devs);
+        assert!(sched.completion(t1) > t_end);
+        // cumulative dispatch stats survive the recycling
+        assert_eq!(sched.ios(), 3);
+    }
+
+    #[test]
+    fn lane_table_is_insert_order_independent() {
+        // the dense sorted-Vec lane table must report lanes in (tenant,
+        // class) order no matter which tenant touched the shard first —
+        // the old BTreeMap's iteration order, pinned both ways round
+        let lanes_for = |first_b: bool| {
+            let (shares, a, b) = two_tenants(1.0, 1.0);
+            let mut devs = vec![ssd()];
+            let mut sched = IoScheduler::new();
+            sched.set_tenants(shares);
+            let order = if first_b { [b, a] } else { [a, b] };
+            for &t in &order {
+                sched.set_tenant(t);
+                sched.submit(0, 0.0, 1 << 16, IoOp::Write, Access::Seq);
+            }
+            sched.drain(&mut devs);
+            let rep = sched.tenant_report();
+            assert_eq!(rep.len(), 1);
+            rep[0]
+                .lanes
+                .iter()
+                .map(|l| (l.tenant, l.class.index()))
+                .collect::<Vec<_>>()
+        };
+        let ab = lanes_for(false);
+        let ba = lanes_for(true);
+        assert_eq!(ab, ba, "report order independent of insertion order");
+        let mut sorted = ab.clone();
+        sorted.sort_unstable();
+        assert_eq!(ab, sorted, "(tenant, class) order");
+    }
+
+    #[test]
+    fn report_into_variants_match_and_reuse_buffers() {
+        let mut devs = vec![ssd(), smr()];
+        let mut sched = IoScheduler::with_qos(QosConfig::default());
+        sched.submit(0, 0.0, 1 << 18, IoOp::Write, Access::Seq);
+        sched.set_class(TrafficClass::Repair);
+        sched.submit(1, 0.0, 1 << 18, IoOp::Read, Access::Seq);
+        sched.drain(&mut devs);
+        let mut fronts = Vec::new();
+        let mut qos = Vec::new();
+        for _ in 0..2 {
+            // second pass reuses the buffers (cleared, capacity kept)
+            sched.frontiers_into(&mut fronts);
+            sched.qos_report_into(&mut qos);
+        }
+        assert_eq!(fronts, sched.frontiers());
+        assert_eq!(qos.len(), sched.qos_report().len());
+        for (a, b) in qos.iter().zip(sched.qos_report().iter()) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.frontier.to_bits(), b.frontier.to_bits());
+        }
     }
 
     #[test]

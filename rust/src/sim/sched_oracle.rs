@@ -1,0 +1,334 @@
+//! The **preserved BTreeMap scheduler core** — the ISSUE 8 sim-core
+//! overhaul's differential oracle.
+//!
+//! [`OracleScheduler`] is the pre-overhaul [`IoScheduler`] interior
+//! kept verbatim: `BTreeMap<usize, Shard>` shards, per-shard
+//! `BTreeMap<(TenantId, usize), TenantLane>` lanes, a fresh `tickets`
+//! Vec per run and a monotonically growing completion table. The drain
+//! arithmetic is shared with the live scheduler (same
+//! `contended_end`, same per-path formulas), so any divergence
+//! between the two is a bug in the dense *representation*, never in
+//! the physics.
+//!
+//! Used by the `sched.rs` insert-order-independence tests and by
+//! `benches/ablate_simcore.rs`, which replays one submission stream
+//! through both schedulers, asserts bit-identical completions and
+//! frontiers, and measures the wall-clock gap (the dense tables are
+//! the thing being ablated). Follows the `mero::sns_serial` /
+//! `mero::sns_baseline` house pattern: oracles are kept, not deleted.
+//!
+//! [`IoScheduler`]: crate::sim::sched::IoScheduler
+
+use std::collections::BTreeMap;
+
+use super::clock::SimTime;
+use super::device::{Access, Device, IoOp};
+use super::sched::{
+    contended_end, QosConfig, TenantId, TenantShares, Ticket, TrafficClass,
+    DEFAULT_TENANT, N_CLASSES,
+};
+
+/// One `(tenant, class)` frontier lane (pre-overhaul layout).
+#[derive(Debug, Clone, Copy)]
+struct TenantLane {
+    frontier: SimTime,
+    busy: f64,
+}
+
+/// A device-contiguous run (pre-overhaul layout: owns a fresh ticket
+/// Vec per run).
+#[derive(Debug)]
+struct Run {
+    submit_at: SimTime,
+    size: u64,
+    op: IoOp,
+    access: Access,
+    class: TrafficClass,
+    tenant: TenantId,
+    tickets: Vec<Ticket>,
+}
+
+/// One device's shard (pre-overhaul layout: BTreeMap lanes).
+#[derive(Debug, Default)]
+struct Shard {
+    pending: Vec<Run>,
+    frontier: SimTime,
+    base: Option<SimTime>,
+    class_frontier: [SimTime; N_CLASSES],
+    class_busy: [f64; N_CLASSES],
+    epoch: u64,
+    epoch_frontier: SimTime,
+    lanes: BTreeMap<(TenantId, usize), TenantLane>,
+}
+
+/// The preserved BTreeMap-backed scheduler core (see module docs).
+/// API subset of [`IoScheduler`](crate::sim::sched::IoScheduler) — the
+/// methods the differential tests and `ablate_simcore` replay through.
+#[derive(Debug)]
+pub struct OracleScheduler {
+    shards: BTreeMap<usize, Shard>,
+    completions: Vec<SimTime>,
+    qos: QosConfig,
+    class: TrafficClass,
+    tenant: TenantId,
+    tenants: TenantShares,
+    epoch: u64,
+    epoch_start: SimTime,
+}
+
+impl Default for OracleScheduler {
+    fn default() -> Self {
+        OracleScheduler::with_qos(QosConfig::unlimited())
+    }
+}
+
+impl OracleScheduler {
+    /// Empty oracle with no bandwidth split (pre-QoS semantics).
+    pub fn new() -> Self {
+        OracleScheduler::default()
+    }
+
+    /// Empty oracle enforcing `qos` on every shard.
+    pub fn with_qos(qos: QosConfig) -> Self {
+        OracleScheduler {
+            shards: BTreeMap::new(),
+            completions: Vec::new(),
+            qos,
+            class: TrafficClass::Foreground,
+            tenant: DEFAULT_TENANT,
+            tenants: TenantShares::single(),
+            epoch: 0,
+            epoch_start: 0.0,
+        }
+    }
+
+    /// Replace the tenant table (applies to subsequent drains).
+    pub fn set_tenants(&mut self, tenants: TenantShares) {
+        self.tenants = tenants;
+    }
+
+    /// Set the tenant stamped on subsequent submissions.
+    pub fn set_tenant(&mut self, tenant: TenantId) -> TenantId {
+        std::mem::replace(&mut self.tenant, tenant)
+    }
+
+    /// Set the class stamped on subsequent submissions.
+    pub fn set_class(&mut self, class: TrafficClass) -> TrafficClass {
+        std::mem::replace(&mut self.class, class)
+    }
+
+    /// Open a new scheduling epoch at `now` (the pre-overhaul
+    /// semantics: the completion table keeps growing across epochs).
+    pub fn begin_epoch(&mut self, now: SimTime) -> u64 {
+        self.epoch += 1;
+        self.epoch_start = now;
+        self.epoch
+    }
+
+    /// Queue one unit I/O — byte-for-byte the pre-overhaul `submit`.
+    pub fn submit(
+        &mut self,
+        device: usize,
+        submit_at: SimTime,
+        size: u64,
+        op: IoOp,
+        access: Access,
+    ) -> Ticket {
+        let ticket = self.completions.len();
+        self.completions.push(submit_at);
+        let class = self.class;
+        let tenant = self.tenant;
+        let shard = self.shards.entry(device).or_default();
+        if let Some(run) = shard.pending.last_mut() {
+            if run.submit_at == submit_at
+                && run.size == size
+                && run.op == op
+                && run.access == access
+                && run.class == class
+                && run.tenant == tenant
+            {
+                run.tickets.push(ticket);
+                return ticket;
+            }
+        }
+        shard.pending.push(Run {
+            submit_at,
+            size,
+            op,
+            access,
+            class,
+            tenant,
+            tickets: vec![ticket],
+        });
+        ticket
+    }
+
+    /// Execute every pending run — byte-for-byte the pre-overhaul
+    /// `drain` (BTreeMap iteration order, fresh allocations and all).
+    pub fn drain(&mut self, devices: &mut [Device]) -> SimTime {
+        let qos = self.qos;
+        let throttled = qos.active();
+        let tenancy = self.tenants.active();
+        let epoch = self.epoch;
+        let epoch_start = self.epoch_start;
+        let fg = TrafficClass::Foreground.index();
+        let mut batch_done = 0.0f64;
+        for (&dev, shard) in self.shards.iter_mut() {
+            for run in std::mem::take(&mut shard.pending) {
+                let d = &mut devices[dev];
+                if shard.epoch != epoch {
+                    if epoch_start >= shard.frontier {
+                        shard.base = None;
+                        shard.class_busy = [0.0; N_CLASSES];
+                        shard.lanes.clear();
+                    }
+                    shard.epoch = epoch;
+                    shard.epoch_frontier = 0.0;
+                }
+                if shard.base.is_none() {
+                    shard.base = Some(d.busy_until);
+                    shard.class_frontier = [d.busy_until; N_CLASSES];
+                }
+                let svc = d.profile.service_time(run.size, run.op, run.access);
+                let n = run.tickets.len();
+                let work = n as f64 * svc;
+                let ci = run.class.index();
+                let end;
+                if tenancy {
+                    let share = (self.tenants.share(run.tenant)
+                        * qos.share(run.class))
+                    .clamp(0.01, 1.0);
+                    let lane_base = shard.base.unwrap_or(d.busy_until);
+                    let fg_floor = if ci != fg && qos.share(run.class) < 1.0 {
+                        shard
+                            .lanes
+                            .get(&(run.tenant, fg))
+                            .map_or(lane_base, |l| l.frontier)
+                    } else {
+                        lane_base
+                    };
+                    let lane = shard
+                        .lanes
+                        .entry((run.tenant, ci))
+                        .or_insert(TenantLane { frontier: lane_base, busy: 0.0 });
+                    let start = run.submit_at.max(lane.frontier).max(fg_floor);
+                    let svc_eff = svc / share;
+                    end = start + n as f64 * svc_eff;
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc_eff;
+                    }
+                    lane.frontier = end;
+                    lane.busy += work;
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else if !throttled {
+                    let start = run.submit_at.max(d.busy_until);
+                    end = d.io_run(
+                        run.submit_at,
+                        n as u64,
+                        run.size,
+                        run.op,
+                        run.access,
+                    );
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc;
+                    }
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else if qos.share(run.class) < 1.0 {
+                    let share = qos.share(run.class);
+                    let start = run
+                        .submit_at
+                        .max(shard.class_frontier[ci])
+                        .max(shard.class_frontier[fg]);
+                    let svc_eff = svc / share;
+                    end = start + n as f64 * svc_eff;
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc_eff;
+                    }
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else {
+                    let start = run
+                        .submit_at
+                        .max(shard.class_frontier[ci])
+                        .max(shard.class_frontier[fg]);
+                    let (e, contended) =
+                        contended_end(&shard.class_frontier, qos, start, work);
+                    end = e;
+                    if contended {
+                        let span = end - start;
+                        for (i, &t) in run.tickets.iter().enumerate() {
+                            self.completions[t] =
+                                start + span * ((i + 1) as f64 / n as f64);
+                        }
+                    } else {
+                        for (i, &t) in run.tickets.iter().enumerate() {
+                            self.completions[t] = start + (i + 1) as f64 * svc;
+                        }
+                    }
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                    shard.class_frontier[fg] = shard.class_frontier[fg].max(end);
+                }
+                shard.class_busy[ci] += work;
+                shard.frontier = shard.frontier.max(end);
+                shard.epoch_frontier = shard.epoch_frontier.max(end);
+                batch_done = batch_done.max(end);
+            }
+        }
+        batch_done
+    }
+
+    /// Completion time of a drained ticket.
+    pub fn completion(&self, ticket: Ticket) -> SimTime {
+        self.completions[ticket]
+    }
+
+    /// Max epoch frontier over the current epoch's shards.
+    pub fn wait_all(&self) -> SimTime {
+        self.shards
+            .values()
+            .filter(|s| s.epoch == self.epoch)
+            .fold(0.0, |t, s| t.max(s.epoch_frontier))
+    }
+
+    /// `(device, epoch frontier)` rows in BTreeMap (device) order.
+    pub fn frontiers(&self) -> Vec<(usize, SimTime)> {
+        self.shards
+            .iter()
+            .filter(|(_, s)| s.epoch == self.epoch)
+            .map(|(&d, s)| (d, s.epoch_frontier))
+            .collect()
+    }
+
+    /// `(tenant, class index, frontier, busy)` lane rows per device, in
+    /// BTreeMap order — what the lane-order differential tests compare
+    /// against the dense table's report.
+    pub fn lane_rows(&self, device: usize) -> Vec<(TenantId, usize, SimTime, f64)> {
+        self.shards.get(&device).map_or_else(Vec::new, |s| {
+            s.lanes
+                .iter()
+                .map(|(&(t, ci), l)| (t, ci, l.frontier, l.busy))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceProfile;
+
+    #[test]
+    fn oracle_reproduces_basic_fifo_schedule() {
+        let mut devs = vec![Device::new(DeviceProfile::ssd(1 << 40))];
+        let mut o = OracleScheduler::new();
+        let a = o.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        let b = o.submit(0, 0.0, 4096, IoOp::Write, Access::Seq);
+        let done = o.drain(&mut devs);
+        assert!(o.completion(a) < o.completion(b));
+        assert_eq!(done, o.completion(b));
+        assert_eq!(o.wait_all(), done);
+        assert_eq!(o.frontiers(), vec![(0, done)]);
+    }
+}

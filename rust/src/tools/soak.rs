@@ -32,6 +32,19 @@
 //! Recovered devices are re-armed with fresh exponential failure times
 //! injected into the live feed, so storms keep coming for the whole
 //! horizon.
+//!
+//! ## §Perf: hot-loop bookkeeping (ISSUE 8)
+//!
+//! The per-tick loop recycles its scratch instead of reallocating:
+//! the live-index and active-id lists are maintained incrementally
+//! (rebuilt only when the lost set grows), the per-tier hard-failure
+//! sets and the carried-failed set are cleared and refilled in place,
+//! and lost-object length lookups go through a prebuilt id→slot map
+//! rather than a linear scan per `DataLoss` verdict. Wall-clock phase
+//! timers and allocation counters land in [`SoakDiag`] — which is
+//! deliberately EXCLUDED from report identity ([`SoakDiag`]'s
+//! `PartialEq` always matches), so the bit-identical double-run
+//! asserts keep holding.
 
 use crate::clovis::{Client, RecoveryVerdict};
 use crate::cluster::failure::{FailureEvent, FailureKind, FailureSchedule};
@@ -43,7 +56,8 @@ use crate::metrics::Stats;
 use crate::sim::clock::SimTime;
 use crate::sim::device::{DeviceKind, DeviceProfile};
 use crate::sim::rng::SimRng;
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
 
 /// RAID shape used for every soak object (per-tier 4+1, XOR parity:
 /// tolerance is ONE concurrent loss per tier).
@@ -172,6 +186,45 @@ pub struct SoakReport {
     pub recovery_latency_mad: f64,
     /// Events still pending past the horizon when the run ended.
     pub feed_remaining: u64,
+    /// Wall-clock/allocation diagnostics (§Perf, ISSUE 8). NOT part
+    /// of report identity: [`SoakDiag`]'s `PartialEq` matches any
+    /// value, so the derived `SoakReport` equality still compares
+    /// exactly the deterministic fields above.
+    pub diag: SoakDiag,
+}
+
+/// Wall-clock phase timers + allocation counters for one soak run —
+/// the profiling hooks the `ablate_simcore` bench and the nightly
+/// soak job read to localize regressions.
+///
+/// Two runs of one config are bit-identical in every *measured* field
+/// of [`SoakReport`] but obviously not in wall clock, so this struct's
+/// `PartialEq` deliberately matches ANY other `SoakDiag` — the
+/// double-run `assert_eq!(a, b)` determinism pins see through it.
+#[derive(Debug, Clone, Default)]
+pub struct SoakDiag {
+    /// Total wall-clock seconds for the run.
+    pub wall_total_s: f64,
+    /// Wall seconds in rewrite traffic (payload gen + writes).
+    pub wall_traffic_s: f64,
+    /// Wall seconds in failure-feed consumer passes (incl. re-arm).
+    pub wall_consume_s: f64,
+    /// Wall seconds in read-verify + full-population verification.
+    pub wall_verify_s: f64,
+    /// Heap allocations during the run — 0 unless the driving binary
+    /// installed [`CountingAlloc`](crate::util::alloc::CountingAlloc)
+    /// as its global allocator (see `tests/alloc_budget.rs`).
+    pub allocs: u64,
+    /// Bytes requested by those allocations (0 when not counting).
+    pub alloc_bytes: u64,
+}
+
+impl PartialEq for SoakDiag {
+    /// Diagnostics never participate in report identity (see struct
+    /// docs): every `SoakDiag` compares equal to every other.
+    fn eq(&self, _: &SoakDiag) -> bool {
+        true
+    }
 }
 
 /// One tracked object: payloads are regenerated from
@@ -260,6 +313,14 @@ fn median_mad(xs: &[f64]) -> (f64, f64) {
 /// Run one soak. Invariant violations panic (the harness is the
 /// test); recoverable storage errors surface as `Err`.
 pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
+    // §Perf profiling hooks: phase timers + allocation counters land
+    // in the report's diag (excluded from report identity)
+    let t_run = Instant::now();
+    let (allocs0, alloc_bytes0) = crate::util::alloc::counts();
+    let mut wall_traffic = 0.0f64;
+    let mut wall_consume = 0.0f64;
+    let mut wall_verify = 0.0f64;
+
     let mut c = Client::new_sim(Testbed::sage_prototype());
     let mut rng = SimRng::new(cfg.seed);
     let mut traffic_rng = rng.fork(1);
@@ -343,6 +404,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
         recovery_latency_p50: 0.0,
         recovery_latency_mad: 0.0,
         feed_remaining: 0,
+        diag: SoakDiag::default(),
     };
     let mut lost: HashSet<ObjectId> = HashSet::new();
     let mut latencies: Vec<f64> = Vec::new();
@@ -350,6 +412,17 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
     // complete) — they count toward the NEXT pass's concurrency when
     // judging whether a DataLoss verdict was justified
     let mut carried_failed: HashSet<usize> = HashSet::new();
+    // §Perf: the live-index and active-id lists are maintained
+    // incrementally — rebuilt (in the same filter order) only when
+    // the lost set actually grows — and the id→slot map replaces the
+    // per-verdict linear object scan. Per-tier hard-failure sets are
+    // hoisted out of the loop and cleared in place each tick.
+    let mut live: Vec<usize> = (0..objects.len()).collect();
+    let mut active: Vec<ObjectId> = objects.iter().map(|o| o.id).collect();
+    let slot_of: HashMap<ObjectId, usize> =
+        objects.iter().enumerate().map(|(i, o)| (o.id, i)).collect();
+    let mut hard_by_tier: [HashSet<usize>; 2] =
+        [HashSet::new(), HashSet::new()];
     let elastic_step = cfg.horizon / (cfg.elastic_points + 1) as f64;
     let mut next_elastic = elastic_step;
     let mut elastic_no = 0usize;
@@ -360,9 +433,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
 
         // ---- rewrite traffic: whole-object overwrites with fresh
         // deterministic payloads
-        let live: Vec<usize> = (0..objects.len())
-            .filter(|&i| !lost.contains(&objects[i].id))
-            .collect();
+        let t_phase = Instant::now();
         for _ in 0..cfg.rewrites_per_tick {
             if live.is_empty() {
                 break;
@@ -386,8 +457,10 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
             writes += 1;
             bytes_written += o.len as u64;
         }
+        wall_traffic += t_phase.elapsed().as_secs_f64();
 
         // ---- continuous read verification (one rotating object)
+        let t_phase = Instant::now();
         if !live.is_empty() {
             let i = live[(report.ticks as usize) % live.len()];
             let o = &objects[i];
@@ -400,20 +473,18 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
             );
             report.reads_verified += 1;
         }
+        wall_verify += t_phase.elapsed().as_secs_f64();
 
         // ---- consume everything due; account every outcome
-        let active: Vec<ObjectId> = objects
-            .iter()
-            .map(|o| o.id)
-            .filter(|id| !lost.contains(id))
-            .collect();
+        let t_phase = Instant::now();
         let outcomes = c.consume_failure_feed(&mut feed, &active);
         report.max_pass_outcomes =
             report.max_pass_outcomes.max(outcomes.len() as u64);
         // tolerance bookkeeping: distinct hard-failed devices per tier
         // this pass, plus devices still down from earlier passes
-        let mut hard_by_tier: [HashSet<usize>; 2] =
-            [HashSet::new(), HashSet::new()];
+        for s in &mut hard_by_tier {
+            s.clear();
+        }
         for d in &carried_failed {
             let kind = c.store.cluster.devices[*d].profile.kind;
             if let Some(t) = tiers.iter().position(|&k| k == kind) {
@@ -429,6 +500,13 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
             }
         }
         let pass_lost = tally(&mut report, &outcomes, &mut lost, &mut latencies);
+        if pass_lost > 0 {
+            // the lost set grew: refresh the maintained lists (retain
+            // keeps the original order, so the RNG-indexed picks stay
+            // bit-identical to a from-scratch filter)
+            live.retain(|&i| !lost.contains(&objects[i].id));
+            active.retain(|id| !lost.contains(id));
+        }
         // invariant: data loss only past parity tolerance — if no tier
         // saw more than P concurrent hard failures, nothing may be lost
         if hard_by_tier.iter().all(|s| s.len() <= P as usize) {
@@ -442,10 +520,9 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
         for out in &outcomes {
             if let RecoveryVerdict::DataLoss { objects: gone } = &out.verdict {
                 for id in gone {
-                    let len = objects
-                        .iter()
-                        .find(|o| o.id == *id)
-                        .map(|o| o.len as u64)
+                    let len = slot_of
+                        .get(id)
+                        .map(|&i| objects[i].len as u64)
                         .unwrap_or(1);
                     assert!(
                         c.read_object(id, 0, len).is_err(),
@@ -466,15 +543,16 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
             "soak: consumer pass left an HA engagement open (tick {})",
             report.ticks
         );
-        carried_failed = c
-            .store
-            .cluster
-            .devices
-            .iter()
-            .enumerate()
-            .filter(|(_, d)| d.failed)
-            .map(|(i, _)| i)
-            .collect();
+        carried_failed.clear();
+        carried_failed.extend(
+            c.store
+                .cluster
+                .devices
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.failed)
+                .map(|(i, _)| i),
+        );
         // re-arm every recovered device with a fresh exponential
         // failure time so storms keep coming over the long horizon
         for out in &outcomes {
@@ -498,6 +576,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
                 feed.inject(FailureEvent { at, kind });
             }
         }
+        wall_consume += t_phase.elapsed().as_secs_f64();
 
         // ---- elastic membership: grow one tier, drain a veteran of
         // the other
@@ -510,11 +589,6 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
                 _ => DeviceProfile::hdd(6 << 40),
             };
             let node = elastic_rng.gen_index(c.store.cluster.nodes.len());
-            let active: Vec<ObjectId> = objects
-                .iter()
-                .map(|o| o.id)
-                .filter(|id| !lost.contains(id))
-                .collect();
             let (new_dev, moved, _) = c.expand_pool(node, profile, &active)?;
             report.devices_added += 1;
             report.bytes_rebalanced += moved;
@@ -543,21 +617,22 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
 
         // ---- periodic full verification
         if report.ticks % cfg.verify_every == 0 {
+            let t_phase = Instant::now();
             verify_all(&mut c, cfg, &objects, &lost);
             report.full_verifies += 1;
+            wall_verify += t_phase.elapsed().as_secs_f64();
         }
     }
 
     // ---- end of horizon: settle and verify the whole population
-    let active: Vec<ObjectId> = objects
-        .iter()
-        .map(|o| o.id)
-        .filter(|id| !lost.contains(id))
-        .collect();
+    let t_phase = Instant::now();
     let tail = c.consume_failure_feed(&mut feed, &active);
     tally(&mut report, &tail, &mut lost, &mut latencies);
+    wall_consume += t_phase.elapsed().as_secs_f64();
+    let t_phase = Instant::now();
     verify_all(&mut c, cfg, &objects, &lost);
     report.full_verifies += 1;
+    wall_verify += t_phase.elapsed().as_secs_f64();
 
     // ---- accounting invariant: every outcome is in exactly one bucket
     let tallied = report.no_action
@@ -583,6 +658,15 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
     let (p50, mad) = median_mad(&latencies);
     report.recovery_latency_p50 = p50;
     report.recovery_latency_mad = mad;
+    let (allocs1, alloc_bytes1) = crate::util::alloc::counts();
+    report.diag = SoakDiag {
+        wall_total_s: t_run.elapsed().as_secs_f64(),
+        wall_traffic_s: wall_traffic,
+        wall_consume_s: wall_consume,
+        wall_verify_s: wall_verify,
+        allocs: allocs1.saturating_sub(allocs0),
+        alloc_bytes: alloc_bytes1.saturating_sub(alloc_bytes0),
+    };
     Ok(report)
 }
 
@@ -650,6 +734,21 @@ mod tests {
         assert!(a.writes > 0 && a.reads_verified > 0);
         assert_eq!(a.devices_added, 1, "the elastic point fired");
         assert!(a.full_verifies >= 2);
+    }
+
+    #[test]
+    fn diag_is_excluded_from_report_identity() {
+        let a = run(&tiny(7)).unwrap();
+        let mut b = a.clone();
+        b.diag.wall_total_s += 1.0e6;
+        b.diag.allocs += 12345;
+        assert_eq!(a, b, "diagnostics never affect report identity");
+        assert!(a.diag.wall_total_s > 0.0, "the run timer ran");
+        assert!(a.diag.wall_traffic_s >= 0.0);
+        assert!(a.diag.wall_consume_s > 0.0, "consumer passes were timed");
+        assert!(a.diag.wall_verify_s > 0.0, "verification was timed");
+        // no counting allocator installed in the test binary
+        assert_eq!(a.diag.allocs, 0);
     }
 
     #[test]

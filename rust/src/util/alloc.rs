@@ -1,0 +1,87 @@
+//! Counting global allocator (§Perf, ISSUE 8): a thin wrapper around
+//! the system allocator that tallies allocation count and requested
+//! bytes in process-global atomics.
+//!
+//! The counters are **passive**: `sage` itself never installs the
+//! allocator, so library users pay nothing and [`counts`] reports
+//! zeros. A binary opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static COUNTING: sage::util::alloc::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! as `tests/alloc_budget.rs` does to pin the soak inner loop under a
+//! fixed allocation budget, and as the soak harness's
+//! [`SoakDiag`](crate::tools::soak::SoakDiag) surfaces when the
+//! counters are live. Counter reads/writes use `Relaxed` ordering —
+//! they are statistics, not synchronization — and `counts()` snapshots
+//! are meaningful as *differences* around a single-threaded region.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts every `alloc`/`realloc`.
+/// Zero-sized; install with `#[global_allocator]`.
+pub struct CountingAlloc;
+
+// SAFETY: delegates every operation verbatim to `System`; the only
+// addition is relaxed atomic counter bumps, which cannot affect the
+// returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Snapshot `(allocations, requested bytes)` since process start.
+/// Both are 0 unless a binary installed [`CountingAlloc`] as its
+/// global allocator; callers diff two snapshots around the region of
+/// interest.
+pub fn counts() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_are_monotonic_snapshots() {
+        // the test binary does NOT install the allocator, so the
+        // counters stay wherever they are (normally 0) — the contract
+        // under test is that snapshots never go backwards
+        let (a0, b0) = counts();
+        let v = vec![0u8; 4096];
+        std::hint::black_box(&v);
+        let (a1, b1) = counts();
+        assert!(a1 >= a0);
+        assert!(b1 >= b0);
+    }
+}

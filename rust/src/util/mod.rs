@@ -3,6 +3,7 @@
 //! helpers, compression. No paper section of its own — see
 //! ARCHITECTURE.md §Module map.
 
+pub mod alloc;
 pub mod bytes;
 pub mod cli;
 pub mod compress;

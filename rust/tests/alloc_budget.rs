@@ -1,0 +1,51 @@
+//! Allocation-budget regression pin (§Perf, ISSUE 8): this binary
+//! installs [`sage::util::alloc::CountingAlloc`] as its global
+//! allocator and runs ONE quick-profile soak cycle, asserting the
+//! heap-allocation count stays under a fixed budget.
+//!
+//! The budget is deliberately generous (~10× the expected count for
+//! the dense sim-core): it is not a micro-benchmark, it is a tripwire
+//! for *catastrophic* allocation regressions — a per-block or
+//! per-byte allocation slipping back into the object/scheduler hot
+//! paths multiplies the count by orders of magnitude and trips this
+//! long before it shows up as wall-clock noise in CI.
+//!
+//! Kept to a single `#[test]` on purpose: the counters are
+//! process-global, so a second concurrent test in this binary would
+//! inflate the measured window.
+
+use sage::tools::soak::{run, SoakConfig};
+use sage::util::alloc::CountingAlloc;
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+/// Upper bound on heap allocations for one `SoakConfig::quick` cycle.
+const QUICK_SOAK_ALLOC_BUDGET: u64 = 8_000_000;
+
+#[test]
+fn quick_soak_cycle_stays_under_allocation_budget() {
+    let (a0, _) = sage::util::alloc::counts();
+    let report = run(&SoakConfig::quick(42)).expect("quick soak");
+    let (a1, _) = sage::util::alloc::counts();
+    let allocs = a1 - a0;
+
+    // the allocator is installed here, so the run must have observed
+    // a real, non-trivial count — and the soak's own diag snapshot
+    // must agree with ours (same counters, same window)
+    assert!(allocs > 1_000, "counting allocator is live ({allocs} allocs)");
+    assert!(report.diag.allocs > 1_000);
+    assert!(report.diag.allocs <= allocs);
+    assert!(report.diag.alloc_bytes > 0);
+
+    assert!(
+        allocs <= QUICK_SOAK_ALLOC_BUDGET,
+        "quick soak cycle allocated {allocs} times \
+         (budget {QUICK_SOAK_ALLOC_BUDGET}) — a per-block or per-unit \
+         allocation has crept back into a sim-core hot path"
+    );
+
+    // the run itself must still be a real soak (not vacuously cheap)
+    assert!(report.events_consumed > 0);
+    assert!(report.writes > 0);
+}
