@@ -109,11 +109,14 @@ impl FdmiBus {
 mod tests {
     use super::*;
 
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    // Arc<AtomicU64> is Send by construction — no `unsafe impl`
+    // needed under the crate-wide `#![deny(unsafe_code)]`.
     struct CountWrites {
-        seen: std::rc::Rc<std::cell::RefCell<u64>>,
+        seen: Arc<AtomicU64>,
     }
-    // test-only: single-threaded use
-    unsafe impl Send for CountWrites {}
 
     impl FdmiPlugin for CountWrites {
         fn name(&self) -> &str {
@@ -123,13 +126,13 @@ mod tests {
             matches!(rec, FdmiRecord::ObjectWritten { .. })
         }
         fn deliver(&mut self, _rec: &FdmiRecord) {
-            *self.seen.borrow_mut() += 1;
+            self.seen.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     #[test]
     fn plugins_get_filtered_records() {
-        let seen = std::rc::Rc::new(std::cell::RefCell::new(0));
+        let seen = Arc::new(AtomicU64::new(0));
         let mut bus = FdmiBus::new();
         bus.register(Box::new(CountWrites { seen: seen.clone() }));
         bus.emit(FdmiRecord::ObjectCreated { obj: ObjectId(1), at: 0.0 });
@@ -139,7 +142,11 @@ mod tests {
             len: 10,
             at: 1.0,
         });
-        assert_eq!(*seen.borrow(), 1, "only the write matched the filter");
+        assert_eq!(
+            seen.load(Ordering::Relaxed),
+            1,
+            "only the write matched the filter"
+        );
         assert_eq!(bus.emitted, 2);
         assert_eq!(bus.plugin_names(), vec!["count-writes"]);
     }

@@ -132,6 +132,7 @@ pub fn ship_to_object_with(
         t_move = client
             .store
             .cluster
+            // sage-lint: allow(scheduler-discipline, "counterfactual data-movement probe: queues on the device FIFO like any probe, never part of the op group's completion")
             .io(d, now, size.max(1), IoOp::Read, Access::Seq);
     }
     t_move += net.pt2pt(size.max(1)); // bulk transfer

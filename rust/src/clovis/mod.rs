@@ -240,7 +240,7 @@ struct LastRecovery {
 struct PassScratch {
     nodes: Vec<Option<usize>>,
     due: Vec<FailureEvent>,
-    last: std::collections::HashMap<usize, LastRecovery>,
+    last: std::collections::BTreeMap<usize, LastRecovery>,
 }
 
 /// A Clovis client handle: the entry point of the SAGE storage API.
@@ -660,29 +660,51 @@ impl Client {
                 }
             }
             for event in scratch.due.drain(..) {
-                self.consume_event(
+                // recovery-plane bookkeeping errors are typed values,
+                // never panics (`no-panic-in-recovery`): an internal
+                // error becomes a Failed outcome so the event stays
+                // accounted and the pass continues
+                if let Err(e) = self.consume_event(
                     event,
                     objects,
                     &scratch.nodes,
                     &mut scratch.last,
                     &mut out,
-                );
+                ) {
+                    out.push(Self::failed_outcome(event, &e));
+                }
             }
         }
         self.feed_scratch = scratch;
         out
     }
 
+    /// Wrap an internal recovery-plane error as a typed
+    /// [`RecoveryVerdict::Failed`] outcome (the event is consumed and
+    /// accounted; the error text names the bookkeeping fault).
+    fn failed_outcome(event: FailureEvent, e: &SageError) -> RecoveryOutcome {
+        RecoveryOutcome {
+            event,
+            action: RepairAction::None,
+            bytes: 0,
+            completed_at: None,
+            error: Some(e.to_string()),
+            verdict: RecoveryVerdict::Failed,
+        }
+    }
+
     /// One event of a consumer pass: overlap handling, HA decision,
     /// recovery execution, verdict. See [`Client::consume_failure_feed`].
+    /// Bookkeeping faults surface as [`SageError::Recovery`] — this
+    /// path never panics (`no-panic-in-recovery`).
     fn consume_event(
         &mut self,
         event: FailureEvent,
         objects: &[ObjectId],
         nodes: &[Option<usize>],
-        last: &mut std::collections::HashMap<usize, LastRecovery>,
+        last: &mut std::collections::BTreeMap<usize, LastRecovery>,
         out: &mut Vec<RecoveryOutcome>,
-    ) {
+    ) -> Result<()> {
         if let FailureKind::Device(d) = event.kind {
             if let Some(l) = last.get(&d) {
                 if event.at <= l.completed_at && l.escalated {
@@ -697,7 +719,7 @@ impl Client {
                         error: None,
                         verdict: RecoveryVerdict::AbsorbedByEscalation,
                     });
-                    return;
+                    return Ok(());
                 }
                 if event.at <= l.completed_at {
                     // the device re-failed while its recovery session
@@ -706,13 +728,24 @@ impl Client {
                     // abort counter records the restart), take the
                     // replacement out of service, and let this event's
                     // own observe decide a fresh rebuild
-                    let prev = last.remove(&d).unwrap();
+                    let prev = last.remove(&d).ok_or_else(|| {
+                        SageError::Recovery(format!(
+                            "overlap table lost device {d} mid-pass"
+                        ))
+                    })?;
                     self.store.ha.reopen_last(d);
                     self.store.ha.repair_aborted(d);
                     if !self.store.cluster.devices[d].failed {
                         self.store.cluster.fail_device(d);
                     }
-                    out[prev.outcome].verdict =
+                    let retracted =
+                        out.get_mut(prev.outcome).ok_or_else(|| {
+                            SageError::Recovery(format!(
+                                "dangling outcome index {} for device {d}",
+                                prev.outcome
+                            ))
+                        })?;
+                    retracted.verdict =
                         RecoveryVerdict::AbortedByRefailure {
                             refailed_at: event.at,
                         };
@@ -811,6 +844,7 @@ impl Client {
                 });
             }
         }
+        Ok(())
     }
 
     /// Grow a pool under load (elastic membership): attach a fresh
@@ -1547,5 +1581,67 @@ mod tests {
         c.write_object(&obj, 0, &vec![1u8; 4 * 65536]).unwrap();
         let report = c.addb.summary();
         assert!(report.iter().any(|(k, _)| k.contains("obj_write_bytes")));
+    }
+
+    // ---- recovery plane: converted panic sites (ISSUE 9) ----
+    // `consume_event` used to unwrap the overlap-table entry and index
+    // `out` directly; both now surface `SageError::Recovery`. These
+    // pin the typed error paths — the plane must NEVER panic.
+
+    #[test]
+    fn dangling_outcome_index_is_a_typed_recovery_error() {
+        let mut c = client();
+        let n_devs = c.store.cluster.devices.len();
+        let nodes: Vec<Option<usize>> =
+            (0..n_devs).map(|d| c.store.cluster.node_of(d)).collect();
+        // poison the overlap table: device 0's last recovery claims an
+        // outcome slot that does not exist in `out`
+        let mut last = std::collections::BTreeMap::new();
+        last.insert(
+            0usize,
+            LastRecovery {
+                outcome: 99,
+                completed_at: 1e9,
+                escalated: false,
+            },
+        );
+        let mut out = Vec::new();
+        let event = FailureEvent {
+            at: 1.0,
+            kind: FailureKind::Device(0),
+        };
+        let err = c
+            .consume_event(event, &[], &nodes, &mut last, &mut out)
+            .unwrap_err();
+        assert!(matches!(err, SageError::Recovery(_)));
+        assert!(
+            err.to_string().contains("dangling outcome index 99"),
+            "error names the bad slot: {err}"
+        );
+        assert!(out.is_empty(), "no outcome was fabricated mid-error");
+    }
+
+    #[test]
+    fn internal_recovery_error_becomes_failed_outcome() {
+        // the feed consumer converts a bookkeeping error into a
+        // consumed, accounted outcome with a Failed verdict
+        let event = FailureEvent {
+            at: 2.0,
+            kind: FailureKind::Device(3),
+        };
+        let e = SageError::Recovery(
+            "overlap table lost device 3 mid-pass".to_string(),
+        );
+        let o = Client::failed_outcome(event, &e);
+        assert_eq!(o.verdict, RecoveryVerdict::Failed);
+        assert_eq!(o.action, RepairAction::None);
+        assert_eq!(o.bytes, 0);
+        assert!(o.completed_at.is_none());
+        let msg = o.error.expect("error text is preserved");
+        assert!(
+            msg.contains("recovery-plane bookkeeping error"),
+            "typed Display prefix survives: {msg}"
+        );
+        assert!(msg.contains("overlap table lost device 3"));
     }
 }

@@ -200,6 +200,7 @@ impl Cluster {
         op: IoOp,
         access: Access,
     ) -> SimTime {
+        // sage-lint: allow(scheduler-discipline, "the retained single-I/O primitive: sanctioned probes (fshipping) bottom out here")
         self.devices[dev].io(now, size, op, access)
     }
 

@@ -33,6 +33,14 @@ pub enum SageError {
     /// On-disk / in-flight data failed an integrity check.
     Integrity(String),
 
+    /// Recovery-plane bookkeeping went inconsistent mid-pass (overlap
+    /// table / outcome index). Surfaced as a typed value — the
+    /// recovery plane never panics (`no-panic-in-recovery`); the
+    /// failure-feed consumer converts this into a
+    /// [`RecoveryVerdict::Failed`](crate::clovis::RecoveryVerdict)
+    /// outcome so the event stays accounted.
+    Recovery(String),
+
     /// Underlying I/O error.
     Io(std::io::Error),
 }
@@ -48,6 +56,9 @@ impl fmt::Display for SageError {
             SageError::Runtime(s) => write!(f, "runtime error: {s}"),
             SageError::Config(s) => write!(f, "config error: {s}"),
             SageError::Integrity(s) => write!(f, "integrity violation: {s}"),
+            SageError::Recovery(s) => {
+                write!(f, "recovery-plane bookkeeping error: {s}")
+            }
             SageError::Io(e) => write!(f, "io error: {e}"),
         }
     }

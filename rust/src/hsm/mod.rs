@@ -27,7 +27,7 @@
 //! background migration with foreground traffic on shared shards
 //! (ISSUE 4 session API).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::clovis::fdmi::FdmiRecord;
 use crate::error::Result;
@@ -73,7 +73,7 @@ pub struct Hsm {
     pub promote_threshold: f64,
     /// Demote when score falls below this.
     pub demote_threshold: f64,
-    heat: HashMap<ObjectId, Heat>,
+    heat: BTreeMap<ObjectId, Heat>,
     /// Migrations completed by the most recent [`Hsm::migrate_with`]
     /// call (in execution order; survives a mid-plan error, so callers
     /// can publish exactly what really moved).
@@ -90,7 +90,7 @@ impl Hsm {
             half_life: 60.0,
             promote_threshold: 3.0,
             demote_threshold: 0.2,
-            heat: HashMap::new(),
+            heat: BTreeMap::new(),
             last_migrated: Vec::new(),
             migrations_run: 0,
             bytes_moved: 0,
@@ -190,8 +190,8 @@ impl Hsm {
                 // window; demote the OLDEST (first-in) untouched
                 // resident of each fast tier — one per tier per
                 // planning cycle, regardless of absolute age
-                let mut oldest: HashMap<DeviceKind, (ObjectId, SimTime)> =
-                    HashMap::new();
+                let mut oldest: BTreeMap<DeviceKind, (ObjectId, SimTime)> =
+                    BTreeMap::new();
                 for (&obj, h) in &self.heat {
                     if now - h.last_touch < self.half_life {
                         if let Some(up) = promote_target(h.tier) {
@@ -216,9 +216,10 @@ impl Hsm {
                 }
             }
         }
-        // objects appear at most once, so this sort gives plan() a
-        // total deterministic order even though the heat map (and the
-        // FIFO per-tier fold above) iterate HashMaps
+        // objects appear at most once; the heat map and the FIFO
+        // per-tier fold are ordered (BTreeMap — `no-hash-iteration`),
+        // and this sort additionally gives plan() a total order by
+        // object id regardless of which policy branch produced it
         plan.sort_by_key(|m| m.obj);
         plan
     }

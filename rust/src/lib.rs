@@ -48,6 +48,11 @@
 //! assert_eq!(back, vec![7u8; 16384]);
 //! ```
 
+// New `unsafe` needs a visible, file-local waiver: the only allowed
+// block is `util/alloc.rs::CountingAlloc` (the counting global
+// allocator), which carries a scoped `#[allow(unsafe_code)]`.
+#![deny(unsafe_code)]
+
 pub mod bench;
 pub mod cluster;
 pub mod clovis;

@@ -7,6 +7,8 @@
 //! * `fig3|fig4|fig5|fig7` — regenerate the paper's figures (same
 //!   harnesses the benches use; see EXPERIMENTS.md)
 //! * `addb` — run a workload and dump the ADDB performance report
+//! * `lint` — the in-tree determinism/invariant static-analysis pass
+//!   (see `tools/lint.rs`; exits nonzero on any violation)
 //!
 //! Examples:
 //! ```text
@@ -14,6 +16,8 @@
 //! sage fig7 --steps 100 --max-procs 8192
 //! sage demo
 //! ```
+
+#![deny(unsafe_code)]
 
 use sage::apps::{dht, hacc, ipic3d, stream};
 use sage::clovis::{Client, FunctionKind};
@@ -46,6 +50,7 @@ fn run(args: &Args) -> Result<()> {
         Some("addb") => addb(args),
         Some("soak") => soak(args),
         Some("tenants") => tenants(args),
+        Some("lint") => lint(args),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -69,6 +74,8 @@ COMMANDS:
   soak    long-horizon failure-storm soak       [--quick] [--seed N]
   tenants N-tenant contention on the shared scheduler
           [--quick] [--seed N] [--closed] [--no-tenancy]
+  lint    determinism/invariant static analysis over rust/src
+          [--json] [--src <dir>]; exits 1 on any violation
 
 Common options: --testbed <name>, --csv (machine-readable output)
 ";
@@ -419,6 +426,28 @@ fn tenants(args: &Args) -> Result<()> {
         sage::util::bytes::fmt_size(r.total_bytes),
         r.bytes_crc
     );
+    Ok(())
+}
+
+fn lint(args: &Args) -> Result<()> {
+    let src = args.get_str("src", "");
+    let root = if src.is_empty() {
+        sage::tools::lint::default_src_root()
+    } else {
+        std::path::PathBuf::from(src)
+    };
+    let report = sage::tools::lint::run_lint(&root)?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        println!("{}", report.render());
+    }
+    let denied = report.deny_count();
+    if denied > 0 {
+        return Err(sage::SageError::Invalid(format!(
+            "lint: {denied} violation(s) (see above)"
+        )));
+    }
     Ok(())
 }
 

@@ -27,7 +27,7 @@
 //! exactly the epoch group-commit story above, surfaced through the
 //! one asynchronous op interface (ISSUE 4).
 
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::error::{Result, SageError};
 use crate::sim::clock::SimTime;
@@ -56,7 +56,7 @@ pub enum TxState {
 struct Tx {
     state: TxState,
     snapshot_epoch: u64,
-    reads: HashSet<Vec<u8>>,
+    reads: BTreeSet<Vec<u8>>,
     writes: Vec<TxUpdate>,
 }
 
@@ -69,7 +69,7 @@ const LOCK_RPC: f64 = 5e-6;
 #[derive(Debug)]
 pub struct DtmManager {
     epoch: u64,
-    txns: HashMap<TxId, Tx>,
+    txns: BTreeMap<TxId, Tx>,
     next_tx: u64,
     /// Committed key versions: key -> epoch of last commit.
     versions: BTreeMap<Vec<u8>, u64>,
@@ -93,7 +93,7 @@ impl DtmManager {
     pub fn new() -> Self {
         DtmManager {
             epoch: 1,
-            txns: HashMap::new(),
+            txns: BTreeMap::new(),
             next_tx: 1,
             versions: BTreeMap::new(),
             store: BTreeMap::new(),
@@ -112,7 +112,7 @@ impl DtmManager {
             Tx {
                 state: TxState::Open,
                 snapshot_epoch: self.epoch,
-                reads: HashSet::new(),
+                reads: BTreeSet::new(),
                 writes: Vec::new(),
             },
         );
@@ -224,10 +224,10 @@ impl DtmManager {
 /// to.
 #[derive(Debug, Default)]
 pub struct TwoPhaseLocking {
-    locks: HashMap<Vec<u8>, TxId>,
+    locks: BTreeMap<Vec<u8>, TxId>,
     store: BTreeMap<Vec<u8>, Vec<u8>>,
     next_tx: u64,
-    held: HashMap<TxId, Vec<Vec<u8>>>,
+    held: BTreeMap<TxId, Vec<Vec<u8>>>,
     pub committed: u64,
     pub aborted: u64,
 }

@@ -16,7 +16,7 @@
 //!   window → node-level alert (repair deferred to operator policy);
 //! * isolated transient → no action.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::failure::{FailureEvent, FailureKind};
 use crate::cluster::DeviceId;
@@ -50,7 +50,7 @@ pub struct HaSubsystem {
     pub node_threshold: usize,
     history: Vec<FailureEvent>,
     /// Devices already being repaired (suppress duplicate actions).
-    in_repair: HashMap<DeviceId, SimTime>,
+    in_repair: BTreeMap<DeviceId, SimTime>,
     /// Completed recovery actions — device rebuilds AND proactive
     /// drains — as (device, engaged at, completed at) in virtual time.
     /// The completion stamp is the recovery plane's scheduler
@@ -82,7 +82,7 @@ impl HaSubsystem {
             transient_threshold: 3,
             node_threshold: 8,
             history: Vec::new(),
-            in_repair: HashMap::new(),
+            in_repair: BTreeMap::new(),
             repair_log: Vec::new(),
             repairs_started: 0,
             drains_started: 0,

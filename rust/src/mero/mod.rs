@@ -29,7 +29,7 @@ pub mod sns_baseline;
 #[doc(hidden)]
 pub mod sns_serial;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::Cluster;
 use crate::error::{Result, SageError};
@@ -49,9 +49,9 @@ pub struct MeroStore {
     pub pools: PoolSet,
     pub dtm: dtm::DtmManager,
     pub ha: ha::HaSubsystem,
-    objects: HashMap<ObjectId, Mobject>,
-    indices: HashMap<IndexId, KvIndex>,
-    containers: HashMap<ContainerId, Container>,
+    objects: BTreeMap<ObjectId, Mobject>,
+    indices: BTreeMap<IndexId, KvIndex>,
+    containers: BTreeMap<ContainerId, Container>,
     next_id: u64,
 }
 
@@ -65,9 +65,9 @@ impl MeroStore {
             pools,
             dtm: dtm::DtmManager::new(),
             ha: ha::HaSubsystem::new(),
-            objects: HashMap::new(),
-            indices: HashMap::new(),
-            containers: HashMap::new(),
+            objects: BTreeMap::new(),
+            indices: BTreeMap::new(),
+            containers: BTreeMap::new(),
             next_id: 1,
         }
     }
@@ -116,8 +116,8 @@ impl MeroStore {
                 Layout::Raid { data, .. } => {
                     let data = *data;
                     // per stripe: (data units on failed devices, live units)
-                    let mut per_stripe: HashMap<u64, (u32, u32)> =
-                        HashMap::new();
+                    let mut per_stripe: BTreeMap<u64, (u32, u32)> =
+                        BTreeMap::new();
                     for pu in obj.placed_units() {
                         let e = per_stripe.entry(pu.stripe).or_insert((0, 0));
                         if self.cluster.devices[pu.device].failed {

@@ -1414,8 +1414,8 @@ fn rebalance_onto_inner(
     // ---- phase A: plan against projected utilizations and submit the
     // source reads in one pass ----
     let mut dst_used = store.cluster.devices[dev].used;
-    let mut src_used: std::collections::HashMap<usize, u64> =
-        std::collections::HashMap::new();
+    let mut src_used: std::collections::BTreeMap<usize, u64> =
+        std::collections::BTreeMap::new();
     let mut moves: Vec<Move> = Vec::new();
     for &id in objects {
         if store.object(id)?.layout.tier() != kind {
@@ -1423,7 +1423,7 @@ fn rebalance_onto_inner(
         }
         let units: Vec<PlacedUnit> =
             store.object(id)?.placed_units().copied().collect();
-        let mut stripes_on_dev: std::collections::HashSet<u64> = units
+        let mut stripes_on_dev: std::collections::BTreeSet<u64> = units
             .iter()
             .filter(|u| u.device == dev)
             .map(|u| u.stripe)

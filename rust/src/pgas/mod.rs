@@ -207,6 +207,7 @@ impl PgasSim {
                 while left > 0 {
                     let len = STRIPE.min(left);
                     let idx = ((off / STRIPE) as usize + rank) % n;
+                    // sage-lint: allow(scheduler-discipline, "PGAS window model: private per-window device pools, not the shared Mero plane")
                     let end = pool[idx].io(t, len, op, access);
                     done = done.max(end);
                     off += len;
@@ -216,6 +217,7 @@ impl PgasSim {
             }
             _ => {
                 let idx = rank % pool.len();
+                // sage-lint: allow(scheduler-discipline, "PGAS window model: private per-window device pools, not the shared Mero plane")
                 pool[idx].io(t, bytes, op, access)
             }
         }

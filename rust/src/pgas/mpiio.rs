@@ -124,6 +124,7 @@ impl MpiIo {
         let mut t_io: f64 = 0.0;
         let t0 = start + t_sync + t_exchange;
         for dev in &mut self.targets {
+            // sage-lint: allow(scheduler-discipline, "MPI-IO collective model: private Lustre targets, not the shared Mero plane")
             let t = dev.io(t0, per_target, op, Access::Seq);
             t_io = t_io.max(t);
         }

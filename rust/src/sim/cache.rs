@@ -10,7 +10,7 @@
 //! Time accounting is done by the caller: `read`/`write` return how many
 //! bytes hit DRAM vs how many must touch the backing device.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Result of a cache access: how many bytes were served where.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -37,7 +37,7 @@ pub struct PageCache {
     /// effective limit is min(ratio * capacity, cap).
     dirty_cap: u64,
     /// page id -> (lru tick, dirty)
-    pages: HashMap<u64, (u64, bool)>,
+    pages: BTreeMap<u64, (u64, bool)>,
     tick: u64,
     dirty_bytes: u64,
 }
@@ -50,7 +50,7 @@ impl PageCache {
             capacity,
             dirty_ratio: 0.4,
             dirty_cap: u64::MAX,
-            pages: HashMap::new(),
+            pages: BTreeMap::new(),
             tick: 0,
             dirty_bytes: 0,
         }

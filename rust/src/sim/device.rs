@@ -13,8 +13,10 @@
 
 use super::clock::SimTime;
 
-/// Storage technology classes in the SAGE hierarchy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Storage technology classes in the SAGE hierarchy. `Ord` follows
+/// declaration order (fastest tier first) so `BTreeMap<DeviceKind, _>`
+/// folds walk the hierarchy top-down deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum DeviceKind {
     /// DRAM (memory windows / page-cache hits).
     Dram,

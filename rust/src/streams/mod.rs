@@ -210,6 +210,7 @@ impl StreamSim {
             let d = (cons as u64 + self.consumers[cons].pushes) as usize
                 % self.pfs.len();
             end_burst =
+            // sage-lint: allow(scheduler-discipline, "streams model: private PFS flush devices, not the shared Mero plane")
                 self.pfs[d].io(end_proc, flush_bytes, IoOp::Write, Access::Seq);
         }
         self.clocks.wait_until(cons_rank, end_proc);

@@ -16,6 +16,11 @@
 //!   models, heavy-tailed sizes, per-tenant tail latency and Jain
 //!   fairness (driven by `sage tenants` and
 //!   `benches/ablate_tenants.rs`).
+//! * [`lint`] — the determinism & invariant static-analysis pass: a
+//!   hand-rolled tokenizer plus six token-pattern rules that keep
+//!   wall clocks, hash-order leaks, scheduler bypasses, recovery-plane
+//!   panics, ambient entropy, and oracle edits out of the tree (driven
+//!   by `sage lint` and the CI `lint` job).
 //!
 //! Module map (ARCHITECTURE.md §Module map rows `tools/`): both tools
 //! are FDMI/Clovis *consumers*, not core-path code — RTHMS ingests the
@@ -29,6 +34,7 @@
 //! decision flow.
 
 pub mod analytics;
+pub mod lint;
 pub mod rthms;
 pub mod soak;
 pub mod tenants;

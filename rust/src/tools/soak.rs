@@ -315,6 +315,7 @@ fn median_mad(xs: &[f64]) -> (f64, f64) {
 pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
     // §Perf profiling hooks: phase timers + allocation counters land
     // in the report's diag (excluded from report identity)
+    // sage-lint: allow(no-wall-clock, "diag wall timer: whole-run profiling, outside report identity")
     let t_run = Instant::now();
     let (allocs0, alloc_bytes0) = crate::util::alloc::counts();
     let mut wall_traffic = 0.0f64;
@@ -433,6 +434,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
 
         // ---- rewrite traffic: whole-object overwrites with fresh
         // deterministic payloads
+        // sage-lint: allow(no-wall-clock, "diag wall timer: rewrite-phase profiling, outside report identity")
         let t_phase = Instant::now();
         for _ in 0..cfg.rewrites_per_tick {
             if live.is_empty() {
@@ -460,6 +462,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
         wall_traffic += t_phase.elapsed().as_secs_f64();
 
         // ---- continuous read verification (one rotating object)
+        // sage-lint: allow(no-wall-clock, "diag wall timer: read-verify profiling, outside report identity")
         let t_phase = Instant::now();
         if !live.is_empty() {
             let i = live[(report.ticks as usize) % live.len()];
@@ -476,6 +479,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
         wall_verify += t_phase.elapsed().as_secs_f64();
 
         // ---- consume everything due; account every outcome
+        // sage-lint: allow(no-wall-clock, "diag wall timer: consume-phase profiling, outside report identity")
         let t_phase = Instant::now();
         let outcomes = c.consume_failure_feed(&mut feed, &active);
         report.max_pass_outcomes =
@@ -617,6 +621,7 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
 
         // ---- periodic full verification
         if report.ticks % cfg.verify_every == 0 {
+            // sage-lint: allow(no-wall-clock, "diag wall timer: full-verify profiling, outside report identity")
             let t_phase = Instant::now();
             verify_all(&mut c, cfg, &objects, &lost);
             report.full_verifies += 1;
@@ -625,10 +630,12 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
     }
 
     // ---- end of horizon: settle and verify the whole population
+    // sage-lint: allow(no-wall-clock, "diag wall timer: tail-consume profiling, outside report identity")
     let t_phase = Instant::now();
     let tail = c.consume_failure_feed(&mut feed, &active);
     tally(&mut report, &tail, &mut lost, &mut latencies);
     wall_consume += t_phase.elapsed().as_secs_f64();
+    // sage-lint: allow(no-wall-clock, "diag wall timer: verify-phase profiling, outside report identity")
     let t_phase = Instant::now();
     verify_all(&mut c, cfg, &objects, &lost);
     report.full_verifies += 1;

@@ -1,0 +1,375 @@
+//! Fixture tests for `sage lint` (ISSUE 9, satellite d): every rule
+//! gets a violating fixture and a clean one, the suppression window
+//! and waiver grammar are pinned, and — most importantly — the CI
+//! gate is *proved*: a tree seeded with a violation makes
+//! [`run_lint`] report a deny, and the shipped `rust/src` tree lints
+//! clean with exactly the waivers the code carries.
+//!
+//! Single-file rule behavior goes through [`lint_source`] (the `rel`
+//! path argument selects module scoping); tree-level behavior
+//! (oracle-freeze checksums, sorted walk, JSON rendering) goes
+//! through [`run_lint`] over scratch trees under the OS temp dir.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sage::tools::lint::{
+    default_src_root, lint_source, run_lint, FileLint, NO_AMBIENT_ENTROPY,
+    NO_HASH_ITERATION, NO_PANIC_IN_RECOVERY, NO_WALL_CLOCK, ORACLE_FREEZE,
+    RULES, SCHEDULER_DISCIPLINE, WAIVER_SYNTAX,
+};
+
+/// Rules fired by a fixture, in report order.
+fn fired(fl: &FileLint) -> Vec<&'static str> {
+    fl.violations.iter().map(|v| v.rule).collect()
+}
+
+// ------------------------------------------------- per-rule fixtures
+
+#[test]
+fn no_wall_clock_fires_in_sim_and_not_in_bench() {
+    let src = "pub fn t() -> std::time::Instant { Instant::now() }\n";
+    let fl = lint_source("sim/foo.rs", src);
+    assert_eq!(fired(&fl), [NO_WALL_CLOCK]);
+    assert_eq!(fl.violations[0].line, 1);
+    // bench/ is exempt: wall clocks are what benches are for
+    assert!(lint_source("bench/foo.rs", src).violations.is_empty());
+    // SystemTime is flagged anywhere outside bench/
+    let fl = lint_source("util/foo.rs", "fn t() { SystemTime::now(); }\n");
+    assert_eq!(fired(&fl), [NO_WALL_CLOCK]);
+    // naming the type in an import path alone does not fire the
+    // `Instant :: now` pattern
+    let clean = lint_source("sim/foo.rs", "use std::time::Instant;\n");
+    assert!(clean.violations.is_empty());
+}
+
+#[test]
+fn no_hash_iteration_scopes_to_sim_visible_modules() {
+    let src = "use std::collections::HashMap;\n\
+               pub fn m() -> HashMap<u32, u32> { HashMap::new() }\n";
+    for rel in ["sim/a.rs", "mero/a.rs", "clovis/a.rs", "hsm/a.rs"] {
+        let fl = lint_source(rel, src);
+        assert!(
+            fl.violations.iter().all(|v| v.rule == NO_HASH_ITERATION),
+            "{rel}: {:?}",
+            fl.violations
+        );
+        assert_eq!(fl.violations.len(), 3, "{rel}: one hit per mention");
+    }
+    // outside the sim-visible prefixes the rule is silent
+    assert!(lint_source("util/a.rs", src).violations.is_empty());
+    // ordered containers are the sanctioned replacement
+    let clean = "use std::collections::BTreeMap;\n\
+                 pub fn m() -> BTreeMap<u32, u32> { BTreeMap::new() }\n";
+    assert!(lint_source("sim/a.rs", clean).violations.is_empty());
+    let fl = lint_source("mero/a.rs", "use std::collections::HashSet;\n");
+    assert_eq!(fired(&fl), [NO_HASH_ITERATION]);
+}
+
+#[test]
+fn scheduler_discipline_reserves_direct_io_to_the_scheduler() {
+    let src = "fn go(d: &mut Device) {\n\
+               let t = d.io(0.0, 4096, IoOp::Read, Access::Seq);\n\
+               let u = d.io_run(t, 4, 4096, IoOp::Write, Access::Seq);\n\
+               }\n";
+    let fl = lint_source("clovis/foo.rs", src);
+    assert_eq!(fired(&fl), [SCHEDULER_DISCIPLINE, SCHEDULER_DISCIPLINE]);
+    assert_eq!(fl.violations[0].line, 2);
+    assert_eq!(fl.violations[1].line, 3);
+    // the scheduler itself and the preserved oracles are exempt
+    for rel in [
+        "sim/sched.rs",
+        "sim/sched_oracle.rs",
+        "mero/sns_baseline.rs",
+        "mero/sns_serial.rs",
+    ] {
+        assert!(lint_source(rel, src).violations.is_empty(), "{rel}");
+    }
+    // a multi-line method chain anchors the hit on the `.io(` line, so
+    // a waiver comment inserted inside the chain suppresses it
+    let chain = "fn go(c: &C) {\n\
+                 let t = c\n\
+                 .cluster\n\
+                 // sage-lint: allow(scheduler-discipline, \"probe\")\n\
+                 .io(0.0, 1, IoOp::Read, Access::Seq);\n\
+                 }\n";
+    let fl = lint_source("clovis/foo.rs", chain);
+    assert!(fl.violations.is_empty(), "{:?}", fl.violations);
+    assert_eq!(fl.waivers_honored, 1);
+}
+
+#[test]
+fn no_panic_in_recovery_covers_ha_and_the_recovery_fns() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n\
+               panic!(\"boom\");\n\
+               x.unwrap();\n\
+               x.expect(\"y\")\n\
+               }\n";
+    // the whole HA subsystem is recovery plane
+    let fl = lint_source("mero/ha.rs", src);
+    assert_eq!(
+        fired(&fl),
+        [NO_PANIC_IN_RECOVERY, NO_PANIC_IN_RECOVERY, NO_PANIC_IN_RECOVERY]
+    );
+    // in clovis/mod.rs only the named recovery fns are in scope
+    let scoped = "fn consume_event(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                  fn helper(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    let fl = lint_source("clovis/mod.rs", scoped);
+    assert_eq!(fired(&fl), [NO_PANIC_IN_RECOVERY]);
+    assert_eq!(fl.violations[0].line, 1);
+    // other modules may unwrap (clippy taste aside, not this rule)
+    assert!(lint_source("mero/dtm.rs", scoped).violations.is_empty());
+    // unwrap_or / strip-prefix style idents never match
+    let clean = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+    assert!(lint_source("mero/ha.rs", clean).violations.is_empty());
+}
+
+#[test]
+fn no_ambient_entropy_routes_randomness_through_sim_rng() {
+    let fl = lint_source("sim/a.rs", "use rand::Rng;\n");
+    assert_eq!(fired(&fl), [NO_AMBIENT_ENTROPY]);
+    let fl = lint_source("util/a.rs", "fn f() { let r = thread_rng(); }\n");
+    assert_eq!(fired(&fl), [NO_AMBIENT_ENTROPY]);
+    // the seeded-stream module itself is the one sanctioned home
+    assert!(lint_source("sim/rng.rs", "use rand::Rng;\n")
+        .violations
+        .is_empty());
+    let clean = "use crate::sim::rng::SimRng;\n\
+                 fn f() { let mut r = SimRng::new(7); r.next_u64(); }\n";
+    assert!(lint_source("sim/a.rs", clean).violations.is_empty());
+}
+
+// --------------------------------------- masks, windows and grammar
+
+#[test]
+fn cfg_test_blocks_are_masked() {
+    let src = "pub struct S;\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               use std::collections::HashMap;\n\
+               fn t() { let _ = SystemTime::now(); }\n\
+               }\n";
+    assert!(lint_source("sim/a.rs", src).violations.is_empty());
+    // the same code outside the masked block fires both rules
+    let live = "use std::collections::HashMap;\n\
+                fn t() { let _ = SystemTime::now(); }\n";
+    let fl = lint_source("sim/a.rs", live);
+    assert_eq!(fired(&fl), [NO_HASH_ITERATION, NO_WALL_CLOCK]);
+}
+
+#[test]
+fn string_literals_and_doc_comments_are_inert() {
+    let src = "const HELP: &str = \"never call Instant::now or HashMap\";\n\
+               /// Discusses SystemTime and sage-lint: allow(bogus).\n\
+               pub fn f() {}\n";
+    let fl = lint_source("sim/a.rs", src);
+    assert!(fl.violations.is_empty(), "{:?}", fl.violations);
+}
+
+#[test]
+fn suppression_window_is_same_line_or_line_above() {
+    let above = "// sage-lint: allow(no-wall-clock, \"diag timer\")\n\
+                 fn f() { let _ = SystemTime::now(); }\n";
+    let fl = lint_source("sim/a.rs", above);
+    assert!(fl.violations.is_empty());
+    assert_eq!(fl.waivers_honored, 1);
+
+    let trailing = "fn f() { let _ = SystemTime::now(); } \
+                    // sage-lint: allow(no-wall-clock, \"diag timer\")\n";
+    let fl = lint_source("sim/a.rs", trailing);
+    assert!(fl.violations.is_empty());
+    assert_eq!(fl.waivers_honored, 1);
+
+    // two lines up is out of the window: the waiver is inert
+    let far = "// sage-lint: allow(no-wall-clock, \"too far\")\n\
+               \n\
+               fn f() { let _ = SystemTime::now(); }\n";
+    let fl = lint_source("sim/a.rs", far);
+    assert_eq!(fired(&fl), [NO_WALL_CLOCK]);
+    assert_eq!(fl.waivers_honored, 0);
+
+    // a waiver for a different rule does not suppress
+    let wrong = "// sage-lint: allow(no-hash-iteration, \"wrong rule\")\n\
+                 fn f() { let _ = SystemTime::now(); }\n";
+    let fl = lint_source("sim/a.rs", wrong);
+    assert_eq!(fired(&fl), [NO_WALL_CLOCK]);
+    assert_eq!(fl.waivers_honored, 0);
+}
+
+#[test]
+fn waiver_grammar_requires_known_rule_and_quoted_reason() {
+    // missing reason
+    let fl = lint_source("sim/a.rs", "// sage-lint: allow(no-wall-clock)\n");
+    assert_eq!(fired(&fl), [WAIVER_SYNTAX]);
+    // empty reason
+    let fl = lint_source(
+        "sim/a.rs",
+        "// sage-lint: allow(no-wall-clock, \"\")\n",
+    );
+    assert_eq!(fired(&fl), [WAIVER_SYNTAX]);
+    // unknown rule
+    let fl = lint_source(
+        "sim/a.rs",
+        "// sage-lint: allow(no-such-rule, \"reason\")\n",
+    );
+    assert_eq!(fired(&fl), [WAIVER_SYNTAX]);
+    // not the allow(..) shape
+    let fl = lint_source("sim/a.rs", "// sage-lint: deny(no-wall-clock)\n");
+    assert_eq!(fired(&fl), [WAIVER_SYNTAX]);
+    // a well-formed but unused waiver is inert, not an error
+    let fl = lint_source(
+        "sim/a.rs",
+        "// sage-lint: allow(no-wall-clock, \"unused\")\npub fn f() {}\n",
+    );
+    assert!(fl.violations.is_empty());
+    assert_eq!(fl.waivers_honored, 0);
+}
+
+// ------------------------------------------------ tree-level checks
+
+fn scratch(name: &str) -> PathBuf {
+    let root = std::env::temp_dir()
+        .join(format!("sage-lint-fixtures-{}", std::process::id()))
+        .join(name);
+    let _ = fs::remove_dir_all(&root);
+    fs::create_dir_all(&root).unwrap();
+    root
+}
+
+fn put(root: &Path, rel: &str, src: &str) {
+    let p = root.join(rel);
+    fs::create_dir_all(p.parent().unwrap()).unwrap();
+    fs::write(p, src).unwrap();
+}
+
+/// The CI gate, proved: seed a violation into a scratch tree and the
+/// run reports a nonzero deny count (this is exactly the condition
+/// that makes `sage lint` exit 1 and the CI `lint` job fail).
+#[test]
+fn seeded_violation_fails_the_run() {
+    let root = scratch("seeded");
+    put(&root, "lib.rs", "pub mod sim;\n");
+    put(
+        &root,
+        "sim/clock.rs",
+        "pub fn now_ms() -> u128 {\n\
+         SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_millis()\n\
+         }\n",
+    );
+    let report = run_lint(&root).unwrap();
+    assert!(report.deny_count() > 0);
+    let seeded: Vec<_> = report
+        .violations
+        .iter()
+        .filter(|v| v.rule == NO_WALL_CLOCK)
+        .collect();
+    assert_eq!(seeded.len(), 1);
+    assert_eq!(seeded[0].file, "sim/clock.rs");
+    assert_eq!(seeded[0].line, 2);
+    // the human rendering carries the file:line anchor CI users grep
+    assert!(report.render().contains("sim/clock.rs:2 [no-wall-clock]"));
+}
+
+#[test]
+fn scratch_trees_report_missing_oracles() {
+    let root = scratch("no-oracles");
+    put(&root, "lib.rs", "pub fn ok() {}\n");
+    let report = run_lint(&root).unwrap();
+    // all three preserved oracles are absent from this tree
+    let missing: Vec<_> = report
+        .violations
+        .iter()
+        .filter(|v| v.rule == ORACLE_FREEZE)
+        .collect();
+    assert_eq!(missing.len(), 3);
+    assert!(missing
+        .iter()
+        .all(|v| v.message.contains("missing from the tree")));
+}
+
+#[test]
+fn edited_oracle_needs_an_in_file_waiver() {
+    // an "edited" oracle: content that cannot match the pinned CRC
+    let root = scratch("oracle-edit");
+    put(&root, "mero/sns_baseline.rs", "pub fn edited() {}\n");
+    let report = run_lint(&root).unwrap();
+    assert!(report
+        .violations
+        .iter()
+        .any(|v| v.rule == ORACLE_FREEZE
+            && v.file == "mero/sns_baseline.rs"
+            && v.message.contains("preserved oracle edited")));
+
+    // the same edit carrying a file-scoped waiver is accepted
+    let root = scratch("oracle-waived");
+    put(
+        &root,
+        "mero/sns_baseline.rs",
+        "// sage-lint: allow(oracle-freeze, \"regenerated for new layout\")\n\
+         pub fn edited() {}\n",
+    );
+    let report = run_lint(&root).unwrap();
+    assert!(!report
+        .violations
+        .iter()
+        .any(|v| v.rule == ORACLE_FREEZE && v.file == "mero/sns_baseline.rs"));
+    assert!(report.waivers_honored >= 1);
+}
+
+#[test]
+fn json_rendering_is_machine_checkable() {
+    let root = scratch("json");
+    put(&root, "sim/a.rs", "fn t() { let _ = SystemTime::now(); }\n");
+    let report = run_lint(&root).unwrap();
+    let j = report.to_json().to_string();
+    assert!(j.contains("\"ok\":false"), "{j}");
+    assert!(j.contains("\"files_scanned\":1"), "{j}");
+    assert!(j.contains("\"rule\":\"no-wall-clock\""), "{j}");
+    assert!(j.contains("\"file\":\"sim/a.rs\""), "{j}");
+    assert!(j.contains("\"severity\":\"deny\""), "{j}");
+
+    let root = scratch("json-clean");
+    put(&root, "util/a.rs", "pub fn ok() {}\n");
+    // a clean tree still misses the oracles, so pin only per-file JSON:
+    // lint a tree with no violations except the oracle trio, then
+    // check `ok` flips with deny_count
+    let report = run_lint(&root).unwrap();
+    assert_eq!(report.deny_count(), 3); // the three absent oracles
+}
+
+/// The shipped tree is the final fixture: `rust/src` lints clean, and
+/// the waiver budget is exactly what the code carries — seven
+/// `no-wall-clock` diag timers in `tools/soak.rs`, plus six
+/// `scheduler-discipline` sites: the counterfactual probe in
+/// `clovis/fshipping.rs`, the retained `Cluster::io` primitive, and
+/// the private device pools of the PGAS/MPI-IO/streams models (two in
+/// `pgas/mod.rs`, one each in `pgas/mpiio.rs` and `streams/mod.rs`).
+/// A new waiver (or a lost one) moves this number and must be
+/// reviewed here.
+#[test]
+fn shipped_tree_lints_clean_with_the_pinned_waiver_budget() {
+    let root = default_src_root();
+    assert!(
+        root.join("lib.rs").is_file(),
+        "src root not found from test cwd: {}",
+        root.display()
+    );
+    let report = run_lint(&root).unwrap();
+    assert!(
+        report.violations.is_empty(),
+        "shipped tree must lint clean:\n{}",
+        report.render()
+    );
+    assert_eq!(report.deny_count(), 0);
+    assert_eq!(report.waivers_honored, 13, "waiver budget moved");
+    assert!(report.files_scanned > 40);
+}
+
+#[test]
+fn rule_table_is_complete_and_deny_by_default() {
+    assert_eq!(RULES.len(), 6);
+    for r in RULES {
+        assert!(!r.invariant.is_empty());
+        assert_eq!(r.severity.as_str(), "deny", "{}", r.name);
+    }
+}

@@ -1,0 +1,202 @@
+//! Property tests pinning the ordered-container migration (ISSUE 9,
+//! satellite a): every sim-visible map/set that used to be a
+//! `HashMap`/`HashSet` is now a BTree container, so iteration order —
+//! and everything derived from it — is a function of the *keys*, never
+//! of insertion order or of `RandomState` hash seeding. These
+//! properties would have been flaky (or silently seed-dependent) on
+//! the hashed containers; on the ordered ones they must hold for every
+//! sampled input:
+//!
+//! 1. **HA repair ledger is key-ordered** — `HaSubsystem::repairing()`
+//!    returns device IDs sorted ascending, and a subsystem fed the
+//!    same event list in reversed order still engages every
+//!    hard-failed device (`mero::ha::in_repair` is a `BTreeMap`).
+//! 2. **DTM validation is replay-stable** — the same transaction
+//!    script against two fresh managers yields bit-identical results:
+//!    same commit stamps, same read results, and byte-identical
+//!    conflict messages (the read set is a `BTreeSet`, so the
+//!    validation scan order — and hence *which* conflicting key is
+//!    reported — is pinned).
+//! 3. **Redo-log recovery equals the live store** — `recover()`'s
+//!    sorted replay agrees with `get()` for every committed key, no
+//!    matter the order writes were issued in.
+//! 4. **Page-cache replay is bit-exact** — a generated op sequence
+//!    replayed on a twin cache produces identical `CacheOutcome`s and
+//!    identical dirty/resident/sync footprints (the page table is a
+//!    `BTreeMap`, so eviction scans are ordered).
+
+use sage::cluster::failure::{FailureEvent, FailureKind};
+use sage::mero::dtm::DtmManager;
+use sage::mero::ha::HaSubsystem;
+use sage::proptest::prop_check;
+use sage::sim::cache::PageCache;
+use sage::sim::rng::SimRng;
+
+/// One encoded event: the selector picks device and hard/transient,
+/// the `u64` is virtual time in milliseconds (integers shrink well).
+type Code = (usize, u64);
+
+fn decode_ha(codes: &[Code]) -> Vec<FailureEvent> {
+    codes
+        .iter()
+        .map(|&(sel, ms)| FailureEvent {
+            at: ms as f64 / 1000.0,
+            kind: if sel % 2 == 0 {
+                FailureKind::Device((sel / 2) % 16)
+            } else {
+                FailureKind::Transient((sel / 2) % 16)
+            },
+        })
+        .collect()
+}
+
+fn gen_codes(rng: &mut SimRng, n: usize, sel_bound: u64, v_bound: u64) -> Vec<Code> {
+    (0..n)
+        .map(|_| (rng.gen_range(sel_bound) as usize, rng.gen_range(v_bound)))
+        .collect()
+}
+
+/// Feed events into a fresh subsystem and return its repair ledger.
+fn ledger(events: &[FailureEvent]) -> Vec<usize> {
+    let mut ha = HaSubsystem::new();
+    for &ev in events {
+        let _ = ha.observe(ev, |d| Some(d / 4));
+    }
+    ha.repairing()
+}
+
+#[test]
+fn prop_ha_repairing_is_sorted_and_insertion_order_free() {
+    prop_check(
+        "ha_repairing_sorted",
+        96,
+        |rng| gen_codes(rng, 24, 64, 3_600_000),
+        |codes| {
+            let events = decode_ha(codes);
+            let base = ledger(&events);
+            // sorted ascending, no duplicates
+            if !base.windows(2).all(|w| w[0] < w[1]) {
+                return false;
+            }
+            // reversed arrival order: hard failures always engage on
+            // first sight, so every hard-failed device must be in both
+            // ledgers (transient *escalation* is window-dependent and
+            // legitimately order-sensitive, so only hard ones compare).
+            let mut rev = events.clone();
+            rev.reverse();
+            let rev_ledger = ledger(&rev);
+            let mut hard: Vec<usize> = events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    FailureKind::Device(d) => Some(d),
+                    FailureKind::Transient(_) => None,
+                })
+                .collect();
+            hard.sort_unstable();
+            hard.dedup();
+            hard.iter()
+                .all(|d| base.contains(d) && rev_ledger.contains(d))
+                && rev_ledger.windows(2).all(|w| w[0] < w[1])
+        },
+    );
+}
+
+/// Run a two-transaction interleaving script and summarize every
+/// observable: commit stamps (as bits), read results, and the exact
+/// error strings of any abort. The selector encodes op kind and key;
+/// the value field becomes the written byte.
+fn run_tx_script(codes: &[Code]) -> (Vec<u64>, Vec<Vec<u8>>, Vec<String>, Vec<Vec<u8>>) {
+    let mut dtm = DtmManager::new();
+    let ta = dtm.begin();
+    let tb = dtm.begin();
+    let mut stamps = Vec::new();
+    let mut reads = Vec::new();
+    let mut errs = Vec::new();
+    let mut now = 0.0;
+    for (i, &(sel, val)) in codes.iter().enumerate() {
+        let tx = if i % 2 == 0 { ta } else { tb };
+        let key = vec![b'k', (sel / 4 % 6) as u8];
+        now += 0.25;
+        match sel % 4 {
+            0 => match dtm.read(tx, &key) {
+                Ok(v) => reads.push(v.unwrap_or_default()),
+                Err(e) => errs.push(e.to_string()),
+            },
+            1 | 2 => {
+                if let Err(e) = dtm.write(tx, key, vec![val as u8]) {
+                    errs.push(e.to_string());
+                }
+            }
+            _ => match dtm.commit(tx, now) {
+                Ok(t) => stamps.push(t.to_bits()),
+                Err(e) => errs.push(e.to_string()),
+            },
+        }
+    }
+    // final state via the sorted redo-log replay
+    let state: Vec<Vec<u8>> = dtm.recover().into_values().collect();
+    (stamps, reads, errs, state)
+}
+
+#[test]
+fn prop_dtm_script_replay_is_bit_identical() {
+    prop_check(
+        "dtm_replay_stable",
+        96,
+        |rng| gen_codes(rng, 20, 1 << 16, 256),
+        |codes| run_tx_script(codes) == run_tx_script(codes),
+    );
+}
+
+#[test]
+fn prop_dtm_recover_matches_store_any_write_order() {
+    prop_check(
+        "dtm_recover_sorted",
+        64,
+        |rng| gen_codes(rng, 12, 6, 256),
+        |codes| {
+            let mut dtm = DtmManager::new();
+            let tx = dtm.begin();
+            for &(keysel, val) in codes {
+                if dtm.write(tx, vec![b'k', keysel as u8], vec![val as u8]).is_err() {
+                    return false;
+                }
+            }
+            if dtm.commit(tx, 1.0).is_err() {
+                return false;
+            }
+            let rec = dtm.recover();
+            // recovery replay equals the live store, key by key
+            rec.iter().all(|(k, v)| dtm.get(k) == Some(v))
+        },
+    );
+}
+
+#[test]
+fn prop_cache_replay_is_bit_exact() {
+    const PAGE: u64 = 4096;
+    prop_check(
+        "cache_replay_exact",
+        96,
+        |rng| gen_codes(rng, 48, 128, 4),
+        |codes| {
+            let mut a = PageCache::new(16 * PAGE, PAGE);
+            let mut b = PageCache::new(16 * PAGE, PAGE);
+            for &(sel, len) in codes {
+                let off = (sel as u64 / 2) * PAGE;
+                let bytes = (len + 1) * PAGE;
+                let (oa, ob) = if sel % 2 == 0 {
+                    (a.write(off, bytes), b.write(off, bytes))
+                } else {
+                    (a.read(off, bytes), b.read(off, bytes))
+                };
+                if oa != ob {
+                    return false;
+                }
+            }
+            a.dirty() == b.dirty()
+                && a.resident() == b.resident()
+                && a.sync() == b.sync()
+        },
+    );
+}
