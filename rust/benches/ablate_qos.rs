@@ -15,6 +15,9 @@
 //! * **default split** — `QosConfig::default()`: repair capped at
 //!   0.30 of each device; foreground runs at ≥ 0.70 through the
 //!   rebuild window.
+//! * **conserving** — `QosConfig::conserving()` (ISSUE 10): the same
+//!   split, but capped classes borrow unused foreground headroom on
+//!   shards with no committed foreground backlog.
 //!
 //! Reported: foreground p50 and makespan (virtual) with and without
 //! the split, the repair completion of both engines (the price of the
@@ -27,7 +30,10 @@
 //!   concurrent repair IMPROVES vs the unthrottled engine while the
 //!   repair still completes and the device returns to service;
 //! * on every shard repair touched, its observed device-time share
-//!   stays within `repair_share` (the cap bounds repair's share).
+//!   stays within `repair_share` (the cap bounds repair's share);
+//! * the conserving mode is never slower: its repair makespan is `<=`
+//!   the static split's (strictly better on the borrowed shards) while
+//!   foreground p50 is bit-unchanged and bytes stay identical.
 //!
 //! Run: `cargo bench --bench ablate_qos`
 //! CI smoke: `SAGE_BENCH_QUICK=1 cargo bench --bench ablate_qos`
@@ -99,6 +105,9 @@ struct CycleOutcome {
     repair_completion: f64,
     /// Max over shards of repair's observed device-time share.
     max_repair_share: f64,
+    /// Total virtual seconds of foreground headroom lent to repair
+    /// across shards (0.0 unless `work_conserving`, ISSUE 10).
+    lent_repair: f64,
     io_calls: u64,
     ios: u64,
     /// `(device, base, fg frontier, repair frontier, repair share)`.
@@ -156,10 +165,12 @@ fn run_cycle(qos: QosConfig, n_obj: usize, n_fg: usize) -> CycleOutcome {
     let fg_p50 = p50(&fg_latencies);
     let repair_completion = rep.completed[r.index()] - t0;
     let mut max_repair_share = 0.0f64;
+    let mut lent_repair = 0.0f64;
     let mut frontier_rows = Vec::new();
     for shard in &rep.qos {
         let share = shard.observed_share(TrafficClass::Repair);
         max_repair_share = max_repair_share.max(share);
+        lent_repair += shard.lent_headroom(TrafficClass::Repair);
         frontier_rows.push((
             shard.device,
             shard.base,
@@ -179,6 +190,7 @@ fn run_cycle(qos: QosConfig, n_obj: usize, n_fg: usize) -> CycleOutcome {
         fg_p50,
         repair_completion,
         max_repair_share,
+        lent_repair,
         io_calls: rep.io_calls,
         ios: rep.ios,
         frontier_rows,
@@ -244,6 +256,51 @@ fn main() {
     let repair_slowdown =
         qos.repair_completion / fifo.repair_completion.max(1e-12);
 
+    // ---- conserving mode: static split vs work-conserving split -------
+    let mut cons = run_cycle(QosConfig::conserving(), n_obj, n_fg);
+    assert_bytes(&mut cons, "conserving");
+    assert_eq!(
+        qos.bytes_rebuilt, cons.bytes_rebuilt,
+        "borrowing changes WHEN, never WHAT"
+    );
+    // the never-slower bar, exact: borrowing only ever shortens the
+    // capped frontiers (tests/prop_qos_conserving.rs pins this per
+    // ticket against the frozen static oracle)
+    assert!(
+        cons.repair_completion <= qos.repair_completion,
+        "conserving repair makespan must never exceed the static split \
+         ({} vs {})",
+        cons.repair_completion,
+        qos.repair_completion
+    );
+    // …and on this pool the straggler shard really borrows
+    assert!(
+        cons.repair_completion < qos.repair_completion,
+        "idle-headroom shards exist here, so borrowing must show up"
+    );
+    // foreground completes inside the rebuild window either way, so its
+    // p50 rides the identical contended-rate arithmetic: bit-unchanged
+    assert_eq!(
+        cons.fg_p50.to_bits(),
+        qos.fg_p50.to_bits(),
+        "conserving must not move foreground p50 ({} vs {})",
+        cons.fg_p50,
+        qos.fg_p50
+    );
+    // the borrowed headroom is visible and accounted in the report
+    assert!(
+        cons.max_repair_share > split.share(TrafficClass::Repair) + 1e-9,
+        "borrowing shows up in the observed repair share"
+    );
+    assert!(cons.max_repair_share <= 1.0 + 1e-9);
+    assert!(
+        cons.lent_repair > 0.0,
+        "the lent headroom is accounted, not hidden"
+    );
+    assert_eq!(qos.lent_repair, 0.0, "the static split never lends");
+    let conserving_speedup =
+        qos.repair_completion / cons.repair_completion.max(1e-12);
+
     let mut t = Table::new(
         &format!(
             "Repair/foreground QoS split (repair of {n_obj} objects + \
@@ -264,6 +321,12 @@ fn main() {
         sage::metrics::fmt_secs(qos.repair_completion),
     ]);
     t.row(vec![
+        "conserving".into(),
+        sage::metrics::fmt_secs(cons.fg_p50),
+        sage::metrics::fmt_secs(cons.fg_makespan),
+        sage::metrics::fmt_secs(cons.repair_completion),
+    ]);
+    t.row(vec![
         "fg improvement".into(),
         format!(
             "{:.2}x",
@@ -273,6 +336,11 @@ fn main() {
         format!("{repair_slowdown:.2}x repair"),
     ]);
     print!("{}", t.render());
+    println!(
+        "conserving repair speedup {conserving_speedup:.2}x vs static \
+         split; lent headroom {:.3}s; max repair share {:.3}\n",
+        cons.lent_repair, cons.max_repair_share
+    );
 
     // ---- the per-class frontier table (split run) ---------------------
     let mut t = Table::new(
@@ -303,6 +371,9 @@ fn main() {
     let m_split = Bencher::new("qos_default_split")
         .iters(warm, iters)
         .wall(|| run_cycle(split, n_obj, n_fg).fg_makespan);
+    let m_cons = Bencher::new("qos_conserving")
+        .iters(warm, iters)
+        .wall(|| run_cycle(QosConfig::conserving(), n_obj, n_fg).fg_makespan);
 
     let mut t = Table::new(
         "Wall-clock mixed repair+checkpoint cycle (build + run)",
@@ -317,6 +388,11 @@ fn main() {
         "split".into(),
         sage::metrics::fmt_secs(m_split.median),
         format!("{:.2}x", m_fifo.median / m_split.median.max(1e-12)),
+    ]);
+    t.row(vec![
+        "conserving".into(),
+        sage::metrics::fmt_secs(m_cons.median),
+        format!("{:.2}x", m_fifo.median / m_cons.median.max(1e-12)),
     ]);
     print!("{}", t.render());
 
@@ -338,11 +414,19 @@ fn main() {
         ("repair_virtual_split_s", qos.repair_completion),
         ("repair_slowdown", repair_slowdown),
         ("max_repair_share_observed", qos.max_repair_share),
+        ("fg_p50_conserving_s", cons.fg_p50),
+        ("fg_makespan_conserving_s", cons.fg_makespan),
+        ("repair_virtual_conserving_s", cons.repair_completion),
+        ("conserving_repair_speedup", conserving_speedup),
+        ("max_repair_share_conserving", cons.max_repair_share),
+        ("lent_headroom_repair_s", cons.lent_repair),
         ("session_io_calls", qos.io_calls as f64),
         ("session_unit_ios", qos.ios as f64),
         ("unthrottled_cycle_s", m_fifo.median),
         ("unthrottled_mad_s", m_fifo.mad),
         ("split_cycle_s", m_split.median),
         ("split_mad_s", m_split.mad),
+        ("conserving_cycle_s", m_cons.median),
+        ("conserving_mad_s", m_cons.mad),
     ]);
 }

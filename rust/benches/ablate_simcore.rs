@@ -106,7 +106,7 @@ fn mk_tenants() -> TenantShares {
 }
 
 fn mk_qos() -> QosConfig {
-    QosConfig { repair_share: 0.4, migration_share: 0.25 }
+    QosConfig { repair_share: 0.4, migration_share: 0.25, work_conserving: false }
 }
 
 /// Replay the stream through the dense `IoScheduler`; returns the sum

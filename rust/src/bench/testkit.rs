@@ -55,6 +55,9 @@ impl Geometry {
     /// The `prop_tenant` family (ISSUE 7 suite).
     pub const TENANT: Geometry =
         Geometry { max_extra: 4, max_index: 40, max_len: 12, mul_idx: 163, mul_len: 31 };
+    /// The `prop_qos_conserving` family (ISSUE 10 suite).
+    pub const CONSERVE: Geometry =
+        Geometry { max_extra: 4, max_index: 36, max_len: 10, mul_idx: 179, mul_len: 41 };
 
     /// Sample one extent list `(block index, length in blocks)`.
     pub fn gen_extents(&self, r: &mut SimRng) -> Vec<(u64, u64)> {
@@ -130,7 +133,13 @@ mod tests {
 
     #[test]
     fn geometries_are_deterministic_and_in_bounds() {
-        for geo in [Geometry::SCHED, Geometry::QOS, Geometry::REPAIR, Geometry::TENANT] {
+        for geo in [
+            Geometry::SCHED,
+            Geometry::QOS,
+            Geometry::REPAIR,
+            Geometry::TENANT,
+            Geometry::CONSERVE,
+        ] {
             let a = geo.gen_extents(&mut SimRng::new(7));
             let b = geo.gen_extents(&mut SimRng::new(7));
             assert_eq!(a, b);

@@ -570,6 +570,17 @@ impl Client {
     /// under the cluster's QoS split, so a consumer pass never starves
     /// concurrent foreground sessions (§3.2.1 repair throttling).
     ///
+    /// Rebuild and drain TARGETS are picked through the live
+    /// placement [`CongestionView`](crate::mero::pool::CongestionView)
+    /// (ISSUE 10): the recovery sessions spawned here run through
+    /// [`Session::run`](crate::clovis::session::Session::run), which
+    /// samples the cluster scheduler's committed backlog at adoption
+    /// time and installs it on the pool set — so
+    /// `PoolSet::allocate` re-homes units away from the
+    /// deepest-backlog devices while the view is live, and falls back
+    /// bit-for-bit to least-utilized placement when every shard has
+    /// drained past the clock.
+    ///
     /// Hard `FailureKind::Device` events take the device out of
     /// service before the HA subsystem sees them (the feed is the
     /// source of truth; no test-side `fail_device` needed). Executed

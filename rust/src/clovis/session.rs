@@ -58,6 +58,7 @@ use crate::clovis::Client;
 use crate::error::{Result, SageError};
 use crate::hsm::{Hsm, Migration};
 use crate::mero::dtm::TxId;
+use crate::mero::pool::CongestionView;
 use crate::mero::{IndexId, ObjectId};
 use crate::sim::clock::SimTime;
 use crate::sim::sched::{QosShardReport, TenantId, TenantShardReport, DEFAULT_TENANT};
@@ -403,6 +404,18 @@ impl<'c, 'd> Session<'c, 'd> {
         sched.set_qos(client.store.cluster.qos);
         sched.set_tenants(client.store.cluster.tenants.clone());
         sched.set_tenant(tenant);
+        // ISSUE 10: close the QoS→placement feedback loop. Sample the
+        // cluster-wide scheduler's committed backlog (cross-epoch —
+        // earlier sessions' frontiers included) at the session clock
+        // and install it as this session's placement congestion view:
+        // every `PoolSet::allocate` this session performs — new
+        // writes, repair targets, drain re-homes — steers away from
+        // deep-backlog shards. Back-to-back sessions find every
+        // frontier at or behind `now` (empty view), so placement is
+        // bit-identical to the no-feedback baseline. Cleared on
+        // release below, on BOTH paths.
+        let view = CongestionView::from_reports(&sched.qos_report_all(), now);
+        client.store.pools.set_congestion(view);
         let mut group = OpGroup::adopt(sched, now);
         let ids: Vec<u64> = staged.iter().map(|op| group.add(op.kind())).collect();
         let mut completed = vec![now; staged.len()];
@@ -458,6 +471,7 @@ impl<'c, 'd> Session<'c, 'd> {
                 let io_calls = sched.epoch_io_calls();
                 let ios = sched.epoch_ios();
                 client.sched = group.release();
+                client.store.pools.clear_congestion();
                 Ok(SessionReport {
                     outputs,
                     completed,
@@ -475,6 +489,7 @@ impl<'c, 'd> Session<'c, 'd> {
                 // (with whatever frontiers this session committed)
                 // survives for the next session
                 client.sched = group.release();
+                client.store.pools.clear_congestion();
                 Err(e)
             }
         }

@@ -186,6 +186,13 @@ impl Testbed {
             doc.get_f64("qos", "repair_share", tb.qos.repair_share);
         tb.qos.migration_share =
             doc.get_f64("qos", "migration_share", tb.qos.migration_share);
+        // [qos] work_conserving = true opts the cluster into headroom
+        // borrowing (ISSUE 10); absent ⇒ the static split, bit-exact
+        if let Some(v) = doc.get("qos", "work_conserving") {
+            if let Some(b) = v.as_bool() {
+                tb.qos.work_conserving = b;
+            }
+        }
         // optional tenant plane: [tenants] weights = [3.0, 1.0]
         if let Some(crate::util::toml::TomlValue::Arr(items)) =
             doc.get("tenants", "weights")
@@ -347,7 +354,28 @@ mod tests {
         let tb = Testbed::from_toml(&tmp).unwrap();
         assert_eq!(tb.qos.repair_share, 1.0);
         assert_eq!(tb.qos.migration_share, 0.5);
+        assert!(!tb.qos.work_conserving, "absent key keeps the static split");
         assert!(tb.build_cluster().qos.active(), "migration still capped");
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn qos_work_conserving_toml_opt_in_reaches_the_cluster() {
+        // presets stay static — the borrow plane is strictly opt-in
+        assert!(!Testbed::sage_prototype().qos.work_conserving);
+        let tmp = std::env::temp_dir().join("sage_tb_qos_wc_test.toml");
+        std::fs::write(
+            &tmp,
+            "base = \"sage_prototype\"\n\n[qos]\nwork_conserving = true\n",
+        )
+        .unwrap();
+        let tb = Testbed::from_toml(&tmp).unwrap();
+        assert!(tb.qos.work_conserving);
+        // shares untouched by the flag
+        assert_eq!(tb.qos.repair_share, QosConfig::default().repair_share);
+        let c = tb.build_cluster();
+        assert!(c.qos.work_conserving, "flag reaches the built cluster");
+        assert!(c.qos.active());
         std::fs::remove_file(&tmp).ok();
     }
 }

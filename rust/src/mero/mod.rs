@@ -41,7 +41,7 @@ pub use container::{Container, ContainerId};
 pub use kvs::{IndexId, KvIndex};
 pub use layout::Layout;
 pub use object::{Mobject, ObjectId};
-pub use pool::PoolSet;
+pub use pool::{CongestionView, PoolSet};
 
 /// The Mero store: objects + indices + containers over a cluster.
 pub struct MeroStore {

@@ -5,17 +5,73 @@
 //! One pool per [`DeviceKind`]; allocation is least-utilized-first so
 //! striped units spread across devices (which is what gives SNS its
 //! bandwidth aggregation).
+//!
+//! ISSUE 10 closes the QoS→placement feedback loop: a
+//! [`CongestionView`] built from the scheduler's
+//! [`QosShardReport`] backlog depths is installed on the [`PoolSet`]
+//! for the duration of a session, and [`PoolSet::allocate`] keys
+//! lexicographically on `(backlog depth, utilization)` — so new
+//! writes and repair/drain targets steer away from congested shards,
+//! while an empty or uniform view ties on depth and reduces
+//! bit-for-bit to the historical least-utilized ordering (the
+//! no-feedback baseline stays the oracle).
 
 use std::collections::BTreeMap;
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::error::{Result, SageError};
+use crate::sim::clock::SimTime;
 use crate::sim::device::DeviceKind;
+use crate::sim::sched::QosShardReport;
+
+/// Per-device committed-backlog depths sampled from the cluster-wide
+/// scheduler (ISSUE 10). The placement-side half of the QoS feedback
+/// loop: [`PoolSet::allocate`] prefers shallower backlog before
+/// utilization. Devices absent from the view read as depth 0.0, so
+/// the default (empty) view never perturbs placement.
+#[derive(Debug, Default, Clone)]
+pub struct CongestionView {
+    depths: BTreeMap<DeviceId, f64>,
+}
+
+impl CongestionView {
+    /// Build a view from scheduler shard reports at virtual time
+    /// `now` ([`IoScheduler::qos_report_all`] is the intended feed).
+    /// Shards whose frontier has fallen at or behind the clock carry
+    /// zero depth and are dropped, so back-to-back sessions produce
+    /// an empty view.
+    ///
+    /// [`IoScheduler::qos_report_all`]:
+    ///     crate::sim::sched::IoScheduler::qos_report_all
+    pub fn from_reports(reports: &[QosShardReport], now: SimTime) -> Self {
+        let mut depths = BTreeMap::new();
+        for r in reports {
+            let depth = r.backlog_depth(now);
+            if depth > 0.0 {
+                depths.insert(r.device, depth);
+            }
+        }
+        CongestionView { depths }
+    }
+
+    /// Committed backlog depth of `dev` in virtual seconds (0.0 when
+    /// the device is idle or unknown to the view).
+    pub fn depth(&self, dev: DeviceId) -> f64 {
+        self.depths.get(&dev).copied().unwrap_or(0.0)
+    }
+
+    /// True when no device carries backlog — allocation is then
+    /// bit-identical to the no-feedback baseline.
+    pub fn is_empty(&self) -> bool {
+        self.depths.is_empty()
+    }
+}
 
 /// Device pools keyed by tier/kind.
 #[derive(Debug, Default)]
 pub struct PoolSet {
     pools: BTreeMap<u8, (DeviceKind, Vec<DeviceId>)>,
+    congestion: CongestionView,
 }
 
 impl PoolSet {
@@ -56,6 +112,27 @@ impl PoolSet {
         }
     }
 
+    /// Install the congestion view subsequent [`PoolSet::allocate`]
+    /// calls steer by. [`Session::run`] installs a fresh view at
+    /// adoption time and clears it at release, so the view's lifetime
+    /// is exactly one session (ISSUE 10).
+    ///
+    /// [`Session::run`]: crate::clovis::session::Session::run
+    pub fn set_congestion(&mut self, view: CongestionView) {
+        self.congestion = view;
+    }
+
+    /// Drop the congestion view — allocation reverts to the
+    /// no-feedback least-utilized baseline.
+    pub fn clear_congestion(&mut self) {
+        self.congestion = CongestionView::default();
+    }
+
+    /// The currently installed congestion view.
+    pub fn congestion(&self) -> &CongestionView {
+        &self.congestion
+    }
+
     /// Devices of a tier (by kind), failed ones filtered by the caller.
     pub fn devices(&self, kind: DeviceKind) -> &[DeviceId] {
         self.pools
@@ -88,7 +165,14 @@ impl PoolSet {
 
     /// Allocate `size` bytes on some live device of `kind`, avoiding
     /// the devices in `exclude` (SNS: units of one stripe should land
-    /// on distinct devices). Least-utilized-first. When the pool is
+    /// on distinct devices). Candidates are ranked lexicographically
+    /// by `(congestion-view backlog depth, utilization)`: with no view
+    /// installed — or a uniform one — every depth ties and the
+    /// historical least-utilized-first order decides bit-for-bit;
+    /// under a live view the shallowest-backlog device wins first, so
+    /// new writes and rebuild targets drain away from congested
+    /// shards (ISSUE 10). Liveness, free space and `exclude` are
+    /// hard constraints the view can never override. When the pool is
     /// narrower than the stripe (fewer devices than units), the
     /// distinctness constraint is relaxed — the real Mero spills wide
     /// stripes across devices the same way, trading fault independence
@@ -112,9 +196,14 @@ impl PoolSet {
                         && (!honor_exclude || !exclude.contains(d))
                 })
                 .min_by(|a, b| {
-                    cluster.devices[*a]
-                        .utilization()
-                        .total_cmp(&cluster.devices[*b].utilization())
+                    self.congestion
+                        .depth(*a)
+                        .total_cmp(&self.congestion.depth(*b))
+                        .then_with(|| {
+                            cluster.devices[*a]
+                                .utilization()
+                                .total_cmp(&cluster.devices[*b].utilization())
+                        })
                 })
         };
         let best = pick(cluster, true)
@@ -150,6 +239,7 @@ mod tests {
     use crate::cluster::EnclosureCompute;
     use crate::sim::device::DeviceProfile;
     use crate::sim::network::NetworkModel;
+    use crate::sim::sched::N_CLASSES;
 
     fn cluster() -> Cluster {
         let mut c = Cluster::new(NetworkModel::fdr_infiniband());
@@ -231,6 +321,111 @@ mod tests {
         let nv = p.devices(DeviceKind::Nvram)[0];
         c.devices[nv].used = c.devices[nv].profile.capacity;
         assert_eq!(p.fastest_with_space(&c, 1 << 10), Some(DeviceKind::Ssd));
+    }
+
+    fn report(device: usize, frontier: f64) -> QosShardReport {
+        QosShardReport {
+            device,
+            base: 0.0,
+            frontier,
+            class_busy: [0.0; N_CLASSES],
+            class_frontier: [frontier; N_CLASSES],
+            lent: [0.0; N_CLASSES],
+        }
+    }
+
+    #[test]
+    fn empty_and_uniform_views_leave_allocation_bit_identical() {
+        // baseline: no view installed
+        let mut c1 = cluster();
+        let p1 = PoolSet::from_cluster(&c1);
+        let baseline: Vec<DeviceId> = (0..6)
+            .map(|_| p1.allocate(&mut c1, DeviceKind::Ssd, 1 << 18, &[]).unwrap())
+            .collect();
+        // a uniform view ties on depth everywhere → identical sequence
+        let mut c2 = cluster();
+        let mut p2 = PoolSet::from_cluster(&c2);
+        let ssd = p2.devices(DeviceKind::Ssd).to_vec();
+        p2.set_congestion(CongestionView::from_reports(
+            &[report(ssd[0], 5.0), report(ssd[1], 5.0)],
+            0.0,
+        ));
+        let uniform: Vec<DeviceId> = (0..6)
+            .map(|_| p2.allocate(&mut c2, DeviceKind::Ssd, 1 << 18, &[]).unwrap())
+            .collect();
+        assert_eq!(uniform, baseline);
+        // drained-past frontiers (now beyond every frontier) ⇒ empty view
+        let drained =
+            CongestionView::from_reports(&[report(ssd[0], 5.0), report(ssd[1], 3.0)], 9.0);
+        assert!(drained.is_empty());
+        assert_eq!(drained.depth(ssd[0]), 0.0);
+        let mut c3 = cluster();
+        let mut p3 = PoolSet::from_cluster(&c3);
+        p3.set_congestion(drained);
+        let empty: Vec<DeviceId> = (0..6)
+            .map(|_| p3.allocate(&mut c3, DeviceKind::Ssd, 1 << 18, &[]).unwrap())
+            .collect();
+        assert_eq!(empty, baseline);
+        // clear_congestion reverts to the baseline view
+        p3.clear_congestion();
+        assert!(p3.congestion().is_empty());
+    }
+
+    #[test]
+    fn congested_shard_receives_strictly_fewer_new_units() {
+        let mut c = cluster();
+        let mut p = PoolSet::from_cluster(&c);
+        let ssd = p.devices(DeviceKind::Ssd).to_vec();
+        // ssd[0] carries committed backlog; ssd[1] is idle
+        p.set_congestion(CongestionView::from_reports(&[report(ssd[0], 4.0)], 1.0));
+        assert!((p.congestion().depth(ssd[0]) - 3.0).abs() < 1e-12);
+        let mut counts = [0usize; 2];
+        for _ in 0..8 {
+            let got = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[]).unwrap();
+            counts[if got == ssd[0] { 0 } else { 1 }] += 1;
+        }
+        // depth dominates utilization: everything steers to the idle shard
+        assert_eq!(counts, [0, 8]);
+    }
+
+    #[test]
+    fn rebuild_target_avoids_the_deepest_backlog_device() {
+        let mut c = cluster();
+        let mut p = PoolSet::from_cluster(&c);
+        let extra = c.attach_device(0, DeviceProfile::ssd(1 << 30));
+        p.register(&c, extra);
+        let ssd = p.devices(DeviceKind::Ssd).to_vec();
+        // drain re-home: source excluded, remaining targets at
+        // different backlog depths — the shallower one wins even when
+        // the deeper one is emptier
+        c.devices[ssd[1]].used = 1 << 24;
+        p.set_congestion(CongestionView::from_reports(
+            &[report(ssd[1], 2.0), report(extra, 8.0)],
+            0.0,
+        ));
+        let got = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[ssd[0]]).unwrap();
+        assert_eq!(got, ssd[1]);
+        assert_ne!(got, extra);
+    }
+
+    #[test]
+    fn view_never_overrides_exclusion_liveness_or_spread() {
+        let mut c = cluster();
+        let mut p = PoolSet::from_cluster(&c);
+        let ssd = p.devices(DeviceKind::Ssd).to_vec();
+        p.set_congestion(CongestionView::from_reports(&[report(ssd[0], 9.0)], 0.0));
+        // exclusion beats congestion: only the congested device remains
+        let got = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[ssd[1]]).unwrap();
+        assert_eq!(got, ssd[0]);
+        // stripe-unit spread holds under the view
+        let d1 = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[]).unwrap();
+        let d2 = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[d1]).unwrap();
+        assert_ne!(d1, d2);
+        // liveness beats congestion preference: fail the idle device
+        // and the congested one still serves
+        c.devices[ssd[1]].failed = true;
+        let got = p.allocate(&mut c, DeviceKind::Ssd, 1 << 20, &[]).unwrap();
+        assert_eq!(got, ssd[0]);
     }
 
     #[test]

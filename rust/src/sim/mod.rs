@@ -15,6 +15,7 @@ pub mod clock;
 pub mod device;
 pub mod network;
 pub mod rng;
+pub mod qos_static_oracle;
 pub mod sched;
 pub mod sched_oracle;
 

@@ -1,0 +1,341 @@
+//! The **preserved static-throttle QoS scheduler** — the ISSUE 10
+//! work-conserving overhaul's differential oracle.
+//!
+//! [`StaticQosScheduler`] is the pre-ISSUE-10 [`IoScheduler`] QoS
+//! plane kept verbatim: capped classes ALWAYS stretch `1/share`× on
+//! their own frontier, even on a shard whose foreground lane is idle —
+//! the PR-5 static throttle that deliberately leaves `1 − share`
+//! headroom unused. The work-conserving scheduler borrows that
+//! headroom; this oracle is the fixed point it is measured against.
+//! `tests/prop_qos_conserving.rs` replays identical submission
+//! streams through both and pins the ROADMAP-stated oracle:
+//! work-conserving completion is **never later** than static
+//! completion for ANY class on any sampled geometry, and a static
+//! `IoScheduler` (`work_conserving == false`) reproduces this oracle
+//! bit-for-bit.
+//!
+//! Follows the `mero::sns_serial` / `mero::sns_baseline` /
+//! `sim::sched_oracle` house pattern: oracles are kept, not deleted,
+//! and frozen under the `sage lint` `oracle-freeze` CRC rule.
+//!
+//! [`IoScheduler`]: crate::sim::sched::IoScheduler
+
+use std::collections::BTreeMap;
+
+use super::clock::SimTime;
+use super::device::{Access, Device, IoOp};
+use super::sched::{
+    contended_end, QosConfig, TenantId, TenantShares, Ticket, TrafficClass,
+    DEFAULT_TENANT, N_CLASSES,
+};
+
+/// One `(tenant, class)` frontier lane (static-throttle layout).
+#[derive(Debug, Clone, Copy)]
+struct TenantLane {
+    frontier: SimTime,
+    busy: f64,
+}
+
+/// A device-contiguous run (static-throttle layout).
+#[derive(Debug)]
+struct Run {
+    submit_at: SimTime,
+    size: u64,
+    op: IoOp,
+    access: Access,
+    class: TrafficClass,
+    tenant: TenantId,
+    tickets: Vec<Ticket>,
+}
+
+/// One device's shard (static-throttle layout).
+#[derive(Debug, Default)]
+struct Shard {
+    pending: Vec<Run>,
+    frontier: SimTime,
+    base: Option<SimTime>,
+    class_frontier: [SimTime; N_CLASSES],
+    class_busy: [f64; N_CLASSES],
+    epoch: u64,
+    epoch_frontier: SimTime,
+    lanes: BTreeMap<(TenantId, usize), TenantLane>,
+}
+
+/// The preserved static-throttle QoS scheduler (see module docs).
+/// API subset of [`IoScheduler`](crate::sim::sched::IoScheduler) — the
+/// methods the work-conserving differential suite replays through.
+#[derive(Debug)]
+pub struct StaticQosScheduler {
+    shards: BTreeMap<usize, Shard>,
+    completions: Vec<SimTime>,
+    qos: QosConfig,
+    class: TrafficClass,
+    tenant: TenantId,
+    tenants: TenantShares,
+    epoch: u64,
+    epoch_start: SimTime,
+}
+
+impl Default for StaticQosScheduler {
+    fn default() -> Self {
+        StaticQosScheduler::with_qos(QosConfig::unlimited())
+    }
+}
+
+impl StaticQosScheduler {
+    /// Empty oracle with no bandwidth split (pre-QoS semantics).
+    pub fn new() -> Self {
+        StaticQosScheduler::default()
+    }
+
+    /// Empty oracle enforcing `qos` on every shard under the STATIC
+    /// throttle semantics, whatever `qos.work_conserving` says — the
+    /// flag is ignored here by design: this file IS the static
+    /// behavior.
+    pub fn with_qos(qos: QosConfig) -> Self {
+        StaticQosScheduler {
+            shards: BTreeMap::new(),
+            completions: Vec::new(),
+            qos,
+            class: TrafficClass::Foreground,
+            tenant: DEFAULT_TENANT,
+            tenants: TenantShares::single(),
+            epoch: 0,
+            epoch_start: 0.0,
+        }
+    }
+
+    /// Replace the tenant table (applies to subsequent drains).
+    pub fn set_tenants(&mut self, tenants: TenantShares) {
+        self.tenants = tenants;
+    }
+
+    /// Set the tenant stamped on subsequent submissions.
+    pub fn set_tenant(&mut self, tenant: TenantId) -> TenantId {
+        std::mem::replace(&mut self.tenant, tenant)
+    }
+
+    /// Set the class stamped on subsequent submissions.
+    pub fn set_class(&mut self, class: TrafficClass) -> TrafficClass {
+        std::mem::replace(&mut self.class, class)
+    }
+
+    /// Open a new scheduling epoch at `now` (the pre-overhaul
+    /// semantics: the completion table keeps growing across epochs).
+    pub fn begin_epoch(&mut self, now: SimTime) -> u64 {
+        self.epoch += 1;
+        self.epoch_start = now;
+        self.epoch
+    }
+
+    /// Queue one unit I/O — byte-for-byte the static scheduler's
+    /// `submit`.
+    pub fn submit(
+        &mut self,
+        device: usize,
+        submit_at: SimTime,
+        size: u64,
+        op: IoOp,
+        access: Access,
+    ) -> Ticket {
+        let ticket = self.completions.len();
+        self.completions.push(submit_at);
+        let class = self.class;
+        let tenant = self.tenant;
+        let shard = self.shards.entry(device).or_default();
+        if let Some(run) = shard.pending.last_mut() {
+            if run.submit_at == submit_at
+                && run.size == size
+                && run.op == op
+                && run.access == access
+                && run.class == class
+                && run.tenant == tenant
+            {
+                run.tickets.push(ticket);
+                return ticket;
+            }
+        }
+        shard.pending.push(Run {
+            submit_at,
+            size,
+            op,
+            access,
+            class,
+            tenant,
+            tickets: vec![ticket],
+        });
+        ticket
+    }
+
+    /// Execute every pending run — byte-for-byte the STATIC drain: a
+    /// capped lane always yields to committed foreground and then
+    /// stretches `1/share`×, foreground integrates `1 − Σ(shares)`
+    /// over committed capped backlog, idle-foreground headroom is
+    /// never lent.
+    pub fn drain(&mut self, devices: &mut [Device]) -> SimTime {
+        let qos = self.qos;
+        let throttled = qos.active();
+        let tenancy = self.tenants.active();
+        let epoch = self.epoch;
+        let epoch_start = self.epoch_start;
+        let fg = TrafficClass::Foreground.index();
+        let mut batch_done = 0.0f64;
+        for (&dev, shard) in self.shards.iter_mut() {
+            for run in std::mem::take(&mut shard.pending) {
+                let d = &mut devices[dev];
+                if shard.epoch != epoch {
+                    if epoch_start >= shard.frontier {
+                        shard.base = None;
+                        shard.class_busy = [0.0; N_CLASSES];
+                        shard.lanes.clear();
+                    }
+                    shard.epoch = epoch;
+                    shard.epoch_frontier = 0.0;
+                }
+                if shard.base.is_none() {
+                    shard.base = Some(d.busy_until);
+                    shard.class_frontier = [d.busy_until; N_CLASSES];
+                }
+                let svc = d.profile.service_time(run.size, run.op, run.access);
+                let n = run.tickets.len();
+                let work = n as f64 * svc;
+                let ci = run.class.index();
+                let end;
+                if tenancy {
+                    let share = (self.tenants.share(run.tenant)
+                        * qos.share(run.class))
+                    .clamp(0.01, 1.0);
+                    let lane_base = shard.base.unwrap_or(d.busy_until);
+                    let fg_floor = if ci != fg && qos.share(run.class) < 1.0 {
+                        shard
+                            .lanes
+                            .get(&(run.tenant, fg))
+                            .map_or(lane_base, |l| l.frontier)
+                    } else {
+                        lane_base
+                    };
+                    let lane = shard
+                        .lanes
+                        .entry((run.tenant, ci))
+                        .or_insert(TenantLane { frontier: lane_base, busy: 0.0 });
+                    let start = run.submit_at.max(lane.frontier).max(fg_floor);
+                    let svc_eff = svc / share;
+                    end = start + n as f64 * svc_eff;
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc_eff;
+                    }
+                    lane.frontier = end;
+                    lane.busy += work;
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else if !throttled {
+                    let start = run.submit_at.max(d.busy_until);
+                    end = d.io_run(
+                        run.submit_at,
+                        n as u64,
+                        run.size,
+                        run.op,
+                        run.access,
+                    );
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc;
+                    }
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else if qos.share(run.class) < 1.0 {
+                    let share = qos.share(run.class);
+                    let start = run
+                        .submit_at
+                        .max(shard.class_frontier[ci])
+                        .max(shard.class_frontier[fg]);
+                    let svc_eff = svc / share;
+                    end = start + n as f64 * svc_eff;
+                    for (i, &t) in run.tickets.iter().enumerate() {
+                        self.completions[t] = start + (i + 1) as f64 * svc_eff;
+                    }
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                } else {
+                    let start = run
+                        .submit_at
+                        .max(shard.class_frontier[ci])
+                        .max(shard.class_frontier[fg]);
+                    let (e, contended) =
+                        contended_end(&shard.class_frontier, qos, start, work);
+                    end = e;
+                    if contended {
+                        let span = end - start;
+                        for (i, &t) in run.tickets.iter().enumerate() {
+                            self.completions[t] =
+                                start + span * ((i + 1) as f64 / n as f64);
+                        }
+                    } else {
+                        for (i, &t) in run.tickets.iter().enumerate() {
+                            self.completions[t] = start + (i + 1) as f64 * svc;
+                        }
+                    }
+                    d.commit_run(end, n as u64, run.size, run.op);
+                    shard.class_frontier[ci] = shard.class_frontier[ci].max(end);
+                    shard.class_frontier[fg] = shard.class_frontier[fg].max(end);
+                }
+                shard.class_busy[ci] += work;
+                shard.frontier = shard.frontier.max(end);
+                shard.epoch_frontier = shard.epoch_frontier.max(end);
+                batch_done = batch_done.max(end);
+            }
+        }
+        batch_done
+    }
+
+    /// Completion time of a drained ticket.
+    pub fn completion(&self, ticket: Ticket) -> SimTime {
+        self.completions[ticket]
+    }
+
+    /// Max epoch frontier over the current epoch's shards.
+    pub fn wait_all(&self) -> SimTime {
+        self.shards
+            .values()
+            .filter(|s| s.epoch == self.epoch)
+            .fold(0.0, |t, s| t.max(s.epoch_frontier))
+    }
+
+    /// `(device, epoch frontier)` rows in BTreeMap (device) order.
+    pub fn frontiers(&self) -> Vec<(usize, SimTime)> {
+        self.shards
+            .iter()
+            .filter(|(_, s)| s.epoch == self.epoch)
+            .map(|(&d, s)| (d, s.epoch_frontier))
+            .collect()
+    }
+
+    /// Completion frontier of one class on one device's shard (0.0 if
+    /// the shard is untouched) — what the differential suite compares
+    /// per class.
+    pub fn class_frontier(&self, device: usize, class: TrafficClass) -> SimTime {
+        self.shards
+            .get(&device)
+            .map_or(0.0, |s| s.class_frontier[class.index()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceProfile;
+
+    #[test]
+    fn static_oracle_keeps_the_idle_foreground_stretch() {
+        // the defining static behavior: a repair-only shard still
+        // stretches 1/share — headroom is never lent
+        let mut devs = vec![Device::new(DeviceProfile::ssd(1 << 40))];
+        let mut o = StaticQosScheduler::with_qos(QosConfig::default());
+        o.set_class(TrafficClass::Repair);
+        let r = o.submit(0, 0.0, 1 << 20, IoOp::Read, Access::Seq);
+        o.drain(&mut devs);
+        let svc = devs[0].profile.service_time(1 << 20, IoOp::Read, Access::Seq);
+        assert!((o.completion(r) - svc / 0.30).abs() < 1e-9);
+        assert_eq!(o.wait_all(), o.completion(r));
+        assert_eq!(o.frontiers(), vec![(0, o.completion(r))]);
+        assert_eq!(o.class_frontier(0, TrafficClass::Repair), o.completion(r));
+    }
+}

@@ -143,8 +143,8 @@ pub const RULES: &[RuleInfo] = &[
         name: ORACLE_FREEZE,
         severity: Severity::Deny,
         invariant: "preserved differential oracles (sns_baseline, \
-                    sns_serial, sched_oracle) change only with an \
-                    explicit in-file waiver",
+                    sns_serial, sched_oracle, qos_static_oracle) \
+                    change only with an explicit in-file waiver",
     },
 ];
 
@@ -167,6 +167,7 @@ fn rule_severity(name: &str) -> Severity {
 const SCHED_ALLOWED: &[&str] = &[
     "sim/sched.rs",
     "sim/sched_oracle.rs",
+    "sim/qos_static_oracle.rs",
     "mero/sns_baseline.rs",
     "mero/sns_serial.rs",
 ];
@@ -186,6 +187,7 @@ const SIM_VISIBLE: &[&str] = &["sim/", "mero/", "clovis/", "hsm/"];
 pub const ORACLE_CHECKSUMS: &[(&str, u32)] = &[
     ("mero/sns_baseline.rs", 0x316c_ad27),
     ("mero/sns_serial.rs", 0x2bb7_df49),
+    ("sim/qos_static_oracle.rs", 0xd707_c310),
     ("sim/sched_oracle.rs", 0x6253_d5a6),
 ];
 

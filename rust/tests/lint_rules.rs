@@ -80,6 +80,7 @@ fn scheduler_discipline_reserves_direct_io_to_the_scheduler() {
     for rel in [
         "sim/sched.rs",
         "sim/sched_oracle.rs",
+        "sim/qos_static_oracle.rs",
         "mero/sns_baseline.rs",
         "mero/sns_serial.rs",
     ] {
@@ -275,13 +276,13 @@ fn scratch_trees_report_missing_oracles() {
     let root = scratch("no-oracles");
     put(&root, "lib.rs", "pub fn ok() {}\n");
     let report = run_lint(&root).unwrap();
-    // all three preserved oracles are absent from this tree
+    // all four preserved oracles are absent from this tree
     let missing: Vec<_> = report
         .violations
         .iter()
         .filter(|v| v.rule == ORACLE_FREEZE)
         .collect();
-    assert_eq!(missing.len(), 3);
+    assert_eq!(missing.len(), 4);
     assert!(missing
         .iter()
         .all(|v| v.message.contains("missing from the tree")));
@@ -331,10 +332,10 @@ fn json_rendering_is_machine_checkable() {
     let root = scratch("json-clean");
     put(&root, "util/a.rs", "pub fn ok() {}\n");
     // a clean tree still misses the oracles, so pin only per-file JSON:
-    // lint a tree with no violations except the oracle trio, then
+    // lint a tree with no violations except the oracle quartet, then
     // check `ok` flips with deny_count
     let report = run_lint(&root).unwrap();
-    assert_eq!(report.deny_count(), 3); // the three absent oracles
+    assert_eq!(report.deny_count(), 4); // the four absent oracles
 }
 
 /// The shipped tree is the final fixture: `rust/src` lints clean, and

@@ -373,7 +373,8 @@ fn cap_of_one_reproduces_pre_qos_frontiers_exactly() {
     // mixed workload (repair + foreground writes) lands on the same
     // bits, frontiers included
     let extents: Vec<(u64, u64)> = vec![(0, 8), (16, 4), (3, 6)];
-    let cap_one = QosConfig { repair_share: 1.0, migration_share: 1.0 };
+    let cap_one =
+        QosConfig { repair_share: 1.0, migration_share: 1.0, work_conserving: false };
     let a = run_mixed(cap_one, &extents, 4, 2);
     let b = run_mixed(QosConfig::unlimited(), &extents, 4, 2);
     assert_eq!(a.completed_bits, b.completed_bits);

@@ -1,0 +1,626 @@
+//! Differential test plane for the work-conserving QoS overhaul
+//! (ISSUE 10): the borrow/reclaim scheduler against the preserved
+//! static-throttle oracle (`sim::qos_static_oracle`), plus the
+//! QoS→placement feedback loop at session level.
+//!
+//! 1. **Never slower than static** — for EVERY class, on every
+//!    sampled testkit geometry, a work-conserving replay completes
+//!    each ticket no later than the static oracle's replay of the
+//!    identical submission stream, and every per-class frontier is no
+//!    later. Runs where no borrow occurs use unchanged arithmetic, so
+//!    plain `f64` comparison is exact; borrowed runs win by the
+//!    macroscopic `1/share − 1` stretch they skip.
+//! 2. **Static engine preserved verbatim** — the live scheduler with
+//!    `work_conserving == false` reproduces the frozen oracle
+//!    bit-for-bit (`to_bits`), tenants active or not.
+//! 3. **Zero background is bit-identical** — a foreground-only stream
+//!    under the conserving config lands on exactly the pre-change
+//!    bits (the borrow plane never touches the foreground path), at
+//!    scheduler and at session level.
+//! 4. **Repair-only shard runs at full device rate** — idle
+//!    foreground means the cap is pure waste; conserving completions
+//!    equal the raw `n × service_time` schedule bit-for-bit.
+//! 5. **Reclaim bound** — any capped run submitted behind a committed
+//!    foreground frontier pays the full static stretch: bit-identical
+//!    to the oracle, and `observed_share` stays within the cap.
+//! 6. **N-tenant determinism under borrowing** — repeated contended
+//!    multi-tenant conserving replays are bit-identical, and still
+//!    never slower than the static oracle.
+//! 7. **Placement feedback** — back-to-back sessions leave an empty
+//!    congestion view and bit-identical placements; an overlapped
+//!    session steers new-write units and rebuild targets away from
+//!    the deepest-backlog device; bytes and crc32 are engine-
+//!    independent throughout.
+
+use sage::bench::testkit::{self, placements, span, Geometry, BS, UNIT};
+use sage::mero::ObjectId;
+use sage::proptest::prop_check;
+use sage::sim::device::{Access, Device, DeviceKind, DeviceProfile, IoOp};
+use sage::sim::qos_static_oracle::StaticQosScheduler;
+use sage::sim::sched::{
+    IoScheduler, QosConfig, TenantId, TenantShares, TrafficClass, N_CLASSES,
+};
+
+/// This suite's sampling family (see `bench::testkit`).
+const GEO: Geometry = Geometry::CONSERVE;
+
+const CLASSES: [TrafficClass; 3] =
+    [TrafficClass::Foreground, TrafficClass::Repair, TrafficClass::Migration];
+
+/// One scheduler-level submission: `(device, at, size, class, tenant)`.
+type Op = (usize, f64, u64, TrafficClass, TenantId);
+
+/// The replay fleet: mixed service times so borrowing, contention and
+/// frontier carry-over all show up.
+fn fleet() -> Vec<Device> {
+    vec![
+        Device::new(DeviceProfile::ssd(1 << 40)),
+        Device::new(DeviceProfile::ssd(1 << 40)),
+        Device::new(DeviceProfile::hdd(1 << 42)),
+        Device::new(DeviceProfile::smr(1 << 42)),
+    ]
+}
+
+/// Derive a deterministic mixed-class stream from a sampled extent
+/// list: device, class and tenant are pure functions of the extent
+/// coordinates, submit times are a strictly increasing ladder.
+fn stream(extents: &[(u64, u64)], tenants: usize) -> Vec<Op> {
+    extents
+        .iter()
+        .enumerate()
+        .map(|(j, &(i, l))| {
+            (
+                (i % 4) as usize,
+                j as f64 * 2.0e-5,
+                (1 + l % 8) * BS,
+                CLASSES[((i + l) % 3) as usize],
+                j % tenants.max(1),
+            )
+        })
+        .collect()
+}
+
+/// Fingerprint of one replay: per-ticket completions plus every
+/// shard's per-class frontiers, in device order.
+struct Replay {
+    completions: Vec<f64>,
+    class_frontiers: Vec<[f64; N_CLASSES]>,
+    wait_all: f64,
+}
+
+impl Replay {
+    fn bits(&self) -> Vec<u64> {
+        let mut bits: Vec<u64> =
+            self.completions.iter().map(|t| t.to_bits()).collect();
+        for cf in &self.class_frontiers {
+            bits.extend(cf.iter().map(|f| f.to_bits()));
+        }
+        bits.push(self.wait_all.to_bits());
+        bits
+    }
+}
+
+/// Replay `waves` (one `begin_epoch` + submit batch + drain each)
+/// through the LIVE scheduler under `qos`.
+fn live(qos: QosConfig, shares: Option<&TenantShares>, waves: &[Vec<Op>]) -> Replay {
+    let mut devs = fleet();
+    let mut s = IoScheduler::with_qos(qos);
+    if let Some(t) = shares {
+        s.set_tenants(t.clone());
+    }
+    let mut completions = Vec::new();
+    for (w, ops) in waves.iter().enumerate() {
+        let t0 = w as f64 * 0.01;
+        s.begin_epoch(t0);
+        let tickets: Vec<_> = ops
+            .iter()
+            .map(|&(dev, at, size, class, tenant)| {
+                s.set_class(class);
+                s.set_tenant(tenant);
+                s.submit(dev, t0 + at, size, IoOp::Write, Access::Seq)
+            })
+            .collect();
+        s.drain(&mut devs);
+        completions.extend(tickets.into_iter().map(|t| s.completion(t)));
+    }
+    let rows = s.qos_report_all();
+    let class_frontiers = (0..devs.len())
+        .map(|d| {
+            rows.iter()
+                .find(|r| r.device == d)
+                .map_or([0.0; N_CLASSES], |r| r.class_frontier)
+        })
+        .collect();
+    Replay { completions, class_frontiers, wait_all: s.wait_all() }
+}
+
+/// The same replay through the preserved static-throttle oracle.
+fn oracle(qos: QosConfig, shares: Option<&TenantShares>, waves: &[Vec<Op>]) -> Replay {
+    let mut devs = fleet();
+    let mut s = StaticQosScheduler::with_qos(qos);
+    if let Some(t) = shares {
+        s.set_tenants(t.clone());
+    }
+    let mut completions = Vec::new();
+    for (w, ops) in waves.iter().enumerate() {
+        let t0 = w as f64 * 0.01;
+        s.begin_epoch(t0);
+        let tickets: Vec<_> = ops
+            .iter()
+            .map(|&(dev, at, size, class, tenant)| {
+                s.set_class(class);
+                s.set_tenant(tenant);
+                s.submit(dev, t0 + at, size, IoOp::Write, Access::Seq)
+            })
+            .collect();
+        s.drain(&mut devs);
+        completions.extend(tickets.into_iter().map(|t| s.completion(t)));
+    }
+    let class_frontiers = (0..devs.len())
+        .map(|d| {
+            let mut cf = [0.0; N_CLASSES];
+            for c in CLASSES {
+                cf[c.index()] = s.class_frontier(d, c);
+            }
+            cf
+        })
+        .collect();
+    Replay { completions, class_frontiers, wait_all: s.wait_all() }
+}
+
+/// `a` never later than `b`, ticket by ticket and frontier by
+/// frontier. Exact `<=` — see the module docs for why no tolerance is
+/// needed.
+fn never_later(a: &Replay, b: &Replay) -> bool {
+    a.completions.iter().zip(&b.completions).all(|(x, y)| x <= y)
+        && a.class_frontiers
+            .iter()
+            .zip(&b.class_frontiers)
+            .all(|(x, y)| x.iter().zip(y.iter()).all(|(f, g)| f <= g))
+        && a.wait_all <= b.wait_all
+}
+
+#[test]
+fn prop_conserving_never_later_than_static_for_every_class() {
+    // the ROADMAP-stated oracle, on EVERY sampled testkit geometry
+    for (gi, geo) in [
+        Geometry::SCHED,
+        Geometry::QOS,
+        Geometry::REPAIR,
+        Geometry::TENANT,
+        Geometry::CONSERVE,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        prop_check(
+            &format!("conserve-never-slower-geo{gi}"),
+            6,
+            move |r| (geo.gen_extents(r), geo.gen_extents(r)),
+            |case: &(Vec<(u64, u64)>, Vec<(u64, u64)>)| {
+                let waves = [stream(&case.0, 1), stream(&case.1, 1)];
+                let qos = QosConfig::conserving();
+                let cons = live(qos, None, &waves);
+                let stat = oracle(qos, None, &waves);
+                never_later(&cons, &stat)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_static_engine_is_bit_identical_to_the_preserved_oracle() {
+    // `work_conserving == false` IS the oracle, bit-for-bit — with
+    // the per-class lanes and with the tenant plane active
+    prop_check(
+        "conserve-static-pin",
+        8,
+        |r| (GEO.gen_extents(r), GEO.gen_extents(r)),
+        |case: &(Vec<(u64, u64)>, Vec<(u64, u64)>)| {
+            let qos = QosConfig::default();
+            assert!(!qos.work_conserving, "default stays static");
+            let waves = [stream(&case.0, 1), stream(&case.1, 1)];
+            if live(qos, None, &waves).bits() != oracle(qos, None, &waves).bits() {
+                return false;
+            }
+            let mut shares = TenantShares::single();
+            shares.register(3.0);
+            let waves_t = [stream(&case.0, 2), stream(&case.1, 2)];
+            live(qos, Some(&shares), &waves_t).bits()
+                == oracle(qos, Some(&shares), &waves_t).bits()
+        },
+    );
+}
+
+#[test]
+fn prop_zero_background_conserving_is_bit_identical_to_static() {
+    // foreground-only streams: the borrow plane must not move a bit
+    prop_check(
+        "conserve-zero-background",
+        8,
+        |r| GEO.gen_extents(r),
+        |extents: &Vec<(u64, u64)>| {
+            let fg_only: Vec<Op> = stream(extents, 1)
+                .into_iter()
+                .map(|(d, at, sz, _, t)| (d, at, sz, TrafficClass::Foreground, t))
+                .collect();
+            let waves = [fg_only];
+            let cons = live(QosConfig::conserving(), None, &waves).bits();
+            let stat = live(QosConfig::default(), None, &waves).bits();
+            let frozen = oracle(QosConfig::default(), None, &waves).bits();
+            cons == stat && cons == frozen
+        },
+    );
+}
+
+#[test]
+fn repair_only_shard_runs_at_the_full_device_rate() {
+    // idle foreground: every completion is exactly (i+1) × svc — the
+    // 1/share stretch is gone, bit-for-bit
+    let mut devs = vec![Device::new(DeviceProfile::ssd(1 << 40))];
+    let svc = devs[0].profile.service_time(4 * BS, IoOp::Write, Access::Seq);
+    let mut s = IoScheduler::with_qos(QosConfig::conserving());
+    s.set_class(TrafficClass::Repair);
+    let tickets: Vec<_> = (0..6)
+        .map(|_| s.submit(0, 0.0, 4 * BS, IoOp::Write, Access::Seq))
+        .collect();
+    s.drain(&mut devs);
+    for (i, t) in tickets.iter().enumerate() {
+        assert_eq!(
+            s.completion(*t).to_bits(),
+            ((i + 1) as f64 * svc).to_bits(),
+            "ticket {i} must land at the raw device rate"
+        );
+    }
+    // the static oracle stretches the same stream by 1/share
+    let mut devs_o = vec![Device::new(DeviceProfile::ssd(1 << 40))];
+    let mut o = StaticQosScheduler::with_qos(QosConfig::conserving());
+    o.set_class(TrafficClass::Repair);
+    let to: Vec<_> = (0..6)
+        .map(|_| o.submit(0, 0.0, 4 * BS, IoOp::Write, Access::Seq))
+        .collect();
+    o.drain(&mut devs_o);
+    let share = QosConfig::conserving().share(TrafficClass::Repair);
+    for (i, (t, tt)) in tickets.iter().zip(&to).enumerate() {
+        assert!(s.completion(*t) < o.completion(*tt));
+        assert_eq!(
+            o.completion(*tt).to_bits(),
+            ((i + 1) as f64 * (svc / share)).to_bits(),
+            "oracle ticket {i} must pay the exact 1/share stretch"
+        );
+    }
+    // and the lent-headroom ledger accounts for the skipped stretch
+    let rows = s.qos_report_all();
+    let lent = rows[0].lent_headroom(TrafficClass::Repair);
+    assert_eq!(lent.to_bits(), (6.0 * svc / share - 6.0 * svc).to_bits());
+}
+
+#[test]
+fn prop_reclaim_bound_holds_the_instant_foreground_arrives() {
+    // every capped run submitted behind a committed foreground
+    // frontier pays the full static stretch: the whole schedule is
+    // bit-identical to the oracle, and the cap bound survives
+    prop_check(
+        "conserve-reclaim-bound",
+        8,
+        |r| GEO.gen_extents(r),
+        |extents: &Vec<(u64, u64)>| {
+            // a foreground run leads on every device, all at t = 0, so
+            // each shard's fg frontier is committed before any capped
+            // run (also submitted at 0) drains behind it
+            let mut ops: Vec<Op> = (0..4)
+                .map(|d| (d, 0.0, 8 * BS, TrafficClass::Foreground, 0))
+                .collect();
+            ops.extend(stream(extents, 1).into_iter().map(
+                |(d, _, sz, class, t)| {
+                    let class = if class == TrafficClass::Foreground {
+                        TrafficClass::Repair
+                    } else {
+                        class
+                    };
+                    (d, 0.0, sz, class, t)
+                },
+            ));
+            let qos = QosConfig::conserving();
+            let waves = [ops];
+            let cons = live(qos, None, &waves);
+            let stat = oracle(qos, None, &waves);
+            if cons.bits() != stat.bits() {
+                return false;
+            }
+            // observed shares stay within the caps even with the
+            // borrow plane armed
+            let mut devs = fleet();
+            let mut s = IoScheduler::with_qos(qos);
+            s.begin_epoch(0.0);
+            for &(d, at, sz, class, tenant) in &waves[0] {
+                s.set_class(class);
+                s.set_tenant(tenant);
+                s.submit(d, at, sz, IoOp::Write, Access::Seq);
+            }
+            s.drain(&mut devs);
+            s.qos_report().iter().all(|row| {
+                row.observed_share(TrafficClass::Repair)
+                    <= qos.share(TrafficClass::Repair) + 1e-9
+                    && row.observed_share(TrafficClass::Migration)
+                        <= qos.share(TrafficClass::Migration) + 1e-9
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_n_tenant_borrowing_is_deterministic_and_never_slower() {
+    prop_check(
+        "conserve-tenant-determinism",
+        6,
+        |r| (GEO.gen_extents(r), (1 + r.gen_range(8), 1 + r.gen_range(8))),
+        |case: &(Vec<(u64, u64)>, (u64, u64))| {
+            let (extents, (wa, wb)) = case;
+            let mut shares = TenantShares::single();
+            shares.set_weight(0, *wa as f64);
+            shares.register(*wb as f64);
+            shares.register(2.0);
+            let waves = [stream(extents, 3)];
+            let qos = QosConfig::conserving();
+            let a = live(qos, Some(&shares), &waves);
+            let b = live(qos, Some(&shares), &waves);
+            a.bits() == b.bits()
+                && never_later(&a, &oracle(qos, Some(&shares), &waves))
+        },
+    );
+}
+
+// ----------------------------------------------------- session level
+
+fn layout() -> sage::mero::Layout {
+    testkit::raid(4, 1)
+}
+
+/// Write `extents` through one session; returns the object plus every
+/// schedule-visible bit.
+fn write_session(
+    c: &mut sage::clovis::Client,
+    extents: &[(u64, u64)],
+) -> (ObjectId, Vec<u64>) {
+    let obj = c.create_object_with(BS, layout()).unwrap();
+    let datas: Vec<Vec<u8>> =
+        extents.iter().map(|(i, l)| GEO.bytes_for(*i, *l)).collect();
+    let refs: Vec<(u64, &[u8])> = extents
+        .iter()
+        .zip(datas.iter())
+        .map(|((i, _), d)| (i * BS, d.as_slice()))
+        .collect();
+    let mut s = c.session();
+    s.write(&obj, &refs);
+    let rep = s.run().unwrap();
+    let mut bits: Vec<u64> = rep.completed.iter().map(|t| t.to_bits()).collect();
+    bits.push(rep.completed_at.to_bits());
+    (obj, bits)
+}
+
+#[test]
+fn prop_back_to_back_sessions_keep_placement_bit_identical() {
+    // the no-feedback baseline: sequential sessions drain past the
+    // clock, the view built at adoption is empty, and the conserving
+    // engine's placement and bytes match the static engine exactly
+    prop_check(
+        "conserve-placement-baseline",
+        8,
+        |r| (GEO.gen_extents(r), GEO.gen_extents(r)),
+        |case: &(Vec<(u64, u64)>, Vec<(u64, u64)>)| {
+            if span(&case.0) == 0 || span(&case.1) == 0 {
+                return true;
+            }
+            let run = |qos: QosConfig| {
+                let mut c = testkit::sage_client();
+                c.store.cluster.qos = qos;
+                let (o1, bits1) = write_session(&mut c, &case.0);
+                // the view's lifetime is exactly one session
+                assert!(c.store.pools.congestion().is_empty());
+                let (o2, bits2) = write_session(&mut c, &case.1);
+                let p = (placements(&c, o1), placements(&c, o2));
+                let crc = (
+                    crc32fast::hash(&c.read_object(&o1, 0, span(&case.0)).unwrap()),
+                    crc32fast::hash(&c.read_object(&o2, 0, span(&case.1)).unwrap()),
+                );
+                (p, crc, bits1, bits2)
+            };
+            run(QosConfig::conserving()) == run(QosConfig::default())
+        },
+    );
+}
+
+/// Park committed foreground backlog on one SSD shard by driving the
+/// cluster scheduler directly, WITHOUT advancing the client clock —
+/// the next session then adopts with that shard's frontier ahead of
+/// `now` and a non-empty congestion view.
+fn backlog_on(c: &mut sage::clovis::Client, dev: usize) {
+    let now = c.now;
+    for _ in 0..64 {
+        c.sched.submit(dev, now, 1 << 22, IoOp::Write, Access::Seq);
+    }
+    c.sched.drain(&mut c.store.cluster.devices);
+    assert!(
+        c.store.cluster.devices[dev].busy_until > now,
+        "the shard must carry committed backlog"
+    );
+}
+
+#[test]
+fn overlapped_session_steers_new_writes_off_the_backlogged_shard() {
+    let extents: Vec<(u64, u64)> = (0..8).map(|i| (i * 8, 8)).collect();
+    let units_on = |c: &sage::clovis::Client, obj: ObjectId, dev: usize| {
+        placements(c, obj).iter().filter(|(_, _, d)| *d == dev).count()
+    };
+    // baseline: no backlog anywhere; self-calibrate the probe to the
+    // SSD that receives the most units, so the steering comparison
+    // can't be defeated by tie-break adjacency
+    let mut base = testkit::sage_client();
+    base.store.cluster.qos = QosConfig::conserving();
+    let ssds = base.store.pools.devices(DeviceKind::Ssd).to_vec();
+    let (obj_b, _) = write_session(&mut base, &extents);
+    let target = ssds
+        .iter()
+        .copied()
+        .max_by_key(|&d| units_on(&base, obj_b, d))
+        .unwrap();
+    let baseline_units = units_on(&base, obj_b, target);
+    assert!(baseline_units > 0, "the probe device must matter at baseline");
+    // identical client, but the target shard is backlogged when the
+    // session adopts — the view steers its units elsewhere
+    let mut c = testkit::sage_client();
+    c.store.cluster.qos = QosConfig::conserving();
+    backlog_on(&mut c, target);
+    let (obj, _) = write_session(&mut c, &extents);
+    let steered_units = units_on(&c, obj, target);
+    assert!(
+        steered_units < baseline_units,
+        "congested shard must receive strictly fewer units \
+         ({steered_units} vs {baseline_units})"
+    );
+    // steering never touches bytes
+    for (i, l) in &extents {
+        let got = c.read_object(&obj, i * BS, l * BS).unwrap();
+        assert_eq!(got, GEO.bytes_for(*i, *l));
+    }
+}
+
+#[test]
+fn rebuild_targets_avoid_the_deepest_backlog_device() {
+    let build = || {
+        let mut c = testkit::sage_client();
+        c.store.cluster.qos = QosConfig::conserving();
+        let mut objs = Vec::new();
+        for i in 0..4u64 {
+            let o = c.create_object_with(BS, layout()).unwrap();
+            let data = GEO.bytes_for(i, 2 * 4 * UNIT / BS);
+            c.write_object(&o, 0, &data).unwrap();
+            objs.push((o, data));
+        }
+        let dev =
+            c.store.object(objs[0].0).unwrap().placement(0, 0).unwrap().device;
+        c.store.cluster.fail_device(dev);
+        (c, objs, dev)
+    };
+    let units_per_dev = |c: &sage::clovis::Client,
+                         objs: &[(ObjectId, Vec<u8>)]| {
+        let mut counts = std::collections::BTreeMap::new();
+        for (o, _) in objs {
+            for (_, _, d) in placements(c, *o) {
+                *counts.entry(d).or_insert(0usize) += 1;
+            }
+        }
+        counts
+    };
+    // baseline rebuild with no backlog; self-calibrate the probe to
+    // the survivor that gains the most re-homed units
+    let (mut base, objs_b, failed_b) = build();
+    let before_b = units_per_dev(&base, &objs_b);
+    let ids_b: Vec<ObjectId> = objs_b.iter().map(|(o, _)| *o).collect();
+    base.repair_with(&ids_b, failed_b).unwrap();
+    let after_b = units_per_dev(&base, &objs_b);
+    let rehomed =
+        |before: &std::collections::BTreeMap<usize, usize>,
+         after: &std::collections::BTreeMap<usize, usize>,
+         dev: usize| {
+            after.get(&dev).copied().unwrap_or(0)
+                - before.get(&dev).copied().unwrap_or(0)
+        };
+    let probe = *after_b
+        .keys()
+        .filter(|&&d| d != failed_b)
+        .max_by_key(|&&d| rehomed(&before_b, &after_b, d))
+        .unwrap();
+    let baseline_units = rehomed(&before_b, &after_b, probe);
+    assert!(baseline_units > 0, "the rebuild re-homed units somewhere");
+    // same cluster, but the probe shard is the deepest backlog when
+    // the repair session adopts — re-homed units avoid it
+    let (mut c, objs, failed) = build();
+    assert_eq!(failed, failed_b, "identical builds fail the same device");
+    let before = units_per_dev(&c, &objs);
+    backlog_on(&mut c, probe);
+    let ids: Vec<ObjectId> = objs.iter().map(|(o, _)| *o).collect();
+    c.repair_with(&ids, failed).unwrap();
+    let after = units_per_dev(&c, &objs);
+    let steered_units = rehomed(&before, &after, probe);
+    assert!(
+        steered_units < baseline_units,
+        "rebuild must avoid the deepest-backlog device \
+         ({steered_units} vs {baseline_units})"
+    );
+    // the rebuilt bytes are intact either way
+    for (o, want) in &objs {
+        let got = c.read_object(o, 0, want.len() as u64).unwrap();
+        assert_eq!(&got, want);
+    }
+}
+
+#[test]
+fn prop_conserving_mixed_session_preserves_bytes_placement_and_crc() {
+    // the client-level differential: repair staged next to foreground
+    // writes, conserving vs static — WHAT is stored never moves, WHEN
+    // only ever improves
+    prop_check(
+        "conserve-bytes-crc",
+        6,
+        |r| GEO.gen_extents(r),
+        |extents: &Vec<(u64, u64)>| {
+            let run = |qos: QosConfig| {
+                let mut c = testkit::sage_client();
+                c.store.cluster.qos = qos;
+                let mut objs = Vec::new();
+                for i in 0..3u64 {
+                    let o = c.create_object_with(BS, layout()).unwrap();
+                    let data = GEO.bytes_for(i, 2 * 4 * UNIT / BS);
+                    c.write_object(&o, 0, &data).unwrap();
+                    objs.push((o, data));
+                }
+                let dev = c
+                    .store
+                    .object(objs[0].0)
+                    .unwrap()
+                    .placement(0, 0)
+                    .unwrap()
+                    .device;
+                c.store.cluster.fail_device(dev);
+                let fg = c.create_object_with(BS, layout()).unwrap();
+                let datas: Vec<Vec<u8>> = extents
+                    .iter()
+                    .map(|(i, l)| GEO.bytes_for(100 + i, *l))
+                    .collect();
+                let refs: Vec<(u64, &[u8])> = extents
+                    .iter()
+                    .zip(datas.iter())
+                    .map(|((i, _), d)| (i * BS, d.as_slice()))
+                    .collect();
+                let ids: Vec<ObjectId> = objs.iter().map(|(o, _)| *o).collect();
+                let mut s = c.session();
+                let r = s.repair(&ids, dev);
+                let w = s.write(&fg, &refs);
+                let rep = s.run().unwrap();
+                let mut crcs = Vec::new();
+                let mut placement = Vec::new();
+                for (o, data) in &objs {
+                    crcs.push(crc32fast::hash(
+                        &c.read_object(o, 0, data.len() as u64).unwrap(),
+                    ));
+                    placement.push(placements(&c, *o));
+                }
+                if span(extents) > 0 {
+                    crcs.push(crc32fast::hash(
+                        &c.read_object(&fg, 0, span(extents)).unwrap(),
+                    ));
+                }
+                placement.push(placements(&c, fg));
+                (crcs, placement, rep.completed[r.index()], rep.completed[w.index()])
+            };
+            let (crc_c, place_c, repair_c, fg_c) = run(QosConfig::conserving());
+            let (crc_s, place_s, repair_s, fg_s) = run(QosConfig::default());
+            crc_c == crc_s
+                && place_c == place_s
+                && repair_c <= repair_s
+                && fg_c <= fg_s
+        },
+    );
+}

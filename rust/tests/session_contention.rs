@@ -20,6 +20,11 @@
 //!   shard's observed repair share stays within `repair_share`;
 //! * the legacy `repair_with` wrapper rides the same shared scheduler:
 //!   bit-identical repair completion to the explicit session.
+//!
+//! ISSUE 10 closes the latent idle-shard gap: a Repair-class session
+//! on an otherwise-idle shard finishes strictly faster under the
+//! work-conserving split than under the static cap, while the
+//! `observed_share` accounting stays exhaustive on both reports.
 
 use sage::bench::testkit::{self, Geometry, BS, UNIT};
 use sage::clovis::{Client, OpOutput};
@@ -167,6 +172,105 @@ fn contended_foreground_overlaps_the_rebuild_and_bytes_survive() {
         .map(|(o, d)| contended.c.read_object(o, 0, d.len() as u64).unwrap())
         .collect();
     assert_eq!(a, b, "cross-client byte identity");
+}
+
+#[test]
+fn idle_shard_repair_borrows_the_foreground_headroom() {
+    // Static cap: repair stretches at `1/repair_share` even though no
+    // foreground work is committed anywhere on the cluster.
+    let (mut c_s, objs_s, dev_s) = prestate();
+    let ids_s: Vec<ObjectId> = objs_s.iter().map(|(o, _)| *o).collect();
+    let mut s = c_s.session();
+    let r = s.repair(&ids_s, dev_s);
+    let rep_s = s.run().unwrap();
+    let t_static = rep_s.completed[r.index()];
+    let bytes_static = match rep_s.output(r) {
+        OpOutput::Repair { bytes } => *bytes,
+        other => panic!("repair output expected, got {other:?}"),
+    };
+
+    // Work-conserving split: identical pre-state, identical session —
+    // the capped class borrows the idle foreground headroom.
+    let (mut c_w, objs_w, dev_w) = prestate();
+    assert_eq!(dev_s, dev_w, "identical pre-state");
+    c_w.store.cluster.qos = QosConfig::conserving();
+    let ids_w: Vec<ObjectId> = objs_w.iter().map(|(o, _)| *o).collect();
+    let mut s = c_w.session();
+    let r = s.repair(&ids_w, dev_w);
+    let rep_w = s.run().unwrap();
+    let t_conserving = rep_w.completed[r.index()];
+    let bytes_conserving = match rep_w.output(r) {
+        OpOutput::Repair { bytes } => *bytes,
+        other => panic!("repair output expected, got {other:?}"),
+    };
+
+    assert!(bytes_static > 0, "the failed device held units");
+    assert_eq!(bytes_static, bytes_conserving, "same rebuild either way");
+    assert!(
+        t_conserving < t_static,
+        "an idle-foreground shard lets repair run at the device rate \
+         ({t_conserving} vs {t_static} under the static cap)"
+    );
+
+    // `observed_share` accounting stays exhaustive on BOTH reports:
+    // every reported shard drained real work, the per-class busy
+    // seconds fit inside the shard's active window, and every share
+    // sits in [0, 1].
+    let classes = [
+        TrafficClass::Foreground,
+        TrafficClass::Repair,
+        TrafficClass::Migration,
+    ];
+    for rep in [&rep_s, &rep_w] {
+        assert!(!rep.qos.is_empty(), "repair really ran");
+        for shard in &rep.qos {
+            let window = shard.frontier - shard.base;
+            let busy: f64 = shard.class_busy.iter().sum();
+            assert!(busy > 0.0, "reported shards really drained work");
+            assert!(busy <= window + 1e-9, "busy seconds fit the window");
+            for class in classes {
+                let share = shard.observed_share(class);
+                assert!(
+                    (0.0..=1.0 + 1e-9).contains(&share),
+                    "share out of range: {share}"
+                );
+            }
+        }
+    }
+
+    // Static run: the cap bounds every shard and nothing was lent.
+    let cap = QosConfig::default().share(TrafficClass::Repair);
+    for shard in &rep_s.qos {
+        assert!(shard.observed_share(TrafficClass::Repair) <= cap + 1e-9);
+        for class in classes {
+            assert_eq!(
+                shard.lent_headroom(class),
+                0.0,
+                "the static split never lends headroom"
+            );
+        }
+    }
+    // Conserving run: at least one shard escaped the cap by borrowing,
+    // and the report accounts for the headroom it was lent.
+    let escaped = rep_w
+        .qos
+        .iter()
+        .any(|s| s.observed_share(TrafficClass::Repair) > cap + 1e-9);
+    assert!(escaped, "borrowing shows up in the observed share");
+    let lent: f64 = rep_w
+        .qos
+        .iter()
+        .map(|s| s.lent_headroom(TrafficClass::Repair))
+        .sum();
+    assert!(lent > 0.0, "the lent headroom is accounted, not hidden");
+
+    // Borrowing changes WHEN, never WHAT.
+    for (c, objs) in [(&mut c_s, &objs_s), (&mut c_w, &objs_w)] {
+        for (o, want) in objs.iter() {
+            let got = c.read_object(o, 0, want.len() as u64).unwrap();
+            assert_eq!(&got, want, "repaired bytes intact");
+        }
+    }
 }
 
 #[test]
